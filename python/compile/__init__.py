@@ -1,0 +1,9 @@
+# Build-time compile package: L2 jax model + L1 pallas kernels + AOT driver.
+# Python here runs ONCE (`make artifacts`) and never on the request path.
+#
+# The BDI delta math needs 64-bit integer lanes, so x64 must be enabled
+# before any jax array is created.  Importing anything from this package
+# guarantees that.
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,52 @@
+# AOT driver: lower the L2 model to HLO *text* for the rust PJRT runtime.
+#
+# HLO text (NOT lowered.compiler_ir("hlo") protos or .serialize()) is the
+# interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+# instruction ids which the xla crate's xla_extension 0.5.1 rejects
+# (`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+# cleanly.  See /opt/xla-example/gen_hlo.py and its README.
+#
+# Usage:  cd python && python -m compile.aot --out ../artifacts/compress_analysis.hlo.txt
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_analyze_groups() -> str:
+    spec = jax.ShapeDtypeStruct((model.GROUPS, 4, 16), jnp.uint32)
+    lowered = jax.jit(model.analyze_groups).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default="../artifacts/compress_analysis.hlo.txt",
+        help="output HLO text path",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    text = lower_analyze_groups()
+    out.write_text(text)
+    print(f"wrote {len(text)} chars to {out} (groups={model.GROUPS})")
+
+
+if __name__ == "__main__":
+    main()

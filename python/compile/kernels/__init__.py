@@ -1,0 +1,4 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot — batched FPC+BDI
+# compressibility analysis of 64-byte cachelines.  `ref` is the pure-jnp
+# oracle and the canonical spec; `fpc_bdi` is the Pallas implementation.
+from . import fpc_bdi, ref  # noqa: F401

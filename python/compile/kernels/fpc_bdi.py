@@ -1,0 +1,124 @@
+# L1 Pallas kernel: batched FPC+BDI compressibility analysis.
+#
+# Input : uint32[N, 16]  — N cachelines, 16 little-endian u32 words each.
+# Output: int32 [N, 3]   — (fpc_bytes, bdi_bytes, hybrid_bytes) per line.
+#
+# The size model is specified in ref.py (the pure-jnp oracle); this kernel
+# must agree bit-for-bit (pytest: python/tests/test_kernel.py).
+#
+# TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's hot-spot is a
+# memory-controller compression pipeline; here it is reshaped as a streaming
+# VPU kernel.  Lines are tiled N-major with BLOCK=256 lines per grid step
+# (= 16 KiB of input in VMEM, far under budget); every FPC class test and
+# BDI delta check is an elementwise vector integer op, there is no matmul
+# (MXU is idle by construction) and no scalar loop, so the kernel is purely
+# bandwidth-bound: 64 B in + 12 B out per line.
+#
+# interpret=True is mandatory on this CPU-PJRT setup: real TPU lowering
+# emits a Mosaic custom-call the CPU plugin cannot execute.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256  # lines per grid step; 256*64B = 16 KiB input tile
+
+
+def _se_ok32(v, bits):
+    """v (int32) is a sign-extended `bits`-bit value, via shift round-trip."""
+    sh = 32 - bits
+    return ((v << sh) >> sh) == v
+
+
+def _se_ok64(v, bits):
+    sh = 64 - bits
+    return ((v << sh) >> sh) == v
+
+
+def _fpc_bits(w):
+    """FPC data bits per u32 word.  w: uint32[...]."""
+    i = w.astype(jnp.int32)
+    bits = jnp.full(w.shape, 32, jnp.int32)
+    lo = (w & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    hi = (w >> 16).astype(jnp.int32)
+    lo16 = (lo << 16) >> 16  # as signed 16-bit
+    hi16 = (hi << 16) >> 16
+    bits = jnp.where(_se_ok32(lo16, 8) & _se_ok32(hi16, 8), 16, bits)
+    bits = jnp.where(lo == 0, 16, bits)  # halfword padded with zero half
+    bits = jnp.where(_se_ok32(i, 16), 16, bits)
+    bits = jnp.where(_se_ok32(i, 8), 8, bits)
+    b = w & jnp.uint32(0xFF)
+    rep = (b | (b << 8) | (b << 16) | (b << 24)) == w  # all four bytes equal
+    bits = jnp.where(rep, 8, bits)
+    bits = jnp.where(_se_ok32(i, 4), 4, bits)
+    bits = jnp.where(w == 0, 0, bits)
+    return bits
+
+
+def _bdi_fits(x, width, bits):
+    """All wrapping deltas (x - x[..., :1]) at element `width` fit in `bits`
+    signed bits.  x: int64[..., n]."""
+    d = x - x[..., :1]
+    if width < 64:
+        d = d & jnp.int64((1 << width) - 1)
+        d = (d << (64 - width)) >> (64 - width)  # sign-extend width-bit value
+    return jnp.all(_se_ok64(d, bits), axis=-1)
+
+
+def _sizes_kernel(lines_ref, out_ref):
+    w = lines_ref[...]  # uint32[BLOCK, 16]
+
+    # --- FPC ---
+    fpc_bits = jnp.sum(3 + _fpc_bits(w), axis=-1)
+    fpc = ((fpc_bits + 7) // 8).astype(jnp.int32)
+
+    # --- BDI ---
+    w64 = w.astype(jnp.int64)
+    q = w64[:, 0::2] | (w64[:, 1::2] << 32)  # int64[BLOCK, 8]
+    # u16 halfwords in little-endian order (base = halfword 0 of the line)
+    h = jnp.stack([w64 & jnp.int64(0xFFFF), w64 >> 16], axis=-1).reshape(
+        w.shape[0], 32
+    )
+
+    bdi = jnp.full((w.shape[0],), 64, jnp.int32)
+    bdi = jnp.where(_bdi_fits(q, 64, 32), 40, bdi)  # base8-delta4
+    bdi = jnp.where(_bdi_fits(w64, 32, 16), 36, bdi)  # base4-delta2
+    bdi = jnp.where(_bdi_fits(h, 16, 8), 34, bdi)  # base2-delta1
+    bdi = jnp.where(_bdi_fits(q, 64, 16), 24, bdi)  # base8-delta2
+    bdi = jnp.where(_bdi_fits(w64, 32, 8), 20, bdi)  # base4-delta1
+    bdi = jnp.where(_bdi_fits(q, 64, 8), 16, bdi)  # base8-delta1
+    bdi = jnp.where(jnp.all(q == q[:, :1], axis=-1), 8, bdi)  # rep8
+    bdi = jnp.where(jnp.all(q == 0, axis=-1), 1, bdi)  # zeros
+
+    hybrid = jnp.minimum(64, 1 + jnp.minimum(fpc, bdi))
+    out_ref[...] = jnp.stack([fpc, bdi, hybrid], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def line_sizes(lines):
+    """uint32[N, 16] -> int32[N, 3] of (fpc, bdi, hybrid) bytes.
+
+    N must be a multiple of BLOCK for the AOT artifact; the jit wrapper pads
+    and slices for ad-hoc shapes (tests call it with arbitrary N).
+    """
+    n = lines.shape[0]
+    pad = (-n) % BLOCK
+    padded = jnp.pad(lines, ((0, pad), (0, 0)))
+    np_ = padded.shape[0]
+    out = pl.pallas_call(
+        _sizes_kernel,
+        grid=(np_ // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK, 16), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 3), jnp.int32),
+        interpret=True,
+    )(padded)
+    return out[:n]
+
+
+def hybrid_size_bytes(lines):
+    """uint32[..., 16] -> int32[...] hybrid sizes (kernel-backed)."""
+    flat = lines.reshape(-1, 16)
+    return line_sizes(flat)[:, 2].reshape(lines.shape[:-1])

@@ -1,0 +1,198 @@
+# Pure-jnp correctness oracle for the FPC+BDI compressibility kernel.
+#
+# This file is the CANONICAL SPECIFICATION of the compressed-size model used
+# across the whole repo.  Three implementations must agree bit-for-bit:
+#   1. this oracle (pure jnp, written for obviousness, not speed),
+#   2. the Pallas kernel in fpc_bdi.py (vectorized, interpret=True),
+#   3. the rust-native port in rust/src/compress/ (used in the simulator
+#      hot loop; parity-tested against the AOT HLO artifact in rust tests).
+#
+# --- Size model -------------------------------------------------------------
+#
+# A cacheline is 64 bytes = sixteen little-endian u32 words.
+#
+# FPC (Frequent Pattern Compression, Alameldeen & Wood, per-word 3-bit
+# prefix).  Data bits per 32-bit word = min over the applicable classes:
+#   zero word                         -> 0
+#   4-bit  sign-extended              -> 4
+#   repeated bytes (b0=b1=b2=b3)      -> 8
+#   8-bit  sign-extended              -> 8
+#   16-bit sign-extended              -> 16
+#   halfword padded with zero half    -> 16   (low 16 bits are zero)
+#   two halfwords, each 8-bit SE      -> 16
+#   uncompressible word               -> 32
+# fpc_bytes = ceil(sum_w (3 + databits(w)) / 8)
+#
+# BDI (Base-Delta-Immediate, Pekhimenko et al., single arbitrary base = first
+# element).  bdi_bytes = min over the applicable encodings:
+#   zeros  (all u64 == 0)                     -> 1
+#   rep8   (all u64 equal)                    -> 8
+#   base8-delta1 / delta2 / delta4            -> 8  + 8*{1,2,4} = 16/24/40
+#   base4-delta1 / delta2  (u32 granularity)  -> 4  + 16*{1,2}  = 20/36
+#   base2-delta1           (u16 granularity)  -> 2  + 32*1      = 34
+#   uncompressible line                       -> 64
+# Deltas are wrapping subtractions at the element width from the base
+# (= element 0) and must fit as sign-extended k-byte values.
+#
+# Hybrid FPC+BDI (what CRAM stores): 1 byte of in-line header selecting the
+# algorithm + its parameters, so
+#   hybrid_bytes = min(64, 1 + min(fpc_bytes, bdi_bytes))
+# A value of 64 means "stored uncompressed" (raw line, no header).
+#
+# --- Group layout / CSI -----------------------------------------------------
+#
+# Groups of 4 consecutive lines [A,B,C,D] (line address ends 00,01,10,11).
+# A compressed physical line reserves 4 bytes for the marker, so the budget
+# is 60 bytes.  CSI encoding (must match rust/src/cram/group.rs):
+#   0 = all uncompressed
+#   1 = A+B packed at slot A, C and D uncompressed
+#   2 = C+D packed at slot C, A and B uncompressed
+#   3 = A+B packed at slot A and C+D packed at slot C
+#   4 = A+B+C+D packed at slot A (4:1)
+# Decision: 4:1 if sum(sizes) <= 60, else each pair independently if
+# size_x + size_y <= 60.
+
+import jax.numpy as jnp
+
+MARKER_RESERVE = 4  # bytes reserved at the tail of a compressed line
+PAIR_BUDGET = 64 - MARKER_RESERVE  # = 60
+
+CSI_UNCOMPRESSED = 0
+CSI_PAIR_AB = 1
+CSI_PAIR_CD = 2
+CSI_PAIR_BOTH = 3
+CSI_QUAD = 4
+
+
+def _se_fits(v, bits):
+    """True if signed value v fits in `bits` bits (sign-extended)."""
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    return (v >= lo) & (v <= hi)
+
+
+def fpc_word_bits(w):
+    """Data bits for one u32 word under FPC.  w: uint32 array."""
+    w = w.astype(jnp.uint32)
+    i = w.astype(jnp.int32)
+    b0 = w & 0xFF
+    b1 = (w >> 8) & 0xFF
+    b2 = (w >> 16) & 0xFF
+    b3 = (w >> 24) & 0xFF
+    lo_half = (w & 0xFFFF).astype(jnp.int32)
+    hi_half = ((w >> 16) & 0xFFFF).astype(jnp.int32)
+    # interpret halves as signed 16-bit
+    lo_s = jnp.where(lo_half >= 0x8000, lo_half - 0x10000, lo_half)
+    hi_s = jnp.where(hi_half >= 0x8000, hi_half - 0x10000, hi_half)
+
+    bits = jnp.full(w.shape, 32, dtype=jnp.int32)
+    # Assign from widest to narrowest so the final value is the minimum
+    # applicable class.
+    two_half_se8 = _se_fits(lo_s, 8) & _se_fits(hi_s, 8)
+    bits = jnp.where(two_half_se8, 16, bits)
+    half_pad_zero = (w & 0xFFFF) == 0
+    bits = jnp.where(half_pad_zero, 16, bits)
+    bits = jnp.where(_se_fits(i, 16), 16, bits)
+    bits = jnp.where(_se_fits(i, 8), 8, bits)
+    rep_bytes = (b0 == b1) & (b1 == b2) & (b2 == b3)
+    bits = jnp.where(rep_bytes, 8, bits)
+    bits = jnp.where(_se_fits(i, 4), 4, bits)
+    bits = jnp.where(w == 0, 0, bits)
+    return bits
+
+
+def fpc_size_bytes(lines):
+    """FPC compressed size in bytes.  lines: uint32[..., 16]."""
+    bits = fpc_word_bits(lines)  # [..., 16]
+    total = jnp.sum(3 + bits, axis=-1)
+    return (total + 7) // 8
+
+
+def _as_u64(lines):
+    """uint32[..., 16] -> int64[..., 8] little-endian (u64 values carried
+    in int64 two's complement)."""
+    lo = lines.astype(jnp.int64)[..., 0::2]
+    hi = lines.astype(jnp.int64)[..., 1::2]
+    return lo | (hi << 32)
+
+
+def _as_u16(lines):
+    """uint32[..., 16] -> int64[..., 32] of u16 halfwords, little-endian."""
+    lo = (lines & 0xFFFF).astype(jnp.int64)
+    hi = ((lines >> 16) & 0xFFFF).astype(jnp.int64)
+    return jnp.stack([lo, hi], axis=-1).reshape(*lines.shape[:-1], 32)
+
+
+def _deltas_fit(x, width, bits):
+    """Wrapping (x - x[0]) at element `width` bits fits sign-extended `bits`.
+    x: int64[..., n] holding unsigned `width`-bit values."""
+    d = x - x[..., :1]
+    if width < 64:
+        mask = jnp.int64((1 << width) - 1)
+        d = d & mask
+        sign = jnp.int64(1) << (width - 1)
+        d = jnp.where(d >= sign, d - (jnp.int64(1) << width), d)
+    # width == 64: int64 two's-complement subtraction already wraps.
+    shift = 64 - bits
+    return jnp.all(((d << shift) >> shift) == d, axis=-1)
+
+
+def bdi_size_bytes(lines):
+    """BDI compressed size in bytes.  lines: uint32[..., 16]."""
+    q = _as_u64(lines)  # [..., 8]
+    w = lines.astype(jnp.int64)  # [..., 16] u32 values
+    h = _as_u16(lines)  # [..., 32]
+
+    size = jnp.full(lines.shape[:-1], 64, dtype=jnp.int32)
+    # Assign from worst (largest) to best (smallest) size.
+    size = jnp.where(_deltas_fit(q, 64, 32), 40, size)  # base8-delta4
+    size = jnp.where(_deltas_fit(w, 32, 16), 36, size)  # base4-delta2
+    size = jnp.where(_deltas_fit(h, 16, 8), 34, size)  # base2-delta1
+    size = jnp.where(_deltas_fit(q, 64, 16), 24, size)  # base8-delta2
+    size = jnp.where(_deltas_fit(w, 32, 8), 20, size)  # base4-delta1
+    size = jnp.where(_deltas_fit(q, 64, 8), 16, size)  # base8-delta1
+    size = jnp.where(jnp.all(q == q[..., :1], axis=-1), 8, size)  # rep8
+    size = jnp.where(jnp.all(q == 0, axis=-1), 1, size)  # zeros
+    return size
+
+
+def hybrid_size_bytes(lines):
+    """Hybrid FPC+BDI size: 1-byte header + best algorithm, capped at 64
+    (=stored raw).  lines: uint32[..., 16] -> int32[...]."""
+    fpc = fpc_size_bytes(lines).astype(jnp.int32)
+    bdi = bdi_size_bytes(lines).astype(jnp.int32)
+    return jnp.minimum(64, 1 + jnp.minimum(fpc, bdi))
+
+
+def line_sizes(lines):
+    """Reference for the kernel output: uint32[N,16] -> int32[N,3] of
+    (fpc_bytes, bdi_bytes, hybrid_bytes)."""
+    return jnp.stack(
+        [
+            fpc_size_bytes(lines).astype(jnp.int32),
+            bdi_size_bytes(lines).astype(jnp.int32),
+            hybrid_size_bytes(lines),
+        ],
+        axis=-1,
+    )
+
+
+def csi_decision(sizes):
+    """Group CSI from per-line hybrid sizes.  sizes: int32[..., 4]."""
+    total = jnp.sum(sizes, axis=-1)
+    quad = total <= PAIR_BUDGET
+    ab = (sizes[..., 0] + sizes[..., 1]) <= PAIR_BUDGET
+    cd = (sizes[..., 2] + sizes[..., 3]) <= PAIR_BUDGET
+    csi = jnp.where(
+        ab & cd,
+        CSI_PAIR_BOTH,
+        jnp.where(ab, CSI_PAIR_AB, jnp.where(cd, CSI_PAIR_CD, CSI_UNCOMPRESSED)),
+    )
+    return jnp.where(quad, CSI_QUAD, csi).astype(jnp.int32)
+
+
+def analyze_groups(groups):
+    """Reference for the L2 model: uint32[G,4,16] -> (csi int32[G],
+    sizes int32[G,4] of hybrid bytes)."""
+    sizes = hybrid_size_bytes(groups)
+    return csi_decision(sizes), sizes

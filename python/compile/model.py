@@ -1,0 +1,54 @@
+# L2: the jax compute graph the rust coordinator executes via PJRT.
+#
+# The paper's "model" is the memory controller's compression-analysis
+# pipeline: a batch of 4-line groups flows through the L1 kernel (per-line
+# FPC/BDI/hybrid sizes) and then through the group-layout decision (Fig. 6
+# of the paper), producing per-group CSI codes the controller uses to pack
+# lines and to drive markers/LLP training.
+#
+# `analyze_groups` is lowered ONCE by aot.py to artifacts/*.hlo.txt and is
+# never called from python at runtime.  The rust hot loop has a native port
+# of the same math (rust/src/compress/) for per-access decisions; the AOT
+# artifact is the batched analysis engine (workload characterization, Fig. 4
+# compressibility sweeps) and the cross-language parity anchor.
+
+import jax.numpy as jnp
+
+from .kernels import fpc_bdi
+from .kernels.ref import (
+    CSI_PAIR_AB,
+    CSI_PAIR_BOTH,
+    CSI_PAIR_CD,
+    CSI_QUAD,
+    CSI_UNCOMPRESSED,
+    PAIR_BUDGET,
+)
+
+# Batch geometry of the AOT artifact.  The rust runtime pads every request
+# up to this group count (GROUPS * 4 lines = 4096 lines per execute call).
+GROUPS = 1024
+
+
+def csi_from_sizes(sizes):
+    """Group layout decision.  sizes: int32[..., 4] hybrid bytes -> CSI."""
+    total = jnp.sum(sizes, axis=-1)
+    ab = (sizes[..., 0] + sizes[..., 1]) <= PAIR_BUDGET
+    cd = (sizes[..., 2] + sizes[..., 3]) <= PAIR_BUDGET
+    csi = jnp.where(
+        ab & cd,
+        CSI_PAIR_BOTH,
+        jnp.where(ab, CSI_PAIR_AB, jnp.where(cd, CSI_PAIR_CD, CSI_UNCOMPRESSED)),
+    )
+    return jnp.where(total <= PAIR_BUDGET, CSI_QUAD, csi).astype(jnp.int32)
+
+
+def analyze_groups(groups):
+    """uint32[G, 4, 16] -> (csi int32[G], sizes int32[G, 4]).
+
+    csi: packing decision per group (0..4, see kernels/ref.py docstring).
+    sizes: per-line hybrid FPC+BDI compressed size in bytes (64 = raw).
+    """
+    g = groups.shape[0]
+    lines = groups.reshape(g * 4, 16)
+    sizes = fpc_bdi.line_sizes(lines)[:, 2].reshape(g, 4)
+    return csi_from_sizes(sizes), sizes

@@ -1,0 +1,227 @@
+# Kernel vs oracle parity — the CORE correctness signal for L1.
+#
+# The pallas kernel (compile.kernels.fpc_bdi) and the pure-jnp oracle
+# (compile.kernels.ref) must agree EXACTLY (integer sizes, no tolerance) on
+# every value regime the simulator generates.  Hand-computed cases pin the
+# spec itself; hypothesis sweeps shapes and value regimes.
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fpc_bdi, ref
+
+# ---------------------------------------------------------------------------
+# value-regime generators (mirror rust/src/workloads value models)
+# ---------------------------------------------------------------------------
+
+
+def lines_from(rng, regime, n):
+    """Generate n cachelines (n,16) u32 under a named value regime."""
+    if regime == "uniform":
+        return rng.integers(0, 2**32, size=(n, 16), dtype=np.uint32)
+    if regime == "zeros":
+        return np.zeros((n, 16), dtype=np.uint32)
+    if regime == "small_ints":
+        return rng.integers(0, 256, size=(n, 16)).astype(np.uint32)
+    if regime == "small_signed":
+        v = rng.integers(-8, 8, size=(n, 16))
+        return v.astype(np.int32).view(np.uint32).reshape(n, 16)
+    if regime == "rep_bytes":
+        b = rng.integers(0, 256, size=(n, 1), dtype=np.uint32)
+        w = b | (b << 8) | (b << 16) | (b << 24)
+        return np.broadcast_to(w, (n, 16)).copy().astype(np.uint32)
+    if regime == "base_delta8":
+        base = rng.integers(0, 2**63, size=(n, 1), dtype=np.uint64)
+        delta = rng.integers(-100, 100, size=(n, 8)).astype(np.int64)
+        q = (base + delta.view(np.uint64)).astype(np.uint64)
+        return q.view(np.uint32).reshape(n, 16)
+    if regime == "base_delta4":
+        base = rng.integers(0, 2**31, size=(n, 1), dtype=np.uint32)
+        delta = rng.integers(-100, 100, size=(n, 16)).astype(np.int32)
+        return (base.astype(np.int64) + delta).astype(np.uint32)
+    if regime == "half_zero":
+        hi = rng.integers(0, 2**16, size=(n, 16), dtype=np.uint32)
+        return (hi << 16).astype(np.uint32)
+    if regime == "mixed":
+        parts = [
+            lines_from(rng, r, max(1, n // 6))
+            for r in ("uniform", "zeros", "small_ints", "rep_bytes", "base_delta8", "half_zero")
+        ]
+        out = np.concatenate(parts, axis=0)[:n]
+        if out.shape[0] < n:
+            out = np.concatenate([out, lines_from(rng, "uniform", n - out.shape[0])])
+        return out
+    raise ValueError(regime)
+
+
+REGIMES = [
+    "uniform",
+    "zeros",
+    "small_ints",
+    "small_signed",
+    "rep_bytes",
+    "base_delta8",
+    "base_delta4",
+    "half_zero",
+    "mixed",
+]
+
+# ---------------------------------------------------------------------------
+# hand-computed spec pins
+# ---------------------------------------------------------------------------
+
+
+def hybrid_of(line16):
+    out = np.asarray(fpc_bdi.line_sizes(np.asarray([line16], dtype=np.uint32)))
+    return out[0]
+
+
+def test_zero_line_sizes():
+    fpc, bdi, hyb = hybrid_of([0] * 16)
+    # FPC: 16 words * (3 prefix + 0 data) = 48 bits = 6 bytes
+    assert fpc == 6
+    # BDI zeros encoding = 1 byte
+    assert bdi == 1
+    # hybrid = 1 header + min(6,1) = 2
+    assert hyb == 2
+
+
+def test_small_positive_words():
+    fpc, bdi, hyb = hybrid_of([7] * 16)
+    # FPC: 4-bit SE per word: 16*(3+4) = 112 bits = 14 bytes
+    assert fpc == 14
+    # BDI: u64s all equal 0x0000000700000007 -> rep8 = 8 bytes
+    assert bdi == 8
+    assert hyb == 9
+
+
+def test_repeated_bytes_word():
+    fpc, bdi, hyb = hybrid_of([0x41414141] * 16)
+    # FPC: repeated-bytes class: 16*(3+8) = 176 bits = 22 bytes
+    assert fpc == 22
+    assert bdi == 8  # rep8
+    assert hyb == 9
+
+
+def test_half_zero_word():
+    # 0xABCD0000: low half zero -> 16 data bits; not 16-bit SE.
+    fpc, bdi, hyb = hybrid_of([0xABCD0000] * 16)
+    assert fpc == (16 * (3 + 16) + 7) // 8  # 38
+    assert bdi == 8  # all u64 equal -> rep8
+
+
+def test_neg_one_words():
+    # 0xFFFFFFFF = -1: 4-bit sign-extended.
+    fpc, bdi, hyb = hybrid_of([0xFFFFFFFF] * 16)
+    assert fpc == 14
+    assert bdi == 8
+
+
+def test_base8_delta1_line():
+    base = 0x1234_5678_9ABC_DE00
+    qwords = np.array([base + d for d in range(8)], dtype=np.uint64)
+    line = qwords.view(np.uint32)
+    fpc, bdi, hyb = hybrid_of(line)
+    assert bdi == 16  # 8-byte base + 8 1-byte deltas
+    assert hyb == 17
+
+
+def test_base8_delta2_line():
+    base = 0x1234_5678_9ABC_DE00
+    qwords = np.array([base + 200 * d for d in range(8)], dtype=np.uint64)
+    line = qwords.view(np.uint32)
+    _, bdi, _ = hybrid_of(line)
+    assert bdi == 24
+
+
+def test_incompressible_line():
+    rng = np.random.default_rng(7)
+    line = rng.integers(2**28, 2**32 - 2**28, size=16, dtype=np.uint32)
+    # Force word diversity so no class applies.
+    line = line | 0x01010101
+    line = np.array(
+        [w ^ (0x9E3779B9 * (i + 1) & 0xFFFFFFFF) for i, w in enumerate(line)],
+        dtype=np.uint32,
+    )
+    fpc, bdi, hyb = hybrid_of(line)
+    assert hyb == 64 or hyb == min(64, 1 + min(fpc, bdi))
+
+
+def test_pair_budget_constant():
+    assert ref.PAIR_BUDGET == 60
+    assert ref.MARKER_RESERVE == 4
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_parity_regimes(regime):
+    rng = np.random.default_rng(hash(regime) % 2**32)
+    lines = lines_from(rng, regime, 500)
+    got = np.asarray(fpc_bdi.line_sizes(lines))
+    want = np.asarray(ref.line_sizes(lines))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 700),
+    regime=st.sampled_from(REGIMES),
+)
+def test_parity_hypothesis(seed, n, regime):
+    rng = np.random.default_rng(seed)
+    lines = lines_from(rng, regime, n)
+    got = np.asarray(fpc_bdi.line_sizes(lines))
+    want = np.asarray(ref.line_sizes(lines))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    words=st.lists(st.integers(0, 2**32 - 1), min_size=16, max_size=16),
+)
+def test_parity_adversarial_single_line(words):
+    """Arbitrary bit patterns, including boundary values hypothesis finds."""
+    line = np.array([words], dtype=np.uint32)
+    got = np.asarray(fpc_bdi.line_sizes(line))
+    want = np.asarray(ref.line_sizes(line))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_parity_boundary_values():
+    """Sign-extension boundary words for every FPC class edge."""
+    edges = [
+        0, 1, 7, 8, 0xFFFFFFF8, 0xFFFFFFF7,  # 4-bit SE edges
+        127, 128, 0xFFFFFF80, 0xFFFFFF7F,  # 8-bit
+        32767, 32768, 0xFFFF8000, 0xFFFF7FFF,  # 16-bit
+        0x00010000, 0x7FFF0000, 0x80000000, 0xFFFF0000,  # half-zero
+        0x007F007F, 0x0080007F, 0xFF80FF80, 0xFF7FFF80,  # two-half SE8
+        0xAAAAAAAA, 0xABABABAB,  # rep bytes
+    ]
+    rng = np.random.default_rng(3)
+    lines = []
+    for e in edges:
+        line = rng.integers(0, 2**32, size=16, dtype=np.uint32)
+        line[rng.integers(0, 16)] = e
+        lines.append(line)
+        lines.append(np.full(16, e, dtype=np.uint32))
+    lines = np.stack(lines)
+    np.testing.assert_array_equal(
+        np.asarray(fpc_bdi.line_sizes(lines)), np.asarray(ref.line_sizes(lines))
+    )
+
+
+def test_padding_any_n():
+    """line_sizes pads to BLOCK internally; result must not depend on it."""
+    rng = np.random.default_rng(11)
+    lines = lines_from(rng, "mixed", 1000)
+    full = np.asarray(fpc_bdi.line_sizes(lines))
+    for n in (1, 2, 255, 256, 257, 600):
+        np.testing.assert_array_equal(
+            np.asarray(fpc_bdi.line_sizes(lines[:n])), full[:n]
+        )

@@ -1,0 +1,101 @@
+# L2 model tests: group CSI decisions vs the oracle + hand-pinned layouts.
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def groups_of(lines):
+    """(n*4, 16) -> (n, 4, 16)."""
+    return np.asarray(lines, dtype=np.uint32).reshape(-1, 4, 16)
+
+
+def test_csi_all_zero_group():
+    g = groups_of(np.zeros((4, 16), dtype=np.uint32))
+    csi, sizes = model.analyze_groups(g)
+    # each zero line -> hybrid 2 bytes; 4*2=8 <= 60 -> 4:1
+    assert int(csi[0]) == ref.CSI_QUAD
+    assert list(np.asarray(sizes[0])) == [2, 2, 2, 2]
+
+
+def test_csi_incompressible_group():
+    rng = np.random.default_rng(5)
+    g = rng.integers(1 << 28, 1 << 31, size=(1, 4, 16), dtype=np.uint32)
+    # xor-scramble to defeat accidental classes
+    g = g ^ (np.arange(16, dtype=np.uint32) * np.uint32(0x9E3779B9) + np.uint32(1))
+    csi, sizes = model.analyze_groups(g.astype(np.uint32))
+    assert int(csi[0]) == ref.CSI_UNCOMPRESSED
+
+
+def test_csi_pair_ab_only():
+    zero = np.zeros(16, dtype=np.uint32)
+    rng = np.random.default_rng(9)
+    incompressible = (
+        rng.integers(1 << 28, 1 << 31, size=(2, 16), dtype=np.uint32)
+        ^ (np.arange(16, dtype=np.uint32) * np.uint32(0x9E3779B9) + np.uint32(1))
+    ).astype(np.uint32)
+    g = groups_of(np.stack([zero, zero, incompressible[0], incompressible[1]]))
+    csi, _ = model.analyze_groups(g)
+    assert int(csi[0]) == ref.CSI_PAIR_AB
+
+
+def test_csi_pair_cd_only():
+    zero = np.zeros(16, dtype=np.uint32)
+    rng = np.random.default_rng(9)
+    bad = (
+        rng.integers(1 << 28, 1 << 31, size=(2, 16), dtype=np.uint32)
+        ^ (np.arange(16, dtype=np.uint32) * np.uint32(0x9E3779B9) + np.uint32(1))
+    ).astype(np.uint32)
+    g = groups_of(np.stack([bad[0], bad[1], zero, zero]))
+    csi, _ = model.analyze_groups(g)
+    assert int(csi[0]) == ref.CSI_PAIR_CD
+
+
+def test_csi_both_pairs_not_quad():
+    # Four lines, each hybrid size ~17 (base8-delta1): pairs fit (34<=60)
+    # but the quad does not (68>60) -> CSI_PAIR_BOTH.
+    lines = []
+    for k in range(4):
+        base = np.uint64(0x1000_0000_0000_0000 + (k << 32))
+        q = np.array([base + np.uint64(d) for d in range(8)], dtype=np.uint64)
+        lines.append(q.view(np.uint32))
+    g = groups_of(np.stack(lines))
+    csi, sizes = model.analyze_groups(g)
+    s = np.asarray(sizes[0])
+    assert list(s) == [17, 17, 17, 17]
+    assert int(csi[0]) == ref.CSI_PAIR_BOTH
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64))
+def test_model_matches_oracle(seed, n):
+    rng = np.random.default_rng(seed)
+    regs = ["uniform", "zeros", "small", "rep"]
+    lines = []
+    for _ in range(n * 4):
+        r = regs[rng.integers(0, len(regs))]
+        if r == "uniform":
+            lines.append(rng.integers(0, 2**32, 16, dtype=np.uint32))
+        elif r == "zeros":
+            lines.append(np.zeros(16, dtype=np.uint32))
+        elif r == "small":
+            lines.append(rng.integers(0, 128, 16).astype(np.uint32))
+        else:
+            b = np.uint32(rng.integers(0, 256))
+            lines.append(np.full(16, b | (b << 8) | (b << 16) | (b << 24), dtype=np.uint32))
+    g = groups_of(np.stack(lines))
+    csi_m, sizes_m = model.analyze_groups(g)
+    csi_r, sizes_r = ref.analyze_groups(g)
+    np.testing.assert_array_equal(np.asarray(csi_m), np.asarray(csi_r))
+    np.testing.assert_array_equal(np.asarray(sizes_m), np.asarray(sizes_r))
+
+
+def test_aot_lowering_produces_hlo_text():
+    from compile import aot
+
+    text = aot.lower_analyze_groups()
+    assert "HloModule" in text
+    # entry signature: u32[GROUPS,4,16] -> (s32[GROUPS], s32[GROUPS,4])
+    assert f"u32[{model.GROUPS},4,16]" in text.replace(" ", "")

@@ -1,0 +1,73 @@
+//! Compression hot-path benchmarks (the L3-native port of the L1 kernel).
+//!
+//! criterion is unavailable offline; `cram::util::bench` provides the
+//! harness (median/p10/p90 + throughput).  Run: `cargo bench --bench compress`
+
+use cram::compress::{bdi, fpc, hybrid};
+use cram::cram::marker::MarkerEngine;
+use cram::mem::CacheLine;
+use cram::util::bench::{black_box, Bencher};
+use cram::util::rng::Rng;
+use cram::workloads::{ValueModel};
+
+fn mixed_lines(n: usize) -> Vec<CacheLine> {
+    let model = ValueModel::new([1.0, 1.0, 1.0, 1.0, 1.0], 0xBE9C);
+    (0..n as u64).map(|i| model.gen_line(i, 0)).collect()
+}
+
+fn main() {
+    let b = Bencher::default();
+    let lines = mixed_lines(4096);
+
+    println!("# compress — native FPC/BDI/hybrid over 4096 mixed lines");
+    b.run("fpc::size_bytes x4096", Some(4096), || {
+        for l in &lines {
+            black_box(fpc::size_bytes(l));
+        }
+    });
+    b.run("bdi::size_bytes x4096", Some(4096), || {
+        for l in &lines {
+            black_box(bdi::size_bytes(l));
+        }
+    });
+    b.run("hybrid::compressed_size x4096", Some(4096), || {
+        for l in &lines {
+            black_box(hybrid::compressed_size(l));
+        }
+    });
+    b.run("hybrid::encode x4096", Some(4096), || {
+        for l in &lines {
+            black_box(hybrid::encode(l));
+        }
+    });
+    let encoded: Vec<_> = lines.iter().filter_map(hybrid::encode).collect();
+    b.run(
+        &format!("hybrid::decode x{}", encoded.len()),
+        Some(encoded.len() as u64),
+        || {
+            for c in &encoded {
+                black_box(hybrid::decode(c));
+            }
+        },
+    );
+
+    println!("\n# marker classification (the implicit-metadata read path)");
+    let engine = MarkerEngine::new(42);
+    b.run("marker::classify x4096", Some(4096), || {
+        for (i, l) in lines.iter().enumerate() {
+            black_box(engine.classify(i as u64, l));
+        }
+    });
+
+    println!("\n# batched group analysis (native equivalent of the L1 kernel batch)");
+    let mut rng = Rng::new(7);
+    let group_lines = mixed_lines(4096);
+    let _ = &mut rng;
+    b.run("group sizes+CSI x1024 groups", Some(1024), || {
+        for g in 0..1024usize {
+            let sizes: [u32; 4] =
+                core::array::from_fn(|s| hybrid::compressed_size(&group_lines[g * 4 + s]));
+            black_box(cram::cram::group::Csi::from_sizes(sizes));
+        }
+    });
+}

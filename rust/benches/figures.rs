@@ -1,0 +1,63 @@
+//! One bench per paper exhibit: times the reduced-scale regeneration of
+//! each figure/table so harness-cost regressions are visible.
+//!
+//! (The full-scale regeneration is `repro reproduce-all`; see
+//! EXPERIMENTS.md for recorded outputs.)  Run: `cargo bench --bench figures`
+
+use cram::controller::Design;
+use cram::coordinator::figures;
+use cram::coordinator::runner::{ResultsDb, RunPlan};
+use cram::util::bench::{black_box, Bencher};
+
+fn mini_db() -> ResultsDb {
+    ResultsDb::new(RunPlan {
+        insts_per_core: 100_000,
+        seed: 7,
+        threads: 1,
+    })
+}
+
+fn main() {
+    let b = Bencher::quick();
+
+    // data-only exhibits (no simulation matrix)
+    b.run("fig4 (compressibility profile)", None, || {
+        black_box(figures::figure4());
+    });
+    b.run("table3 (storage overhead)", None, || {
+        black_box(figures::table3());
+    });
+
+    // simulation-backed exhibits at reduced scale, one timed run each;
+    // the matrix is shared via the ResultsDb cache so each bench times
+    // (matrix population for its designs) + (report formatting)
+    let exhibits: &[(&str, &[Design])] = &[
+        ("fig3", &[Design::Uncompressed, Design::Ideal, Design::Explicit { row_opt: false }]),
+        ("fig7", &[Design::Uncompressed, Design::Explicit { row_opt: false }]),
+        ("fig8", &[Design::Uncompressed, Design::Explicit { row_opt: false }]),
+        ("fig12", &[Design::Uncompressed, Design::Explicit { row_opt: false }, Design::Implicit]),
+        ("fig14", &[Design::Uncompressed, Design::Explicit { row_opt: false }, Design::Implicit]),
+        ("fig15", &[Design::Uncompressed, Design::Implicit]),
+        ("fig16", &[Design::Uncompressed, Design::Implicit, Design::Dynamic, Design::Ideal]),
+        ("fig19", &[Design::Uncompressed, Design::Dynamic]),
+        ("fig20", &[Design::Uncompressed, Design::Explicit { row_opt: true }, Design::Dynamic]),
+        ("table2", &[Design::Uncompressed]),
+        ("table5", &[Design::Uncompressed, Design::NextLinePrefetch, Design::Dynamic]),
+    ];
+    for (id, designs) in exhibits {
+        // one cold measurement per exhibit (sim matrices are too heavy for
+        // repeated timing; Bencher::quick keeps the repeat count small)
+        let mut db = mini_db();
+        db.run_designs(designs, false, false);
+        b.run(&format!("{id} (report from cached matrix)"), None, || {
+            black_box(figures::report(&db, id).unwrap().render());
+        });
+    }
+
+    // fig18 runs the extended 64-workload set
+    let mut db = mini_db();
+    db.run_designs(&[Design::Uncompressed, Design::Dynamic], true, false);
+    b.run("fig18 (s-curve from cached matrix)", None, || {
+        black_box(figures::report(&db, "fig18").unwrap().render());
+    });
+}

@@ -1,0 +1,36 @@
+//! End-to-end simulator throughput per memory-system design.
+//!
+//! The L3 perf target (DESIGN.md §Perf): the simulator must sustain
+//! millions of LLC accesses per second so the full evaluation matrix is
+//! tractable on one core.  Run: `cargo bench --bench simulator`
+
+use cram::controller::Design;
+use cram::sim::{simulate, SimConfig};
+use cram::util::bench::{black_box, Bencher};
+use cram::workloads::profiles::by_name;
+
+fn main() {
+    let b = Bencher::quick();
+    let insts = 400_000u64;
+
+    for wl in ["libq", "pr_twi"] {
+        println!("# simulator — {wl}, {insts} insts/core x8 cores (+= equal warmup)");
+        let profile = by_name(wl).unwrap();
+        for design in [
+            Design::Uncompressed,
+            Design::Ideal,
+            Design::Explicit { row_opt: false },
+            Design::Implicit,
+            Design::Dynamic,
+            Design::NextLinePrefetch,
+        ] {
+            let cfg = SimConfig::default().with_design(design).with_insts(insts);
+            // throughput denominator: total instructions simulated
+            let elems = insts * 8 * 2; // warmup + measure
+            b.run(&format!("{wl}/{}", design.name()), Some(elems), || {
+                black_box(simulate(&profile, &cfg));
+            });
+        }
+        println!();
+    }
+}

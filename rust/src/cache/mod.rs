@@ -1,0 +1,11 @@
+//! On-chip cache substrate: a tag-array set-associative cache model with
+//! the CRAM-specific tag extensions (2-bit prior-compressibility, core id
+//! + reuse bit for sampled sets) and ganged eviction of compressed groups.
+//!
+//! The simulator is trace-driven at line granularity, so the cache tracks
+//! tags and flags only — data bytes live in the byte-accurate
+//! [`crate::cram::store::CompressedStore`] when fidelity demands it.
+
+pub mod set_assoc;
+
+pub use set_assoc::{AccessInfo, CacheConfig, Evicted, SetAssocCache};

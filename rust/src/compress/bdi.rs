@@ -1,0 +1,329 @@
+//! BDI — Base-Delta-Immediate compression (Pekhimenko et al.), single
+//! arbitrary base (= element 0), matching `python/compile/kernels/ref.py`:
+//!
+//! | mode        | layout                            | bytes |
+//! |-------------|-----------------------------------|-------|
+//! | Zeros       | (nothing)                         | 1     |
+//! | Rep8        | one 8-byte value                  | 8     |
+//! | B8D1/D2/D4  | 8-byte base + 8 deltas of k bytes | 16/24/40 |
+//! | B4D1/D2     | 4-byte base + 16 deltas of k      | 20/36 |
+//! | B2D1        | 2-byte base + 32 deltas of 1      | 34    |
+//!
+//! Deltas are wrapping subtractions at the element width and must fit as
+//! sign-extended k-byte values.
+
+use crate::mem::CacheLine;
+
+/// BDI encoding mode.  Discriminants are stable: they are stored in the
+/// hybrid header byte (see `hybrid.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum BdiMode {
+    Zeros = 0,
+    Rep8 = 1,
+    B8D1 = 2,
+    B8D2 = 3,
+    B8D4 = 4,
+    B4D1 = 5,
+    B4D2 = 6,
+    B2D1 = 7,
+}
+
+impl BdiMode {
+    pub const ALL: [BdiMode; 8] = [
+        BdiMode::Zeros,
+        BdiMode::Rep8,
+        BdiMode::B8D1,
+        BdiMode::B8D2,
+        BdiMode::B8D4,
+        BdiMode::B4D1,
+        BdiMode::B4D2,
+        BdiMode::B2D1,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Self::ALL.get(v as usize).copied()
+    }
+
+    /// Encoded payload size in bytes.
+    pub fn size_bytes(self) -> u32 {
+        match self {
+            BdiMode::Zeros => 1,
+            BdiMode::Rep8 => 8,
+            BdiMode::B8D1 => 16,
+            BdiMode::B8D2 => 24,
+            BdiMode::B8D4 => 40,
+            BdiMode::B4D1 => 20,
+            BdiMode::B4D2 => 36,
+            BdiMode::B2D1 => 34,
+        }
+    }
+}
+
+#[inline]
+fn se_fits64(v: i64, bits: u32) -> bool {
+    let sh = 64 - bits;
+    (v << sh) >> sh == v
+}
+
+/// Does the line fit mode `m`?
+pub fn fits(line: &CacheLine, m: BdiMode) -> bool {
+    match m {
+        BdiMode::Zeros => line.qwords().iter().all(|&q| q == 0),
+        BdiMode::Rep8 => {
+            let q = line.qwords();
+            q.iter().all(|&v| v == q[0])
+        }
+        BdiMode::B8D1 | BdiMode::B8D2 | BdiMode::B8D4 => {
+            let bits = match m {
+                BdiMode::B8D1 => 8,
+                BdiMode::B8D2 => 16,
+                _ => 32,
+            };
+            let q = line.qwords();
+            q.iter()
+                .all(|&v| se_fits64(v.wrapping_sub(q[0]) as i64, bits))
+        }
+        BdiMode::B4D1 | BdiMode::B4D2 => {
+            let bits = if m == BdiMode::B4D1 { 8 } else { 16 };
+            let w = line.words();
+            w.iter()
+                .all(|&v| se_fits64(v.wrapping_sub(w[0]) as i32 as i64, bits))
+        }
+        BdiMode::B2D1 => {
+            let h = line.halfwords();
+            h.iter()
+                .all(|&v| se_fits64(v.wrapping_sub(h[0]) as i16 as i64, 8))
+        }
+    }
+}
+
+/// Best (smallest) applicable mode, or `None` if nothing fits.
+pub fn best_mode(line: &CacheLine) -> Option<BdiMode> {
+    // Sorted by ascending size; first hit wins.
+    const BY_SIZE: [BdiMode; 8] = [
+        BdiMode::Zeros, // 1
+        BdiMode::Rep8,  // 8
+        BdiMode::B8D1,  // 16
+        BdiMode::B4D1,  // 20
+        BdiMode::B8D2,  // 24
+        BdiMode::B2D1,  // 34
+        BdiMode::B4D2,  // 36
+        BdiMode::B8D4,  // 40
+    ];
+    BY_SIZE.into_iter().find(|&m| fits(line, m))
+}
+
+/// BDI compressed size in bytes; 64 if nothing fits.
+pub fn size_bytes(line: &CacheLine) -> u32 {
+    best_mode(line).map_or(64, |m| m.size_bytes())
+}
+
+/// Encode under a specific mode.  Panics if the mode does not fit
+/// (callers go through [`best_mode`]).
+pub fn encode(line: &CacheLine, m: BdiMode) -> Vec<u8> {
+    debug_assert!(fits(line, m));
+    let mut out = Vec::with_capacity(m.size_bytes() as usize);
+    match m {
+        BdiMode::Zeros => out.push(0),
+        BdiMode::Rep8 => out.extend_from_slice(&line.qwords()[0].to_le_bytes()),
+        BdiMode::B8D1 | BdiMode::B8D2 | BdiMode::B8D4 => {
+            let k = match m {
+                BdiMode::B8D1 => 1,
+                BdiMode::B8D2 => 2,
+                _ => 4,
+            };
+            let q = line.qwords();
+            out.extend_from_slice(&q[0].to_le_bytes());
+            for &v in &q {
+                let d = v.wrapping_sub(q[0]);
+                out.extend_from_slice(&d.to_le_bytes()[..k]);
+            }
+        }
+        BdiMode::B4D1 | BdiMode::B4D2 => {
+            let k = if m == BdiMode::B4D1 { 1 } else { 2 };
+            let w = line.words();
+            out.extend_from_slice(&w[0].to_le_bytes());
+            for &v in w {
+                let d = v.wrapping_sub(w[0]);
+                out.extend_from_slice(&d.to_le_bytes()[..k]);
+            }
+        }
+        BdiMode::B2D1 => {
+            let h = line.halfwords();
+            out.extend_from_slice(&h[0].to_le_bytes());
+            for &v in &h {
+                out.push(v.wrapping_sub(h[0]) as u8);
+            }
+        }
+    }
+    debug_assert_eq!(out.len() as u32, m.size_bytes());
+    out
+}
+
+#[inline]
+fn se8(v: u8) -> i64 {
+    v as i8 as i64
+}
+
+/// Decode a BDI payload back to the line.
+pub fn decode(bytes: &[u8], m: BdiMode) -> CacheLine {
+    match m {
+        BdiMode::Zeros => CacheLine::zero(),
+        BdiMode::Rep8 => {
+            let v = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+            CacheLine::from_qwords([v; 8])
+        }
+        BdiMode::B8D1 | BdiMode::B8D2 | BdiMode::B8D4 => {
+            let k = match m {
+                BdiMode::B8D1 => 1usize,
+                BdiMode::B8D2 => 2,
+                _ => 4,
+            };
+            let base = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+            let mut q = [0u64; 8];
+            for (i, v) in q.iter_mut().enumerate() {
+                let off = 8 + i * k;
+                let mut d = 0i64;
+                for j in (0..k).rev() {
+                    d = (d << 8) | bytes[off + j] as i64;
+                }
+                // sign-extend k bytes
+                let sh = 64 - 8 * k as u32;
+                d = (d << sh) >> sh;
+                *v = base.wrapping_add(d as u64);
+            }
+            CacheLine::from_qwords(q)
+        }
+        BdiMode::B4D1 | BdiMode::B4D2 => {
+            let k = if m == BdiMode::B4D1 { 1usize } else { 2 };
+            let base = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+            let mut w = [0u32; 16];
+            for (i, v) in w.iter_mut().enumerate() {
+                let off = 4 + i * k;
+                let mut d = 0i32;
+                for j in (0..k).rev() {
+                    d = (d << 8) | bytes[off + j] as i32;
+                }
+                let sh = 32 - 8 * k as u32;
+                d = (d << sh) >> sh;
+                *v = base.wrapping_add(d as u32);
+            }
+            CacheLine::from_words(w)
+        }
+        BdiMode::B2D1 => {
+            let base = u16::from_le_bytes(bytes[..2].try_into().unwrap());
+            let mut h = [0u16; 32];
+            for (i, v) in h.iter_mut().enumerate() {
+                *v = base.wrapping_add(se8(bytes[2 + i]) as u16);
+            }
+            let mut w = [0u32; 16];
+            for i in 0..16 {
+                w[i] = h[2 * i] as u32 | ((h[2 * i + 1] as u32) << 16);
+            }
+            CacheLine::from_words(w)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::forall;
+
+    #[test]
+    fn zeros_and_rep() {
+        assert_eq!(size_bytes(&CacheLine::zero()), 1);
+        let rep = CacheLine::from_qwords([0xDEAD_BEEF_0BAD_F00D; 8]);
+        assert_eq!(best_mode(&rep), Some(BdiMode::Rep8));
+        assert_eq!(decode(&encode(&rep, BdiMode::Rep8), BdiMode::Rep8), rep);
+    }
+
+    #[test]
+    fn spec_pins() {
+        // base8-delta1 line
+        let base = 0x1234_5678_9ABC_DE00u64;
+        let q: [u64; 8] = core::array::from_fn(|i| base + i as u64);
+        let line = CacheLine::from_qwords(q);
+        assert_eq!(size_bytes(&line), 16);
+        // base8-delta2
+        let q2: [u64; 8] = core::array::from_fn(|i| base + 200 * i as u64);
+        assert_eq!(size_bytes(&CacheLine::from_qwords(q2)), 24);
+        // negative deltas wrap correctly
+        let q3: [u64; 8] = core::array::from_fn(|i| base.wrapping_sub(i as u64));
+        assert_eq!(size_bytes(&CacheLine::from_qwords(q3)), 16);
+    }
+
+    #[test]
+    fn delta_wrapping_at_element_width() {
+        // u16 elements where delta wraps around 0xFFFF: 0x0001 - 0x0005 =
+        // -4 (fits SE8) — the width-limited wrap must be honored.
+        let mut h = [0x0005u16; 32];
+        h[3] = 0x0001;
+        let mut w = [0u32; 16];
+        for i in 0..16 {
+            w[i] = h[2 * i] as u32 | ((h[2 * i + 1] as u32) << 16);
+        }
+        let line = CacheLine::from_words(w);
+        assert!(fits(&line, BdiMode::B2D1));
+    }
+
+    #[test]
+    fn incompressible() {
+        // pseudo-random line defeats all modes with high probability; use a
+        // fixed known-bad pattern.
+        let w: [u32; 16] =
+            core::array::from_fn(|i| 0x9E37_79B9u32.wrapping_mul(i as u32 + 1) | 0x8000_0001);
+        let line = CacheLine::from_words(w);
+        assert_eq!(size_bytes(&line), 64);
+        assert_eq!(best_mode(&line), None);
+    }
+
+    #[test]
+    fn roundtrip_every_mode() {
+        forall("bdi roundtrip", 512, |rng| {
+            // construct a line guaranteed to fit a randomly chosen mode
+            let m = BdiMode::ALL[rng.below(8) as usize];
+            let line = match m {
+                BdiMode::Zeros => CacheLine::zero(),
+                BdiMode::Rep8 => CacheLine::from_qwords([rng.next_u64(); 8]),
+                BdiMode::B8D1 | BdiMode::B8D2 | BdiMode::B8D4 => {
+                    let bits = match m {
+                        BdiMode::B8D1 => 7,
+                        BdiMode::B8D2 => 15,
+                        _ => 31,
+                    };
+                    let base = rng.next_u64();
+                    CacheLine::from_qwords(core::array::from_fn(|_| {
+                        let d = (rng.next_u64() & ((1 << bits) - 1)) as i64
+                            - (1i64 << (bits - 1));
+                        base.wrapping_add(d as u64)
+                    }))
+                }
+                BdiMode::B4D1 | BdiMode::B4D2 => {
+                    let bits = if m == BdiMode::B4D1 { 7 } else { 15 };
+                    let base = rng.next_u32();
+                    CacheLine::from_words(core::array::from_fn(|_| {
+                        let d = (rng.next_u32() & ((1 << bits) - 1)) as i32
+                            - (1i32 << (bits - 1));
+                        base.wrapping_add(d as u32)
+                    }))
+                }
+                BdiMode::B2D1 => {
+                    let base = rng.next_u32() as u16;
+                    let h: [u16; 32] = core::array::from_fn(|_| {
+                        let d = (rng.next_u32() & 0x7F) as i32 - 64;
+                        base.wrapping_add(d as u16)
+                    });
+                    let mut w = [0u32; 16];
+                    for i in 0..16 {
+                        w[i] = h[2 * i] as u32 | ((h[2 * i + 1] as u32) << 16);
+                    }
+                    CacheLine::from_words(w)
+                }
+            };
+            assert!(fits(&line, m), "mode {m:?} should fit");
+            assert_eq!(decode(&encode(&line, m), m), line, "mode {m:?}");
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Little bit-granular writer/reader for the FPC bitstream.
+
+/// Append-only bit writer (LSB-first within each byte).
+#[derive(Default, Debug, Clone)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    bit_len: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `v` (n <= 32).
+    pub fn push(&mut self, v: u32, n: usize) {
+        debug_assert!(n <= 32);
+        for i in 0..n {
+            let bit = (v >> i) & 1;
+            let byte_idx = self.bit_len / 8;
+            if byte_idx == self.bytes.len() {
+                self.bytes.push(0);
+            }
+            self.bytes[byte_idx] |= (bit as u8) << (self.bit_len % 8);
+            self.bit_len += 1;
+        }
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.bit_len
+    }
+
+    /// Finished stream, padded with zero bits to a byte boundary.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// Sequential bit reader matching [`BitWriter`]'s layout.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    /// Read `n` bits (n <= 32) as the low bits of the returned value.
+    pub fn pull(&mut self, n: usize) -> u32 {
+        debug_assert!(n <= 32);
+        let mut v = 0u32;
+        for i in 0..n {
+            let byte_idx = self.pos / 8;
+            let bit = (self.bytes[byte_idx] >> (self.pos % 8)) & 1;
+            v |= (bit as u32) << i;
+            self.pos += 1;
+        }
+        v
+    }
+
+    pub fn bits_read(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_various_widths() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.push(0xFFFF_FFFF, 32);
+        w.push(0, 1);
+        w.push(0x5A, 8);
+        assert_eq!(w.bit_len(), 44);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.pull(3), 0b101);
+        assert_eq!(r.pull(32), 0xFFFF_FFFF);
+        assert_eq!(r.pull(1), 0);
+        assert_eq!(r.pull(8), 0x5A);
+    }
+
+    #[test]
+    fn roundtrip_random_streams() {
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let mut widths = Vec::new();
+            let mut vals = Vec::new();
+            let mut w = BitWriter::new();
+            for _ in 0..rng.below(40) + 1 {
+                let n = (rng.below(32) + 1) as usize;
+                let v = rng.next_u32() & if n == 32 { u32::MAX } else { (1 << n) - 1 };
+                widths.push(n);
+                vals.push(v);
+                w.push(v, n);
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for (n, v) in widths.iter().zip(&vals) {
+                assert_eq!(r.pull(*n), *v);
+            }
+        }
+    }
+
+    #[test]
+    fn byte_padding() {
+        let mut w = BitWriter::new();
+        w.push(1, 1);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), 1);
+        assert_eq!(bytes[0], 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! FPC — Frequent Pattern Compression (Alameldeen & Wood).
+//!
+//! Per 32-bit word: a 3-bit class prefix followed by the class's data bits.
+//! The size model matches `python/compile/kernels/ref.py` exactly:
+//!
+//! | class | pattern                          | data bits |
+//! |-------|----------------------------------|-----------|
+//! | 0     | zero word                        | 0         |
+//! | 1     | 4-bit sign-extended              | 4         |
+//! | 2     | 8-bit sign-extended              | 8         |
+//! | 3     | 16-bit sign-extended             | 16        |
+//! | 4     | halfword padded with zero half   | 16        |
+//! | 5     | two halfwords, each 8-bit SE     | 16        |
+//! | 6     | repeated bytes                   | 8         |
+//! | 7     | uncompressed word                | 32        |
+//!
+//! The *encoder* picks, for every word, the applicable class with the
+//! fewest data bits (ties broken by ascending class id), so the encoded
+//! length always equals [`size_bytes`].
+
+use crate::compress::bits::{BitReader, BitWriter};
+use crate::mem::CacheLine;
+
+/// True if `v` (as i32) fits in `bits` bits sign-extended.
+#[inline]
+fn se_fits(v: i32, bits: u32) -> bool {
+    let sh = 32 - bits;
+    (v << sh) >> sh == v
+}
+
+/// Data bits for one word under the cheapest applicable class.
+#[inline]
+pub fn word_bits(w: u32) -> u32 {
+    word_class(w).1
+}
+
+/// (class id, data bits) for one word — cheapest applicable class, ties by
+/// ascending class id.
+#[inline]
+pub fn word_class(w: u32) -> (u8, u32) {
+    let i = w as i32;
+    if w == 0 {
+        return (0, 0);
+    }
+    if se_fits(i, 4) {
+        return (1, 4);
+    }
+    if se_fits(i, 8) {
+        return (2, 8);
+    }
+    let b = w & 0xFF;
+    if b | (b << 8) | (b << 16) | (b << 24) == w {
+        return (6, 8);
+    }
+    if se_fits(i, 16) {
+        return (3, 16);
+    }
+    if w & 0xFFFF == 0 {
+        return (4, 16);
+    }
+    let lo = ((w & 0xFFFF) as u16) as i16 as i32;
+    let hi = ((w >> 16) as u16) as i16 as i32;
+    if se_fits(lo, 8) && se_fits(hi, 8) {
+        return (5, 16);
+    }
+    (7, 32)
+}
+
+/// FPC compressed size in bytes (ceil of the bit total).
+pub fn size_bytes(line: &CacheLine) -> u32 {
+    let bits: u32 = line.words().iter().map(|&w| 3 + word_bits(w)).sum();
+    (bits + 7) / 8
+}
+
+/// Encode a line to its FPC bitstream (padded to a byte boundary).
+/// `encode(line).len() == size_bytes(line)` always holds.
+pub fn encode(line: &CacheLine) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    for &word in line.words() {
+        let (class, bits) = word_class(word);
+        w.push(class as u32, 3);
+        match class {
+            0 => {}
+            1 | 2 | 3 | 7 => w.push(word & mask(bits), bits as usize),
+            4 => w.push(word >> 16, 16),
+            5 => {
+                w.push(word & 0xFF, 8); // low half's 8-bit payload
+                w.push((word >> 16) & 0xFF, 8); // high half's payload
+            }
+            6 => w.push(word & 0xFF, 8),
+            _ => unreachable!(),
+        }
+    }
+    w.into_bytes()
+}
+
+#[inline]
+fn mask(bits: u32) -> u32 {
+    if bits >= 32 {
+        u32::MAX
+    } else {
+        (1 << bits) - 1
+    }
+}
+
+#[inline]
+fn sign_extend(v: u32, bits: u32) -> u32 {
+    let sh = 32 - bits;
+    (((v << sh) as i32) >> sh) as u32
+}
+
+/// Decode an FPC bitstream back to the original line.
+pub fn decode(bytes: &[u8]) -> CacheLine {
+    decode_with_len(bytes).0
+}
+
+/// Decode and also report how many bytes of `bytes` the stream occupied
+/// (bit total rounded up) — used when payloads are packed back to back.
+pub fn decode_with_len(bytes: &[u8]) -> (CacheLine, usize) {
+    let mut r = BitReader::new(bytes);
+    let mut words = [0u32; 16];
+    for w in &mut words {
+        let class = r.pull(3) as u8;
+        *w = match class {
+            0 => 0,
+            1 => sign_extend(r.pull(4), 4),
+            2 => sign_extend(r.pull(8), 8),
+            3 => sign_extend(r.pull(16), 16),
+            4 => r.pull(16) << 16,
+            5 => {
+                let lo = sign_extend(r.pull(8), 8) & 0xFFFF;
+                let hi = sign_extend(r.pull(8), 8) & 0xFFFF;
+                lo | (hi << 16)
+            }
+            6 => {
+                let b = r.pull(8);
+                b | (b << 8) | (b << 16) | (b << 24)
+            }
+            7 => r.pull(32),
+            _ => unreachable!(),
+        };
+    }
+    (CacheLine::from_words(words), r.bits_read().div_ceil(8))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::forall;
+
+    #[test]
+    fn zero_line() {
+        let line = CacheLine::zero();
+        assert_eq!(size_bytes(&line), 6); // 16 * 3 bits = 48 bits
+        assert_eq!(decode(&encode(&line)), line);
+    }
+
+    #[test]
+    fn word_class_spec_pins() {
+        assert_eq!(word_class(0), (0, 0));
+        assert_eq!(word_class(7), (1, 4));
+        assert_eq!(word_class(0xFFFF_FFF8), (1, 4)); // -8
+        assert_eq!(word_class(127), (2, 8));
+        assert_eq!(word_class(0xFFFF_FF80), (2, 8)); // -128
+        assert_eq!(word_class(0x4141_4141), (6, 8));
+        assert_eq!(word_class(32767), (3, 16));
+        assert_eq!(word_class(0xABCD_0000), (4, 16));
+        assert_eq!(word_class(0x007F_0080), (7, 32)); // low half 128: not SE8
+        assert_eq!(word_class(0x007F_007F), (5, 16));
+        assert_eq!(word_class(0xFF80_FF80), (5, 16)); // both halves -128
+        assert_eq!(word_class(0x1234_5678), (7, 32));
+    }
+
+    #[test]
+    fn encoded_len_matches_size() {
+        forall("fpc len == size", 512, |rng| {
+            let words: [u32; 16] = core::array::from_fn(|_| match rng.below(6) {
+                0 => 0,
+                1 => rng.below(16) as u32,
+                2 => rng.next_u32() & 0xFF,
+                3 => {
+                    let b = rng.next_u32() & 0xFF;
+                    b | (b << 8) | (b << 16) | (b << 24)
+                }
+                4 => rng.next_u32() & 0xFFFF_0000,
+                _ => rng.next_u32(),
+            });
+            let line = CacheLine::from_words(words);
+            assert_eq!(encode(&line).len() as u32, size_bytes(&line));
+        });
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        forall("fpc roundtrip", 512, |rng| {
+            let words: [u32; 16] = core::array::from_fn(|_| match rng.below(7) {
+                0 => 0,
+                1 => (rng.next_u32() as i32 % 8) as u32,
+                2 => rng.next_u32() & 0xFF,
+                3 => (rng.next_u32() as i32 >> 16) as u32,
+                4 => rng.next_u32() & 0xFFFF_0000,
+                5 => {
+                    let b = rng.next_u32() & 0xFF;
+                    b * 0x0101_0101
+                }
+                _ => rng.next_u32(),
+            });
+            let line = CacheLine::from_words(words);
+            assert_eq!(decode(&encode(&line)), line, "line {line:?}");
+        });
+    }
+}

@@ -1,0 +1,225 @@
+//! Hybrid FPC+BDI — the compression CRAM actually stores (paper §III-A):
+//! compress with both, keep the smaller, spend 1 header byte in-line to
+//! record which algorithm (and BDI mode) was used.
+//!
+//! `compressed_size` matches the L1 kernel / jnp oracle exactly:
+//! `min(64, 1 + min(fpc, bdi))`, where 64 means "stored raw".
+
+use crate::compress::{bdi, cpack, fpc, RAW_SIZE};
+use crate::mem::CacheLine;
+
+/// Header byte values.  0 = FPC; 1..=8 = BDI mode + 1; 9 = C-Pack.
+const HDR_FPC: u8 = 0;
+const HDR_CPACK: u8 = 9;
+
+/// Which algorithms the hybrid selects among.  The paper evaluates
+/// FPC+BDI; §VIII-A notes any algorithm works — [`AlgoSet::FpcBdiCpack`]
+/// adds the dictionary-based C-Pack (ablation: `repro ablate compressor`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AlgoSet {
+    #[default]
+    FpcBdi,
+    FpcBdiCpack,
+}
+
+/// A compressed line: header + payload.  Guaranteed `< 64` bytes total
+/// (otherwise [`encode`] returns `None` and the line is stored raw).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompressedLine {
+    pub bytes: Vec<u8>,
+}
+
+impl CompressedLine {
+    pub fn size(&self) -> u32 {
+        self.bytes.len() as u32
+    }
+}
+
+/// Hybrid compressed size in bytes; [`RAW_SIZE`] (=64) means raw.
+/// (Canonical FPC+BDI — bit-identical to the L1 kernel / jnp oracle.)
+pub fn compressed_size(line: &CacheLine) -> u32 {
+    let f = fpc::size_bytes(line);
+    let b = bdi::size_bytes(line);
+    (1 + f.min(b)).min(RAW_SIZE)
+}
+
+/// Hybrid size under a configurable algorithm set.
+pub fn compressed_size_with(line: &CacheLine, set: AlgoSet) -> u32 {
+    match set {
+        AlgoSet::FpcBdi => compressed_size(line),
+        AlgoSet::FpcBdiCpack => {
+            compressed_size(line).min((1 + cpack::size_bytes(line)).min(RAW_SIZE))
+        }
+    }
+}
+
+/// Compress; `None` if the result would not beat a raw line.
+/// When `Some`, `result.size() == compressed_size(line) < 64`.
+pub fn encode(line: &CacheLine) -> Option<CompressedLine> {
+    encode_with(line, AlgoSet::FpcBdi)
+}
+
+/// Compress under a configurable algorithm set.
+pub fn encode_with(line: &CacheLine, set: AlgoSet) -> Option<CompressedLine> {
+    let f = fpc::size_bytes(line);
+    let b = bdi::size_bytes(line);
+    if set == AlgoSet::FpcBdiCpack {
+        let c = cpack::size_bytes(line);
+        if c < f.min(b) && 1 + c < RAW_SIZE {
+            let mut bytes = Vec::with_capacity(1 + c as usize);
+            bytes.push(HDR_CPACK);
+            bytes.extend_from_slice(&cpack::encode(line));
+            return Some(CompressedLine { bytes });
+        }
+    }
+    if 1 + f.min(b) >= RAW_SIZE {
+        return None;
+    }
+    let mut bytes;
+    if b <= f {
+        let mode = bdi::best_mode(line).expect("b < 64 implies a mode fits");
+        bytes = Vec::with_capacity(1 + b as usize);
+        bytes.push(mode as u8 + 1);
+        bytes.extend_from_slice(&bdi::encode(line, mode));
+    } else {
+        bytes = Vec::with_capacity(1 + f as usize);
+        bytes.push(HDR_FPC);
+        bytes.extend_from_slice(&fpc::encode(line));
+    }
+    Some(CompressedLine { bytes })
+}
+
+/// Decompress a hybrid stream produced by [`encode`].
+pub fn decode(c: &CompressedLine) -> CacheLine {
+    decode_prefix(&c.bytes).0
+}
+
+/// Decode one hybrid payload from the front of `bytes`, returning the line
+/// and the number of bytes consumed (header + payload).  Payloads are
+/// byte-aligned, so compressed lines can be packed back to back in a
+/// physical line and decoded sequentially — this is the compressed-store
+/// read path.
+pub fn decode_prefix(bytes: &[u8]) -> (CacheLine, usize) {
+    let hdr = bytes[0];
+    let payload = &bytes[1..];
+    if hdr == HDR_FPC {
+        let (line, used) = fpc::decode_with_len(payload);
+        (line, 1 + used)
+    } else if hdr == HDR_CPACK {
+        let (line, used) = cpack::decode_with_len(payload);
+        (line, 1 + used)
+    } else {
+        let mode = bdi::BdiMode::from_u8(hdr - 1).expect("valid BDI mode in header");
+        (
+            bdi::decode(payload, mode),
+            1 + mode.size_bytes() as usize,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::forall;
+
+    /// Value regimes mirroring the python test generators.
+    pub(crate) fn random_line(rng: &mut Rng) -> CacheLine {
+        match rng.below(8) {
+            0 => CacheLine::zero(),
+            1 => CacheLine::from_words(core::array::from_fn(|_| rng.below(256) as u32)),
+            2 => {
+                let b = rng.next_u32() & 0xFF;
+                CacheLine::from_words([b * 0x0101_0101; 16])
+            }
+            3 => {
+                let base = rng.next_u64();
+                CacheLine::from_qwords(core::array::from_fn(|_| {
+                    base.wrapping_add(rng.below(200) as u64).wrapping_sub(100)
+                }))
+            }
+            4 => CacheLine::from_words(core::array::from_fn(|_| rng.next_u32() & 0xFFFF_0000)),
+            5 => {
+                let base = rng.next_u32();
+                CacheLine::from_words(core::array::from_fn(|_| {
+                    base.wrapping_add(rng.below(100) as u32)
+                }))
+            }
+            _ => CacheLine::from_words(core::array::from_fn(|_| rng.next_u32())),
+        }
+    }
+
+    #[test]
+    fn size_spec_pins() {
+        // mirror python/tests/test_kernel.py hand pins
+        assert_eq!(compressed_size(&CacheLine::zero()), 2);
+        assert_eq!(compressed_size(&CacheLine::from_words([7; 16])), 9);
+        assert_eq!(compressed_size(&CacheLine::from_words([0x4141_4141; 16])), 9);
+        let base = 0x1234_5678_9ABC_DE00u64;
+        let line = CacheLine::from_qwords(core::array::from_fn(|i| base + i as u64));
+        assert_eq!(compressed_size(&line), 17);
+    }
+
+    #[test]
+    fn encode_size_agrees_with_size_fn() {
+        forall("hybrid size agreement", 1024, |rng| {
+            let line = random_line(rng);
+            let size = compressed_size(&line);
+            match encode(&line) {
+                Some(c) => assert_eq!(c.size(), size),
+                None => assert_eq!(size, RAW_SIZE),
+            }
+        });
+    }
+
+    #[test]
+    fn roundtrip() {
+        forall("hybrid roundtrip", 1024, |rng| {
+            let line = random_line(rng);
+            if let Some(c) = encode(&line) {
+                assert_eq!(decode(&c), line);
+            }
+        });
+    }
+
+    #[test]
+    fn cpack_set_only_improves() {
+        forall("cpack never hurts", 512, |rng| {
+            let line = random_line(rng);
+            let base = compressed_size(&line);
+            let ext = compressed_size_with(&line, AlgoSet::FpcBdiCpack);
+            assert!(ext <= base, "adding an algorithm can only shrink");
+            if let Some(c) = encode_with(&line, AlgoSet::FpcBdiCpack) {
+                assert_eq!(c.size(), ext);
+                assert_eq!(decode(&c), line);
+            } else {
+                assert_eq!(ext, RAW_SIZE);
+            }
+        });
+    }
+
+    #[test]
+    fn cpack_wins_on_dictionary_friendly_data() {
+        // repeated irregular words: FPC can't, BDI can't (u64 pairs
+        // unequal), C-Pack dictionary can
+        let w: [u32; 16] = core::array::from_fn(|i| {
+            [0xDEAD_BEEF, 0xCAFE_F00D, 0x8BAD_F00D][i % 3]
+        });
+        let line = CacheLine::from_words(w);
+        let base = compressed_size(&line);
+        let ext = compressed_size_with(&line, AlgoSet::FpcBdiCpack);
+        assert!(ext < base, "cpack should win: {ext} vs {base}");
+        let c = encode_with(&line, AlgoSet::FpcBdiCpack).unwrap();
+        assert_eq!(c.bytes[0], 9, "C-Pack header");
+        assert_eq!(decode(&c), line);
+    }
+
+    #[test]
+    fn incompressible_returns_none() {
+        let w: [u32; 16] =
+            core::array::from_fn(|i| 0x9E37_79B9u32.wrapping_mul(i as u32 + 1) | 0x8000_0001);
+        let line = CacheLine::from_words(w);
+        assert!(encode(&line).is_none());
+        assert_eq!(compressed_size(&line), RAW_SIZE);
+    }
+}

@@ -1,0 +1,26 @@
+//! FPC / BDI / hybrid line compressors.
+//!
+//! This is the bit-exact native port of the L1 Pallas kernel
+//! (`python/compile/kernels/fpc_bdi.py`); the canonical size model is
+//! specified in `python/compile/kernels/ref.py` and parity is enforced by
+//! `rust/tests/parity_hlo.rs` (native vs the AOT HLO artifact executed via
+//! PJRT) plus the pytest suite (kernel vs oracle).
+//!
+//! Unlike the python side (which only needs sizes), the simulator also
+//! needs real *bitstreams*: the compressed-store substrate packs actual
+//! bytes into physical lines, and the round-trip `decode(encode(x)) == x`
+//! is a property-test target.
+
+pub mod bdi;
+pub mod bits;
+pub mod cpack;
+pub mod fpc;
+pub mod hybrid;
+
+pub use hybrid::{compressed_size, decode, encode, AlgoSet, CompressedLine};
+
+/// Size in bytes meaning "stored uncompressed" (raw line, no header).
+pub const RAW_SIZE: u32 = 64;
+
+/// Pair/quad packing budget: 64 bytes minus the 4-byte marker reserve.
+pub const PACK_BUDGET: u32 = 60;

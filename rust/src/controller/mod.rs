@@ -1,0 +1,846 @@
+//! Memory-controller designs: CRAM and every baseline the paper evaluates.
+//!
+//! One [`MemoryController`] drives all designs (selected by [`Design`]) so
+//! the read/writeback machinery — group layout transitions, marker-implied
+//! verification, LLP prediction walks, metadata traffic, Dynamic-CRAM
+//! gating — shares one audited implementation.
+//!
+//! | [`Design`] | paper reference |
+//! |---|---|
+//! | `Uncompressed` | baseline of every figure |
+//! | `Ideal` | Fig. 3/16 "ideal compression" (benefits, no overheads) |
+//! | `Explicit` | Fig. 7/8/12 CRAM + metadata region + 32KB metadata cache |
+//! | `Explicit { row_opt }` | Fig. 20 MemZip/LCP-style row-co-located metadata |
+//! | `Implicit` | Fig. 12/15/16 "Static-CRAM": implicit metadata + LLP |
+//! | `Dynamic` | Fig. 16/18/19: Static-CRAM + set-sampled cost/benefit gating |
+//! | `NextLinePrefetch` | Table V baseline |
+
+use std::collections::HashMap;
+
+use crate::cram::dynamic::DynamicCram;
+use crate::cram::group::{possible_locations, Csi};
+use crate::cram::llp::LineLocationPredictor;
+use crate::cram::metadata::{MetaAccess, MetadataStore};
+use crate::dram::{DramSim, ReqKind};
+use crate::mem::{group_base, page_of_line};
+use crate::stats::Bandwidth;
+use crate::workloads::SizeOracle;
+
+/// Which memory-system design the controller implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Design {
+    Uncompressed,
+    Ideal,
+    Explicit { row_opt: bool },
+    Implicit,
+    Dynamic,
+    NextLinePrefetch,
+}
+
+impl Design {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Design::Uncompressed => "uncompressed",
+            Design::Ideal => "ideal",
+            Design::Explicit { row_opt: false } => "cram-explicit",
+            Design::Explicit { row_opt: true } => "cram-explicit-rowopt",
+            Design::Implicit => "cram-static",
+            Design::Dynamic => "cram-dynamic",
+            Design::NextLinePrefetch => "nextline-prefetch",
+        }
+    }
+
+    pub fn compresses(&self) -> bool {
+        !matches!(self, Design::Uncompressed | Design::NextLinePrefetch)
+    }
+}
+
+/// A line the LLC should install after a read.
+#[derive(Clone, Copy, Debug)]
+pub struct Install {
+    pub line_addr: u64,
+    /// Prior-compressibility tag bits (0/1/2).
+    pub level: u8,
+    /// Installed for free by compression (not the demanded line).
+    pub prefetch: bool,
+}
+
+/// Outcome of a demand read.
+#[derive(Clone, Debug)]
+pub struct ReadOutcome {
+    /// CPU-visible completion time (bus cycles) of the demanded data.
+    pub done: u64,
+    pub installs: Vec<Install>,
+}
+
+/// The memory controller.
+pub struct MemoryController {
+    pub design: Design,
+    /// Current physical layout per group (what is actually in DRAM).
+    mem_csi: HashMap<u64, Csi>,
+    pub llp: LineLocationPredictor,
+    pub meta: Option<MetadataStore>,
+    pub dynamic: Option<DynamicCram>,
+    pub bw: Bandwidth,
+    pub prefetch_installed: u64,
+    pub prefetch_used: u64,
+    /// Groups written compressed vs total group writebacks (diagnostics).
+    pub groups_written: u64,
+    pub groups_compressed: u64,
+}
+
+impl MemoryController {
+    pub fn new(design: Design, cores: usize, meta_region_base: u64) -> Self {
+        Self::with_knobs(design, cores, meta_region_base, 512, 32 * 1024)
+    }
+
+    /// Construct with ablation knobs: LLP entries and metadata-cache size.
+    pub fn with_knobs(
+        design: Design,
+        cores: usize,
+        meta_region_base: u64,
+        llp_entries: usize,
+        meta_cache_bytes: usize,
+    ) -> Self {
+        let meta = match design {
+            Design::Explicit { row_opt } => {
+                let mut m = MetadataStore::new(meta_cache_bytes, 8, meta_region_base);
+                m.row_optimized = row_opt;
+                Some(m)
+            }
+            _ => None,
+        };
+        // 6-bit counters: hysteresis depth scaled to the shortened
+        // simulation slices (the paper sizes 12 bits for 1B-instruction
+        // slices; threshold must be crossable within a few array sweeps).
+        let dynamic = matches!(design, Design::Dynamic).then(|| DynamicCram::with_bits(cores, 6));
+        Self {
+            design,
+            mem_csi: HashMap::new(),
+            llp: LineLocationPredictor::new(llp_entries, 0xD1CE),
+            meta,
+            dynamic,
+            bw: Bandwidth::default(),
+            prefetch_installed: 0,
+            prefetch_used: 0,
+            groups_written: 0,
+            groups_compressed: 0,
+        }
+    }
+
+    #[inline]
+    fn csi_of(&self, line: u64) -> Csi {
+        *self.mem_csi.get(&group_base(line)).unwrap_or(&Csi::Uncompressed)
+    }
+
+    /// Demand read of `line` for `core` at bus-cycle `now`.
+    /// `sampled` = the line maps to a Dynamic-CRAM sampled LLC set.
+    pub fn read(
+        &mut self,
+        line: u64,
+        core: usize,
+        now: u64,
+        dram: &mut DramSim,
+        oracle: &mut SizeOracle,
+        sampled: bool,
+    ) -> ReadOutcome {
+        match self.design {
+            Design::Uncompressed => {
+                self.bw.demand_reads += 1;
+                let done = dram.access(line, ReqKind::Read, now, false);
+                ReadOutcome {
+                    done,
+                    installs: vec![Install { line_addr: line, level: 0, prefetch: false }],
+                }
+            }
+            Design::NextLinePrefetch => {
+                self.bw.demand_reads += 1;
+                let done = dram.access(line, ReqKind::Read, now, false);
+                // next-line prefetch: a full extra access (the bandwidth
+                // cost CRAM avoids — Table V)
+                self.bw.prefetch_reads += 1;
+                dram.access(line + 1, ReqKind::Read, now, false);
+                self.prefetch_installed += 1;
+                ReadOutcome {
+                    done,
+                    installs: vec![
+                        Install { line_addr: line, level: 0, prefetch: false },
+                        Install { line_addr: line + 1, level: 0, prefetch: true },
+                    ],
+                }
+            }
+            Design::Ideal => {
+                // Fig. 3: all the benefits (co-fetched neighbors arrive
+                // free), none of the overheads (no metadata, no markers, no
+                // extra writebacks — layout magically always optimal).
+                self.bw.demand_reads += 1;
+                let done = dram.access(line, ReqKind::Read, now, false);
+                let sizes = oracle.group_sizes(line);
+                let csi = Csi::from_sizes(sizes);
+                let base = group_base(line);
+                let slot = (line - base) as u8;
+                let loc = csi.location(slot);
+                let installs = self.installs_for(base, csi, loc, line);
+                ReadOutcome { done, installs }
+            }
+            Design::Explicit { row_opt } => {
+                // 1) metadata lookup (cache hit: free; miss: a DRAM access
+                //    that the data access serializes behind)
+                let meta = self.meta.as_mut().expect("explicit has metadata");
+                let meta_addr = meta.meta_addr_for(line);
+                let (_, how) = meta.lookup(line);
+                let actual = self.csi_of(line);
+                let mut t = now;
+                if how == MetaAccess::Miss {
+                    self.bw.meta_reads += 1;
+                    t = dram.access(meta_addr, ReqKind::MetaRead, t, row_opt);
+                }
+                // 2) data access at the (now known) correct location
+                let base = group_base(line);
+                let slot = (line - base) as u8;
+                let loc = base + actual.location(slot) as u64;
+                self.bw.demand_reads += 1;
+                let done = dram.access(loc, ReqKind::Read, t, false);
+                let installs = self.installs_for(base, actual, actual.location(slot), line);
+                ReadOutcome { done, installs }
+            }
+            Design::Implicit | Design::Dynamic => {
+                let base = group_base(line);
+                let slot = (line - base) as u8;
+                let page = page_of_line(line);
+                let actual = self.csi_of(line);
+                let actual_loc = actual.location(slot);
+                let (pred_loc, needed) = self.llp.predict_location(page, slot);
+                if needed {
+                    self.llp.record_outcome(pred_loc == actual_loc);
+                }
+                // Probe predicted first, then remaining possible locations;
+                // the markers in each fetched line verify the guess.
+                let mut probes = vec![pred_loc];
+                for &s in possible_locations(slot) {
+                    if s != pred_loc {
+                        probes.push(s);
+                    }
+                }
+                let mut t = now;
+                let mut first = true;
+                let mut done = 0;
+                for p in probes {
+                    if first {
+                        self.bw.demand_reads += 1;
+                    } else {
+                        self.bw.second_reads += 1;
+                        if sampled {
+                            if let Some(d) = self.dynamic.as_mut() {
+                                d.on_cost(core);
+                            }
+                        }
+                    }
+                    t = dram.access(base + p as u64, ReqKind::Read, t, false);
+                    done = t;
+                    first = false;
+                    if p == actual_loc {
+                        break;
+                    }
+                }
+                // train the LCT with the layout the markers revealed
+                self.llp.update(page, actual);
+                let installs = self.installs_for(base, actual, actual_loc, line);
+                ReadOutcome { done, installs }
+            }
+        }
+    }
+
+    /// Lines recovered by reading physical slot `loc` of the group — the
+    /// demanded line plus bandwidth-free prefetches.
+    fn installs_for(&mut self, base: u64, csi: Csi, loc: u8, demanded: u64) -> Vec<Install> {
+        let mut v = Vec::with_capacity(4);
+        for &s in csi.colocated(loc) {
+            let la = base + s as u64;
+            let prefetch = la != demanded;
+            if prefetch {
+                self.prefetch_installed += 1;
+            }
+            v.push(Install { line_addr: la, level: csi.level_of(s), prefetch });
+        }
+        // The demanded line is always recoverable at `loc` by construction.
+        debug_assert!(v.iter().any(|i| i.line_addr == demanded));
+        v
+    }
+
+    /// A previously-prefetched line was demanded for the first time —
+    /// Dynamic-CRAM's bandwidth-benefit event (§VI-A).
+    pub fn on_prefetch_used(&mut self, core: usize, sampled: bool) {
+        self.prefetch_used += 1;
+        if sampled {
+            if let Some(d) = self.dynamic.as_mut() {
+                d.on_benefit(core);
+            }
+        }
+    }
+
+    /// Handle a ganged eviction: `gang` holds every group member that was
+    /// resident (all forced out together).  Decides the new layout, issues
+    /// the writes/invalidates, and updates metadata/LLP state.
+    ///
+    /// `sampled` = the group maps to sampled LLC sets (always compress,
+    /// train counters); non-sampled sets follow the per-core counter.
+    pub fn writeback(
+        &mut self,
+        gang: &[crate::cache::Evicted],
+        now: u64,
+        dram: &mut DramSim,
+        oracle: &mut SizeOracle,
+        sampled: bool,
+    ) {
+        if gang.is_empty() {
+            return;
+        }
+        let base = group_base(gang[0].line_addr);
+        debug_assert!(gang.iter().all(|e| group_base(e.line_addr) == base));
+        let old = self.csi_of(base);
+
+        let mut present = [false; 4];
+        let mut dirty = [false; 4];
+        for e in gang {
+            let s = (e.line_addr - base) as usize;
+            present[s] = true;
+            dirty[s] |= e.dirty;
+        }
+
+        if !self.design.compresses() {
+            // Baselines: dirty lines write back raw; clean lines drop.
+            for s in 0..4 {
+                if present[s] && dirty[s] {
+                    self.bw.demand_writes += 1;
+                    dram.access(base + s as u64, ReqKind::Write, now, false);
+                }
+            }
+            return;
+        }
+
+        if self.design == Design::Ideal {
+            // No write-side overheads: baseline write behaviour, layout
+            // tracked implicitly via the oracle (reads recompute it).
+            for s in 0..4 {
+                if present[s] && dirty[s] {
+                    self.bw.demand_writes += 1;
+                    dram.access(base + s as u64, ReqKind::Write, now, false);
+                }
+            }
+            return;
+        }
+
+        // Anything dirty? If the whole gang is clean and the layout is not
+        // changing, nothing needs to touch memory (it's all clean drops) —
+        // unless compression wants to newly pack clean lines.
+        let owner_core = gang[0].core as usize;
+        let compress = match (&self.design, &self.dynamic) {
+            (Design::Dynamic, Some(d)) => sampled || d.enabled(owner_core),
+            _ => true,
+        };
+
+        // Fast path: compression disabled and the group was never packed —
+        // plain dirty writebacks, no compressibility analysis needed.
+        if !compress && old == Csi::Uncompressed {
+            for s in 0..4 {
+                if present[s] && dirty[s] {
+                    oracle.dirty_update(base + s as u64);
+                    self.bw.demand_writes += 1;
+                    dram.access(base + s as u64, ReqKind::Write, now, false);
+                }
+            }
+            return;
+        }
+
+        // Dirty stores changed data: re-roll compressibility of dirty lines.
+        for s in 0..4 {
+            if present[s] && dirty[s] {
+                oracle.dirty_update(base + s as u64);
+            }
+        }
+        let sizes = oracle.group_sizes(base);
+
+        // Decide the new layout under residency constraints (can only pack
+        // lines we actually hold — ganged eviction guarantees packed peers
+        // travel together, so halves are never split).
+        let all4 = present.iter().all(|&p| p);
+        let ab_touched = present[0] || present[1];
+        let cd_touched = present[2] || present[3];
+        let dirty_ab = dirty[0] || dirty[1];
+        let dirty_cd = dirty[2] || dirty[3];
+
+        let new = if compress {
+            let quad_ok = all4 && sizes.iter().sum::<u32>() <= crate::compress::PACK_BUDGET;
+            let pair_ab_ok =
+                present[0] && present[1] && sizes[0] + sizes[1] <= crate::compress::PACK_BUDGET;
+            let pair_cd_ok =
+                present[2] && present[3] && sizes[2] + sizes[3] <= crate::compress::PACK_BUDGET;
+            // Halves with no resident members keep their old arrangement.
+            let old_ab_packed = matches!(old, Csi::PairAb | Csi::PairBoth | Csi::Quad);
+            let old_cd_packed = matches!(old, Csi::PairCd | Csi::PairBoth | Csi::Quad);
+            let new_ab = if ab_touched { pair_ab_ok } else { old_ab_packed };
+            let new_cd = if cd_touched { pair_cd_ok } else { old_cd_packed };
+            if quad_ok {
+                Csi::Quad
+            } else {
+                match (new_ab, new_cd) {
+                    (true, true) => Csi::PairBoth,
+                    (true, false) => Csi::PairAb,
+                    (false, true) => Csi::PairCd,
+                    (false, false) => Csi::Uncompressed,
+                }
+            }
+        } else {
+            // Compression disabled (Dynamic-CRAM): stop *creating* packed
+            // data but leave existing packed data alone — clean evictions
+            // of packed groups drop for free; only dirty data forces the
+            // affected half (or the whole quad) to unpack.
+            match old {
+                Csi::Quad => {
+                    if dirty_ab || dirty_cd {
+                        Csi::Uncompressed
+                    } else {
+                        Csi::Quad
+                    }
+                }
+                _ => {
+                    let ab_packed_old = matches!(old, Csi::PairAb | Csi::PairBoth);
+                    let cd_packed_old = matches!(old, Csi::PairCd | Csi::PairBoth);
+                    let new_ab = ab_packed_old && !(ab_touched && dirty_ab);
+                    let new_cd = cd_packed_old && !(cd_touched && dirty_cd);
+                    match (new_ab, new_cd) {
+                        (true, true) => Csi::PairBoth,
+                        (true, false) => Csi::PairAb,
+                        (false, true) => Csi::PairCd,
+                        (false, false) => Csi::Uncompressed,
+                    }
+                }
+            }
+        };
+
+        // Issue writes per physical slot.
+        self.groups_written += 1;
+        if new != Csi::Uncompressed {
+            self.groups_compressed += 1;
+        }
+        for loc in 0..4u8 {
+            let addr = base + loc as u64;
+            let old_res = old.colocated(loc);
+            let new_res = new.colocated(loc);
+            if new_res.is_empty() {
+                // stale under the new layout: invalidate if it was live
+                if !old_res.is_empty() {
+                    self.bw.invalidates += 1;
+                    if sampled {
+                        if let Some(d) = self.dynamic.as_mut() {
+                            d.on_cost(core_of(gang, base, loc, owner_core));
+                        }
+                    }
+                    dram.access(addr, ReqKind::Invalidate, now, false);
+                }
+                continue;
+            }
+            if new_res.len() > 1 {
+                // packed block: one write; if every member is clean this is
+                // pure compression overhead (the baseline wrote nothing)
+                let any_dirty = new_res.iter().any(|&s| dirty[s as usize]);
+                // If the half keeps its old packed layout and nothing in it
+                // was dirtied, the block already sits in memory byte-for-
+                // byte: no write needed (clean re-eviction of packed data).
+                if !any_dirty && layout_half_same(old, new, loc) {
+                    continue;
+                }
+                if any_dirty {
+                    self.bw.demand_writes += 1;
+                } else {
+                    self.bw.clean_writes += 1;
+                    if sampled {
+                        if let Some(d) = self.dynamic.as_mut() {
+                            d.on_cost(owner_core);
+                        }
+                    }
+                }
+                dram.access(addr, ReqKind::Write, now, false);
+            } else {
+                let s = new_res[0] as usize;
+                // single line at its home: write if dirty, or if the line
+                // is being relocated back (its old location differs), or if
+                // this slot previously held a packed block that must be
+                // overwritten so its marker stops matching
+                let relocated =
+                    old.location(s as u8) != loc || old.colocated(loc).len() > 1;
+                if dirty[s] {
+                    self.bw.demand_writes += 1;
+                    dram.access(addr, ReqKind::Write, now, false);
+                } else if relocated && present[s] {
+                    // clean line restored to its home during an unpack:
+                    // overhead write
+                    self.bw.clean_writes += 1;
+                    if sampled {
+                        if let Some(d) = self.dynamic.as_mut() {
+                            d.on_cost(owner_core);
+                        }
+                    }
+                    dram.access(addr, ReqKind::Write, now, false);
+                }
+            }
+        }
+
+        if new == old && !self.mem_csi.contains_key(&base) && new == Csi::Uncompressed {
+            // nothing to record
+        } else {
+            self.mem_csi.insert(base, new);
+        }
+
+        // Explicit designs must persist the CSI change to the metadata
+        // region (dirty-allocate in the metadata cache; misses and dirty
+        // victims cost DRAM accesses).  An unchanged CSI needs no update
+        // (the controller knows the prior level from the LLC tag bits).
+        if new != old {
+            if let Some(meta) = self.meta.as_mut() {
+            let row_opt = meta.row_optimized;
+            let meta_addr = meta.meta_addr_for(base);
+            let before_wb = meta.writebacks;
+            let how = meta.update(base, new);
+            if how == MetaAccess::Miss {
+                self.bw.meta_reads += 1;
+                dram.access(meta_addr, ReqKind::MetaRead, now, row_opt);
+            }
+            if meta.writebacks > before_wb {
+                self.bw.meta_writes += 1;
+                dram.access(meta_addr, ReqKind::MetaWrite, now, row_opt);
+            }
+            }
+        }
+
+        // Keep the LLP trained on write-side layout changes too.
+        if matches!(self.design, Design::Implicit | Design::Dynamic) {
+            self.llp.update(page_of_line(base), new);
+        }
+    }
+
+    /// Fraction of written groups that ended up compressed.
+    pub fn compression_frac(&self) -> f64 {
+        if self.groups_written == 0 {
+            0.0
+        } else {
+            self.groups_compressed as f64 / self.groups_written as f64
+        }
+    }
+
+    /// Probability that a pair / quad of adjacent lines fits the packing
+    /// budget under this oracle (Fig. 4 harness).
+    pub fn pair_quad_compressibility(
+        oracle: &mut SizeOracle,
+        n_groups: u64,
+    ) -> (f64, f64, f64) {
+        let mut pair60 = 0u64;
+        let mut pair64 = 0u64;
+        let mut quad60 = 0u64;
+        for g in 0..n_groups {
+            let sizes = oracle.group_sizes(g * 4);
+            if sizes[0] + sizes[1] <= 60 {
+                pair60 += 1;
+            }
+            if sizes[0] + sizes[1] <= 64 {
+                pair64 += 1;
+            }
+            if sizes.iter().sum::<u32>() <= 60 {
+                quad60 += 1;
+            }
+        }
+        (
+            pair64 as f64 / n_groups as f64,
+            pair60 as f64 / n_groups as f64,
+            quad60 as f64 / n_groups as f64,
+        )
+    }
+}
+
+/// Which core to charge for an invalidate: the evictee that owned the
+/// stale slot if identifiable, else the gang owner.
+fn core_of(gang: &[crate::cache::Evicted], base: u64, loc: u8, fallback: usize) -> usize {
+    gang.iter()
+        .find(|e| e.line_addr == base + loc as u64)
+        .map(|e| e.core as usize)
+        .unwrap_or(fallback)
+}
+
+/// Is the half containing physical slot `loc` laid out identically in
+/// `old` and `new`?
+fn layout_half_same(old: Csi, new: Csi, loc: u8) -> bool {
+    let half = loc / 2;
+    let packed = |c: Csi| match (c, half) {
+        (Csi::Quad, _) => 2u8,
+        (Csi::PairAb, 0) | (Csi::PairBoth, 0) => 1,
+        (Csi::PairCd, 1) | (Csi::PairBoth, 1) => 1,
+        _ => 0,
+    };
+    packed(old) == packed(new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Evicted;
+    use crate::dram::DramConfig;
+    use crate::workloads::{SizeOracle, ValueModel};
+
+    fn setup(design: Design) -> (MemoryController, DramSim, SizeOracle) {
+        let mc = MemoryController::new(design, 8, 1 << 28);
+        let dram = DramSim::new(DramConfig::default());
+        // all-SmallInt pages: every group packs 4:1
+        let oracle = SizeOracle::new(ValueModel::new([0.0, 1.0, 0.0, 0.0, 0.0], 7));
+        (mc, dram, oracle)
+    }
+
+    fn incompressible_oracle() -> SizeOracle {
+        SizeOracle::new(ValueModel::new([0.0, 0.0, 0.0, 0.0, 1.0], 9))
+    }
+
+    fn gang(base: u64, dirty_mask: [bool; 4]) -> Vec<Evicted> {
+        (0..4)
+            .map(|i| Evicted {
+                line_addr: base + i as u64,
+                dirty: dirty_mask[i],
+                level: 0,
+                core: 0,
+                referenced: true,
+                was_prefetch: false,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn uncompressed_read_installs_one_line() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Uncompressed);
+        let r = mc.read(5, 0, 0, &mut dram, &mut oracle, false);
+        assert_eq!(r.installs.len(), 1);
+        assert_eq!(mc.bw.demand_reads, 1);
+        assert_eq!(dram.stats.reads, 1);
+    }
+
+    #[test]
+    fn quad_writeback_one_write_three_invalidates() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.writeback(&gang(0, [true, false, false, false]), 0, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(0), Csi::Quad);
+        assert_eq!(mc.bw.demand_writes, 1); // one packed block (dirty member)
+        assert_eq!(mc.bw.invalidates, 3); // slots 1-3 were live before
+        assert_eq!(dram.stats.writes, 1);
+        assert_eq!(dram.stats.invalidates, 3);
+    }
+
+    #[test]
+    fn compressed_read_prefetches_group() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        // LLP trained by the writeback: predicts Quad, so reading line 2
+        // goes straight to slot 0 and returns all four lines.
+        let r = mc.read(2, 0, 100, &mut dram, &mut oracle, false);
+        assert_eq!(r.installs.len(), 4);
+        assert_eq!(mc.bw.second_reads, 0, "trained LLP: no second access");
+        assert_eq!(r.installs.iter().filter(|i| i.prefetch).count(), 3);
+        assert!(r.installs.iter().all(|i| i.level == 2));
+    }
+
+    #[test]
+    fn untrained_llp_pays_second_access() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        // poison the LCT: pretend this page was last seen uncompressed
+        mc.llp.update(0, Csi::Uncompressed);
+        let r = mc.read(1, 0, 100, &mut dram, &mut oracle, false);
+        assert_eq!(mc.bw.second_reads, 1, "mispredicted: slot1 then slot0");
+        assert_eq!(r.installs.len(), 4);
+        assert!((mc.llp.stats.accuracy() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clean_eviction_of_compressible_group_costs_clean_write() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.writeback(&gang(0, [false; 4]), 0, &mut dram, &mut oracle, false);
+        // packing clean lines: overhead the baseline wouldn't pay
+        assert_eq!(mc.bw.clean_writes, 1);
+        assert_eq!(mc.bw.demand_writes, 0);
+        assert_eq!(mc.bw.invalidates, 3);
+    }
+
+    #[test]
+    fn uncompressed_baseline_drops_clean_lines() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Uncompressed);
+        mc.writeback(&gang(0, [false; 4]), 0, &mut dram, &mut oracle, false);
+        assert_eq!(mc.bw.demand_writes + mc.bw.clean_writes, 0);
+        assert_eq!(dram.stats.total_accesses(), 0);
+    }
+
+    #[test]
+    fn incompressible_group_stays_uncompressed() {
+        let (mut mc, mut dram, mut oracle_) = setup(Design::Implicit);
+        let mut oracle = incompressible_oracle();
+        let _ = &mut oracle_;
+        mc.writeback(&gang(0, [true, true, false, false]), 0, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(0), Csi::Uncompressed);
+        assert_eq!(mc.bw.demand_writes, 2); // two dirty raw lines
+        assert_eq!(mc.bw.invalidates, 0);
+        assert_eq!(mc.bw.clean_writes, 0);
+    }
+
+    #[test]
+    fn layout_transition_packs_then_unpacks() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(0), Csi::Quad);
+        // dirty rewrites change values; with an incompressible oracle the
+        // group must unpack: all four written raw, stale slots restored
+        let mut bad = incompressible_oracle();
+        mc.writeback(&gang(0, [true; 4]), 1000, &mut dram, &mut bad, false);
+        assert_eq!(mc.csi_of(0), Csi::Uncompressed);
+    }
+
+    #[test]
+    fn dynamic_gates_compression_by_counter() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Dynamic);
+        // hammer costs on core 0 via sampled activity
+        for _ in 0..3000 {
+            mc.dynamic.as_mut().unwrap().on_cost(0);
+        }
+        assert!(!mc.dynamic.as_ref().unwrap().enabled(0));
+        // non-sampled set: compression disabled -> clean gang drops
+        mc.writeback(&gang(0, [false; 4]), 0, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(0), Csi::Uncompressed);
+        assert_eq!(mc.bw.clean_writes, 0);
+        // sampled set: always compresses
+        mc.writeback(&gang(8, [false; 4]), 0, &mut dram, &mut oracle, true);
+        assert_eq!(mc.csi_of(8), Csi::Quad);
+    }
+
+    #[test]
+    fn explicit_charges_metadata_traffic() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Explicit { row_opt: false });
+        // first read: metadata cache cold -> metadata read + data read
+        let r = mc.read(0, 0, 0, &mut dram, &mut oracle, false);
+        assert_eq!(mc.bw.meta_reads, 1);
+        assert_eq!(mc.bw.demand_reads, 1);
+        assert!(r.done > 0);
+        // second read of a neighbor: metadata cached
+        mc.read(4, 0, r.done, &mut dram, &mut oracle, false);
+        assert_eq!(mc.bw.meta_reads, 1);
+        assert_eq!(mc.meta.as_ref().unwrap().hits, 1);
+    }
+
+    #[test]
+    fn prefetch_baseline_costs_extra_reads() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::NextLinePrefetch);
+        let r = mc.read(0, 0, 0, &mut dram, &mut oracle, false);
+        assert_eq!(r.installs.len(), 2);
+        assert_eq!(mc.bw.prefetch_reads, 1);
+        assert_eq!(dram.stats.reads, 2);
+    }
+
+    #[test]
+    fn ideal_no_write_overheads() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Ideal);
+        mc.writeback(&gang(0, [false; 4]), 0, &mut dram, &mut oracle, false);
+        assert_eq!(dram.stats.total_accesses(), 0);
+        let r = mc.read(1, 0, 0, &mut dram, &mut oracle, false);
+        assert_eq!(r.installs.len(), 4, "free co-fetch");
+        assert_eq!(mc.bw.second_reads, 0);
+    }
+
+    #[test]
+    fn row_opt_metadata_reads_are_row_hits() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Explicit { row_opt: true });
+        mc.read(0, 0, 0, &mut dram, &mut oracle, false);
+        // the metadata access must have been a forced row hit
+        assert!(dram.stats.row_hits >= 1);
+        assert_eq!(mc.bw.meta_reads, 1);
+    }
+
+    #[test]
+    fn prefetch_benefit_feeds_dynamic_counter() {
+        let (mut mc, _dram, _oracle) = setup(Design::Dynamic);
+        let before = mc.dynamic.as_ref().unwrap().counter(2);
+        mc.on_prefetch_used(2, true);
+        assert_eq!(mc.dynamic.as_ref().unwrap().counter(2), before + 1);
+        // non-sampled: counted as used, not as counter training
+        mc.on_prefetch_used(2, false);
+        assert_eq!(mc.dynamic.as_ref().unwrap().counter(2), before + 1);
+        assert_eq!(mc.prefetch_used, 2);
+    }
+
+    #[test]
+    fn dynamic_disabled_keeps_packed_data_on_clean_evict() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Dynamic);
+        // pack while enabled (sampled path)
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, true);
+        assert_eq!(mc.csi_of(0), Csi::Quad);
+        // disable, then clean-evict the group: data must STAY packed and
+        // cost nothing
+        for _ in 0..200 {
+            mc.dynamic.as_mut().unwrap().on_cost(0);
+        }
+        let writes_before = dram.stats.total_accesses();
+        mc.writeback(&gang(0, [false; 4]), 100, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(0), Csi::Quad, "clean drop keeps packed layout");
+        assert_eq!(dram.stats.total_accesses(), writes_before, "no traffic");
+        // a dirty evict while disabled unpacks
+        mc.writeback(&gang(0, [true, false, false, false]), 200, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(0), Csi::Uncompressed);
+    }
+
+    #[test]
+    fn second_access_serializes_latency() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        mc.llp.update(0, Csi::Uncompressed); // poison -> mispredict
+        let t0 = 1000;
+        let r = mc.read(1, 0, t0, &mut dram, &mut oracle, false);
+        // two serialized reads: strictly more than one access latency
+        assert!(r.done > t0 + 22, "done {} vs issue {t0}", r.done);
+    }
+
+    #[test]
+    fn compressibility_probe_reports_sane_fractions() {
+        let mut zero_oracle =
+            SizeOracle::new(ValueModel::new([1.0, 0.0, 0.0, 0.0, 0.0], 3));
+        let (p64, p60, q60) =
+            MemoryController::pair_quad_compressibility(&mut zero_oracle, 512);
+        assert!(p64 >= p60, "60B budget can't beat 64B");
+        assert!(p60 > 0.95 && q60 > 0.95, "zero pages always pack");
+        let mut rnd = incompressible_oracle();
+        let (p64, p60, q60) = MemoryController::pair_quad_compressibility(&mut rnd, 512);
+        assert_eq!((p64, p60, q60), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn partial_gang_preserves_other_half() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        // pack CD only: evict gang of just C,D (A,B never resident)
+        let cd: Vec<Evicted> = (2..4)
+            .map(|i| Evicted {
+                line_addr: i,
+                dirty: true,
+                level: 0,
+                core: 0,
+                referenced: true,
+                was_prefetch: false,
+            })
+            .collect();
+        mc.writeback(&cd, 0, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(0), Csi::PairCd);
+        // now evict A alone (clean, incompressible pairing impossible
+        // since B absent): CD half must stay packed
+        let a = vec![Evicted {
+            line_addr: 0,
+            dirty: true,
+            level: 0,
+            core: 0,
+            referenced: true,
+            was_prefetch: false,
+        }];
+        mc.writeback(&a, 10, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(0), Csi::PairCd);
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment orchestration: the figure/table harnesses.
+//!
+//! [`ResultsDb`] runs the (workload × design × channels) simulation matrix
+//! once — in parallel over std threads — and every figure/table harness
+//! formats its paper counterpart from the cached results.  `repro
+//! reproduce-all` regenerates the complete evaluation section.
+
+pub mod ablation;
+pub mod figures;
+pub mod runner;
+
+pub use figures::{all_reports, report, Report};
+pub use runner::{ResultsDb, RunPlan};

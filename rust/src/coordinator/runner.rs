@@ -1,0 +1,257 @@
+//! Parallel simulation runner + results cache.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::controller::Design;
+use crate::sim::{simulate, SimConfig};
+use crate::stats::SimResult;
+use crate::workloads::profiles::{all27, all64, WorkloadProfile};
+
+/// Key identifying one simulation run.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct RunKey {
+    pub workload: String,
+    pub design: &'static str,
+    pub channels: usize,
+}
+
+/// What to simulate.
+#[derive(Clone, Debug)]
+pub struct RunPlan {
+    pub insts_per_core: u64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for RunPlan {
+    fn default() -> Self {
+        Self {
+            insts_per_core: 2_000_000,
+            seed: 0xC0DE,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        }
+    }
+}
+
+/// One simulation job.
+#[derive(Clone)]
+struct Job {
+    profile: WorkloadProfile,
+    design: Design,
+    channels: usize,
+}
+
+/// The designs every per-workload figure compares.
+pub const CORE_DESIGNS: [Design; 7] = [
+    Design::Uncompressed,
+    Design::Ideal,
+    Design::Explicit { row_opt: false },
+    Design::Explicit { row_opt: true },
+    Design::Implicit,
+    Design::Dynamic,
+    Design::NextLinePrefetch,
+];
+
+/// Results cache for the full evaluation.
+pub struct ResultsDb {
+    pub plan: RunPlan,
+    results: HashMap<RunKey, SimResult>,
+}
+
+impl ResultsDb {
+    pub fn new(plan: RunPlan) -> Self {
+        Self { plan, results: HashMap::new() }
+    }
+
+    /// Run the complete matrix needed by every figure and table:
+    /// * all 27 memory-intensive workloads × 7 designs @ 2 channels,
+    /// * the 37 extra low-MPKI workloads × {baseline, dynamic} (Fig. 18),
+    /// * all 27 × {baseline, dynamic} @ 1 and 4 channels (Table IV).
+    pub fn run_full_matrix(&mut self, progress: bool) {
+        let mut jobs: Vec<Job> = Vec::new();
+        for w in all27() {
+            for d in CORE_DESIGNS {
+                jobs.push(Job { profile: w.clone(), design: d, channels: 2 });
+            }
+        }
+        let names27: std::collections::HashSet<_> =
+            all27().iter().map(|w| w.name).collect();
+        for w in all64() {
+            if !names27.contains(w.name) {
+                for d in [Design::Uncompressed, Design::Dynamic] {
+                    jobs.push(Job { profile: w.clone(), design: d, channels: 2 });
+                }
+            }
+        }
+        for w in all27() {
+            for ch in [1usize, 4] {
+                for d in [Design::Uncompressed, Design::Dynamic] {
+                    jobs.push(Job { profile: w.clone(), design: d, channels: ch });
+                }
+            }
+        }
+        self.run_jobs(jobs, progress);
+    }
+
+    /// Smaller matrix: the 27 workloads × the designs needed by a single
+    /// figure (used by per-figure CLI invocations).
+    pub fn run_designs(&mut self, designs: &[Design], extended: bool, progress: bool) {
+        let set = if extended { all64() } else { all27() };
+        let mut jobs = Vec::new();
+        for w in set {
+            for &d in designs {
+                jobs.push(Job { profile: w.clone(), design: d, channels: 2 });
+            }
+        }
+        self.run_jobs(jobs, progress);
+    }
+
+    pub fn run_channel_sweep(&mut self, progress: bool) {
+        let mut jobs = Vec::new();
+        for w in all27() {
+            for ch in [1usize, 2, 4] {
+                for d in [Design::Uncompressed, Design::Dynamic] {
+                    jobs.push(Job { profile: w.clone(), design: d, channels: ch });
+                }
+            }
+        }
+        self.run_jobs(jobs, progress);
+    }
+
+    fn run_jobs(&mut self, jobs: Vec<Job>, progress: bool) {
+        // skip already-cached runs
+        let jobs: Vec<Job> = jobs
+            .into_iter()
+            .filter(|j| {
+                !self.results.contains_key(&RunKey {
+                    workload: j.profile.name.to_string(),
+                    design: j.design.name(),
+                    channels: j.channels,
+                })
+            })
+            .collect();
+        if jobs.is_empty() {
+            return;
+        }
+        let total = jobs.len();
+        let plan = self.plan.clone();
+        let queue = Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>());
+        let out: Mutex<Vec<(RunKey, SimResult)>> = Mutex::new(Vec::with_capacity(total));
+        let done = std::sync::atomic::AtomicUsize::new(0);
+
+        std::thread::scope(|scope| {
+            for _ in 0..plan.threads.min(total) {
+                scope.spawn(|| loop {
+                    let job = { queue.lock().unwrap().pop() };
+                    let Some((_, job)) = job else { break };
+                    // Equalize LLC-access counts across workloads: scale
+                    // the instruction budget so every run issues a similar
+                    // number of accesses (anchored at apki=30) — low-APKI
+                    // workloads need proportionally more instructions to
+                    // traverse their arrays the same number of times.
+                    // Each workload's speedup compares runs of equal
+                    // length, so this only equalizes simulation cost.
+                    let apki = if job.profile.apki > 0.0 {
+                        job.profile.apki
+                    } else {
+                        // MIX: scale by the mean APKI of the components
+                        let comps: Vec<f64> = job
+                            .profile
+                            .mix_of
+                            .iter()
+                            .filter_map(|n| crate::workloads::profiles::by_name(n))
+                            .map(|p| p.apki)
+                            .collect();
+                        comps.iter().sum::<f64>() / comps.len().max(1) as f64
+                    };
+                    let insts = ((plan.insts_per_core as f64 * 30.0 / apki) as u64)
+                        .clamp(plan.insts_per_core / 4, plan.insts_per_core * 6);
+                    let mut cfg = SimConfig {
+                        design: job.design,
+                        seed: plan.seed,
+                        ..Default::default()
+                    }
+                    .with_insts(insts)
+                    .with_channels(job.channels);
+                    // 2x warmup: the LLC, memory layout AND the Dynamic
+                    // gate must all reach steady state before measurement
+                    // (the paper's 1B-inst slices warm up for free).
+                    cfg.warmup_insts = insts * 2;
+                    let r = simulate(&job.profile, &cfg);
+                    let key = RunKey {
+                        workload: job.profile.name.to_string(),
+                        design: job.design.name(),
+                        channels: job.channels,
+                    };
+                    out.lock().unwrap().push((key, r));
+                    let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+                    if progress && (d % 10 == 0 || d == total) {
+                        eprintln!("  [{d}/{total}] simulations done");
+                    }
+                });
+            }
+        });
+        for (k, v) in out.into_inner().unwrap() {
+            self.results.insert(k, v);
+        }
+    }
+
+    /// Fetch a cached result (2 channels unless stated).
+    pub fn get(&self, workload: &str, design: Design) -> Option<&SimResult> {
+        self.get_ch(workload, design, 2)
+    }
+
+    pub fn get_ch(&self, workload: &str, design: Design, channels: usize) -> Option<&SimResult> {
+        self.results.get(&RunKey {
+            workload: workload.to_string(),
+            design: design.name(),
+            channels,
+        })
+    }
+
+    /// Speedup of `design` over the uncompressed baseline for a workload.
+    pub fn speedup(&self, workload: &str, design: Design) -> Option<f64> {
+        let base = self.get(workload, Design::Uncompressed)?;
+        let r = self.get(workload, design)?;
+        Some(r.weighted_speedup(base))
+    }
+
+    pub fn speedup_ch(&self, workload: &str, design: Design, ch: usize) -> Option<f64> {
+        let base = self.get_ch(workload, Design::Uncompressed, ch)?;
+        let r = self.get_ch(workload, design, ch)?;
+        Some(r.weighted_speedup(base))
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_caches_and_parallelizes() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 40_000,
+            seed: 1,
+            threads: 4,
+        });
+        db.run_designs(&[Design::Uncompressed, Design::Implicit], false, false);
+        assert_eq!(db.len(), 27 * 2);
+        let s = db.speedup("libq", Design::Implicit).unwrap();
+        assert!(s > 0.5 && s < 3.0, "sane speedup {s}");
+        // re-run is a no-op (cache)
+        let before = db.len();
+        db.run_designs(&[Design::Uncompressed], false, false);
+        assert_eq!(db.len(), before);
+    }
+}

@@ -1,0 +1,218 @@
+//! Dynamic-CRAM (paper §VI): set-sampled cost/benefit compression gating.
+//!
+//! A small fraction of LLC sets (1%) *always* compress; only they update
+//! the statistics.  A 12-bit saturating counter per core is decremented on
+//! every bandwidth **cost** event (extra clean writeback, invalidate,
+//! mispredicted second access) and incremented on every **benefit** event
+//! (useful bandwidth-free prefetch).  The counter's MSB gates compression
+//! for the other 99% of sets, per requesting core.
+
+/// Counter width (paper: 12 bits, sized for 1B-instruction slices; the
+/// simulator scales it down with the slice length — see
+/// [`DynamicCram::with_bits`]).
+pub const COUNTER_BITS: u32 = 12;
+
+/// Fraction of LLC sets that are sampled (always-compress). 1% ≈ 1/128
+/// was chosen as a power-of-two approximation of the paper's 1%.
+pub const SAMPLE_MOD: u64 = 128;
+
+/// Per-core Dynamic-CRAM policy state.
+#[derive(Clone, Debug)]
+pub struct DynamicCram {
+    counters: Vec<i32>,
+    bits: u32,
+    /// Gate state per core (hysteresis: see [`DynamicCram::enabled`]).
+    state: Vec<std::cell::Cell<bool>>,
+    /// Cost/benefit event counts (diagnostics & Fig. 15/16 analysis).
+    pub cost_events: Vec<u64>,
+    pub benefit_events: Vec<u64>,
+}
+
+impl DynamicCram {
+    /// Paper configuration: 12-bit counters.
+    pub fn new(cores: usize) -> Self {
+        Self::with_bits(cores, COUNTER_BITS)
+    }
+
+    /// Scaled counter width: the MSB threshold (2^(bits-1)) is the
+    /// hysteresis depth, which must be proportional to the sampled-event
+    /// rate of the simulated slice (the paper's 12 bits suit 1B-inst
+    /// slices; short simulation slices use 8).
+    pub fn with_bits(cores: usize, bits: u32) -> Self {
+        Self {
+            // start at the enable threshold: compression on until costs
+            // demonstrably dominate
+            counters: vec![1 << (bits - 1); cores],
+            bits,
+            state: (0..cores).map(|_| std::cell::Cell::new(true)).collect(),
+            cost_events: vec![0; cores],
+            benefit_events: vec![0; cores],
+        }
+    }
+
+    #[inline]
+    fn max(&self) -> i32 {
+        (1 << self.bits) - 1
+    }
+
+    /// Is `set_index` one of the sampled (always-compress) LLC sets?
+    #[inline]
+    pub fn is_sampled_set(set_index: u64) -> bool {
+        set_index % SAMPLE_MOD == 0
+    }
+
+    /// Group-granular sampling: a compression group's four lines span four
+    /// consecutive LLC sets, so cost/benefit attribution must be decided
+    /// per *group* (all four lines agree), not per line's set.
+    #[inline]
+    pub fn is_sampled_group(group: u64) -> bool {
+        group % SAMPLE_MOD == 0
+    }
+
+    /// Bandwidth-cost event observed on a sampled set.
+    #[inline]
+    pub fn on_cost(&mut self, core: usize) {
+        self.cost_events[core] += 1;
+        let c = &mut self.counters[core];
+        *c = (*c - 1).max(0);
+    }
+
+    /// Bandwidth-benefit event observed on a sampled set.
+    #[inline]
+    pub fn on_benefit(&mut self, core: usize) {
+        self.benefit_events[core] += 1;
+        let max = self.max();
+        let c = &mut self.counters[core];
+        *c = (*c + 1).min(max);
+    }
+
+    /// Should the non-sampled sets compress for this core?
+    ///
+    /// The paper gates on the counter MSB.  At simulation scale a single
+    /// threshold makes borderline workloads oscillate every few sampled
+    /// events, and each flip pays real unpack/repack traffic; we add a
+    /// hysteresis band around the MSB (enable at 3/4, disable at 1/4 of
+    /// the range) — the natural scaled-slice reading of the MSB rule,
+    /// since the paper's 12-bit counter makes flips ~1000x rarer.
+    #[inline]
+    pub fn enabled(&self, core: usize) -> bool {
+        let hi = 3 * (1 << (self.bits - 2));
+        let lo = 1 << (self.bits - 2);
+        let c = self.counters[core];
+        if c >= hi {
+            self.state[core].set(true);
+        } else if c < lo {
+            self.state[core].set(false);
+        }
+        self.state[core].get()
+    }
+
+    pub fn counter(&self, core: usize) -> i32 {
+        self.counters[core]
+    }
+
+    /// Storage cost of the counters (paper Table III: 12 bytes — eight
+    /// 12-bit counters).
+    pub fn storage_bytes(&self) -> u32 {
+        (self.counters.len() as u32 * self.bits).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_enabled() {
+        let d = DynamicCram::new(8);
+        for c in 0..8 {
+            assert!(d.enabled(c));
+        }
+    }
+
+    #[test]
+    fn costs_disable_benefits_reenable() {
+        let mut d = DynamicCram::new(1);
+        d.on_cost(0);
+        assert!(d.enabled(0), "hysteresis: one cost does not flip the gate");
+        // long cost streak: disabled and saturates at 0
+        for _ in 0..10_000 {
+            d.on_cost(0);
+        }
+        assert!(!d.enabled(0));
+        assert_eq!(d.counter(0), 0);
+        // needs a sustained benefit streak to flip back (3/4 of range)
+        for _ in 0..3 * 1024 {
+            d.on_benefit(0);
+        }
+        assert!(d.enabled(0));
+    }
+
+    #[test]
+    fn hysteresis_band_prevents_flapping() {
+        let mut d = DynamicCram::with_bits(1, 6); // range 0..63, lo=16 hi=48
+        // drive to the middle repeatedly: state must not change
+        for _ in 0..40 {
+            d.on_cost(0);
+        }
+        assert!(!d.enabled(0)); // hit 0 -> disabled... counter back up:
+        for _ in 0..40 {
+            d.on_benefit(0);
+        }
+        // at 40 (between lo and hi): stays disabled
+        assert!(!d.enabled(0), "mid-band keeps prior state");
+        for _ in 0..10 {
+            d.on_benefit(0);
+        }
+        assert!(d.enabled(0), "crossing hi enables");
+        for _ in 0..20 {
+            d.on_cost(0);
+        }
+        // back to mid-band: stays enabled
+        assert!(d.enabled(0), "mid-band keeps prior state (enabled)");
+    }
+
+    #[test]
+    fn saturates_high() {
+        let mut d = DynamicCram::new(1);
+        for _ in 0..10_000 {
+            d.on_benefit(0);
+        }
+        assert_eq!(d.counter(0), 4095);
+    }
+
+    #[test]
+    fn per_core_isolation() {
+        let mut d = DynamicCram::new(2);
+        for _ in 0..4000 {
+            d.on_cost(0);
+        }
+        assert!(!d.enabled(0));
+        assert!(d.enabled(1), "core 1 unaffected by core 0's costs");
+    }
+
+    #[test]
+    fn sampled_sets_are_about_one_percent() {
+        let sampled = (0..8192u64).filter(|&s| DynamicCram::is_sampled_set(s)).count();
+        assert_eq!(sampled, 8192 / SAMPLE_MOD as usize);
+    }
+
+    #[test]
+    fn storage_overhead_table3() {
+        // 8 cores * 12 bits = 12 bytes
+        assert_eq!(DynamicCram::new(8).storage_bytes(), 12);
+    }
+
+    #[test]
+    fn scaled_counter_flips_faster() {
+        let mut d = DynamicCram::with_bits(1, 8);
+        for _ in 0..300 {
+            d.on_cost(0);
+        }
+        assert!(!d.enabled(0));
+        for _ in 0..200 {
+            d.on_benefit(0);
+        }
+        assert!(d.enabled(0), "8-bit counter recovers in ~192 benefits");
+    }
+}

@@ -1,0 +1,231 @@
+//! Restricted data mapping (paper §IV-A, Fig. 6).
+//!
+//! CRAM groups four consecutive lines `[A, B, C, D]` (line address ending
+//! 00/01/10/11) and allows exactly five layouts.  Restricting placement
+//! bounds the number of locations a line can occupy — A never moves, B has
+//! two possible homes, C two, D three — which is what makes the LLP's job
+//! tractable.
+//!
+//! The `Csi` discriminants are the canonical encoding shared with the L2
+//! model (`python/compile/kernels/ref.py`) and the explicit-metadata
+//! region (3 bits per group).
+
+use crate::compress::PACK_BUDGET;
+
+/// Compression Status Information for one 4-line group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+#[repr(u8)]
+pub enum Csi {
+    /// All four lines uncompressed, in their original slots.
+    #[default]
+    Uncompressed = 0,
+    /// A+B packed at slot 0; C, D uncompressed; slot 1 stale.
+    PairAb = 1,
+    /// C+D packed at slot 2; A, B uncompressed; slot 3 stale.
+    PairCd = 2,
+    /// A+B at slot 0 and C+D at slot 2; slots 1 and 3 stale.
+    PairBoth = 3,
+    /// All four packed at slot 0 (4:1); slots 1-3 stale.
+    Quad = 4,
+}
+
+impl Csi {
+    pub const ALL: [Csi; 5] = [
+        Csi::Uncompressed,
+        Csi::PairAb,
+        Csi::PairCd,
+        Csi::PairBoth,
+        Csi::Quad,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<Csi> {
+        Csi::ALL.get(v as usize).copied()
+    }
+
+    /// Layout decision from the four hybrid sizes (bytes; 64 = raw).
+    /// 4:1 if all four fit in the 60-byte budget, else each pair
+    /// independently.  Must match `ref.csi_decision` on the python side.
+    pub fn from_sizes(sizes: [u32; 4]) -> Csi {
+        let total: u32 = sizes.iter().sum();
+        if total <= PACK_BUDGET {
+            return Csi::Quad;
+        }
+        let ab = sizes[0] + sizes[1] <= PACK_BUDGET;
+        let cd = sizes[2] + sizes[3] <= PACK_BUDGET;
+        match (ab, cd) {
+            (true, true) => Csi::PairBoth,
+            (true, false) => Csi::PairAb,
+            (false, true) => Csi::PairCd,
+            (false, false) => Csi::Uncompressed,
+        }
+    }
+
+    /// Physical slot (0..4) where the line in logical `slot` lives.
+    pub fn location(self, slot: u8) -> u8 {
+        debug_assert!(slot < 4);
+        match self {
+            Csi::Uncompressed => slot,
+            Csi::PairAb => match slot {
+                0 | 1 => 0,
+                s => s,
+            },
+            Csi::PairCd => match slot {
+                2 | 3 => 2,
+                s => s,
+            },
+            Csi::PairBoth => match slot {
+                0 | 1 => 0,
+                _ => 2,
+            },
+            Csi::Quad => 0,
+        }
+    }
+
+    /// Logical slots co-resident at physical `loc` under this layout
+    /// (empty ⇒ `loc` holds stale data / the invalid-line marker).
+    pub fn colocated(self, loc: u8) -> &'static [u8] {
+        debug_assert!(loc < 4);
+        const NONE: &[u8] = &[];
+        const SINGLES: [&[u8]; 4] = [&[0], &[1], &[2], &[3]];
+        match (self, loc) {
+            (Csi::Uncompressed, l) => SINGLES[l as usize],
+            (Csi::PairAb, 0) => &[0, 1],
+            (Csi::PairAb, 2) => &[2],
+            (Csi::PairAb, 3) => &[3],
+            (Csi::PairCd, 0) => &[0],
+            (Csi::PairCd, 1) => &[1],
+            (Csi::PairCd, 2) => &[2, 3],
+            (Csi::PairBoth, 0) => &[0, 1],
+            (Csi::PairBoth, 2) => &[2, 3],
+            (Csi::Quad, 0) => &[0, 1, 2, 3],
+            _ => NONE,
+        }
+    }
+
+    /// Is physical slot `loc` a *stale* location under this layout (left
+    /// behind by packing and overwritten with the invalid-line marker)?
+    pub fn is_stale(self, loc: u8) -> bool {
+        self.colocated(loc).is_empty()
+    }
+
+    /// Whether the data at physical `loc` is stored compressed.
+    pub fn is_compressed_at(self, loc: u8) -> bool {
+        self.colocated(loc).len() > 1
+    }
+
+    /// Compression level recorded in the LLC tag store (2 bits, §V-A
+    /// "Handling Updates to Compressed Lines") for a line in `slot`.
+    /// 0 = uncompressed, 1 = 2:1, 2 = 4:1.
+    pub fn level_of(self, slot: u8) -> u8 {
+        match self {
+            Csi::Quad => 2,
+            _ if self.location(slot) != slot || self.colocated(slot).len() > 1 => 1,
+            _ => 0,
+        }
+    }
+
+    /// Number of DRAM locations holding live data for the group.
+    pub fn live_locations(self) -> u8 {
+        match self {
+            Csi::Uncompressed => 4,
+            Csi::PairAb | Csi::PairCd => 3,
+            Csi::PairBoth => 2,
+            Csi::Quad => 1,
+        }
+    }
+}
+
+/// The locations a line in logical `slot` may occupy across all layouts,
+/// most-common first.  This is the re-issue order after an LLP miss:
+/// slot 0 never moves; B ∈ {1, 0}; C ∈ {2, 0}; D ∈ {3, 2, 0}.
+pub fn possible_locations(slot: u8) -> &'static [u8] {
+    match slot {
+        0 => &[0],
+        1 => &[1, 0],
+        2 => &[2, 0],
+        3 => &[3, 2, 0],
+        _ => panic!("slot out of range"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_sizes_decisions() {
+        assert_eq!(Csi::from_sizes([2, 2, 2, 2]), Csi::Quad);
+        assert_eq!(Csi::from_sizes([15, 15, 15, 15]), Csi::Quad); // sum 60 fits
+        assert_eq!(Csi::from_sizes([15, 15, 15, 16]), Csi::PairBoth); // sum 61 doesn't
+        assert_eq!(Csi::from_sizes([30, 30, 29, 31]), Csi::PairBoth);
+        assert_eq!(Csi::from_sizes([30, 30, 64, 64]), Csi::PairAb);
+        assert_eq!(Csi::from_sizes([64, 64, 30, 30]), Csi::PairCd);
+        assert_eq!(Csi::from_sizes([64, 64, 64, 64]), Csi::Uncompressed);
+        // boundary: exactly 60 fits
+        assert_eq!(Csi::from_sizes([30, 30, 64, 64]), Csi::PairAb);
+        assert_eq!(Csi::from_sizes([30, 31, 64, 64]), Csi::Uncompressed);
+    }
+
+    #[test]
+    fn locations_consistent_with_colocation() {
+        for csi in Csi::ALL {
+            for slot in 0..4u8 {
+                let loc = csi.location(slot);
+                assert!(
+                    csi.colocated(loc).contains(&slot),
+                    "{csi:?} slot {slot} -> loc {loc}"
+                );
+                // and the location is among the globally possible ones
+                assert!(possible_locations(slot).contains(&loc));
+            }
+        }
+    }
+
+    #[test]
+    fn every_slot_lives_somewhere_exactly_once() {
+        for csi in Csi::ALL {
+            for slot in 0..4u8 {
+                let homes: usize = (0..4u8)
+                    .filter(|&loc| csi.colocated(loc).contains(&slot))
+                    .count();
+                assert_eq!(homes, 1, "{csi:?} slot {slot}");
+            }
+        }
+    }
+
+    #[test]
+    fn stale_slots() {
+        assert!(!Csi::Uncompressed.is_stale(0));
+        assert!(Csi::PairAb.is_stale(1));
+        assert!(Csi::PairCd.is_stale(3));
+        assert!(Csi::PairBoth.is_stale(1));
+        assert!(Csi::PairBoth.is_stale(3));
+        assert!(Csi::Quad.is_stale(1));
+        assert!(Csi::Quad.is_stale(2));
+        assert!(Csi::Quad.is_stale(3));
+    }
+
+    #[test]
+    fn a_never_moves() {
+        for csi in Csi::ALL {
+            assert_eq!(csi.location(0), 0);
+        }
+    }
+
+    #[test]
+    fn levels() {
+        assert_eq!(Csi::Quad.level_of(0), 2);
+        assert_eq!(Csi::PairAb.level_of(0), 1);
+        assert_eq!(Csi::PairAb.level_of(1), 1);
+        assert_eq!(Csi::PairAb.level_of(2), 0);
+        assert_eq!(Csi::Uncompressed.level_of(3), 0);
+    }
+
+    #[test]
+    fn live_location_counts() {
+        assert_eq!(Csi::Uncompressed.live_locations(), 4);
+        assert_eq!(Csi::PairAb.live_locations(), 3);
+        assert_eq!(Csi::PairBoth.live_locations(), 2);
+        assert_eq!(Csi::Quad.live_locations(), 1);
+    }
+}

@@ -1,0 +1,224 @@
+//! Line Inversion Table (paper §V-A).
+//!
+//! Tracks the (extremely rare) lines stored in inverted form because their
+//! raw data collided with a marker.  16 entries of {valid bit, 30-bit line
+//! address} = 64 bytes of storage at the memory controller.
+//!
+//! Overflow handling implements both options from the paper:
+//! * **Option-1** (memory-mapped): a 1-bit-per-line region in memory backs
+//!   the table; collisions then cost one extra memory access each.  The
+//!   simulator charges that bandwidth via [`LitAccess::MemoryMapped`].
+//! * **Option-2** (re-key): regenerate the marker keys and re-encode; the
+//!   caller drives [`MarkerEngine::rekey`] and [`LineInversionTable::clear`].
+
+/// Outcome of an insert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LitInsert {
+    /// Stored in an on-chip entry.
+    Stored,
+    /// Already present.
+    AlreadyPresent,
+    /// On-chip table full — overflow path required.
+    Overflow,
+}
+
+/// How a LIT query was served (for bandwidth accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LitAccess {
+    OnChip,
+    /// Served from the memory-mapped overflow region: costs one extra
+    /// DRAM access.
+    MemoryMapped,
+}
+
+/// The Line Inversion Table.
+#[derive(Clone, Debug)]
+pub struct LineInversionTable {
+    entries: Vec<u64>,
+    capacity: usize,
+    /// Option-1 overflow region active: addresses beyond capacity spill to
+    /// a memory-mapped bitmap (modeled as a set here; the bandwidth cost is
+    /// what matters to the simulator).
+    memory_mapped: bool,
+    overflow: std::collections::BTreeSet<u64>,
+    /// Statistics.
+    pub inserts: u64,
+    pub overflows: u64,
+    pub mm_accesses: u64,
+}
+
+impl Default for LineInversionTable {
+    fn default() -> Self {
+        Self::new(16, true)
+    }
+}
+
+impl LineInversionTable {
+    /// `capacity` on-chip entries (paper: 16 for 16GB).  `memory_mapped`
+    /// enables the Option-1 overflow region.
+    pub fn new(capacity: usize, memory_mapped: bool) -> Self {
+        Self {
+            entries: Vec::with_capacity(capacity),
+            capacity,
+            memory_mapped,
+            overflow: Default::default(),
+            inserts: 0,
+            overflows: 0,
+            mm_accesses: 0,
+        }
+    }
+
+    /// Number of tracked inverted lines (on-chip + overflow region).
+    pub fn len(&self) -> usize {
+        self.entries.len() + self.overflow.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record that the line at physical `loc` is stored inverted.
+    pub fn insert(&mut self, loc: u64) -> LitInsert {
+        if self.entries.contains(&loc) || self.overflow.contains(&loc) {
+            return LitInsert::AlreadyPresent;
+        }
+        self.inserts += 1;
+        if self.entries.len() < self.capacity {
+            self.entries.push(loc);
+            LitInsert::Stored
+        } else if self.memory_mapped {
+            self.overflows += 1;
+            self.mm_accesses += 1; // writing the bitmap costs an access
+            self.overflow.insert(loc);
+            LitInsert::Overflow
+        } else {
+            self.overflows += 1;
+            LitInsert::Overflow
+        }
+    }
+
+    /// Is `loc` stored inverted?  Also reports where the answer came from
+    /// so callers can charge bandwidth for memory-mapped lookups.
+    ///
+    /// NOTE on fidelity: a real memory-mapped LIT must be consulted for any
+    /// complement-match read.  On-chip lookups are free; only lookups that
+    /// *fall through* to the overflow region cost a DRAM access, and only
+    /// when the region is in use (non-empty) — before first overflow the
+    /// controller knows the on-chip table is authoritative.
+    pub fn query(&mut self, loc: u64) -> (bool, LitAccess) {
+        if self.entries.contains(&loc) {
+            return (true, LitAccess::OnChip);
+        }
+        if self.memory_mapped && !self.overflow.is_empty() {
+            self.mm_accesses += 1;
+            return (self.overflow.contains(&loc), LitAccess::MemoryMapped);
+        }
+        (false, LitAccess::OnChip)
+    }
+
+    /// Non-mutating containment check (tests / invariants).
+    pub fn contains(&self, loc: u64) -> bool {
+        self.entries.contains(&loc) || self.overflow.contains(&loc)
+    }
+
+    /// Remove `loc` (line rewritten in its natural form).
+    pub fn remove(&mut self, loc: u64) {
+        if let Some(i) = self.entries.iter().position(|&e| e == loc) {
+            self.entries.swap_remove(i);
+            // Promote an overflow entry into the freed on-chip slot.
+            if let Some(&promoted) = self.overflow.iter().next() {
+                self.overflow.remove(&promoted);
+                self.entries.push(promoted);
+                self.mm_accesses += 1;
+            }
+        } else if self.overflow.remove(&loc) {
+            self.mm_accesses += 1;
+        }
+    }
+
+    /// Drop everything (Option-2 re-key cure).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.overflow.clear();
+    }
+
+    /// Storage at the memory controller (paper Table III: 64 bytes for 16
+    /// entries — 1 valid bit + 30-bit address each, rounded to 4B/entry).
+    pub fn storage_bytes(&self) -> u32 {
+        (self.capacity * 4) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_query_remove() {
+        let mut lit = LineInversionTable::default();
+        assert_eq!(lit.insert(10), LitInsert::Stored);
+        assert_eq!(lit.insert(10), LitInsert::AlreadyPresent);
+        assert_eq!(lit.query(10), (true, LitAccess::OnChip));
+        assert_eq!(lit.query(11).0, false);
+        lit.remove(10);
+        assert!(!lit.contains(10));
+        assert!(lit.is_empty());
+    }
+
+    #[test]
+    fn overflow_spills_to_memory_mapped_region() {
+        let mut lit = LineInversionTable::new(2, true);
+        assert_eq!(lit.insert(1), LitInsert::Stored);
+        assert_eq!(lit.insert(2), LitInsert::Stored);
+        assert_eq!(lit.insert(3), LitInsert::Overflow);
+        assert_eq!(lit.len(), 3);
+        // overflow lookups cost a memory access
+        let before = lit.mm_accesses;
+        assert_eq!(lit.query(3), (true, LitAccess::MemoryMapped));
+        assert!(lit.mm_accesses > before);
+    }
+
+    #[test]
+    fn overflow_without_mm_region_reports() {
+        let mut lit = LineInversionTable::new(1, false);
+        assert_eq!(lit.insert(1), LitInsert::Stored);
+        assert_eq!(lit.insert(2), LitInsert::Overflow);
+        assert_eq!(lit.overflows, 1);
+        // without the region the entry is NOT tracked — caller must re-key
+        assert!(!lit.contains(2));
+    }
+
+    #[test]
+    fn remove_promotes_overflow_entry() {
+        let mut lit = LineInversionTable::new(1, true);
+        lit.insert(1);
+        lit.insert(2); // overflows
+        lit.remove(1);
+        // 2 must now be servable on-chip
+        assert_eq!(lit.query(2), (true, LitAccess::OnChip));
+    }
+
+    #[test]
+    fn clear_for_rekey() {
+        let mut lit = LineInversionTable::default();
+        for i in 0..20 {
+            lit.insert(i);
+        }
+        lit.clear();
+        assert!(lit.is_empty());
+    }
+
+    #[test]
+    fn storage_overhead_table3() {
+        assert_eq!(LineInversionTable::default().storage_bytes(), 64);
+    }
+
+    #[test]
+    fn empty_overflow_region_is_free() {
+        let mut lit = LineInversionTable::new(16, true);
+        lit.insert(5);
+        let before = lit.mm_accesses;
+        lit.query(99);
+        assert_eq!(lit.mm_accesses, before, "no MM access while region empty");
+    }
+}

@@ -1,0 +1,226 @@
+//! Explicit-metadata baseline (paper §IV-B, Fig. 7/8; row-optimized
+//! variant for Fig. 20).
+//!
+//! Conventional compressed-memory designs keep Compression Status
+//! Information (CSI, 3 bits per 4-line group) in a dedicated metadata
+//! region in memory and cache it on chip.  This module models that region
+//! (address geometry) plus a 32KB set-associative metadata cache with
+//! dirty write-back — the bandwidth cost CRAM's implicit metadata
+//! eliminates.
+
+use crate::cram::group::Csi;
+use crate::mem::GROUP_LINES;
+
+/// CSI entries per 64-byte metadata line: 512 bits / 3 ≈ 170 groups.
+pub const GROUPS_PER_META_LINE: u64 = 170;
+
+/// Where a metadata access was served from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetaAccess {
+    /// Metadata-cache hit: no memory traffic.
+    Hit,
+    /// Miss: one memory read for the metadata line (plus possibly a dirty
+    /// write-back recorded separately in [`MetadataStore::writebacks`]).
+    Miss,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct MetaCacheLine {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// LRU stamp.
+    lru: u64,
+}
+
+/// The metadata region + on-chip metadata cache.
+pub struct MetadataStore {
+    /// Ground-truth CSI per group (the memory-resident region).
+    csi: std::collections::HashMap<u64, Csi>,
+    /// Set-associative cache over metadata lines.
+    sets: Vec<Vec<MetaCacheLine>>,
+    tick: u64,
+    /// First physical line address of the metadata region (so DRAM traffic
+    /// can be attributed to real addresses).
+    pub region_base_line: u64,
+    /// Fig. 20 variant: metadata co-located with the data row (accesses
+    /// become row-buffer hits but still consume bus bandwidth).
+    pub row_optimized: bool,
+    // --- statistics ---
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+    pub updates: u64,
+}
+
+impl MetadataStore {
+    /// `cache_bytes` on-chip metadata cache (paper: 32KB, 8-way).
+    pub fn new(cache_bytes: usize, ways: usize, region_base_line: u64) -> Self {
+        let lines = cache_bytes / 64;
+        let n_sets = (lines / ways).max(1);
+        assert!(n_sets.is_power_of_two(), "metadata cache sets must be 2^k");
+        Self {
+            csi: Default::default(),
+            sets: vec![vec![MetaCacheLine::default(); ways]; n_sets],
+            tick: 0,
+            region_base_line,
+            row_optimized: false,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+            updates: 0,
+        }
+    }
+
+    /// Paper configuration: 32KB, 8-way.
+    pub fn paper_default(region_base_line: u64) -> Self {
+        Self::new(32 * 1024, 8, region_base_line)
+    }
+
+    /// Metadata line index covering `group`.
+    #[inline]
+    pub fn meta_line_of_group(&self, group: u64) -> u64 {
+        group / GROUPS_PER_META_LINE
+    }
+
+    /// Physical line address of the metadata line for `line_addr`'s group.
+    #[inline]
+    pub fn meta_addr_for(&self, line_addr: u64) -> u64 {
+        self.region_base_line + self.meta_line_of_group(line_addr / GROUP_LINES)
+    }
+
+    /// Ground-truth CSI for the group of `line_addr`.
+    pub fn csi_of_line(&self, line_addr: u64) -> Csi {
+        *self
+            .csi
+            .get(&(line_addr / GROUP_LINES))
+            .unwrap_or(&Csi::Uncompressed)
+    }
+
+    fn set_index(&self, meta_line: u64) -> usize {
+        (meta_line as usize) & (self.sets.len() - 1)
+    }
+
+    /// Touch the metadata cache for `meta_line`; true hit / false miss.
+    /// On miss the victim's dirtiness is recorded in `writebacks`.
+    fn touch(&mut self, meta_line: u64, mark_dirty: bool) -> MetaAccess {
+        self.tick += 1;
+        let tick = self.tick;
+        let si = self.set_index(meta_line);
+        let set = &mut self.sets[si];
+        if let Some(way) = set.iter_mut().find(|w| w.valid && w.tag == meta_line) {
+            way.lru = tick;
+            way.dirty |= mark_dirty;
+            self.hits += 1;
+            return MetaAccess::Hit;
+        }
+        self.misses += 1;
+        // victim = invalid way or LRU
+        let victim = set
+            .iter_mut()
+            .min_by_key(|w| if w.valid { w.lru } else { 0 })
+            .expect("ways > 0");
+        if victim.valid && victim.dirty {
+            self.writebacks += 1;
+        }
+        *victim = MetaCacheLine {
+            tag: meta_line,
+            valid: true,
+            dirty: mark_dirty,
+            lru: tick,
+        };
+        MetaAccess::Miss
+    }
+
+    /// Read path: obtain the CSI for `line_addr`'s group.
+    /// Returns (csi, how it was served).
+    pub fn lookup(&mut self, line_addr: u64) -> (Csi, MetaAccess) {
+        let group = line_addr / GROUP_LINES;
+        let access = self.touch(self.meta_line_of_group(group), false);
+        (self.csi_of_line(line_addr), access)
+    }
+
+    /// Write path: record a (possibly changed) CSI after a group write.
+    /// Dirty-allocates in the metadata cache.
+    pub fn update(&mut self, line_addr: u64, csi: Csi) -> MetaAccess {
+        let group = line_addr / GROUP_LINES;
+        self.updates += 1;
+        self.csi.insert(group, csi);
+        self.touch(self.meta_line_of_group(group), true)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let m = MetadataStore::paper_default(1 << 28);
+        assert_eq!(m.meta_line_of_group(0), 0);
+        assert_eq!(m.meta_line_of_group(169), 0);
+        assert_eq!(m.meta_line_of_group(170), 1);
+        // lines 0..679 share metadata line 0 (170 groups * 4 lines)
+        assert_eq!(m.meta_addr_for(679), 1 << 28);
+        assert_eq!(m.meta_addr_for(680), (1 << 28) + 1);
+    }
+
+    #[test]
+    fn cache_hit_after_miss() {
+        let mut m = MetadataStore::paper_default(1 << 28);
+        let (csi, a1) = m.lookup(0);
+        assert_eq!(csi, Csi::Uncompressed);
+        assert_eq!(a1, MetaAccess::Miss);
+        let (_, a2) = m.lookup(1); // same group -> same metadata line
+        assert_eq!(a2, MetaAccess::Hit);
+        let (_, a3) = m.lookup(679 * 1); // still metadata line 0
+        assert_eq!(a3, MetaAccess::Hit);
+    }
+
+    #[test]
+    fn update_round_trips_csi() {
+        let mut m = MetadataStore::paper_default(1 << 28);
+        m.update(4, Csi::Quad);
+        assert_eq!(m.csi_of_line(4), Csi::Quad);
+        assert_eq!(m.csi_of_line(7), Csi::Quad); // same group
+        assert_eq!(m.csi_of_line(8), Csi::Uncompressed); // next group
+    }
+
+    #[test]
+    fn spatial_locality_hits_poor_locality_misses() {
+        let mut m = MetadataStore::paper_default(1 << 28);
+        // sequential scan: high hit rate
+        for line in 0..64_000u64 {
+            m.lookup(line);
+        }
+        assert!(m.hit_rate() > 0.95, "sequential hit rate {}", m.hit_rate());
+
+        // scattered scan over a large footprint: poor hit rate
+        let mut m2 = MetadataStore::paper_default(1 << 28);
+        let mut x = 1u64;
+        for _ in 0..64_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            m2.lookup(x % (1 << 28));
+        }
+        assert!(m2.hit_rate() < 0.2, "random hit rate {}", m2.hit_rate());
+    }
+
+    #[test]
+    fn dirty_eviction_counts_writeback() {
+        // tiny cache: 64 sets * 8 ways would be big; use 1-set config
+        let mut m = MetadataStore::new(64 * 2, 2, 0); // 2 lines, 2-way, 1 set
+        m.update(0, Csi::Quad); // meta line 0, dirty
+        m.update(680 * 4 / 4 * 4, Csi::Quad); // meta line 1... compute: group 680 -> line 1
+        m.lookup(680 * 2 * 4); // meta line 8? -> evicts one dirty victim
+        assert!(m.writebacks >= 1);
+    }
+}

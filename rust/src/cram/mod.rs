@@ -1,0 +1,29 @@
+//! The paper's contribution: CRAM's compressed-memory machinery.
+//!
+//! * [`group`] — restricted data mapping: the five layouts of a 4-line
+//!   group (Fig. 6) and where each line may live.
+//! * [`marker`] — implicit metadata: keyed per-line 2:1 / 4:1 markers, the
+//!   64-byte invalid-line marker, and line inversion (§V-A).
+//! * [`lit`] — the Line Inversion Table, including both overflow options.
+//! * [`llp`] — the Line Location Predictor / Last Compressibility Table.
+//! * [`store`] — byte-accurate compressed physical memory: packs real
+//!   hybrid bitstreams + markers into 64-byte locations and interprets
+//!   reads back (the substrate the controllers drive).
+//! * [`metadata`] — the explicit-metadata baseline: an in-memory CSI region
+//!   plus a 32KB on-chip metadata cache (and the row-buffer-optimized
+//!   variant of Fig. 20).
+//! * [`dynamic`] — Dynamic-CRAM: set-sampled cost/benefit counters that
+//!   enable/disable compression at runtime (§VI).
+
+pub mod dynamic;
+pub mod group;
+pub mod lit;
+pub mod llp;
+pub mod marker;
+pub mod metadata;
+pub mod store;
+
+pub use group::Csi;
+pub use lit::LineInversionTable;
+pub use llp::LineLocationPredictor;
+pub use marker::MarkerEngine;

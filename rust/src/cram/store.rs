@@ -1,0 +1,475 @@
+//! Byte-accurate compressed physical memory.
+//!
+//! This substrate holds the *actual bytes* resident in DRAM under CRAM:
+//! packed hybrid bitstreams with markers in their tails, invalid-line
+//! markers in stale slots, and inverted collision victims.  The memory
+//! controllers drive it; its invariants are the paper's correctness
+//! argument:
+//!
+//! 1. every physical line whose tail matches a marker is either genuinely
+//!    compressed or tracked by the LIT;
+//! 2. a read of any logical line — through prediction, misprediction and
+//!    re-issue — always returns the last value written;
+//! 3. stale locations always hold Marker-IL (never interpretable as data).
+//!
+//! `rust/tests/` property-tests all three.
+
+use std::collections::HashMap;
+
+use crate::compress::{hybrid, PACK_BUDGET};
+use crate::cram::group::Csi;
+use crate::cram::lit::{LineInversionTable, LitInsert};
+use crate::cram::marker::{LineKind, MarkerEngine};
+use crate::mem::{group_base, CacheLine, GROUP_LINES};
+
+/// Result of interpreting a physical read.
+#[derive(Clone, Debug)]
+pub struct Interpreted {
+    pub kind: LineKind,
+    /// Logical (line_addr, data) pairs recovered from this access.
+    pub lines: Vec<(u64, CacheLine)>,
+    /// Whether the LIT had to be consulted (complement match).
+    pub lit_checked: bool,
+}
+
+/// Byte-accurate physical memory with CRAM packing.
+pub struct CompressedStore {
+    /// Physical contents by line address (sparse; unwritten = zeros).
+    phys: HashMap<u64, CacheLine>,
+    pub markers: MarkerEngine,
+    pub lit: LineInversionTable,
+    /// Ground-truth CSI per group (what a perfect metadata store would
+    /// hold) — used by tests and by the explicit-metadata baseline.
+    csi: HashMap<u64, Csi>,
+}
+
+impl CompressedStore {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            phys: HashMap::new(),
+            markers: MarkerEngine::new(seed),
+            lit: LineInversionTable::default(),
+            csi: HashMap::new(),
+        }
+    }
+
+    /// Ground-truth CSI of the group containing `line` (tests/baselines).
+    pub fn csi_of(&self, line: u64) -> Csi {
+        *self.csi.get(&group_base(line)).unwrap_or(&Csi::Uncompressed)
+    }
+
+    /// Raw physical line at `loc` (what the DRAM bus would deliver).
+    pub fn read_phys(&self, loc: u64) -> CacheLine {
+        *self.phys.get(&loc).unwrap_or(&CacheLine::zero())
+    }
+
+    /// Write one *uncompressed* logical line to its own slot, handling
+    /// marker collisions by inversion (paper Fig. 10).
+    fn write_raw(&mut self, loc: u64, line: CacheLine) {
+        if self.markers.collides(loc, &line) {
+            let outcome = self.lit.insert(loc);
+            if outcome == LitInsert::Overflow && !self.lit.contains(loc) {
+                // Option-2 environment (no memory-mapped region): re-key and
+                // rewrite everything that was inverted.  Extremely rare.
+                self.rekey_and_reencode();
+                // after re-keying, the line may no longer collide
+                return self.write_raw(loc, line);
+            }
+            self.phys.insert(loc, line.inverted());
+        } else {
+            // If the line previously collided and no longer does, retire
+            // the LIT entry (paper: "on a write ... remove from the LIT").
+            if self.lit.contains(loc) {
+                self.lit.remove(loc);
+            }
+            self.phys.insert(loc, line);
+        }
+    }
+
+    /// Option-2 overflow cure: regenerate markers, re-encode affected
+    /// lines.  In hardware this is a background sweep; functionally we
+    /// only need to fix inverted lines (their stored form must keep
+    /// matching a complement) — with fresh keys nothing collides any more
+    /// with overwhelming probability, so we simply revert them.
+    fn rekey_and_reencode(&mut self) {
+        let inverted: Vec<u64> = self
+            .phys
+            .keys()
+            .copied()
+            .filter(|l| self.lit.contains(*l))
+            .collect();
+        for loc in &inverted {
+            if let Some(line) = self.phys.get(loc).copied() {
+                self.phys.insert(*loc, line.inverted()); // revert to raw
+            }
+        }
+        self.lit.clear();
+        self.markers.rekey();
+        // Re-encode the memory under the new keys (paper Option-2): stale
+        // slots get the fresh Marker-IL, and packed blocks get their tails
+        // re-stamped with the fresh 2:1 / 4:1 markers (payload unchanged).
+        let groups: Vec<(u64, Csi)> = self.csi.iter().map(|(g, c)| (*g, *c)).collect();
+        for (g, csi) in groups {
+            for loc_slot in 0..GROUP_LINES as u8 {
+                let loc = g + loc_slot as u64; // csi map keys are base lines
+                if csi.is_stale(loc_slot) {
+                    self.phys.insert(loc, self.markers.marker_il(loc));
+                } else if csi.is_compressed_at(loc_slot) {
+                    let mut phys = *self.phys.get(&loc).expect("packed block exists");
+                    let n = csi.colocated(loc_slot).len();
+                    let marker = if n == 4 {
+                        self.markers.marker4(loc)
+                    } else {
+                        self.markers.marker2(loc)
+                    };
+                    phys.set_tail_u32(marker);
+                    self.phys.insert(loc, phys);
+                }
+            }
+        }
+    }
+
+    /// Pack and write a whole group (ganged eviction delivers all four
+    /// lines).  `lines[i]` is the data of logical slot i.  Returns the
+    /// physical locations written (for bandwidth accounting): live slots +
+    /// newly-stale slots that needed a Marker-IL write.
+    pub fn write_group(&mut self, base_line: u64, lines: &[CacheLine; 4], csi: Csi) -> Vec<u64> {
+        debug_assert_eq!(base_line % GROUP_LINES, 0);
+        let prev_csi = self.csi_of(base_line);
+        let mut written = Vec::new();
+
+        for loc_slot in 0..GROUP_LINES as u8 {
+            let loc = base_line + loc_slot as u64;
+            let residents = csi.colocated(loc_slot);
+            match residents.len() {
+                0 => {
+                    // Stale under the new layout: invalidate if it held
+                    // live data before (avoid rewriting IL repeatedly).
+                    if !prev_csi.is_stale(loc_slot) || !self.phys.contains_key(&loc) {
+                        self.phys.insert(loc, self.markers.marker_il(loc));
+                        written.push(loc);
+                    }
+                }
+                1 => {
+                    self.write_raw(loc, lines[residents[0] as usize]);
+                    written.push(loc);
+                }
+                n => {
+                    // Packed slot: concatenate payloads, pad, stamp marker.
+                    let mut bytes = Vec::with_capacity(64);
+                    for &s in residents {
+                        let c = hybrid::encode(&lines[s as usize])
+                            .expect("CSI decision guarantees compressibility");
+                        bytes.extend_from_slice(&c.bytes);
+                    }
+                    debug_assert!(bytes.len() as u32 <= PACK_BUDGET);
+                    bytes.resize(60, 0);
+                    let marker = if n == 4 {
+                        self.markers.marker4(loc)
+                    } else {
+                        self.markers.marker2(loc)
+                    };
+                    bytes.extend_from_slice(&marker.to_le_bytes());
+                    let mut arr = [0u8; 64];
+                    arr.copy_from_slice(&bytes);
+                    let phys_line = CacheLine::from_bytes(&arr);
+                    // A packed line's tail IS the marker; no collision
+                    // handling needed, but retire any stale LIT entry.
+                    if self.lit.contains(loc) {
+                        self.lit.remove(loc);
+                    }
+                    self.phys.insert(loc, phys_line);
+                    written.push(loc);
+                }
+            }
+        }
+        self.csi.insert(base_line, csi);
+        written
+    }
+
+    /// Convenience: compress-and-write a group from its four lines using
+    /// the canonical CSI decision.
+    pub fn write_group_auto(&mut self, base_line: u64, lines: &[CacheLine; 4]) -> (Csi, Vec<u64>) {
+        let sizes: [u32; 4] =
+            core::array::from_fn(|i| hybrid::compressed_size(&lines[i]));
+        let csi = Csi::from_sizes(sizes);
+        let written = self.write_group(base_line, lines, csi);
+        (csi, written)
+    }
+
+    /// Read physical location `loc` and interpret it via markers (the CRAM
+    /// read path, §V-A).  Returns every logical line recoverable from this
+    /// single access.
+    pub fn read_interpret(&mut self, loc: u64) -> Interpreted {
+        let phys = self.read_phys(loc);
+        let kind = self.markers.classify(loc, &phys);
+        match kind {
+            LineKind::Compressed2 | LineKind::Compressed4 => {
+                let n = if kind == LineKind::Compressed4 { 4 } else { 2 };
+                let bytes = phys.to_bytes();
+                let base = group_base(loc);
+                let loc_slot = (loc - base) as u8;
+                // Which logical slots live here follows from the layout:
+                // slot0 holds [A,B] (2:1) or [A,B,C,D] (4:1); slot2 holds
+                // [C,D].
+                let first_slot = if loc_slot == 0 { 0u8 } else { 2 };
+                let mut lines = Vec::with_capacity(n);
+                let mut off = 0usize;
+                for k in 0..n {
+                    let (line, used) = hybrid::decode_prefix(&bytes[off..]);
+                    lines.push((base + (first_slot + k as u8) as u64, line));
+                    off += used;
+                }
+                Interpreted { kind, lines, lit_checked: false }
+            }
+            LineKind::Invalid => Interpreted { kind, lines: vec![], lit_checked: false },
+            LineKind::NeedsLitCheck => {
+                let (inverted, _how) = self.lit.query(loc);
+                let data = if inverted { phys.inverted() } else { phys };
+                Interpreted {
+                    kind,
+                    lines: vec![(loc, data)],
+                    lit_checked: true,
+                }
+            }
+            LineKind::Uncompressed => Interpreted {
+                kind,
+                lines: vec![(loc, phys)],
+                lit_checked: false,
+            },
+        }
+    }
+
+    /// Full logical read of `line_addr` the way the controller would do it
+    /// given a location prediction: probe `predicted_loc` first, then the
+    /// remaining possible locations.  Returns (data, accesses, all lines
+    /// recovered on the successful access).
+    pub fn read_line(
+        &mut self,
+        line_addr: u64,
+        predicted_loc: u64,
+    ) -> (CacheLine, u32, Vec<(u64, CacheLine)>) {
+        let base = group_base(line_addr);
+        let slot = (line_addr - base) as u8;
+        // Probe the prediction first, then every remaining possible
+        // location in the restricted-placement order.
+        let order = crate::cram::group::possible_locations(slot);
+        let mut probes = Vec::with_capacity(order.len());
+        probes.push(predicted_loc);
+        for &s in order {
+            let loc = base + s as u64;
+            if loc != predicted_loc {
+                probes.push(loc);
+            }
+        }
+        let mut accesses = 0u32;
+        for probe in probes {
+            accesses += 1;
+            let interp = self.read_interpret(probe);
+            if let Some((_, data)) = interp.lines.iter().find(|(a, _)| *a == line_addr) {
+                return (*data, accesses, interp.lines);
+            }
+        }
+        // Exhausted: line was never written — fresh memory reads zero.
+        (CacheLine::zero(), accesses, vec![])
+    }
+
+    /// Iterate over the ground-truth group CSIs (diagnostics).
+    pub fn groups(&self) -> impl Iterator<Item = (&u64, &Csi)> {
+        self.csi.iter()
+    }
+
+    /// Number of physical lines materialized.
+    pub fn phys_lines(&self) -> usize {
+        self.phys.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::forall;
+
+    fn compressible_line(tag: u32) -> CacheLine {
+        CacheLine::from_words([tag & 0xFF; 16])
+    }
+
+    fn incompressible_line(rng: &mut Rng) -> CacheLine {
+        CacheLine::from_words(core::array::from_fn(|_| rng.next_u32() | 0x0100_0001))
+    }
+
+    #[test]
+    fn quad_pack_roundtrip() {
+        let mut store = CompressedStore::new(42);
+        let lines: [CacheLine; 4] = core::array::from_fn(|i| compressible_line(i as u32));
+        let (csi, _) = store.write_group_auto(0, &lines);
+        assert_eq!(csi, Csi::Quad);
+        // one access to location 0 recovers all four lines
+        let interp = store.read_interpret(0);
+        assert_eq!(interp.kind, LineKind::Compressed4);
+        assert_eq!(interp.lines.len(), 4);
+        for (i, (addr, data)) in interp.lines.iter().enumerate() {
+            assert_eq!(*addr, i as u64);
+            assert_eq!(*data, lines[i]);
+        }
+        // stale slots read as invalid
+        for loc in 1..4 {
+            assert_eq!(store.read_interpret(loc).kind, LineKind::Invalid);
+        }
+    }
+
+    #[test]
+    fn pair_pack_roundtrip() {
+        let mut store = CompressedStore::new(43);
+        let mut rng = Rng::new(7);
+        let lines = [
+            compressible_line(1),
+            compressible_line(2),
+            incompressible_line(&mut rng),
+            incompressible_line(&mut rng),
+        ];
+        let (csi, _) = store.write_group_auto(8, &lines);
+        assert_eq!(csi, Csi::PairAb);
+        let interp = store.read_interpret(8);
+        assert_eq!(interp.kind, LineKind::Compressed2);
+        assert_eq!(interp.lines, vec![(8, lines[0]), (9, lines[1])]);
+        assert_eq!(store.read_interpret(9).kind, LineKind::Invalid);
+        // C and D raw in place
+        assert_eq!(store.read_interpret(10).lines, vec![(10, lines[2])]);
+        assert_eq!(store.read_interpret(11).lines, vec![(11, lines[3])]);
+    }
+
+    #[test]
+    fn read_line_with_misprediction_walks_locations() {
+        let mut store = CompressedStore::new(44);
+        let lines: [CacheLine; 4] = core::array::from_fn(|i| compressible_line(i as u32));
+        store.write_group_auto(0, &lines); // Quad: B lives at loc 0
+        // predict B at its original location (wrong): 1 -> invalid -> 0
+        let (data, accesses, _) = store.read_line(1, 1);
+        assert_eq!(data, lines[1]);
+        assert_eq!(accesses, 2);
+        // correct prediction: single access
+        let (data, accesses, _) = store.read_line(1, 0);
+        assert_eq!(data, lines[1]);
+        assert_eq!(accesses, 1);
+    }
+
+    #[test]
+    fn layout_transition_invalidates_and_restores() {
+        let mut store = CompressedStore::new(45);
+        let mut rng = Rng::new(9);
+        let compressible: [CacheLine; 4] = core::array::from_fn(|i| compressible_line(i as u32));
+        store.write_group_auto(0, &compressible);
+        // now the group becomes incompressible: all lines move home
+        let raw: [CacheLine; 4] = core::array::from_fn(|_| incompressible_line(&mut rng));
+        let (csi, _) = store.write_group_auto(0, &raw);
+        assert_eq!(csi, Csi::Uncompressed);
+        for i in 0..4u64 {
+            let (data, acc, _) = store.read_line(i, i);
+            assert_eq!(data, raw[i as usize]);
+            assert_eq!(acc, 1);
+        }
+    }
+
+    #[test]
+    fn marker_collision_roundtrips_via_inversion() {
+        let mut store = CompressedStore::new(46);
+        let mut rng = Rng::new(5);
+        // craft an uncompressed line whose tail collides with marker2(loc)
+        let loc = 100; // slot 0 of group 25
+        let mut evil = incompressible_line(&mut rng);
+        evil.set_tail_u32(store.markers.marker2(loc));
+        let group: [CacheLine; 4] = [
+            evil,
+            incompressible_line(&mut rng),
+            incompressible_line(&mut rng),
+            incompressible_line(&mut rng),
+        ];
+        let (csi, _) = store.write_group_auto(100, &group);
+        assert_eq!(csi, Csi::Uncompressed);
+        assert!(store.lit.contains(loc));
+        // read back: classified NeedsLitCheck, inverted back correctly
+        let interp = store.read_interpret(loc);
+        assert!(interp.lit_checked);
+        assert_eq!(interp.lines, vec![(loc, evil)]);
+        // rewrite with a benign line: LIT entry retired
+        let benign = incompressible_line(&mut rng);
+        let group2 = [benign, group[1], group[2], group[3]];
+        store.write_group_auto(100, &group2);
+        assert!(!store.lit.contains(loc));
+    }
+
+    #[test]
+    fn store_invariant_marker_implies_compressed_or_lit() {
+        forall("marker invariant", 64, |rng| {
+            let mut store = CompressedStore::new(rng.next_u64());
+            // random groups of mixed compressibility
+            for g in 0..8u64 {
+                let lines: [CacheLine; 4] = core::array::from_fn(|_| {
+                    if rng.chance(0.5) {
+                        compressible_line(rng.next_u32())
+                    } else {
+                        incompressible_line(rng)
+                    }
+                });
+                store.write_group_auto(g * 4, &lines);
+            }
+            // invariant: every physical line whose tail matches a marker is
+            // compressed (per ground-truth CSI) or is in the LIT or is IL.
+            let locs: Vec<u64> = store.phys.keys().copied().collect();
+            for loc in locs {
+                let phys = store.read_phys(loc);
+                let kind = store.markers.classify(loc, &phys);
+                let base = group_base(loc);
+                let csi = store.csi_of(base);
+                let loc_slot = (loc - base) as u8;
+                match kind {
+                    LineKind::Compressed2 | LineKind::Compressed4 => {
+                        assert!(csi.is_compressed_at(loc_slot), "false compressed at {loc}");
+                    }
+                    LineKind::Invalid => assert!(csi.is_stale(loc_slot)),
+                    LineKind::NeedsLitCheck => { /* LIT resolves it */ }
+                    LineKind::Uncompressed => {
+                        assert_eq!(csi.colocated(loc_slot).len(), 1);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn latest_write_wins_across_transitions() {
+        forall("latest write wins", 32, |rng| {
+            let mut store = CompressedStore::new(rng.next_u64());
+            let mut shadow: std::collections::HashMap<u64, CacheLine> = Default::default();
+            for _ in 0..24 {
+                let g = rng.below(4) * 4;
+                let lines: [CacheLine; 4] = core::array::from_fn(|_| {
+                    if rng.chance(0.5) {
+                        compressible_line(rng.next_u32())
+                    } else {
+                        incompressible_line(rng)
+                    }
+                });
+                store.write_group_auto(g, &lines);
+                for i in 0..4 {
+                    shadow.insert(g + i as u64, lines[i]);
+                }
+                // read a few random lines with a random (possibly wrong)
+                // prediction; data must always match the shadow copy.
+                for _ in 0..4 {
+                    let la = rng.below(16);
+                    if let Some(want) = shadow.get(&la) {
+                        let base = group_base(la);
+                        let slot = (la - base) as u8;
+                        let order = crate::cram::group::possible_locations(slot);
+                        let guess = base + order[rng.below(order.len() as u64) as usize] as u64;
+                        let (got, _acc, _) = store.read_line(la, guess);
+                        assert_eq!(got, *want, "line {la}");
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! DDR4 main-memory timing model (the USIMM substitute).
+//!
+//! Bank-state + bus-occupancy model at DRAM-bus-cycle granularity
+//! (800 MHz, 1.25 ns/cycle; Table I timings).  Captures the three effects
+//! CRAM's evaluation hinges on:
+//!
+//! * **bandwidth contention** — every access (data, metadata, second
+//!   access, compressed writeback, invalidate) occupies a channel's data
+//!   bus for a burst; extra accesses queue behind demand traffic;
+//! * **row-buffer locality** — row hits cost tCAS, row conflicts
+//!   tRP+tRCD+tCAS (plus tRAS-limited re-activation);
+//! * **bank-level parallelism** — requests to different banks overlap.
+//!
+//! Reads are serviced with the requester waiting; writes are posted (the
+//! write queue drains opportunistically and charges bandwidth without
+//! stalling the core — §VI "extra writebacks" are pure bandwidth cost).
+
+pub mod timing;
+
+pub use timing::{DramConfig, DramSim, ReqKind};

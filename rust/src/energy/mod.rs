@@ -1,0 +1,121 @@
+//! DRAM energy / power / EDP model (Fig. 19).
+//!
+//! Standard DDR4 energy accounting at the abstraction level of the
+//! bandwidth model: per-access energy split by row hit/miss (activation is
+//! the expensive part), plus background power integrated over the run.
+//! Constants are representative DDR4-2400 x8 numbers (Micron power calc
+//! methodology); the figure reports *normalized* energy, so only ratios
+//! matter.
+
+use crate::dram::timing::DramStats;
+
+/// Energy constants (nanojoules / milliwatts).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyConfig {
+    /// Row-buffer-hit access: read/write burst energy.
+    pub nj_per_hit: f64,
+    /// Row miss adds activate+precharge energy.
+    pub nj_per_miss: f64,
+    /// Background power per channel (mW).
+    pub mw_background_per_channel: f64,
+    pub channels: usize,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        Self {
+            nj_per_hit: 10.0,
+            nj_per_miss: 25.0,
+            mw_background_per_channel: 450.0,
+            channels: 2,
+        }
+    }
+}
+
+/// Energy accounting for one simulation run.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyResult {
+    /// Dynamic (access) energy in µJ.
+    pub dynamic_uj: f64,
+    /// Background energy in µJ.
+    pub background_uj: f64,
+    /// Run time in seconds.
+    pub seconds: f64,
+}
+
+impl EnergyResult {
+    pub fn total_uj(&self) -> f64 {
+        self.dynamic_uj + self.background_uj
+    }
+
+    /// Average power in mW.
+    pub fn avg_power_mw(&self) -> f64 {
+        self.total_uj() / self.seconds / 1000.0
+    }
+
+    /// Energy-delay product (µJ·s).
+    pub fn edp(&self) -> f64 {
+        self.total_uj() * self.seconds
+    }
+}
+
+/// Compute energy from DRAM stats and the run length in CPU cycles
+/// (3.2 GHz).
+pub fn energy_of(cfg: &EnergyConfig, dram: &DramStats, cpu_cycles: u64) -> EnergyResult {
+    let seconds = cpu_cycles as f64 / 3.2e9;
+    let dynamic_nj =
+        dram.row_hits as f64 * cfg.nj_per_hit + dram.row_misses as f64 * cfg.nj_per_miss;
+    let background_mw = cfg.mw_background_per_channel * cfg.channels as f64;
+    EnergyResult {
+        dynamic_uj: dynamic_nj / 1000.0,
+        background_uj: background_mw * seconds * 1000.0,
+        seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(hits: u64, misses: u64) -> DramStats {
+        DramStats {
+            row_hits: hits,
+            row_misses: misses,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fewer_accesses_less_dynamic_energy() {
+        let cfg = EnergyConfig::default();
+        let a = energy_of(&cfg, &stats(1000, 1000), 3_200_000);
+        let b = energy_of(&cfg, &stats(500, 500), 3_200_000);
+        assert!(b.dynamic_uj < a.dynamic_uj);
+        assert_eq!(a.background_uj, b.background_uj);
+    }
+
+    #[test]
+    fn shorter_run_less_background_and_better_edp() {
+        let cfg = EnergyConfig::default();
+        let slow = energy_of(&cfg, &stats(1000, 1000), 6_400_000);
+        let fast = energy_of(&cfg, &stats(1000, 1000), 3_200_000);
+        assert!(fast.background_uj < slow.background_uj);
+        assert!(fast.edp() < slow.edp());
+    }
+
+    #[test]
+    fn row_misses_cost_more() {
+        let cfg = EnergyConfig::default();
+        let hits = energy_of(&cfg, &stats(1000, 0), 3_200_000);
+        let misses = energy_of(&cfg, &stats(0, 1000), 3_200_000);
+        assert!(misses.dynamic_uj > 2.0 * hits.dynamic_uj);
+    }
+
+    #[test]
+    fn power_is_energy_over_time() {
+        let cfg = EnergyConfig::default();
+        let e = energy_of(&cfg, &stats(0, 0), 3_200_000_000);
+        // background only: 900 mW over 1 s
+        assert!((e.avg_power_mw() - 900.0).abs() < 1.0);
+    }
+}

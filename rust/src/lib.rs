@@ -1,0 +1,51 @@
+//! # CRAM — hardware-based memory compression for bandwidth enhancement
+//!
+//! Full-system reproduction of *CRAM: Efficient Hardware-Based Memory
+//! Compression for Bandwidth Enhancement* (Young, Kariyappa, Qureshi, 2018).
+//!
+//! The crate is the L3 (rust) layer of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the memory-system simulator and the CRAM memory
+//!   controller designs: implicit-metadata markers, the Line Inversion
+//!   Table, the Line Location Predictor, Dynamic-CRAM set-sampling, plus
+//!   every baseline the paper compares against (uncompressed, ideal
+//!   compression, explicit-metadata with a metadata cache, row-buffer
+//!   optimized explicit metadata, next-line prefetch).
+//! * **L2 (python/compile/model.py)** — the batched compression-analysis
+//!   graph, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/fpc_bdi.py)** — the Pallas FPC+BDI
+//!   compressibility kernel; [`compress`] is its bit-exact native port used
+//!   in the simulator hot loop, and [`runtime`] loads the AOT artifact so
+//!   the two are parity-tested end to end.
+//!
+//! Module map (see DESIGN.md for the per-experiment index):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`mem`] | 64-byte cacheline type and address helpers |
+//! | [`compress`] | FPC / BDI / hybrid compressors (sizes + real bitstreams) |
+//! | [`cram`] | markers, LIT, LLP, group layout, compressed store, metadata, Dynamic-CRAM |
+//! | [`cache`] | set-associative cache hierarchy with ganged eviction |
+//! | [`dram`] | DDR4 channel/rank/bank timing model with FR-FCFS scheduling |
+//! | [`controller`] | memory-controller variants (the paper's designs + baselines) |
+//! | [`workloads`] | synthetic SPEC/GAP/MIX workload models (Table II calibrated) |
+//! | [`sim`] | multi-core trace-driven system simulator |
+//! | [`energy`] | DRAM energy / power / EDP model (Fig. 19) |
+//! | [`stats`] | counters, bandwidth breakdown, weighted speedup |
+//! | [`coordinator`] | experiment orchestrator: figure/table harnesses |
+//! | [`runtime`] | PJRT loader/executor for the AOT compression-analysis HLO |
+//! | [`util`] | RNG, geomean, mini bench + property-test harnesses |
+
+pub mod cache;
+pub mod compress;
+pub mod controller;
+pub mod coordinator;
+pub mod cram;
+pub mod dram;
+pub mod energy;
+pub mod mem;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,299 @@
+//! `repro` — the CRAM reproduction CLI (L3 leader binary).
+//!
+//! ```text
+//! repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]
+//! repro figure <3|4|7|8|12|14|15|16|18|19|20> [--insts N]
+//! repro table <2|3|4|5> [--insts N]
+//! repro sim --workload W --design D [--insts N] [--channels C]
+//! repro analyze [--artifact PATH] [--workload W] [--groups N]
+//! repro list
+//! ```
+//!
+//! (clap is unavailable in this offline environment; argument parsing is
+//! hand-rolled — see DESIGN.md §Substitutions.)
+
+use std::collections::HashMap;
+
+use cram::controller::Design;
+use cram::coordinator::figures;
+use cram::coordinator::runner::{ResultsDb, RunPlan, CORE_DESIGNS};
+use cram::sim::{simulate, SimConfig};
+use cram::workloads::profiles::{all64, by_name};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn plan_from(flags: &HashMap<String, String>) -> RunPlan {
+    let mut plan = RunPlan::default();
+    if let Some(n) = flags.get("insts") {
+        plan.insts_per_core = n.parse().expect("--insts must be an integer");
+    }
+    if let Some(n) = flags.get("threads") {
+        plan.threads = n.parse().expect("--threads must be an integer");
+    }
+    if let Some(s) = flags.get("seed") {
+        plan.seed = s.parse().expect("--seed must be an integer");
+    }
+    plan
+}
+
+fn design_by_name(name: &str) -> Option<Design> {
+    CORE_DESIGNS.iter().copied().find(|d| d.name() == name)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(|s| s.as_str()).unwrap_or("help");
+
+    match cmd {
+        "reproduce-all" => {
+            let out_dir = flags.get("out").cloned().unwrap_or_else(|| "results".into());
+            let mut db = ResultsDb::new(plan_from(&flags));
+            eprintln!(
+                "running full matrix (insts/core={}, threads={}) ...",
+                db.plan.insts_per_core, db.plan.threads
+            );
+            db.run_full_matrix(true);
+            std::fs::create_dir_all(&out_dir).expect("create output dir");
+            for r in figures::all_reports(&db) {
+                let text = r.render();
+                print!("{text}");
+                std::fs::write(format!("{out_dir}/{}.txt", r.id), &text)
+                    .expect("write report");
+            }
+            eprintln!("reports written to {out_dir}/");
+        }
+        "figure" | "table" => {
+            let n = match pos.get(1) {
+                Some(n) => n.clone(),
+                None => usage("missing figure/table number"),
+            };
+            let id = if cmd == "figure" { format!("fig{n}") } else { format!("table{n}") };
+            let mut db = ResultsDb::new(plan_from(&flags));
+            // run only the designs the exhibit needs
+            match id.as_str() {
+                "fig4" | "table3" => {}
+                "fig18" => db.run_designs(&[Design::Uncompressed, Design::Dynamic], true, true),
+                "table4" => db.run_channel_sweep(true),
+                "fig3" => db.run_designs(
+                    &[Design::Uncompressed, Design::Ideal, Design::Explicit { row_opt: false }],
+                    false,
+                    true,
+                ),
+                "fig7" | "fig8" => db.run_designs(
+                    &[Design::Uncompressed, Design::Explicit { row_opt: false }],
+                    false,
+                    true,
+                ),
+                "fig12" | "fig14" => db.run_designs(
+                    &[
+                        Design::Uncompressed,
+                        Design::Explicit { row_opt: false },
+                        Design::Implicit,
+                    ],
+                    false,
+                    true,
+                ),
+                "fig15" => db.run_designs(&[Design::Uncompressed, Design::Implicit], false, true),
+                "fig16" => db.run_designs(
+                    &[Design::Uncompressed, Design::Implicit, Design::Dynamic, Design::Ideal],
+                    false,
+                    true,
+                ),
+                "fig19" => db.run_designs(&[Design::Uncompressed, Design::Dynamic], false, true),
+                "fig20" => db.run_designs(
+                    &[Design::Uncompressed, Design::Explicit { row_opt: true }, Design::Dynamic],
+                    false,
+                    true,
+                ),
+                "table2" => db.run_designs(&[Design::Uncompressed], false, true),
+                "table5" => db.run_designs(
+                    &[Design::Uncompressed, Design::NextLinePrefetch, Design::Dynamic],
+                    false,
+                    true,
+                ),
+                _ => usage(&format!("unknown exhibit {id}")),
+            }
+            match figures::report(&db, &id) {
+                Some(r) => print!("{}", r.render()),
+                None => usage(&format!("unknown exhibit {id}")),
+            }
+        }
+        "sim" => {
+            let wl = match flags.get("workload") {
+                Some(w) => w.clone(),
+                None => usage("--workload required"),
+            };
+            let d = match flags.get("design") {
+                Some(d) => d.clone(),
+                None => usage("--design required"),
+            };
+            let profile = match by_name(&wl) {
+                Some(p) => p,
+                None => usage(&format!("unknown workload {wl}")),
+            };
+            let design = match design_by_name(&d) {
+                Some(d) => d,
+                None => usage(&format!("unknown design {d}")),
+            };
+            let mut cfg = SimConfig::default().with_design(design);
+            if let Some(n) = flags.get("insts") {
+                cfg = cfg.with_insts(n.parse().expect("--insts"));
+            }
+            if let Some(c) = flags.get("channels") {
+                cfg = cfg.with_channels(c.parse().expect("--channels"));
+            }
+            if let Some(path) = flags.get("trace") {
+                cfg.trace = Some(
+                    cram::workloads::TraceReplay::load(path).expect("load trace file"),
+                );
+            }
+            let base_cfg = SimConfig { design: Design::Uncompressed, ..cfg.clone() };
+            let r = simulate(&profile, &cfg);
+            let base = simulate(&profile, &base_cfg);
+            println!("workload {wl} design {d}");
+            println!("  cycles             {}", r.cycles);
+            println!("  aggregate IPC      {:.3}", r.total_ipc());
+            println!("  measured MPKI      {:.2}", r.mpki());
+            println!(
+                "  weighted speedup   {}",
+                cram::util::pct(r.weighted_speedup(&base))
+            );
+            println!(
+                "  LLC hit rate       {:.1}%",
+                100.0 * r.llc_hits as f64 / (r.llc_hits + r.llc_misses).max(1) as f64
+            );
+            println!("  LLP accuracy       {:.1}%", 100.0 * r.llp_accuracy);
+            if let Some(mh) = r.meta_hit_rate {
+                println!("  meta$ hit rate     {:.1}%", 100.0 * mh);
+            }
+            println!("  traffic (64B)      {:?}", r.bw);
+            println!("  prefetch used/inst {} / {}", r.prefetch_used, r.prefetch_installed);
+            println!("  groups compressed  {:.1}%", 100.0 * r.compression_enabled_frac);
+            println!("  dyn cost/benefit   {} / {}", r.dyn_costs, r.dyn_benefits);
+            if !r.dyn_counters.is_empty() {
+                println!("  dyn counters(end)  {:?}", r.dyn_counters);
+            }
+        }
+        "analyze" => {
+            let artifact = flags
+                .get("artifact")
+                .cloned()
+                .unwrap_or_else(|| cram::runtime::AnalysisEngine::DEFAULT_ARTIFACT.into());
+            let wl = flags.get("workload").cloned().unwrap_or_else(|| "libq".into());
+            let n_groups: usize = flags
+                .get("groups")
+                .map(|g| g.parse().expect("--groups"))
+                .unwrap_or(2048);
+            let profile = match by_name(&wl) {
+                Some(p) => p,
+                None => usage(&format!("unknown workload {wl}")),
+            };
+            let engine = cram::runtime::AnalysisEngine::load(&artifact)
+                .expect("load artifact (run `make artifacts` first)");
+            let model = profile.value_model(0xF16_4);
+            let groups: Vec<[cram::mem::CacheLine; 4]> = (0..n_groups as u64)
+                .map(|g| core::array::from_fn(|s| model.gen_line(g * 4 + s as u64, 0)))
+                .collect();
+            let analysis = engine.analyze(&groups).expect("analyze");
+            let mut counts = [0u64; 5];
+            for a in &analysis {
+                counts[a.csi as usize] += 1;
+            }
+            println!("workload {wl}: {n_groups} groups via PJRT artifact {artifact}");
+            for (i, label) in ["uncompressed", "pair-AB", "pair-CD", "pair-both", "quad"]
+                .iter()
+                .enumerate()
+            {
+                println!(
+                    "  {label:<14} {:>6}  ({:.1}%)",
+                    counts[i],
+                    100.0 * counts[i] as f64 / n_groups as f64
+                );
+            }
+        }
+        "gen-trace" => {
+            // export a synthetic stream in the trace-file format — both a
+            // dogfood test of the loader and a way to hand workloads to
+            // other simulators
+            let wl = flags.get("workload").cloned().unwrap_or_else(|| "libq".into());
+            let out = flags.get("out").cloned().unwrap_or_else(|| "/tmp/cram_trace.txt".into());
+            let n: usize = flags.get("events").map(|v| v.parse().expect("--events")).unwrap_or(100_000);
+            let profile = match by_name(&wl) {
+                Some(p) => p,
+                None => usage(&format!("unknown workload {wl}")),
+            };
+            let mut s = cram::workloads::AccessStream::new(&profile, 0xC0DE);
+            let events: Vec<_> = (0..n).map(|_| s.next_event()).collect();
+            let replay = cram::workloads::TraceReplay::from_events(events);
+            std::fs::write(&out, replay.to_text()).expect("write trace");
+            println!("wrote {n} events from {wl} to {out}");
+        }
+        "ablate" => {
+            let what = pos.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let insts: u64 = flags
+                .get("insts")
+                .map(|n| n.parse().expect("--insts"))
+                .unwrap_or(1_500_000);
+            use cram::coordinator::ablation;
+            let reports: Vec<cram::coordinator::Report> = match what {
+                "llp" => vec![ablation::ablate_llp(insts)],
+                "metacache" => vec![ablation::ablate_metacache(insts)],
+                "compressor" => vec![ablation::ablate_compressor(insts)],
+                "marker" => vec![ablation::ablate_marker_width()],
+                "all" => vec![
+                    ablation::ablate_marker_width(),
+                    ablation::ablate_llp(insts),
+                    ablation::ablate_metacache(insts),
+                    ablation::ablate_compressor(insts),
+                ],
+                other => usage(&format!("unknown ablation {other}")),
+            };
+            for r in reports {
+                print!("{}", r.render());
+            }
+        }
+        "list" => {
+            println!("designs:");
+            for d in CORE_DESIGNS {
+                println!("  {}", d.name());
+            }
+            println!("workloads ({}):", all64().len());
+            for w in all64() {
+                println!("  {:<14} {}", w.name, w.suite);
+            }
+        }
+        _ => {
+            usage("");
+        }
+    }
+}
+
+fn usage(msg: &str) -> ! {
+    if !msg.is_empty() {
+        eprintln!("error: {msg}\n");
+    }
+    eprintln!(
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|all> [--insts N]\n  repro list"
+    );
+    std::process::exit(2);
+}

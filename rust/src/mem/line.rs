@@ -1,0 +1,173 @@
+//! The 64-byte cacheline: the unit of transfer on the memory bus.
+//!
+//! Stored as sixteen little-endian u32 words — the same layout the L1
+//! Pallas kernel and the pure-jnp oracle use, so sizes computed here and
+//! there are directly comparable.
+
+pub const LINE_BYTES: usize = 64;
+pub const LINE_WORDS: usize = 16;
+
+/// A 64-byte line of data.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheLine {
+    words: [u32; LINE_WORDS],
+}
+
+impl Default for CacheLine {
+    fn default() -> Self {
+        Self::zero()
+    }
+}
+
+impl std::fmt::Debug for CacheLine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CacheLine[{:08x} {:08x} … {:08x}]", self.words[0], self.words[1], self.words[15])
+    }
+}
+
+impl CacheLine {
+    /// All-zero line.
+    pub const fn zero() -> Self {
+        Self { words: [0; LINE_WORDS] }
+    }
+
+    pub const fn from_words(words: [u32; LINE_WORDS]) -> Self {
+        Self { words }
+    }
+
+    pub fn from_bytes(bytes: &[u8; LINE_BYTES]) -> Self {
+        let mut words = [0u32; LINE_WORDS];
+        for (i, w) in words.iter_mut().enumerate() {
+            *w = u32::from_le_bytes([bytes[4 * i], bytes[4 * i + 1], bytes[4 * i + 2], bytes[4 * i + 3]]);
+        }
+        Self { words }
+    }
+
+    pub fn to_bytes(&self) -> [u8; LINE_BYTES] {
+        let mut out = [0u8; LINE_BYTES];
+        for (i, w) in self.words.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u32; LINE_WORDS] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u32; LINE_WORDS] {
+        &mut self.words
+    }
+
+    /// The line as eight little-endian u64 qwords.
+    pub fn qwords(&self) -> [u64; 8] {
+        let mut q = [0u64; 8];
+        for (i, v) in q.iter_mut().enumerate() {
+            *v = self.words[2 * i] as u64 | ((self.words[2 * i + 1] as u64) << 32);
+        }
+        q
+    }
+
+    pub fn from_qwords(q: [u64; 8]) -> Self {
+        let mut words = [0u32; LINE_WORDS];
+        for (i, v) in q.iter().enumerate() {
+            words[2 * i] = *v as u32;
+            words[2 * i + 1] = (*v >> 32) as u32;
+        }
+        Self { words }
+    }
+
+    /// The line as thirty-two u16 halfwords (little-endian order).
+    pub fn halfwords(&self) -> [u16; 32] {
+        let mut h = [0u16; 32];
+        for (i, w) in self.words.iter().enumerate() {
+            h[2 * i] = *w as u16;
+            h[2 * i + 1] = (*w >> 16) as u16;
+        }
+        h
+    }
+
+    /// Last four bytes of the line as a u32 (the marker position).
+    #[inline]
+    pub fn tail_u32(&self) -> u32 {
+        self.words[LINE_WORDS - 1]
+    }
+
+    /// Overwrite the marker position.
+    #[inline]
+    pub fn set_tail_u32(&mut self, v: u32) {
+        self.words[LINE_WORDS - 1] = v;
+    }
+
+    /// Bitwise inversion — CRAM's marker-collision escape hatch (§V-A).
+    pub fn inverted(&self) -> Self {
+        let mut words = self.words;
+        for w in &mut words {
+            *w = !*w;
+        }
+        Self { words }
+    }
+
+    /// True if every byte is zero.
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut bytes = [0u8; LINE_BYTES];
+        for (i, b) in bytes.iter_mut().enumerate() {
+            *b = i as u8;
+        }
+        let line = CacheLine::from_bytes(&bytes);
+        assert_eq!(line.to_bytes(), bytes);
+        // little-endian check
+        assert_eq!(line.words()[0], u32::from_le_bytes([0, 1, 2, 3]));
+    }
+
+    #[test]
+    fn qwords_roundtrip() {
+        let q: [u64; 8] = core::array::from_fn(|i| 0x0123_4567_89AB_CDEF ^ (i as u64) << 56);
+        let line = CacheLine::from_qwords(q);
+        assert_eq!(line.qwords(), q);
+    }
+
+    #[test]
+    fn halfwords_layout() {
+        let line = CacheLine::from_words(core::array::from_fn(|i| (i as u32) << 16 | 0xBEEF));
+        let h = line.halfwords();
+        assert_eq!(h[0], 0xBEEF);
+        assert_eq!(h[1], 0);
+        assert_eq!(h[3], 1);
+    }
+
+    #[test]
+    fn inversion_is_involution() {
+        let line = CacheLine::from_words(core::array::from_fn(|i| 0xDEAD_0000 + i as u32));
+        assert_eq!(line.inverted().inverted(), line);
+        assert_ne!(line.inverted(), line);
+    }
+
+    #[test]
+    fn tail_is_last_word() {
+        let mut line = CacheLine::zero();
+        line.set_tail_u32(0x2222_2222);
+        assert_eq!(line.tail_u32(), 0x2222_2222);
+        assert_eq!(line.to_bytes()[60..64], [0x22, 0x22, 0x22, 0x22]);
+    }
+
+    #[test]
+    fn zero_detection() {
+        assert!(CacheLine::zero().is_zero());
+        let mut l = CacheLine::zero();
+        l.words_mut()[7] = 1;
+        assert!(!l.is_zero());
+    }
+}

@@ -1,0 +1,61 @@
+//! Memory data model: the 64-byte cacheline and physical-address helpers.
+
+pub mod line;
+
+pub use line::{CacheLine, LINE_BYTES, LINE_WORDS};
+
+/// Bytes per cacheline everywhere in the system (paper Table I).
+pub const LINE_SHIFT: u64 = 6;
+
+/// Lines per compression group (paper §IV-A: up to 4-to-1).
+pub const GROUP_LINES: u64 = 4;
+
+/// Bytes per OS page (used by the LLP page-hash and the VM model).
+pub const PAGE_BYTES: u64 = 4096;
+
+/// Line address (= byte address >> 6).
+#[inline]
+pub fn line_addr(byte_addr: u64) -> u64 {
+    byte_addr >> LINE_SHIFT
+}
+
+/// The group a line belongs to (4 consecutive lines).
+#[inline]
+pub fn group_of(line: u64) -> u64 {
+    line / GROUP_LINES
+}
+
+/// Slot of the line within its group: 0 = "A" (address ends 00) … 3 = "D".
+#[inline]
+pub fn slot_of(line: u64) -> u8 {
+    (line % GROUP_LINES) as u8
+}
+
+/// First line ("A") of the group containing `line`.
+#[inline]
+pub fn group_base(line: u64) -> u64 {
+    line & !(GROUP_LINES - 1)
+}
+
+/// Page number of a line address.
+#[inline]
+pub fn page_of_line(line: u64) -> u64 {
+    (line << LINE_SHIFT) / PAGE_BYTES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_helpers() {
+        assert_eq!(line_addr(0), 0);
+        assert_eq!(line_addr(64), 1);
+        assert_eq!(line_addr(127), 1);
+        assert_eq!(group_of(7), 1);
+        assert_eq!(slot_of(5), 1);
+        assert_eq!(group_base(7), 4);
+        assert_eq!(page_of_line(63), 0);
+        assert_eq!(page_of_line(64), 1); // line 64 = byte 4096
+    }
+}

@@ -1,0 +1,91 @@
+//! PJRT runtime: load and execute the AOT-compiled compression-analysis
+//! HLO (`artifacts/compress_analysis.hlo.txt`) from rust.
+//!
+//! This is the L3↔L2 bridge: python lowers `analyze_groups` once at build
+//! time (`make artifacts`); this module compiles the HLO text on the PJRT
+//! CPU client and executes it with batches of raw lines.  Python is never
+//! on the request path.
+//!
+//! The artifact has a fixed batch geometry of [`GROUPS`] groups (4096
+//! lines); [`AnalysisEngine::analyze`] pads/splits arbitrary batches.
+
+use anyhow::{Context, Result};
+
+use crate::cram::group::Csi;
+use crate::mem::CacheLine;
+
+/// Batch geometry baked into the artifact (must match
+/// `python/compile/model.py::GROUPS`).
+pub const GROUPS: usize = 1024;
+
+/// Per-group analysis result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupAnalysis {
+    pub csi: Csi,
+    /// Hybrid compressed size per line (64 = raw).
+    pub sizes: [u32; 4],
+}
+
+/// A compiled PJRT executable for the compression-analysis model.
+pub struct AnalysisEngine {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl AnalysisEngine {
+    /// Default artifact path relative to the repo root.
+    pub const DEFAULT_ARTIFACT: &'static str = "artifacts/compress_analysis.hlo.txt";
+
+    /// Load + compile the HLO text artifact on the PJRT CPU client.
+    pub fn load(path: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text at {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile HLO")?;
+        Ok(Self { exe })
+    }
+
+    /// Analyze groups of four lines.  `groups.len()` may be anything; the
+    /// engine pads to the artifact's batch size internally.
+    pub fn analyze(&self, groups: &[[CacheLine; 4]]) -> Result<Vec<GroupAnalysis>> {
+        let mut out = Vec::with_capacity(groups.len());
+        for chunk in groups.chunks(GROUPS) {
+            out.extend(self.analyze_batch(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn analyze_batch(&self, groups: &[[CacheLine; 4]]) -> Result<Vec<GroupAnalysis>> {
+        assert!(groups.len() <= GROUPS);
+        // Build the padded u32[GROUPS, 4, 16] input.
+        let mut flat = vec![0u32; GROUPS * 4 * 16];
+        for (g, group) in groups.iter().enumerate() {
+            for (s, line) in group.iter().enumerate() {
+                let base = (g * 4 + s) * 16;
+                flat[base..base + 16].copy_from_slice(line.words());
+            }
+        }
+        let input = xla::Literal::vec1(&flat)
+            .reshape(&[GROUPS as i64, 4, 16])
+            .context("reshape input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[input])
+            .context("execute analysis")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True: (csi s32[G], sizes s32[G,4])
+        let (csi_lit, sizes_lit) = result.to_tuple2().context("unpack 2-tuple")?;
+        let csi: Vec<i32> = csi_lit.to_vec().context("csi to_vec")?;
+        let sizes: Vec<i32> = sizes_lit.to_vec().context("sizes to_vec")?;
+        Ok((0..groups.len())
+            .map(|g| GroupAnalysis {
+                csi: Csi::from_u8(csi[g] as u8).expect("csi in 0..=4"),
+                sizes: core::array::from_fn(|i| sizes[g * 4 + i] as u32),
+            })
+            .collect())
+    }
+}
+
+// NOTE: integration tests live in rust/tests/parity_hlo.rs — they need the
+// artifact built (`make artifacts`) and assert native-vs-HLO parity.

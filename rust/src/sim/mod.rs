@@ -1,0 +1,14 @@
+//! The multi-core trace-driven system simulator (the USIMM substitute).
+//!
+//! 8 OoO cores (4-wide, 3.2 GHz) modeled at the LLC-access level: each
+//! core retires instructions between LLC accesses, overlaps up to `mlp`
+//! outstanding misses, and blocks on dependent loads.  The shared LLC
+//! (8MB/16-way), the memory controller under test, and the DDR4 timing
+//! model complete the system.  See DESIGN.md §Substitutions for the
+//! fidelity argument.
+
+pub mod system;
+pub mod vm;
+
+pub use system::{simulate, SimConfig};
+pub use vm::VirtualMemory;

@@ -1,0 +1,451 @@
+//! The system simulator: cores + shared LLC + memory controller + DRAM.
+
+use crate::cache::{CacheConfig, SetAssocCache};
+use crate::controller::{Design, MemoryController};
+use crate::cram::dynamic::DynamicCram;
+use crate::dram::{DramConfig, DramSim};
+use crate::energy::{energy_of, EnergyConfig, EnergyResult};
+use crate::sim::vm::VirtualMemory;
+use crate::stats::SimResult;
+use crate::workloads::{AccessStream, SizeOracle, TraceReplay, WorkloadProfile};
+
+/// Where a core's access stream comes from: the synthetic generator or a
+/// replayed trace file (see `workloads::trace`).
+enum EventSource {
+    Synthetic(AccessStream),
+    Replay(TraceReplay),
+}
+
+impl EventSource {
+    #[inline]
+    fn next_event(&mut self) -> crate::workloads::TraceEvent {
+        match self {
+            EventSource::Synthetic(s) => s.next_event(),
+            EventSource::Replay(r) => r.next_event(),
+        }
+    }
+}
+
+/// CPU cycles per DRAM bus cycle (3.2 GHz / 800 MHz).
+pub const CPU_PER_BUS: u64 = 4;
+/// LLC hit latency in CPU cycles.
+pub const LLC_HIT_CPU: u64 = 38;
+/// Issue width (instructions per CPU cycle).
+pub const WIDTH: u64 = 4;
+
+/// Simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub design: Design,
+    pub cores: usize,
+    /// Instructions each core must retire.
+    pub insts_per_core: u64,
+    /// Instructions each core retires before measurement starts (cache
+    /// and layout warm-up, like the paper's PinPoints warmup).
+    pub warmup_insts: u64,
+    pub llc: CacheConfig,
+    pub dram: DramConfig,
+    pub seed: u64,
+    /// LLP / LCT entries (paper: 512; ablation knob).
+    pub llp_entries: usize,
+    /// Metadata-cache size in bytes for explicit designs (paper: 32KB).
+    pub meta_cache_bytes: usize,
+    /// Hybrid-compressor algorithm set (FPC+BDI per paper; +C-Pack opt).
+    pub algo: crate::compress::AlgoSet,
+    /// Model per-core private L1/L2 caches in front of the LLC (Table I
+    /// hierarchy).  Off by default: workload profiles are calibrated at
+    /// the LLC-access level; switching this on reinterprets the stream as
+    /// L1 accesses.
+    pub private_caches: bool,
+    /// Replay this trace on every core instead of the synthetic generator
+    /// (the profile still supplies the value model / MLP / footprint).
+    pub trace: Option<TraceReplay>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            design: Design::Uncompressed,
+            cores: 8,
+            insts_per_core: 2_000_000,
+            warmup_insts: 2_000_000,
+            llc: CacheConfig::paper_llc(),
+            dram: DramConfig::default(),
+            seed: 0xC0DE,
+            llp_entries: 512,
+            meta_cache_bytes: 32 * 1024,
+            algo: crate::compress::AlgoSet::FpcBdi,
+            private_caches: false,
+            trace: None,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn with_design(mut self, d: Design) -> Self {
+        self.design = d;
+        self
+    }
+
+    pub fn with_insts(mut self, n: u64) -> Self {
+        self.insts_per_core = n;
+        self.warmup_insts = n; // warmup matches measurement length
+        self
+    }
+
+    pub fn with_channels(mut self, ch: usize) -> Self {
+        self.dram = self.dram.with_channels(ch);
+        self
+    }
+}
+
+struct Core {
+    stream: EventSource,
+    /// Core-local time in CPU cycles.
+    time: u64,
+    insts: u64,
+    /// Completion times (CPU cycles) of outstanding misses.
+    outstanding: Vec<u64>,
+    mlp: usize,
+}
+
+/// Run one workload under one design.  Rate mode when `profile.mix_of` is
+/// empty (all cores run `profile`); MIX workloads place component
+/// profiles on their designated cores.
+pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
+    // Resolve per-core profiles.
+    let per_core: Vec<WorkloadProfile> = if profile.mix_of.is_empty() {
+        (0..cfg.cores).map(|_| profile.clone()).collect()
+    } else {
+        assert_eq!(profile.mix_of.len(), cfg.cores, "mix must name every core");
+        profile
+            .mix_of
+            .iter()
+            .map(|n| crate::workloads::profiles::by_name(n).expect("mix component"))
+            .collect()
+    };
+
+    let vm = VirtualMemory::new(cfg.cores);
+    let mut llc = SetAssocCache::new(cfg.llc);
+    let mut dram = DramSim::new(cfg.dram);
+    // metadata region: just past the 16GB data space
+    let meta_base = 16u64 * 1024 * 1024 * 1024 / 64;
+    let mut mc = MemoryController::with_knobs(
+        cfg.design,
+        cfg.cores,
+        meta_base,
+        cfg.llp_entries,
+        cfg.meta_cache_bytes,
+    );
+    // per-core private caches (optional Table I hierarchy)
+    let mut l1s: Vec<SetAssocCache> = (0..cfg.cores)
+        .map(|_| SetAssocCache::new(CacheConfig { bytes: 32 * 1024, ways: 8 }))
+        .collect();
+    let mut l2s: Vec<SetAssocCache> = (0..cfg.cores)
+        .map(|_| SetAssocCache::new(CacheConfig { bytes: 256 * 1024, ways: 8 }))
+        .collect();
+
+    let mut cores: Vec<Core> = per_core
+        .iter()
+        .enumerate()
+        .map(|(c, p)| Core {
+            stream: match &cfg.trace {
+                Some(t) => EventSource::Replay(t.clone()),
+                None => EventSource::Synthetic(AccessStream::new(p, cfg.seed ^ ((c as u64) << 32))),
+            },
+            time: 0,
+            insts: 0,
+            outstanding: Vec::with_capacity(p.mlp),
+            mlp: p.mlp,
+        })
+        .collect();
+    // Value/compressibility oracles per core, kept apart from `Core` so a
+    // victim's owner oracle can be borrowed during another core's turn.
+    let mut oracles: Vec<SizeOracle> = per_core
+        .iter()
+        .enumerate()
+        .map(|(c, p)| {
+            {
+                let mut o = SizeOracle::with_region(
+                    p.value_model(cfg.seed ^ 0xDA7A ^ c as u64),
+                    c as u64 * vm.region_lines(),
+                    p.footprint_lines().max(1024),
+                );
+                o.algo = cfg.algo;
+                o
+            }
+        })
+        .collect();
+
+    let mut run_until = |cores: &mut Vec<Core>,
+                         oracles: &mut Vec<SizeOracle>,
+                         llc: &mut SetAssocCache,
+                         dram: &mut DramSim,
+                         mc: &mut MemoryController,
+                         target: u64| loop {
+        // earliest not-done core next (keeps shared-state causality)
+        let c = match cores
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.insts < target)
+            .min_by_key(|(_, k)| k.time)
+        {
+            Some((i, _)) => i,
+            None => break,
+        };
+
+        let ev = cores[c].stream.next_event();
+        // retire the instruction gap at full width
+        cores[c].time += ev.gap.div_ceil(WIDTH);
+        cores[c].insts += ev.gap;
+
+        // MLP window: block until a slot frees up
+        {
+            let core = &mut cores[c];
+            let t = core.time;
+            core.outstanding.retain(|&d| d > t);
+            if core.outstanding.len() >= core.mlp {
+                let min = *core.outstanding.iter().min().unwrap();
+                core.time = core.time.max(min);
+                let t = core.time;
+                core.outstanding.retain(|&d| d > t);
+            }
+        }
+
+        let paddr = vm.translate(c, ev.vline);
+        let sampled = DynamicCram::is_sampled_group(crate::mem::group_of(paddr));
+
+        // optional private L1/L2 filter (latencies folded into the gap
+        // model; they are small next to LLC/DRAM)
+        if cfg.private_caches {
+            if l1s[c].access(paddr, ev.write) {
+                continue;
+            }
+            if l2s[c].access(paddr, ev.write) {
+                l1s[c].fill(paddr, ev.write, 0, c as u8, false);
+                continue;
+            }
+            if let Some(v1) = l1s[c].fill(paddr, ev.write, 0, c as u8, false) {
+                if v1.dirty {
+                    l2s[c].fill(v1.line_addr, true, 0, c as u8, false);
+                }
+            }
+            if let Some(v2) = l2s[c].fill(paddr, ev.write, 0, c as u8, false) {
+                if v2.dirty {
+                    // dirty L2 victim: write-back into the LLC
+                    llc.fill(v2.line_addr, true, 0, c as u8, false);
+                }
+            }
+        }
+
+        let info = llc.access_ex(paddr, ev.write);
+        if info.hit {
+            if info.first_prefetch_use {
+                mc.on_prefetch_used(c, sampled);
+            }
+            if ev.dependent {
+                cores[c].time += LLC_HIT_CPU;
+            }
+        } else {
+            let now_bus = cores[c].time / CPU_PER_BUS;
+            let outcome = mc.read(paddr, c, now_bus, dram, &mut oracles[c], sampled);
+            let done_cpu = outcome.done * CPU_PER_BUS + LLC_HIT_CPU;
+            cores[c].outstanding.push(done_cpu);
+            if ev.dependent {
+                cores[c].time = cores[c].time.max(done_cpu);
+            }
+            // install fetched lines; evictions trigger ganged writebacks
+            let now_bus = cores[c].time / CPU_PER_BUS;
+            for ins in &outcome.installs {
+                let dirty = ins.line_addr == paddr && ev.write;
+                if let Some(victim) =
+                    llc.fill(ins.line_addr, dirty, ins.level, c as u8, ins.prefetch)
+                {
+                    let mut gang = vec![victim];
+                    gang.extend(llc.evict_group(victim.line_addr));
+                    let v_sampled =
+                        DynamicCram::is_sampled_group(crate::mem::group_of(victim.line_addr));
+                    let owner = victim.core as usize;
+                    mc.writeback(&gang, now_bus, dram, &mut oracles[owner], v_sampled);
+                }
+            }
+        }
+
+    };
+
+    // Phase 1: warmup (caches fill, memory layout reaches steady state,
+    // Dynamic-CRAM counters settle).  Nothing is recorded.
+    run_until(
+        &mut cores, &mut oracles, &mut llc, &mut dram, &mut mc, cfg.warmup_insts,
+    );
+    let warm_time: Vec<u64> = cores.iter().map(|k| k.time).collect();
+    let warm_insts: Vec<u64> = cores.iter().map(|k| k.insts).collect();
+    let warm_bw = mc.bw;
+    let warm_llc = (llc.hits, llc.misses);
+    let warm_pref = (mc.prefetch_installed, mc.prefetch_used);
+    let warm_dram = dram.stats;
+
+    // Phase 2: measurement.
+    run_until(
+        &mut cores, &mut oracles, &mut llc, &mut dram, &mut mc,
+        cfg.warmup_insts + cfg.insts_per_core,
+    );
+
+    let cycles = cores
+        .iter()
+        .zip(&warm_time)
+        .map(|(k, w)| k.time - w)
+        .max()
+        .unwrap_or(0)
+        .max(1);
+    let ipc: Vec<f64> = cores
+        .iter()
+        .zip(warm_time.iter().zip(&warm_insts))
+        .map(|(k, (wt, wi))| (k.insts - wi) as f64 / (k.time - wt).max(1) as f64)
+        .collect();
+    let energy: EnergyResult = energy_of(
+        &EnergyConfig {
+            channels: cfg.dram.channels,
+            ..Default::default()
+        },
+        &dram.stats,
+        cycles,
+    );
+    let _ = energy; // embedded via row hit/miss stats; re-derived by harnesses
+
+    SimResult {
+        workload: profile.name.to_string(),
+        design: cfg.design.name().to_string(),
+        cycles,
+        insts_per_core: cfg.insts_per_core,
+        cores: cfg.cores,
+        ipc,
+        llc_hits: llc.hits - warm_llc.0,
+        llc_misses: llc.misses - warm_llc.1,
+        bw: crate::stats::Bandwidth {
+            demand_reads: mc.bw.demand_reads - warm_bw.demand_reads,
+            demand_writes: mc.bw.demand_writes - warm_bw.demand_writes,
+            clean_writes: mc.bw.clean_writes - warm_bw.clean_writes,
+            invalidates: mc.bw.invalidates - warm_bw.invalidates,
+            second_reads: mc.bw.second_reads - warm_bw.second_reads,
+            meta_reads: mc.bw.meta_reads - warm_bw.meta_reads,
+            meta_writes: mc.bw.meta_writes - warm_bw.meta_writes,
+            prefetch_reads: mc.bw.prefetch_reads - warm_bw.prefetch_reads,
+        },
+        llp_accuracy: mc.llp.stats.accuracy(),
+        meta_hit_rate: mc.meta.as_ref().map(|m| m.hit_rate()),
+        prefetch_installed: mc.prefetch_installed - warm_pref.0,
+        prefetch_used: mc.prefetch_used - warm_pref.1,
+        row_hit_rate: {
+            let h = dram.stats.row_hits - warm_dram.row_hits;
+            let m = dram.stats.row_misses - warm_dram.row_misses;
+            if h + m == 0 { 0.0 } else { h as f64 / (h + m) as f64 }
+        },
+        compression_enabled_frac: mc.compression_frac(),
+        dyn_costs: mc.dynamic.as_ref().map(|d| d.cost_events.iter().sum()).unwrap_or(0),
+        dyn_benefits: mc.dynamic.as_ref().map(|d| d.benefit_events.iter().sum()).unwrap_or(0),
+        dyn_counters: mc
+            .dynamic
+            .as_ref()
+            .map(|d| (0..cfg.cores).map(|c| d.counter(c)).collect())
+            .unwrap_or_default(),
+    }
+}
+
+/// Energy result for a finished run (Fig. 19 harness re-derives it from
+/// the recorded row-hit/miss counts and cycle count).
+pub fn energy_for(result: &SimResult, row_hits: u64, row_misses: u64) -> EnergyResult {
+    let stats = crate::dram::timing::DramStats {
+        row_hits,
+        row_misses,
+        ..Default::default()
+    };
+    energy_of(&EnergyConfig::default(), &stats, result.cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::profiles::by_name;
+
+    fn quick(design: Design, wl: &str) -> SimResult {
+        // long enough that the LLC fills, groups get packed during warmup,
+        // and the measurement phase sees steady state
+        let cfg = SimConfig::default()
+            .with_design(design)
+            .with_insts(1_200_000);
+        simulate(&by_name(wl).unwrap(), &cfg)
+    }
+
+    #[test]
+    fn baseline_completes_and_reports() {
+        let r = quick(Design::Uncompressed, "sphinx");
+        assert!(r.cycles > 0);
+        assert_eq!(r.ipc.len(), 8);
+        assert!(r.llc_misses > 0);
+        assert!(r.bw.demand_reads > 0);
+        assert!(r.mpki() > 1.0, "sphinx should miss: {}", r.mpki());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = quick(Design::Implicit, "libq");
+        let b = quick(Design::Implicit, "libq");
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.bw.total(), b.bw.total());
+    }
+
+    #[test]
+    fn compressible_streaming_workload_speeds_up() {
+        let base = quick(Design::Uncompressed, "libq");
+        let cram = quick(Design::Implicit, "libq");
+        let speedup = cram.weighted_speedup(&base);
+        assert!(
+            speedup > 1.05,
+            "libq should gain from CRAM: speedup {speedup}"
+        );
+        assert!(cram.prefetch_installed > 0);
+        assert!(cram.llp_accuracy > 0.9, "llp {}", cram.llp_accuracy);
+    }
+
+    #[test]
+    fn ideal_at_least_as_good_as_static() {
+        let base = quick(Design::Uncompressed, "milc");
+        let ideal = quick(Design::Ideal, "milc");
+        let stat = quick(Design::Implicit, "milc");
+        let s_ideal = ideal.weighted_speedup(&base);
+        let s_stat = stat.weighted_speedup(&base);
+        assert!(
+            s_ideal >= s_stat - 0.02,
+            "ideal {s_ideal} vs static {s_stat}"
+        );
+    }
+
+    #[test]
+    fn graph_workload_static_hurts_dynamic_protects() {
+        let base = quick(Design::Uncompressed, "cc_twi");
+        let stat = quick(Design::Implicit, "cc_twi");
+        let dynamic = quick(Design::Dynamic, "cc_twi");
+        let s_stat = stat.weighted_speedup(&base);
+        let s_dyn = dynamic.weighted_speedup(&base);
+        assert!(
+            s_dyn >= s_stat - 0.005,
+            "dynamic ({s_dyn}) must not lose to static ({s_stat})"
+        );
+        assert!(s_dyn > 0.97, "dynamic must not degrade much: {s_dyn}");
+    }
+
+    #[test]
+    fn explicit_pays_metadata_bandwidth() {
+        let r = quick(Design::Explicit { row_opt: false }, "xz");
+        assert!(r.bw.meta_reads > 0, "xz thrashes the metadata cache");
+        assert!(r.meta_hit_rate.unwrap() < 0.9);
+    }
+
+    #[test]
+    fn mix_workload_runs() {
+        let r = quick(Design::Dynamic, "mix1");
+        assert!(r.cycles > 0);
+        assert_eq!(r.ipc.len(), 8);
+    }
+}

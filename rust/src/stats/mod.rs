@@ -1,0 +1,177 @@
+//! Simulation statistics: the bandwidth breakdown of Figs. 8/15 and the
+//! weighted-speedup metric of §III-B.
+
+use crate::util::geomean;
+
+/// Memory-traffic breakdown by cause, in 64-byte accesses.
+/// `demand_*` exists in an uncompressed baseline too; everything else is
+/// compression overhead (or metadata overhead for explicit designs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Bandwidth {
+    /// Demand line reads (first access per LLC read miss).
+    pub demand_reads: u64,
+    /// Dirty-data writes (packed or raw — would exist in the baseline).
+    pub demand_writes: u64,
+    /// Writes of purely-clean packed data (compression overhead).
+    pub clean_writes: u64,
+    /// Invalid-line-marker writes (compression overhead).
+    pub invalidates: u64,
+    /// Re-issued reads after LLP mispredictions (compression overhead).
+    pub second_reads: u64,
+    /// Metadata-region reads (explicit-metadata overhead).
+    pub meta_reads: u64,
+    /// Metadata-region write-backs (explicit-metadata overhead).
+    pub meta_writes: u64,
+    /// Extra prefetch reads (next-line-prefetch baseline only).
+    pub prefetch_reads: u64,
+}
+
+impl Bandwidth {
+    pub fn total(&self) -> u64 {
+        self.demand_reads
+            + self.demand_writes
+            + self.clean_writes
+            + self.invalidates
+            + self.second_reads
+            + self.meta_reads
+            + self.meta_writes
+            + self.prefetch_reads
+    }
+
+    /// Overhead accesses (everything a plain uncompressed memory would not
+    /// have issued).
+    pub fn overhead(&self) -> u64 {
+        self.clean_writes
+            + self.invalidates
+            + self.second_reads
+            + self.meta_reads
+            + self.meta_writes
+            + self.prefetch_reads
+    }
+}
+
+/// Result of simulating one workload under one memory-system design.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub workload: String,
+    pub design: String,
+    /// Wall time in CPU cycles (3.2 GHz).
+    pub cycles: u64,
+    pub insts_per_core: u64,
+    pub cores: usize,
+    /// Per-core IPC.
+    pub ipc: Vec<f64>,
+    pub llc_hits: u64,
+    pub llc_misses: u64,
+    pub bw: Bandwidth,
+    /// LLP accuracy (1.0 when the design has no predictor).
+    pub llp_accuracy: f64,
+    /// Metadata-cache hit rate (None for implicit designs).
+    pub meta_hit_rate: Option<f64>,
+    /// Lines installed for free by compression, and how many were used.
+    pub prefetch_installed: u64,
+    pub prefetch_used: u64,
+    /// DRAM row-buffer hit rate.
+    pub row_hit_rate: f64,
+    /// Fraction of groups written compressed (Dynamic-CRAM diagnostics).
+    pub compression_enabled_frac: f64,
+    /// Dynamic-CRAM sampled-set cost / benefit event totals.
+    pub dyn_costs: u64,
+    pub dyn_benefits: u64,
+    /// Final per-core Dynamic-CRAM counter values (empty for non-dynamic).
+    pub dyn_counters: Vec<i32>,
+}
+
+impl SimResult {
+    /// Measured L3 misses per kilo-instruction (aggregate).
+    pub fn mpki(&self) -> f64 {
+        let insts = self.insts_per_core as f64 * self.cores as f64;
+        self.llc_misses as f64 / (insts / 1000.0)
+    }
+
+    /// Aggregate IPC (sum over cores).
+    pub fn total_ipc(&self) -> f64 {
+        self.ipc.iter().sum()
+    }
+
+    /// Weighted speedup vs a baseline run of the same workload
+    /// (rate-mode: per-core IPC ratios, averaged).
+    pub fn weighted_speedup(&self, base: &SimResult) -> f64 {
+        assert_eq!(self.cores, base.cores);
+        let ws: f64 = self
+            .ipc
+            .iter()
+            .zip(&base.ipc)
+            .map(|(a, b)| a / b)
+            .sum();
+        ws / self.cores as f64
+    }
+}
+
+/// Geometric-mean speedup across workloads.
+pub fn geomean_speedup(speedups: &[f64]) -> f64 {
+    geomean(speedups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(ipc: Vec<f64>) -> SimResult {
+        SimResult {
+            workload: "w".into(),
+            design: "d".into(),
+            cycles: 1000,
+            insts_per_core: 1000,
+            cores: ipc.len(),
+            ipc,
+            llc_hits: 0,
+            llc_misses: 500,
+            bw: Bandwidth::default(),
+            llp_accuracy: 1.0,
+            meta_hit_rate: None,
+            prefetch_installed: 0,
+            prefetch_used: 0,
+            row_hit_rate: 0.0,
+            compression_enabled_frac: 1.0,
+            dyn_costs: 0,
+            dyn_benefits: 0,
+            dyn_counters: vec![],
+        }
+    }
+
+    #[test]
+    fn weighted_speedup_identity() {
+        let a = result(vec![1.0, 2.0]);
+        assert!((a.weighted_speedup(&a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_speedup_mixed() {
+        let base = result(vec![1.0, 1.0]);
+        let fast = result(vec![2.0, 1.0]);
+        assert!((fast.weighted_speedup(&base) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mpki_math() {
+        let r = result(vec![1.0; 8]); // 8 cores * 1000 insts, 500 misses
+        assert!((r.mpki() - 62.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_totals() {
+        let bw = Bandwidth {
+            demand_reads: 10,
+            demand_writes: 5,
+            clean_writes: 2,
+            invalidates: 1,
+            second_reads: 1,
+            meta_reads: 3,
+            meta_writes: 1,
+            prefetch_reads: 0,
+        };
+        assert_eq!(bw.total(), 23);
+        assert_eq!(bw.overhead(), 8);
+    }
+}

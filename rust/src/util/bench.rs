@@ -1,0 +1,135 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs, reporting median / mean / p10 /
+//! p90 like criterion's summary line.  Used by the `rust/benches/*` targets
+//! (declared `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    /// Elements per second at the median, if a throughput denominator set.
+    pub fn elems_per_sec(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.median.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let thr = match self.elems_per_sec() {
+            Some(t) if t >= 1e6 => format!("  {:>8.2} Melem/s", t / 1e6),
+            Some(t) => format!("  {:>8.2} Kelem/s", t / 1e3),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} time: [{:>10.3?} {:>10.3?} {:>10.3?}]{}",
+            self.name, self.p10, self.median, self.p90, thr
+        )
+    }
+}
+
+/// Benchmark runner with criterion-like defaults.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_samples: 10,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            min_samples: 5,
+        }
+    }
+
+    /// Time `f` repeatedly; `elements` is the per-iteration throughput
+    /// denominator (e.g. number of lines compressed).
+    pub fn run<F: FnMut()>(&self, name: &str, elements: Option<u64>, mut f: F) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let _ = warm_iters;
+
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n as u64,
+            median: samples[n / 2],
+            mean: total / n as u32,
+            p10: samples[n / 10],
+            p90: samples[(n * 9) / 10],
+            elements,
+        };
+        println!("{}", result.report());
+        result
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept for call-site clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 3,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop", Some(100), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.median <= r.p90);
+        assert!(r.p10 <= r.median);
+        assert!(r.elems_per_sec().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Small shared utilities: deterministic RNG, statistics helpers, and the
+//! in-crate bench / property-test harnesses (criterion and proptest are not
+//! available in this offline environment — see DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod rng;
+pub mod testkit;
+
+/// Geometric mean of a slice of positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Format a ratio as a signed percentage string, e.g. 1.063 -> "+6.3%".
+pub fn pct(ratio: f64) -> String {
+    format!("{:+.1}%", (ratio - 1.0) * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 1.0);
+    }
+
+    #[test]
+    fn mean_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(1.063), "+6.3%");
+        assert_eq!(pct(0.9), "-10.0%");
+    }
+}

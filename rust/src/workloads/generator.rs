@@ -1,0 +1,169 @@
+//! Per-core LLC-access trace generation.
+//!
+//! Produces the stream of (line address, read/write, instruction gap)
+//! events a core presents to the shared LLC.  The address process is a
+//! three-state mixture driven by the profile:
+//!
+//! * with `p_seq`, continue the current sequential run (next line);
+//! * otherwise jump — with `p_hot` into the hot set (temporal reuse),
+//!   else uniformly into the full footprint (cold).
+//!
+//! Addresses are *virtual* lines; the VM layer ([`crate::sim::vm`]) maps
+//! them per-core so cores never share physical pages (paper §III-A).
+
+use crate::util::rng::Rng;
+use crate::workloads::profiles::WorkloadProfile;
+
+/// One LLC access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual line address.
+    pub vline: u64,
+    pub write: bool,
+    /// Instructions executed since the previous LLC access.
+    pub gap: u64,
+    /// Core must wait for this access's data before making progress.
+    pub dependent: bool,
+}
+
+/// The cyclic "streaming arrays" region: real streaming workloads (lbm,
+/// libquantum, milc…) re-traverse their main arrays every outer iteration.
+/// Sequential traffic walks this region cyclically so memory-level reuse
+/// exists within a simulated slice; 2 MB per core ≫ the per-core share of
+/// the shared 8MB LLC, so the traversal still misses (cyclic-LRU
+/// thrashing), exactly like the full-size arrays would.
+pub const SWEEP_LINES: u64 = 2 * 1024 * 1024 / 64;
+
+/// Deterministic, infinite access stream for one core.
+pub struct AccessStream {
+    rng: Rng,
+    footprint_lines: u64,
+    sweep_lines: u64,
+    hot_lines: u64,
+    p_seq: f64,
+    p_hot: f64,
+    write_frac: f64,
+    p_dep: f64,
+    mean_gap: f64,
+    /// Streaming cursor (cycles through the sweep region).
+    cursor: u64,
+}
+
+impl AccessStream {
+    pub fn new(profile: &WorkloadProfile, seed: u64) -> Self {
+        assert!(
+            profile.mix_of.is_empty(),
+            "mixes are expanded per-core by the experiment runner"
+        );
+        let footprint_lines = profile.footprint_lines().max(1024);
+        Self {
+            rng: Rng::new(seed),
+            footprint_lines,
+            sweep_lines: footprint_lines.min(SWEEP_LINES),
+            hot_lines: ((footprint_lines as f64 * profile.hot_frac) as u64).max(64),
+            p_seq: profile.p_seq,
+            p_hot: profile.p_hot,
+            write_frac: profile.write_frac,
+            p_dep: profile.p_dep,
+            mean_gap: 1000.0 / profile.apki,
+            cursor: 0,
+        }
+    }
+
+    /// Next LLC access.  Sequential runs emerge as geometric streaks of
+    /// `p_seq` successes (mean run length 1/(1-p_seq)), so `p_seq` IS the
+    /// long-run sequential fraction of the stream.  Non-sequential
+    /// accesses are one-off excursions (hot set or anywhere in the
+    /// footprint) that do not derail the streaming cursor.
+    pub fn next_event(&mut self) -> TraceEvent {
+        let vline = if self.rng.chance(self.p_seq) {
+            self.cursor = (self.cursor + 1) % self.sweep_lines;
+            self.cursor
+        } else if self.rng.chance(self.p_hot) {
+            self.rng.below(self.hot_lines)
+        } else {
+            self.rng.below(self.footprint_lines)
+        };
+        TraceEvent {
+            vline,
+            write: self.rng.chance(self.write_frac),
+            gap: self.rng.geometric(self.mean_gap),
+            dependent: self.rng.chance(self.p_dep),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::profiles::by_name;
+
+    fn stream(name: &str, seed: u64) -> AccessStream {
+        AccessStream::new(&by_name(name).unwrap(), seed)
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = stream("libq", 1);
+        let mut b = stream("libq", 1);
+        for _ in 0..1000 {
+            assert_eq!(a.next_event(), b.next_event());
+        }
+    }
+
+    #[test]
+    fn stays_in_footprint() {
+        let p = by_name("sphinx").unwrap();
+        let fp = p.footprint_lines();
+        let mut s = AccessStream::new(&p, 3);
+        for _ in 0..10_000 {
+            assert!(s.next_event().vline < fp);
+        }
+    }
+
+    #[test]
+    fn spatial_locality_reflects_p_seq() {
+        let seq_frac = |name: &str| {
+            let mut s = stream(name, 7);
+            let mut prev = s.next_event().vline;
+            let mut seq = 0;
+            let n = 20_000;
+            for _ in 0..n {
+                let e = s.next_event();
+                if e.vline == prev + 1 {
+                    seq += 1;
+                }
+                prev = e.vline;
+            }
+            seq as f64 / n as f64
+        };
+        let libq = seq_frac("libq"); // p_seq 0.95
+        let cc = seq_frac("cc_twi"); // p_seq 0.06
+        assert!(libq > 0.85, "libq sequential fraction {libq}");
+        assert!(cc < 0.30, "cc_twi sequential fraction {cc}");
+    }
+
+    #[test]
+    fn gap_matches_apki() {
+        let p = by_name("libq").unwrap(); // apki 30 => mean gap ~33 insts
+        let mut s = AccessStream::new(&p, 11);
+        let n = 50_000;
+        let total: u64 = (0..n).map(|_| s.next_event().gap).sum();
+        let apki = 1000.0 * n as f64 / total as f64;
+        assert!(
+            (apki - p.apki).abs() / p.apki < 0.1,
+            "measured apki {apki} vs {}",
+            p.apki
+        );
+    }
+
+    #[test]
+    fn write_fraction_respected() {
+        let p = by_name("lbm17").unwrap(); // write_frac 0.40
+        let mut s = AccessStream::new(&p, 13);
+        let n = 50_000;
+        let writes = (0..n).filter(|_| s.next_event().write).count();
+        let frac = writes as f64 / n as f64;
+        assert!((frac - 0.40).abs() < 0.03, "write frac {frac}");
+    }
+}

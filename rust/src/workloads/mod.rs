@@ -1,0 +1,31 @@
+//! Synthetic workload models (the PinPoints/SPEC/GAP substitute).
+//!
+//! We cannot run SPEC/GAP binaries in this environment, so every workload
+//! is modeled by a *generator* calibrated to the paper's Table II and the
+//! behaviours its evaluation depends on:
+//!
+//! * **memory intensity** — LLC accesses per kilo-instruction (so misses
+//!   per kilo-instruction emerge from the modeled LLC at roughly the
+//!   Table II MPKI);
+//! * **footprint** — the physical region the stream touches;
+//! * **spatial locality** — sequential-run behaviour (drives both the
+//!   usefulness of CRAM's free adjacent-line prefetch and the metadata
+//!   cache hit rate of the explicit baseline);
+//! * **temporal reuse** — hot-set fraction (drives LLC hit rate and how
+//!   well the cost of compressed writebacks is amortized);
+//! * **data values** — a per-page value-class model (drives FPC+BDI
+//!   compressibility; Fig. 4);
+//! * **memory-level parallelism** — how many misses a core overlaps.
+//!
+//! [`profiles::all27`] is the paper's memory-intensive evaluation set;
+//! [`profiles::all64`] the extended Fig. 18 set.
+
+pub mod generator;
+pub mod profiles;
+pub mod trace;
+pub mod values;
+
+pub use generator::{AccessStream, TraceEvent};
+pub use trace::TraceReplay;
+pub use profiles::{Suite, WorkloadProfile};
+pub use values::{SizeOracle, ValueClass, ValueModel};

@@ -1,0 +1,192 @@
+//! Trace-file input: replay externally captured LLC-access traces.
+//!
+//! The synthetic generators cover the paper's evaluation, but a real
+//! deployment wants to feed measured traces (USIMM-style).  Format: one
+//! access per line, whitespace separated:
+//!
+//! ```text
+//! <gap> <R|W> <hex-line-address> [D]
+//! ```
+//!
+//! * `gap`  — instructions since the previous LLC access,
+//! * `R|W`  — read or write,
+//! * address in hex (line granularity, i.e. byte address >> 6),
+//! * optional `D` marks a dependent load (the core blocks on it).
+//!
+//! Comment lines start with `#`.  The replay loops when the trace is
+//! exhausted, so any instruction budget can be simulated.
+
+use crate::workloads::generator::TraceEvent;
+
+/// A parsed trace, replayed cyclically.
+#[derive(Clone, Debug)]
+pub struct TraceReplay {
+    events: Vec<TraceEvent>,
+    pos: usize,
+    /// How many times the trace wrapped (diagnostics).
+    pub wraps: u64,
+}
+
+/// Parse errors carry the line number.
+#[derive(Debug, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub reason: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "trace parse error at line {}: {}", self.line, self.reason)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl TraceReplay {
+    /// Parse from text (see module docs for the format).
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut events = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let err = |reason: &str| ParseError { line: i + 1, reason: reason.into() };
+            let gap: u64 = parts
+                .next()
+                .ok_or_else(|| err("missing gap"))?
+                .parse()
+                .map_err(|_| err("gap must be an integer"))?;
+            let rw = parts.next().ok_or_else(|| err("missing R|W"))?;
+            let write = match rw {
+                "R" | "r" => false,
+                "W" | "w" => true,
+                _ => return Err(err("second field must be R or W")),
+            };
+            let addr = parts.next().ok_or_else(|| err("missing address"))?;
+            let addr = addr.strip_prefix("0x").unwrap_or(addr);
+            let vline =
+                u64::from_str_radix(addr, 16).map_err(|_| err("address must be hex"))?;
+            let dependent = matches!(parts.next(), Some("D") | Some("d"));
+            events.push(TraceEvent { vline, write, gap: gap.max(1), dependent });
+        }
+        if events.is_empty() {
+            return Err(ParseError { line: 0, reason: "empty trace".into() });
+        }
+        Ok(Self { events, pos: 0, wraps: 0 })
+    }
+
+    /// Build from in-memory events (the `repro gen-trace` exporter).
+    pub fn from_events(events: Vec<TraceEvent>) -> Self {
+        assert!(!events.is_empty());
+        Self { events, pos: 0, wraps: 0 }
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self, Box<dyn std::error::Error>> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Next event (cyclic).
+    pub fn next_event(&mut self) -> TraceEvent {
+        let e = self.events[self.pos];
+        self.pos += 1;
+        if self.pos == self.events.len() {
+            self.pos = 0;
+            self.wraps += 1;
+        }
+        e
+    }
+
+    /// Largest line address in the trace (for footprint sizing).
+    pub fn max_line(&self) -> u64 {
+        self.events.iter().map(|e| e.vline).max().unwrap_or(0)
+    }
+
+    /// Serialize back to the text format (round-trip/testing, and for the
+    /// `repro gen-trace` exporter).
+    pub fn to_text(&self) -> String {
+        let mut s = String::with_capacity(self.events.len() * 16);
+        s.push_str("# gap R|W hex-line-addr [D]\n");
+        for e in &self.events {
+            s.push_str(&format!(
+                "{} {} {:x}{}\n",
+                e.gap,
+                if e.write { 'W' } else { 'R' },
+                e.vline,
+                if e.dependent { " D" } else { "" }
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# a comment
+10 R 1a2b
+5 W 0x1a2c D
+
+3 r ff
+";
+
+    #[test]
+    fn parses_sample() {
+        let t = TraceReplay::parse(SAMPLE).unwrap();
+        assert_eq!(t.len(), 3);
+        let mut t = t;
+        let e1 = t.next_event();
+        assert_eq!((e1.gap, e1.write, e1.vline, e1.dependent), (10, false, 0x1a2b, false));
+        let e2 = t.next_event();
+        assert_eq!((e2.gap, e2.write, e2.vline, e2.dependent), (5, true, 0x1a2c, true));
+        let e3 = t.next_event();
+        assert_eq!((e3.gap, e3.write, e3.vline), (3, false, 0xff));
+    }
+
+    #[test]
+    fn wraps_cyclically() {
+        let mut t = TraceReplay::parse("1 R 0\n1 R 1\n").unwrap();
+        for _ in 0..5 {
+            t.next_event();
+        }
+        assert_eq!(t.wraps, 2);
+        // 5 events consumed: 0,1,0,1,0 — next up is event 1
+        assert_eq!(t.next_event().vline, 1);
+    }
+
+    #[test]
+    fn error_reporting() {
+        let e = TraceReplay::parse("1 X 0\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(e.reason.contains("R or W"));
+        let e = TraceReplay::parse("nope R 0\n").unwrap_err();
+        assert!(e.reason.contains("integer"));
+        assert!(TraceReplay::parse("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn round_trips_through_text() {
+        let t = TraceReplay::parse(SAMPLE).unwrap();
+        let t2 = TraceReplay::parse(&t.to_text()).unwrap();
+        assert_eq!(t.events, t2.events);
+    }
+
+    #[test]
+    fn max_line() {
+        let t = TraceReplay::parse("1 R ff\n1 W 1000\n").unwrap();
+        assert_eq!(t.max_line(), 0x1000);
+    }
+}

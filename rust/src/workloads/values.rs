@@ -1,0 +1,319 @@
+//! Data-value models: what the bytes in memory look like, per workload.
+//!
+//! Each 4KB page is assigned a [`ValueClass`] on first touch (hash of the
+//! page address under the workload's class weights), and every line's
+//! content is generated deterministically from its address and class.
+//! Compressed sizes then follow from the real FPC+BDI compressors, so the
+//! whole pipeline (markers, packing, budget checks) runs on genuine
+//! bitstreams — not on synthetic size labels.
+//!
+//! Class → typical hybrid size → packing behaviour:
+//!
+//! | class    | content                     | size    | packs as |
+//! |----------|-----------------------------|---------|----------|
+//! | Zero     | zero lines                  | 2 B     | 4:1      |
+//! | SmallInt | small signed words          | ~9-15 B | 4:1      |
+//! | Pointer  | u64 base + small deltas     | ~17-25 B| 2:1      |
+//! | Float    | high-entropy mantissas      | ~41-64 B| rarely   |
+//! | Random   | uniform random words        | 64 B    | never    |
+
+use crate::compress::hybrid::{self, AlgoSet};
+use crate::mem::{CacheLine, PAGE_BYTES};
+use crate::util::rng::splitmix64;
+use std::collections::HashMap;
+
+/// Per-page data-value class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueClass {
+    Zero,
+    SmallInt,
+    Pointer,
+    Float,
+    Random,
+}
+
+/// Workload-level mixture of page classes (weights, not normalized).
+#[derive(Clone, Copy, Debug)]
+pub struct ValueModel {
+    /// Weights for [Zero, SmallInt, Pointer, Float, Random].
+    pub weights: [f64; 5],
+    /// Per-model seed so different workloads see different page layouts.
+    pub seed: u64,
+}
+
+impl ValueModel {
+    pub const CLASSES: [ValueClass; 5] = [
+        ValueClass::Zero,
+        ValueClass::SmallInt,
+        ValueClass::Pointer,
+        ValueClass::Float,
+        ValueClass::Random,
+    ];
+
+    pub fn new(weights: [f64; 5], seed: u64) -> Self {
+        Self { weights, seed }
+    }
+
+    /// Class of the page containing `line_addr` (deterministic).
+    pub fn class_of_line(&self, line_addr: u64) -> ValueClass {
+        let page = line_addr * 64 / PAGE_BYTES;
+        let h = splitmix64(self.seed ^ 0x7061_6765, page); // "page"
+        let total: f64 = self.weights.iter().sum();
+        let mut x = (h >> 11) as f64 / (1u64 << 53) as f64 * total;
+        for (i, w) in self.weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return Self::CLASSES[i];
+            }
+        }
+        ValueClass::Random
+    }
+
+    /// Deterministic content of the line at `line_addr`.
+    /// `version` models in-place updates: bumping it changes the values
+    /// (but not the class), like a store to the line would.
+    pub fn gen_line(&self, line_addr: u64, version: u32) -> CacheLine {
+        let class = self.class_of_line(line_addr);
+        let key = self.seed ^ ((version as u64) << 48);
+        let mut words = [0u32; 16];
+        match class {
+            ValueClass::Zero => {
+                // mostly-zero page: occasional small counter word
+                if splitmix64(key, line_addr) % 8 == 0 {
+                    words[0] = (splitmix64(key, line_addr) % 16) as u32;
+                }
+            }
+            ValueClass::SmallInt => {
+                // sparse small counters: half zero, half 4-bit — FPC-friendly
+                // (≤14B), so groups of four reliably reach 4:1.
+                for (i, w) in words.iter_mut().enumerate() {
+                    let h = splitmix64(key, line_addr * 16 + i as u64);
+                    *w = if h & 1 == 0 { (h >> 1) as u32 % 8 } else { 0 };
+                }
+            }
+            ValueClass::Pointer => {
+                // qword array of nearby pointers: base8-delta1/2 territory
+                let base = 0x5500_0000_0000u64 | (splitmix64(key, line_addr / 64) & 0xFFFF_FFFF_F000);
+                let mut q = [0u64; 8];
+                for (i, v) in q.iter_mut().enumerate() {
+                    let h = splitmix64(key, line_addr * 8 + i as u64);
+                    *v = base.wrapping_add((h % 4096) as u64);
+                }
+                return CacheLine::from_qwords(q);
+            }
+            ValueClass::Float => {
+                // double-precision-like values sharing exponents: high
+                // mantissa entropy, compresses poorly but not never
+                let exp = 0x3FF0u64 | (splitmix64(key, line_addr / 16) & 0x7);
+                let mut q = [0u64; 8];
+                for (i, v) in q.iter_mut().enumerate() {
+                    let h = splitmix64(key, line_addr * 8 + i as u64);
+                    // ~30 bits of mantissa entropy: B8D4 applies (41B) —
+                    // individually compressible but too big to pack pairs.
+                    *v = (exp << 48) | (h & 0x3FFF_FFFF);
+                }
+                return CacheLine::from_qwords(q);
+            }
+            ValueClass::Random => {
+                for (i, w) in words.iter_mut().enumerate() {
+                    *w = splitmix64(key, line_addr * 16 + i as u64) as u32;
+                }
+            }
+        }
+        CacheLine::from_words(words)
+    }
+}
+
+/// Memoizing per-line hybrid-size oracle — the timing simulator's view of
+/// compressibility.  Sizes come from the real compressors over generated
+/// contents; `dirty_update` re-rolls a line's version, modeling stores
+/// that change (and occasionally break) compressibility.
+pub struct SizeOracle {
+    model: ValueModel,
+    /// Which algorithms the hybrid compressor may pick (ablation knob).
+    pub algo: AlgoSet,
+    /// Flat cache for the contiguous physical region this oracle serves
+    /// (0 = not yet computed; real sizes are >= 2).
+    region_base: u64,
+    region: Vec<u8>,
+    /// Spill cache for addresses outside the region (tests, ad-hoc use).
+    cache: HashMap<u64, u8>,
+    versions: HashMap<u64, u32>,
+    pub lookups: u64,
+    pub computes: u64,
+}
+
+impl SizeOracle {
+    pub fn new(model: ValueModel) -> Self {
+        Self {
+            model,
+            algo: AlgoSet::FpcBdi,
+            region_base: 0,
+            region: Vec::new(),
+            cache: HashMap::new(),
+            versions: HashMap::new(),
+            lookups: 0,
+            computes: 0,
+        }
+    }
+
+    /// Oracle with a flat (Vec-backed) size cache over `[base, base+len)`
+    /// physical lines — the simulator's per-core region.  O(1) lookups
+    /// with no hashing on the hot path.
+    pub fn with_region(model: ValueModel, base: u64, len: u64) -> Self {
+        Self {
+            model,
+            algo: AlgoSet::FpcBdi,
+            region_base: base,
+            region: vec![0u8; len as usize],
+            cache: HashMap::new(),
+            versions: HashMap::new(),
+            lookups: 0,
+            computes: 0,
+        }
+    }
+
+    pub fn model(&self) -> &ValueModel {
+        &self.model
+    }
+
+    /// Hybrid compressed size of the line (64 ⇒ raw).
+    pub fn size(&mut self, line_addr: u64) -> u32 {
+        self.lookups += 1;
+        let idx = line_addr.wrapping_sub(self.region_base);
+        if (idx as usize) < self.region.len() {
+            let s = self.region[idx as usize];
+            if s != 0 {
+                return s as u32;
+            }
+            let s = self.compute(line_addr);
+            self.region[idx as usize] = s as u8;
+            return s;
+        }
+        if let Some(&s) = self.cache.get(&line_addr) {
+            return s as u32;
+        }
+        let s = self.compute(line_addr);
+        self.cache.insert(line_addr, s as u8);
+        s
+    }
+
+    fn compute(&mut self, line_addr: u64) -> u32 {
+        self.computes += 1;
+        let v = self.versions.get(&line_addr).copied().unwrap_or(0);
+        let line = self.model.gen_line(line_addr, v);
+        hybrid::compressed_size_with(&line, self.algo)
+    }
+
+    /// Sizes of all four lines in `line_addr`'s group.
+    pub fn group_sizes(&mut self, line_addr: u64) -> [u32; 4] {
+        let base = crate::mem::group_base(line_addr);
+        core::array::from_fn(|i| self.size(base + i as u64))
+    }
+
+    /// A store dirtied the line: bump its version (values change, class
+    /// stays — compressibility usually survives but can shift).
+    pub fn dirty_update(&mut self, line_addr: u64) {
+        let v = self.versions.entry(line_addr).or_insert(0);
+        *v += 1;
+        let idx = line_addr.wrapping_sub(self.region_base);
+        if (idx as usize) < self.region.len() {
+            self.region[idx as usize] = 0;
+        } else {
+            self.cache.remove(&line_addr);
+        }
+    }
+
+    /// The actual line content (byte-accurate paths).
+    pub fn content(&self, line_addr: u64) -> CacheLine {
+        let v = self.versions.get(&line_addr).copied().unwrap_or(0);
+        self.model.gen_line(line_addr, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::hybrid;
+
+    fn model(weights: [f64; 5]) -> ValueModel {
+        ValueModel::new(weights, 0xABCD)
+    }
+
+    #[test]
+    fn classes_deterministic_and_page_granular() {
+        let m = model([1.0, 1.0, 1.0, 1.0, 1.0]);
+        for page in 0..50u64 {
+            let first = m.class_of_line(page * 64);
+            for l in 0..64 {
+                assert_eq!(m.class_of_line(page * 64 + l), first);
+            }
+        }
+    }
+
+    #[test]
+    fn class_sizes_land_in_expected_bands() {
+        let zero = model([1.0, 0.0, 0.0, 0.0, 0.0]);
+        let small = model([0.0, 1.0, 0.0, 0.0, 0.0]);
+        let ptr = model([0.0, 0.0, 1.0, 0.0, 0.0]);
+        let rnd = model([0.0, 0.0, 0.0, 0.0, 1.0]);
+        for la in 0..256u64 {
+            let sz = hybrid::compressed_size(&zero.gen_line(la, 0));
+            assert!(sz <= 15, "zero-class line {la} size {sz}");
+            let ss = hybrid::compressed_size(&small.gen_line(la, 0));
+            assert!(ss <= 15, "small-int line {la} size {ss}");
+            let sp = hybrid::compressed_size(&ptr.gen_line(la, 0));
+            assert!((16..=30).contains(&sp), "pointer line {la} size {sp}");
+            let sr = hybrid::compressed_size(&rnd.gen_line(la, 0));
+            assert_eq!(sr, 64, "random line {la}");
+        }
+    }
+
+    #[test]
+    fn float_class_mostly_unpackable() {
+        let f = model([0.0, 0.0, 0.0, 1.0, 0.0]);
+        let mut pair_fits = 0;
+        for g in 0..200u64 {
+            let a = hybrid::compressed_size(&f.gen_line(g * 4, 0));
+            let b = hybrid::compressed_size(&f.gen_line(g * 4 + 1, 0));
+            if a + b <= 60 {
+                pair_fits += 1;
+            }
+        }
+        assert!(pair_fits < 20, "float pages should rarely pair: {pair_fits}");
+    }
+
+    #[test]
+    fn oracle_caches_and_invalidates() {
+        let mut o = SizeOracle::new(model([0.0, 1.0, 0.0, 0.0, 0.0]));
+        let s1 = o.size(100);
+        let s2 = o.size(100);
+        assert_eq!(s1, s2);
+        assert_eq!(o.computes, 1);
+        o.dirty_update(100);
+        let _s3 = o.size(100);
+        assert_eq!(o.computes, 2);
+    }
+
+    #[test]
+    fn oracle_matches_content_compression() {
+        let mut o = SizeOracle::new(model([1.0, 1.0, 1.0, 1.0, 1.0]));
+        for la in 0..200u64 {
+            let want = hybrid::compressed_size(&o.content(la));
+            assert_eq!(o.size(la), want);
+        }
+    }
+
+    #[test]
+    fn version_changes_values_not_class() {
+        let m = model([1.0, 1.0, 1.0, 1.0, 1.0]);
+        let mut changed = 0;
+        for la in 0..64u64 {
+            if m.gen_line(la, 0) != m.gen_line(la, 1) {
+                changed += 1;
+            }
+            assert_eq!(m.class_of_line(la), m.class_of_line(la));
+        }
+        assert!(changed > 32, "most lines should change under a new version");
+    }
+}

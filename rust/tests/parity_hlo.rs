@@ -1,0 +1,107 @@
+//! Cross-language parity: the AOT HLO artifact (Pallas L1 kernel inside
+//! the jax L2 graph, executed via PJRT) must agree bit-for-bit with the
+//! native rust compressors used in the simulator hot loop.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use cram::compress::hybrid;
+use cram::cram::group::Csi;
+use cram::mem::CacheLine;
+use cram::runtime::AnalysisEngine;
+use cram::util::rng::Rng;
+use cram::workloads::ValueModel;
+
+fn artifact() -> Option<AnalysisEngine> {
+    let path = AnalysisEngine::DEFAULT_ARTIFACT;
+    if !std::path::Path::new(path).exists() {
+        panic!(
+            "artifact {path} missing — run `make artifacts` before `cargo test` \
+             (the Makefile `test` target does this automatically)"
+        );
+    }
+    Some(AnalysisEngine::load(path).expect("load + compile artifact"))
+}
+
+fn native(group: &[CacheLine; 4]) -> (Csi, [u32; 4]) {
+    let sizes: [u32; 4] = core::array::from_fn(|i| hybrid::compressed_size(&group[i]));
+    (Csi::from_sizes(sizes), sizes)
+}
+
+#[test]
+fn hlo_matches_native_on_workload_values() {
+    let engine = artifact().unwrap();
+    // every workload value class, 512 groups each
+    for weights in [
+        [1.0, 0.0, 0.0, 0.0, 0.0],
+        [0.0, 1.0, 0.0, 0.0, 0.0],
+        [0.0, 0.0, 1.0, 0.0, 0.0],
+        [0.0, 0.0, 0.0, 1.0, 0.0],
+        [0.0, 0.0, 0.0, 0.0, 1.0],
+        [1.0, 1.0, 1.0, 1.0, 1.0],
+    ] {
+        let model = ValueModel::new(weights, 0xA0_7E57);
+        let groups: Vec<[CacheLine; 4]> = (0..512u64)
+            .map(|g| core::array::from_fn(|s| model.gen_line(g * 4 + s as u64, 0)))
+            .collect();
+        let analysis = engine.analyze(&groups).expect("analyze");
+        assert_eq!(analysis.len(), groups.len());
+        for (g, a) in groups.iter().zip(&analysis) {
+            let (csi, sizes) = native(g);
+            assert_eq!(a.sizes, sizes, "sizes diverge for {weights:?}");
+            assert_eq!(a.csi, csi, "csi diverges for {weights:?}");
+        }
+    }
+}
+
+#[test]
+fn hlo_matches_native_on_random_bits() {
+    let engine = artifact().unwrap();
+    let mut rng = Rng::new(0xF00D);
+    let groups: Vec<[CacheLine; 4]> = (0..1024)
+        .map(|_| {
+            core::array::from_fn(|_| {
+                CacheLine::from_words(core::array::from_fn(|_| rng.next_u32()))
+            })
+        })
+        .collect();
+    let analysis = engine.analyze(&groups).expect("analyze");
+    for (g, a) in groups.iter().zip(&analysis) {
+        let (csi, sizes) = native(g);
+        assert_eq!((a.csi, a.sizes), (csi, sizes));
+    }
+}
+
+#[test]
+fn hlo_handles_partial_batches() {
+    let engine = artifact().unwrap();
+    // non-multiple-of-batch sizes exercise the padding path
+    for n in [1usize, 3, 1023, 1024, 1025, 2500] {
+        let model = ValueModel::new([1.0, 1.0, 1.0, 1.0, 1.0], n as u64);
+        let groups: Vec<[CacheLine; 4]> = (0..n as u64)
+            .map(|g| core::array::from_fn(|s| model.gen_line(g * 4 + s as u64, 0)))
+            .collect();
+        let analysis = engine.analyze(&groups).expect("analyze");
+        assert_eq!(analysis.len(), n);
+        // spot-check first and last
+        for idx in [0, n - 1] {
+            let (csi, sizes) = native(&groups[idx]);
+            assert_eq!((analysis[idx].csi, analysis[idx].sizes), (csi, sizes), "n={n} idx={idx}");
+        }
+    }
+}
+
+#[test]
+fn hlo_spec_pins() {
+    // the same hand pins as python/tests/test_kernel.py, through PJRT
+    let engine = artifact().unwrap();
+    let zero = CacheLine::zero();
+    let sevens = CacheLine::from_words([7; 16]);
+    let rep = CacheLine::from_words([0x4141_4141; 16]);
+    let base = 0x1234_5678_9ABC_DE00u64;
+    let b8d1 = CacheLine::from_qwords(core::array::from_fn(|i| base + i as u64));
+    let analysis = engine
+        .analyze(&[[zero, sevens, rep, b8d1]])
+        .expect("analyze");
+    assert_eq!(analysis[0].sizes, [2, 9, 9, 17]);
+    assert_eq!(analysis[0].csi, Csi::Quad); // 2+9+9+17 = 37 <= 60
+}

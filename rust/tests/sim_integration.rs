@@ -1,0 +1,186 @@
+//! Cross-design integration tests over the full simulator: the behavioral
+//! contracts each paper figure depends on, checked at reduced scale.
+
+use cram::controller::Design;
+use cram::sim::{simulate, SimConfig};
+use cram::stats::SimResult;
+use cram::workloads::profiles::by_name;
+
+fn run(wl: &str, design: Design, insts: u64) -> SimResult {
+    simulate(
+        &by_name(wl).unwrap(),
+        &SimConfig::default().with_design(design).with_insts(insts),
+    )
+}
+
+#[test]
+fn traffic_conservation_uncompressed() {
+    // every LLC read miss is exactly one demand read; writes only from
+    // dirty evictions
+    let r = run("sphinx", Design::Uncompressed, 400_000);
+    assert_eq!(r.bw.overhead(), 0, "baseline has zero overhead traffic");
+    assert!(r.bw.demand_reads > 0);
+    assert!(r.bw.demand_writes > 0);
+}
+
+#[test]
+fn ideal_reduces_reads_on_compressible_streams() {
+    let base = run("libq", Design::Uncompressed, 800_000);
+    let ideal = run("libq", Design::Ideal, 800_000);
+    assert!(
+        (ideal.bw.demand_reads as f64) < 0.6 * base.bw.demand_reads as f64,
+        "4:1-heavy stream should cut reads hard: {} vs {}",
+        ideal.bw.demand_reads,
+        base.bw.demand_reads
+    );
+    assert!(ideal.weighted_speedup(&base) > 1.15);
+}
+
+#[test]
+fn static_cram_overheads_are_visible_and_bounded() {
+    // needs steady state: the one-time pack cost (invalidates) amortizes
+    // away only once the sweep has been re-traversed a few times
+    let r = run("libq", Design::Implicit, 2_000_000);
+    // steady state: packed clean re-evictions are free, so overheads stay
+    // a small fraction of traffic
+    let total = r.bw.total() as f64;
+    assert!(r.bw.second_reads > 0, "some LLP mispredictions exist");
+    assert!(
+        (r.bw.invalidates as f64) < 0.25 * total,
+        "invalidate churn bounded: {} of {}",
+        r.bw.invalidates,
+        total
+    );
+}
+
+#[test]
+fn llp_beats_metadata_cache_on_scattered_workloads() {
+    // Fig. 14's claim: tiny LLP >> 32KB metadata cache for low-locality
+    // workloads
+    let implicit = run("xz", Design::Implicit, 500_000);
+    let explicit = run("xz", Design::Explicit { row_opt: false }, 500_000);
+    assert!(implicit.llp_accuracy > 0.9, "llp {}", implicit.llp_accuracy);
+    assert!(
+        implicit.llp_accuracy > explicit.meta_hit_rate.unwrap() + 0.1,
+        "LLP {} must beat meta$ {}",
+        implicit.llp_accuracy,
+        explicit.meta_hit_rate.unwrap()
+    );
+}
+
+#[test]
+fn explicit_metadata_traffic_tracks_miss_rate() {
+    let r = run("xz", Design::Explicit { row_opt: false }, 500_000);
+    let expected = r.bw.demand_reads as f64 * (1.0 - r.meta_hit_rate.unwrap());
+    let got = r.bw.meta_reads as f64;
+    // read-side meta misses dominate meta traffic; write-side update
+    // misses add some more — so got >= read-side expectation, same order
+    assert!(
+        got >= 0.5 * expected && got <= 3.0 * expected + 1000.0,
+        "meta reads {got} vs expected ~{expected}"
+    );
+}
+
+#[test]
+fn dynamic_never_much_worse_than_baseline() {
+    for wl in ["cc_twi", "pr_twi", "bc_twi", "xz", "mcf17"] {
+        let base = run(wl, Design::Uncompressed, 500_000);
+        let d = run(wl, Design::Dynamic, 500_000);
+        let s = d.weighted_speedup(&base);
+        assert!(s > 0.96, "{wl}: dynamic speedup {s} below protection bound");
+    }
+}
+
+#[test]
+fn dynamic_captures_compressible_upside() {
+    // steady state needed: dynamic's counters settle during warmup and the
+    // packing transient must be amortized (see EXPERIMENTS.md on scaling)
+    let base = run("libq", Design::Uncompressed, 2_000_000);
+    let stat = run("libq", Design::Implicit, 2_000_000);
+    let dynr = run("libq", Design::Dynamic, 2_000_000);
+    let s_stat = stat.weighted_speedup(&base);
+    let s_dyn = dynr.weighted_speedup(&base);
+    assert!(s_stat > 1.2);
+    assert!(
+        s_dyn > 1.0 + (s_stat - 1.0) * 0.3,
+        "dynamic ({s_dyn}) must capture a good share of static ({s_stat})"
+    );
+}
+
+#[test]
+fn next_line_prefetch_costs_bandwidth() {
+    let base = run("cc_twi", Design::Uncompressed, 300_000);
+    let pf = run("cc_twi", Design::NextLinePrefetch, 300_000);
+    assert!(pf.bw.prefetch_reads > 0);
+    assert!(
+        pf.weighted_speedup(&base) < 1.0,
+        "prefetch must hurt scattered graph workloads (Table V)"
+    );
+}
+
+#[test]
+fn channel_scaling_sane() {
+    // more channels => higher baseline performance
+    let p = by_name("milc").unwrap();
+    let mk = |ch| {
+        simulate(
+            &p,
+            &SimConfig::default().with_insts(400_000).with_channels(ch),
+        )
+    };
+    let c1 = mk(1);
+    let c4 = mk(4);
+    assert!(
+        c4.total_ipc() > c1.total_ipc() * 1.2,
+        "4ch {} vs 1ch {}",
+        c4.total_ipc(),
+        c1.total_ipc()
+    );
+}
+
+#[test]
+fn mix_workloads_have_per_core_behaviour() {
+    let r = run("mix1", Design::Dynamic, 400_000);
+    // mix1 = libq/mcf17/fotonik/xz x2: per-core IPCs must differ
+    // under heavy shared-bandwidth contention per-core IPCs converge, but
+    // heterogeneity must still be visible
+    let max = r.ipc.iter().cloned().fold(0.0f64, f64::max);
+    let min = r.ipc.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max / min > 1.03, "heterogeneous mix: ipc {:?}", r.ipc);
+}
+
+#[test]
+fn determinism_across_identical_runs() {
+    let a = run("soplex", Design::Dynamic, 300_000);
+    let b = run("soplex", Design::Dynamic, 300_000);
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.bw.total(), b.bw.total());
+    assert_eq!(a.llc_misses, b.llc_misses);
+}
+
+#[test]
+fn private_caches_filter_llc_traffic() {
+    let p = by_name("gcc06").unwrap();
+    let mut cfg = SimConfig::default().with_insts(300_000);
+    let flat = simulate(&p, &cfg);
+    cfg.private_caches = true;
+    let filtered = simulate(&p, &cfg);
+    // L1/L2 absorb part of the stream: fewer LLC accesses reach memory
+    assert!(
+        filtered.llc_hits + filtered.llc_misses < flat.llc_hits + flat.llc_misses,
+        "private caches must filter: {} vs {}",
+        filtered.llc_hits + filtered.llc_misses,
+        flat.llc_hits + flat.llc_misses
+    );
+}
+
+#[test]
+fn cpack_algo_set_runs_end_to_end() {
+    let p = by_name("omnet17").unwrap();
+    let mut cfg = SimConfig::default()
+        .with_design(Design::Dynamic)
+        .with_insts(300_000);
+    cfg.algo = cram::compress::AlgoSet::FpcBdiCpack;
+    let r = simulate(&p, &cfg);
+    assert!(r.cycles > 0);
+}

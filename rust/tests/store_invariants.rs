@@ -1,0 +1,198 @@
+//! Property tests over the byte-accurate compressed store — the paper's
+//! correctness argument as machine-checked invariants (DESIGN.md §7):
+//!
+//! (a) decompress(compress(x)) == x for every compressible line;
+//! (b) any physical line whose tail matches a marker is either genuinely
+//!     compressed or LIT-tracked (inverted) — never misinterpreted;
+//! (c) reads return the latest written value through arbitrary layout
+//!     transitions and arbitrary (mis)predictions;
+//! (d) a read always completes within the restricted-placement walk
+//!     (<= 3 accesses);
+//! (e) stale locations always classify as Invalid, never as data.
+
+use std::collections::HashMap;
+
+use cram::compress::hybrid;
+use cram::cram::group::{possible_locations, Csi};
+use cram::cram::marker::LineKind;
+use cram::cram::store::CompressedStore;
+use cram::mem::{group_base, CacheLine};
+use cram::util::rng::Rng;
+use cram::util::testkit::forall;
+use cram::workloads::ValueModel;
+
+/// A line from a random workload-like value regime.
+fn random_line(rng: &mut Rng, model: &ValueModel) -> CacheLine {
+    model.gen_line(rng.below(1 << 20), rng.next_u32() % 8)
+}
+
+fn mixed_model(seed: u64) -> ValueModel {
+    ValueModel::new([1.0, 1.0, 1.0, 1.0, 1.0], seed)
+}
+
+#[test]
+fn a_compress_roundtrip_over_value_models() {
+    forall("roundtrip", 2000, |rng| {
+        let model = mixed_model(rng.next_u64());
+        let line = random_line(rng, &model);
+        match hybrid::encode(&line) {
+            Some(c) => {
+                assert_eq!(c.size(), hybrid::compressed_size(&line));
+                assert_eq!(hybrid::decode(&c), line);
+            }
+            None => assert_eq!(hybrid::compressed_size(&line), 64),
+        }
+    });
+}
+
+/// Drive a store through a random schedule of group writes and verify all
+/// invariants continuously against a shadow model.
+#[test]
+fn bcde_store_invariants_under_random_schedules() {
+    forall("store invariants", 48, |rng| {
+        let model = mixed_model(rng.next_u64());
+        let mut store = CompressedStore::new(rng.next_u64());
+        let mut shadow: HashMap<u64, CacheLine> = HashMap::new();
+        let n_groups = 6u64;
+
+        for _step in 0..40 {
+            // random group write
+            let base = rng.below(n_groups) * 4;
+            let lines: [CacheLine; 4] = core::array::from_fn(|_| random_line(rng, &model));
+            store.write_group_auto(base, &lines);
+            for (i, l) in lines.iter().enumerate() {
+                shadow.insert(base + i as u64, *l);
+            }
+
+            // (c)+(d): read a few random lines with random predictions
+            for _ in 0..6 {
+                let la = rng.below(n_groups * 4);
+                let Some(want) = shadow.get(&la).copied() else { continue };
+                let slot = (la - group_base(la)) as u8;
+                let order = possible_locations(slot);
+                let guess = group_base(la) + order[rng.below(order.len() as u64) as usize] as u64;
+                let (got, accesses, _) = store.read_line(la, guess);
+                assert_eq!(got, want, "latest write must win (line {la})");
+                assert!(
+                    accesses as usize <= order.len() + 1,
+                    "walk bounded by placement order"
+                );
+            }
+
+            // (b)+(e): audit every materialized physical line
+            let groups: Vec<(u64, Csi)> = store.groups().map(|(g, c)| (*g, *c)).collect();
+            for (gbase, csi) in groups {
+                for loc_slot in 0..4u8 {
+                    let loc = gbase + loc_slot as u64;
+                    let phys = store.read_phys(loc);
+                    match store.markers.classify(loc, &phys) {
+                        LineKind::Compressed2 | LineKind::Compressed4 => {
+                            assert!(
+                                csi.is_compressed_at(loc_slot),
+                                "marker without packed data at {loc} (csi {csi:?})"
+                            );
+                        }
+                        LineKind::Invalid => {
+                            assert!(csi.is_stale(loc_slot), "IL on a live slot at {loc}");
+                        }
+                        LineKind::NeedsLitCheck => {
+                            // must resolve via LIT to an uncompressed line
+                            assert_eq!(csi.colocated(loc_slot).len(), 1);
+                        }
+                        LineKind::Uncompressed => {
+                            assert_eq!(
+                                csi.colocated(loc_slot).len(),
+                                1,
+                                "raw data on a non-single slot at {loc}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn c_interleaved_partial_writes_preserve_other_half() {
+    forall("partial writes", 200, |rng| {
+        let model = mixed_model(rng.next_u64());
+        let mut store = CompressedStore::new(rng.next_u64());
+        // write a full group, then overwrite it repeatedly
+        let mut current: [CacheLine; 4] = core::array::from_fn(|_| random_line(rng, &model));
+        store.write_group_auto(0, &current);
+        for _ in 0..8 {
+            let fresh: [CacheLine; 4] = core::array::from_fn(|_| random_line(rng, &model));
+            store.write_group_auto(0, &fresh);
+            current = fresh;
+            for (i, want) in current.iter().enumerate() {
+                let (got, _, _) = store.read_line(i as u64, i as u64);
+                assert_eq!(got, *want);
+            }
+        }
+    });
+}
+
+#[test]
+fn b_forged_markers_never_corrupt_data() {
+    forall("forged markers", 300, |rng| {
+        let mut store = CompressedStore::new(rng.next_u64());
+        let base = rng.below(64) * 4;
+        // adversarial lines: tails forged to every marker of their slot
+        let lines: [CacheLine; 4] = core::array::from_fn(|s| {
+            let loc = base + s as u64;
+            let mut l =
+                CacheLine::from_words(core::array::from_fn(|_| rng.next_u32() | 0x0100_0001));
+            let tail = match rng.below(3) {
+                0 => store.markers.marker2(loc),
+                1 => store.markers.marker4(loc),
+                _ => !store.markers.marker2(loc),
+            };
+            l.set_tail_u32(tail);
+            l
+        });
+        store.write_group_auto(base, &lines);
+        for (i, want) in lines.iter().enumerate() {
+            let la = base + i as u64;
+            let (got, _, _) = store.read_line(la, la);
+            assert_eq!(got, *want, "forged tail must not corrupt line {la}");
+        }
+    });
+}
+
+#[test]
+fn e_rekey_preserves_all_data() {
+    forall("rekey preserves", 60, |rng| {
+        let model = mixed_model(rng.next_u64());
+        let mut store = CompressedStore::new(rng.next_u64());
+        let mut shadow: HashMap<u64, CacheLine> = HashMap::new();
+        for g in 0..8u64 {
+            let lines: [CacheLine; 4] = core::array::from_fn(|_| random_line(rng, &model));
+            store.write_group_auto(g * 4, &lines);
+            for (i, l) in lines.iter().enumerate() {
+                shadow.insert(g * 4 + i as u64, *l);
+            }
+        }
+        // forge enough collisions to overflow a tiny LIT and force rekey
+        store.lit = cram::cram::lit::LineInversionTable::new(2, false);
+        for k in 0..6u64 {
+            let base = (8 + k) * 4;
+            let lines: [CacheLine; 4] = core::array::from_fn(|s| {
+                let loc = base + s as u64;
+                let mut l =
+                    CacheLine::from_words(core::array::from_fn(|_| rng.next_u32() | 0x0100_0001));
+                l.set_tail_u32(store.markers.marker2(loc));
+                l
+            });
+            store.write_group_auto(base, &lines);
+            for (i, l) in lines.iter().enumerate() {
+                shadow.insert(base + i as u64, *l);
+            }
+        }
+        // every line still reads back correctly, regardless of rekeys
+        for (la, want) in &shadow {
+            let (got, _, _) = store.read_line(*la, *la);
+            assert_eq!(got, *want, "line {la} after {} rekey(s)", store.markers.rekey_count);
+        }
+    });
+}
