@@ -1,0 +1,7 @@
+# Make `compile.*` importable when pytest runs from the repo root
+# (python -m pytest python/tests -q), matching the documented
+# `cd python && python -m compile.aot` layout.
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

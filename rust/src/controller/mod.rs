@@ -14,6 +14,7 @@
 //! | `Implicit` | Fig. 12/15/16 "Static-CRAM": implicit metadata + LLP |
 //! | `Dynamic` | Fig. 16/18/19: Static-CRAM + set-sampled cost/benefit gating |
 //! | `NextLinePrefetch` | Table V baseline |
+//! | `Tiered` | Figure T1: near DDR + far CXL expander (`tier` module) |
 
 use std::collections::HashMap;
 
@@ -24,6 +25,7 @@ use crate::cram::metadata::{MetaAccess, MetadataStore};
 use crate::dram::{DramSim, ReqKind};
 use crate::mem::{group_base, page_of_line};
 use crate::stats::Bandwidth;
+use crate::tier::{TierConfig, TieredMemory};
 use crate::workloads::SizeOracle;
 
 /// Which memory-system design the controller implements.
@@ -35,6 +37,9 @@ pub enum Design {
     Implicit,
     Dynamic,
     NextLinePrefetch,
+    /// Two-tier memory: near DDR (uncompressed) + far CXL expander,
+    /// optionally CRAM-compressed on the device (see [`crate::tier`]).
+    Tiered { far_compressed: bool },
 }
 
 impl Design {
@@ -47,11 +52,18 @@ impl Design {
             Design::Implicit => "cram-static",
             Design::Dynamic => "cram-dynamic",
             Design::NextLinePrefetch => "nextline-prefetch",
+            Design::Tiered { far_compressed: false } => "tiered-uncomp",
+            Design::Tiered { far_compressed: true } => "tiered-cram",
         }
     }
 
     pub fn compresses(&self) -> bool {
-        !matches!(self, Design::Uncompressed | Design::NextLinePrefetch)
+        // Tiered designs never pack on the host side; the far expander
+        // runs its own engine (see `tier::TieredMemory`).
+        !matches!(
+            self,
+            Design::Uncompressed | Design::NextLinePrefetch | Design::Tiered { .. }
+        )
     }
 }
 
@@ -81,6 +93,8 @@ pub struct MemoryController {
     pub llp: LineLocationPredictor,
     pub meta: Option<MetadataStore>,
     pub dynamic: Option<DynamicCram>,
+    /// The two-tier memory front-end (tiered designs only).
+    pub tier: Option<TieredMemory>,
     pub bw: Bandwidth,
     pub prefetch_installed: u64,
     pub prefetch_used: u64,
@@ -102,6 +116,26 @@ impl MemoryController {
         llp_entries: usize,
         meta_cache_bytes: usize,
     ) -> Self {
+        Self::with_tier_config(
+            design,
+            cores,
+            meta_region_base,
+            llp_entries,
+            meta_cache_bytes,
+            TierConfig::default(),
+        )
+    }
+
+    /// Full constructor: ablation knobs plus the tiered-memory
+    /// configuration (used when `design` is [`Design::Tiered`]).
+    pub fn with_tier_config(
+        design: Design,
+        cores: usize,
+        meta_region_base: u64,
+        llp_entries: usize,
+        meta_cache_bytes: usize,
+        tier_cfg: TierConfig,
+    ) -> Self {
         let meta = match design {
             Design::Explicit { row_opt } => {
                 let mut m = MetadataStore::new(meta_cache_bytes, 8, meta_region_base);
@@ -114,8 +148,15 @@ impl MemoryController {
         // simulation slices (the paper sizes 12 bits for 1B-instruction
         // slices; threshold must be crossable within a few array sweeps).
         let dynamic = matches!(design, Design::Dynamic).then(|| DynamicCram::with_bits(cores, 6));
+        let tier = match design {
+            Design::Tiered { far_compressed } => {
+                Some(TieredMemory::new(tier_cfg, far_compressed))
+            }
+            _ => None,
+        };
         Self {
             design,
+            tier,
             mem_csi: HashMap::new(),
             llp: LineLocationPredictor::new(llp_entries, 0xD1CE),
             meta,
@@ -152,6 +193,15 @@ impl MemoryController {
                     done,
                     installs: vec![Install { line_addr: line, level: 0, prefetch: false }],
                 }
+            }
+            Design::Tiered { .. } => {
+                // the tier front-end routes near/far, runs the migration
+                // policy, and (compressed far) co-fetches packed lines
+                let tier = self.tier.as_mut().expect("tiered design has a tier");
+                let out = tier.read(line, now, dram, &mut self.bw);
+                self.prefetch_installed +=
+                    out.installs.iter().filter(|i| i.prefetch).count() as u64;
+                out
             }
             Design::NextLinePrefetch => {
                 self.bw.demand_reads += 1;
@@ -296,17 +346,13 @@ impl MemoryController {
         if gang.is_empty() {
             return;
         }
-        let base = group_base(gang[0].line_addr);
-        debug_assert!(gang.iter().all(|e| group_base(e.line_addr) == base));
-        let old = self.csi_of(base);
-
-        let mut present = [false; 4];
-        let mut dirty = [false; 4];
-        for e in gang {
-            let s = (e.line_addr - base) as usize;
-            present[s] = true;
-            dirty[s] |= e.dirty;
+        if matches!(self.design, Design::Tiered { .. }) {
+            let tier = self.tier.as_mut().expect("tiered design has a tier");
+            tier.writeback(gang, now, dram, oracle, &mut self.bw);
+            return;
         }
+        let (base, present, dirty) = gang_masks(gang);
+        let old = self.csi_of(base);
 
         if !self.design.compresses() {
             // Baselines: dirty lines write back raw; clean lines drop.
@@ -364,33 +410,13 @@ impl MemoryController {
         // Decide the new layout under residency constraints (can only pack
         // lines we actually hold — ganged eviction guarantees packed peers
         // travel together, so halves are never split).
-        let all4 = present.iter().all(|&p| p);
         let ab_touched = present[0] || present[1];
         let cd_touched = present[2] || present[3];
         let dirty_ab = dirty[0] || dirty[1];
         let dirty_cd = dirty[2] || dirty[3];
 
         let new = if compress {
-            let quad_ok = all4 && sizes.iter().sum::<u32>() <= crate::compress::PACK_BUDGET;
-            let pair_ab_ok =
-                present[0] && present[1] && sizes[0] + sizes[1] <= crate::compress::PACK_BUDGET;
-            let pair_cd_ok =
-                present[2] && present[3] && sizes[2] + sizes[3] <= crate::compress::PACK_BUDGET;
-            // Halves with no resident members keep their old arrangement.
-            let old_ab_packed = matches!(old, Csi::PairAb | Csi::PairBoth | Csi::Quad);
-            let old_cd_packed = matches!(old, Csi::PairCd | Csi::PairBoth | Csi::Quad);
-            let new_ab = if ab_touched { pair_ab_ok } else { old_ab_packed };
-            let new_cd = if cd_touched { pair_cd_ok } else { old_cd_packed };
-            if quad_ok {
-                Csi::Quad
-            } else {
-                match (new_ab, new_cd) {
-                    (true, true) => Csi::PairBoth,
-                    (true, false) => Csi::PairAb,
-                    (false, true) => Csi::PairCd,
-                    (false, false) => Csi::Uncompressed,
-                }
-            }
+            decide_packed_layout(old, present, sizes)
         } else {
             // Compression disabled (Dynamic-CRAM): stop *creating* packed
             // data but leave existing packed data alone — clean evictions
@@ -499,18 +525,18 @@ impl MemoryController {
         // (the controller knows the prior level from the LLC tag bits).
         if new != old {
             if let Some(meta) = self.meta.as_mut() {
-            let row_opt = meta.row_optimized;
-            let meta_addr = meta.meta_addr_for(base);
-            let before_wb = meta.writebacks;
-            let how = meta.update(base, new);
-            if how == MetaAccess::Miss {
-                self.bw.meta_reads += 1;
-                dram.access(meta_addr, ReqKind::MetaRead, now, row_opt);
-            }
-            if meta.writebacks > before_wb {
-                self.bw.meta_writes += 1;
-                dram.access(meta_addr, ReqKind::MetaWrite, now, row_opt);
-            }
+                let row_opt = meta.row_optimized;
+                let meta_addr = meta.meta_addr_for(base);
+                let before_wb = meta.writebacks;
+                let how = meta.update(base, new);
+                if how == MetaAccess::Miss {
+                    self.bw.meta_reads += 1;
+                    dram.access(meta_addr, ReqKind::MetaRead, now, row_opt);
+                }
+                if meta.writebacks > before_wb {
+                    self.bw.meta_writes += 1;
+                    dram.access(meta_addr, ReqKind::MetaWrite, now, row_opt);
+                }
             }
         }
 
@@ -567,9 +593,60 @@ fn core_of(gang: &[crate::cache::Evicted], base: u64, loc: u8, fallback: usize) 
         .unwrap_or(fallback)
 }
 
+/// Gang preamble shared by the host controller and the far-tier engine:
+/// the group base plus per-slot present/dirty masks.  Panics on an empty
+/// gang (both callers check first).
+pub(crate) fn gang_masks(gang: &[crate::cache::Evicted]) -> (u64, [bool; 4], [bool; 4]) {
+    let base = group_base(gang[0].line_addr);
+    debug_assert!(gang.iter().all(|e| group_base(e.line_addr) == base));
+    let mut present = [false; 4];
+    let mut dirty = [false; 4];
+    for e in gang {
+        let s = (e.line_addr - base) as usize;
+        present[s] = true;
+        dirty[s] |= e.dirty;
+    }
+    (base, present, dirty)
+}
+
+/// The packing decision under residency constraints: pack whatever fits
+/// among resident lines; halves with no resident members keep their old
+/// arrangement (ganged eviction guarantees packed peers travel together,
+/// so halves are never split).  Shared by the host-side controller and
+/// the far-tier CRAM engine ([`crate::tier::memory`]).
+pub(crate) fn decide_packed_layout(old: Csi, present: [bool; 4], sizes: [u32; 4]) -> Csi {
+    let budget = crate::compress::PACK_BUDGET;
+    let all4 = present.iter().all(|&p| p);
+    let quad_ok = all4 && sizes.iter().sum::<u32>() <= budget;
+    let pair_ab_ok = present[0] && present[1] && sizes[0] + sizes[1] <= budget;
+    let pair_cd_ok = present[2] && present[3] && sizes[2] + sizes[3] <= budget;
+    let old_ab_packed = matches!(old, Csi::PairAb | Csi::PairBoth | Csi::Quad);
+    let old_cd_packed = matches!(old, Csi::PairCd | Csi::PairBoth | Csi::Quad);
+    let new_ab = if present[0] || present[1] {
+        pair_ab_ok
+    } else {
+        old_ab_packed
+    };
+    let new_cd = if present[2] || present[3] {
+        pair_cd_ok
+    } else {
+        old_cd_packed
+    };
+    if quad_ok {
+        Csi::Quad
+    } else {
+        match (new_ab, new_cd) {
+            (true, true) => Csi::PairBoth,
+            (true, false) => Csi::PairAb,
+            (false, true) => Csi::PairCd,
+            (false, false) => Csi::Uncompressed,
+        }
+    }
+}
+
 /// Is the half containing physical slot `loc` laid out identically in
-/// `old` and `new`?
-fn layout_half_same(old: Csi, new: Csi, loc: u8) -> bool {
+/// `old` and `new`?  (Shared with the far-tier CRAM engine.)
+pub(crate) fn layout_half_same(old: Csi, new: Csi, loc: u8) -> bool {
     let half = loc / 2;
     let packed = |c: Csi| match (c, half) {
         (Csi::Quad, _) => 2u8,
@@ -812,6 +889,40 @@ mod tests {
         let mut rnd = incompressible_oracle();
         let (p64, p60, q60) = MemoryController::pair_quad_compressibility(&mut rnd, 512);
         assert_eq!((p64, p60, q60), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn tiered_controller_routes_and_accounts_per_tier() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Tiered { far_compressed: true });
+        // find one near and one far group under the default 50/50 split
+        let tier = mc.tier.as_ref().unwrap();
+        let near_line = (0..100_000u64).find(|&l| !tier.is_far_line(l)).unwrap();
+        let far_line = (0..100_000u64).find(|&l| tier.is_far_line(l)).unwrap();
+        let rn = mc.read(near_line, 0, 0, &mut dram, &mut oracle, false);
+        let rf = mc.read(far_line, 0, 0, &mut dram, &mut oracle, false);
+        assert_eq!(rn.installs.len(), 1, "near tier is uncompressed");
+        assert!(rf.done > rn.done, "far read pays the link");
+        // pack a far group, then a read co-fetches it
+        mc.writeback(
+            &gang(group_base(far_line), [true; 4]),
+            100,
+            &mut dram,
+            &mut oracle,
+            false,
+        );
+        let r = mc.read(group_base(far_line) + 1, 0, 1000, &mut dram, &mut oracle, false);
+        assert_eq!(r.installs.len(), 4, "packed far block co-fetches the group");
+        assert!(mc.prefetch_installed >= 3);
+        // per-tier counters account for every access the controller charged
+        let stats = mc.tier.as_ref().unwrap().snapshot();
+        assert_eq!(stats.total_accesses(), mc.bw.total());
+    }
+
+    #[test]
+    fn tiered_names_resolve_both_ways() {
+        assert_eq!(Design::Tiered { far_compressed: false }.name(), "tiered-uncomp");
+        assert_eq!(Design::Tiered { far_compressed: true }.name(), "tiered-cram");
+        assert!(!Design::Tiered { far_compressed: true }.compresses());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Figure/table harnesses: format each paper exhibit from cached results.
 
 use crate::controller::{Design, MemoryController};
-use crate::coordinator::runner::ResultsDb;
+use crate::coordinator::runner::{ResultsDb, T1_FAR_RATIO};
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::lit::LineInversionTable;
 use crate::cram::llp::LineLocationPredictor;
@@ -9,7 +9,7 @@ use crate::cram::marker::MarkerEngine;
 use crate::energy::{energy_of, EnergyConfig};
 use crate::stats::geomean_speedup;
 use crate::util::pct;
-use crate::workloads::profiles::{all27, all64, Suite};
+use crate::workloads::profiles::{all27, all64, far_pressure, Suite};
 use crate::workloads::SizeOracle;
 
 /// A formatted report for one figure or table.
@@ -322,6 +322,72 @@ pub fn figure20(db: &ResultsDb) -> Report {
     }
 }
 
+/// Figure T1: the tiered-memory evaluation — uncompressed vs
+/// CRAM-compressed far tier on the far-memory-pressure workloads.
+///
+/// Columns: each tiered design's weighted speedup vs the flat-DDR
+/// baseline (context: what capacity expansion costs), the speedup of the
+/// CRAM far tier over the uncompressed far tier (the headline), the
+/// fraction of traffic served far, and the link data flits per far
+/// access (compression pushes this below 1 by co-fetching packed lines).
+pub fn figure_t1(db: &ResultsDb) -> Report {
+    let raw = Design::Tiered { far_compressed: false };
+    let cram = Design::Tiered { far_compressed: true };
+    let mut body = format!(
+        "{:<12} {:>12} {:>12} {:>14} {:>9} {:>11}\n",
+        "workload", "far-raw", "far-cram", "cram-vs-raw", "far-frac", "flits/far"
+    );
+    let mut gains = Vec::new();
+    for w in far_pressure() {
+        let (Some(base), Some(r_raw), Some(r_cram)) = (
+            db.get(w.name, Design::Uncompressed),
+            db.get(w.name, raw),
+            db.get(w.name, cram),
+        ) else {
+            continue;
+        };
+        let s_raw = r_raw.weighted_speedup(base);
+        let s_cram = r_cram.weighted_speedup(base);
+        let gain = r_cram.weighted_speedup(r_raw);
+        gains.push(gain);
+        let t = r_cram.tier.as_ref().expect("tiered run records tier stats");
+        debug_assert_eq!(t.total_accesses(), r_cram.bw.total());
+        let far_frac = t.far_frac();
+        // demand rx flits per far line delivered: each far demand read is
+        // exactly one completion flit, so packing (extra lines per flit)
+        // pushes this below 1.  Migration flits are deliberately excluded.
+        let delivered = t.far.demand_reads + t.far_prefetch_installs;
+        let flits_per_far = if delivered == 0 {
+            0.0
+        } else {
+            t.far.demand_reads as f64 / delivered as f64
+        };
+        body.push_str(&format!(
+            "{:<12} {:>12} {:>12} {:>14} {:>8.1}% {:>11.2}\n",
+            w.name,
+            pct(s_raw),
+            pct(s_cram),
+            pct(gain),
+            100.0 * far_frac,
+            flits_per_far,
+        ));
+    }
+    body.push_str(&format!(
+        "{:<12} {:>12} {:>12} {:>14}\n",
+        "GEOMEAN", "", "", pct(geomean_speedup(&gains))
+    ));
+    body.push_str(&format!(
+        "(far-raw / far-cram: speedup vs flat DDR; cram-vs-raw: CRAM far tier \
+         vs uncompressed far tier; {:.0}% of capacity behind the link)\n",
+        T1_FAR_RATIO * 100.0
+    ));
+    Report {
+        id: "figt1".into(),
+        title: "Tiered memory: CRAM-compressed vs uncompressed CXL far tier".into(),
+        body,
+    }
+}
+
 /// Table II: measured workload characteristics vs calibration targets.
 pub fn table2(db: &ResultsDb) -> Report {
     let mut body = format!(
@@ -448,16 +514,18 @@ pub fn table5(db: &ResultsDb) -> Report {
     }
 }
 
-/// All figure/table ids, in paper order.
-pub const ALL_IDS: [&str; 14] = [
+/// All figure/table ids, in paper order (figt1 is this repo's tiered
+/// extension, not a paper exhibit).
+pub const ALL_IDS: [&str; 15] = [
     "fig3", "fig4", "fig7", "fig8", "fig12", "fig14", "fig15", "fig16", "fig18",
-    "fig19", "fig20", "table2", "table3", "table4",
+    "fig19", "fig20", "figt1", "table2", "table3", "table4",
 ];
 
 /// Produce one report by id (None for an unknown id).
 pub fn report(db: &ResultsDb, id: &str) -> Option<Report> {
     Some(match id {
         "fig3" => figure3(db),
+        "figt1" => figure_t1(db),
         "fig4" => figure4(),
         "fig7" => figure7(db),
         "fig8" => figure8(db),
@@ -500,6 +568,20 @@ mod tests {
         let r = table3();
         assert!(r.body.contains("TOTAL"), "{}", r.body);
         assert!(r.body.contains("276 Bytes"), "total must be 276: {}", r.body);
+    }
+
+    #[test]
+    fn figure_t1_reports_tier_breakdown() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 30_000,
+            seed: 5,
+            threads: 4,
+        });
+        db.run_tiered_t1(false);
+        let r = figure_t1(&db);
+        assert!(r.body.contains("cap_stream"), "{}", r.body);
+        assert!(r.body.contains("GEOMEAN"));
+        assert!(report(&db, "figt1").is_some());
     }
 
     #[test]

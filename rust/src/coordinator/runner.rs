@@ -6,7 +6,7 @@ use std::sync::Mutex;
 use crate::controller::Design;
 use crate::sim::{simulate, SimConfig};
 use crate::stats::SimResult;
-use crate::workloads::profiles::{all27, all64, WorkloadProfile};
+use crate::workloads::profiles::{all27, all64, far_pressure, WorkloadProfile};
 
 /// Key identifying one simulation run.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -14,6 +14,14 @@ pub struct RunKey {
     pub workload: String,
     pub design: &'static str,
     pub channels: usize,
+    /// Far-tier capacity split in thousandths (0 for flat designs), so
+    /// tiered runs at different ratios never collide in the cache.
+    pub far_mill: u16,
+}
+
+/// Far ratio → cache-key thousandths.
+fn far_mill_of(far_ratio: Option<f64>) -> u16 {
+    far_ratio.map(|r| (r * 1000.0).round() as u16).unwrap_or(0)
 }
 
 /// What to simulate.
@@ -42,6 +50,21 @@ struct Job {
     profile: WorkloadProfile,
     design: Design,
     channels: usize,
+    /// Far-tier capacity fraction for tiered designs (None = flat).
+    far_ratio: Option<f64>,
+}
+
+impl Job {
+    /// Tiered designs always simulate (and cache) at the Figure T1 split,
+    /// matching the `far_mill` that [`ResultsDb::get_ch`] looks up — so a
+    /// tiered job enqueued through any matrix path stays reachable.
+    fn new(profile: WorkloadProfile, design: Design, channels: usize) -> Self {
+        let far_ratio = match design {
+            Design::Tiered { .. } => Some(T1_FAR_RATIO),
+            _ => None,
+        };
+        Self { profile, design, channels, far_ratio }
+    }
 }
 
 /// The designs every per-workload figure compares.
@@ -54,6 +77,17 @@ pub const CORE_DESIGNS: [Design; 7] = [
     Design::Dynamic,
     Design::NextLinePrefetch,
 ];
+
+/// The tiered-memory designs (Figure T1).
+pub const TIERED_DESIGNS: [Design; 2] = [
+    Design::Tiered { far_compressed: false },
+    Design::Tiered { far_compressed: true },
+];
+
+/// Far-tier capacity fraction used by the Figure T1 evaluation: three
+/// quarters of capacity behind the link, i.e. a deployment that bought
+/// expansion because it needed it.
+pub const T1_FAR_RATIO: f64 = 0.75;
 
 /// Results cache for the full evaluation.
 pub struct ResultsDb {
@@ -74,7 +108,7 @@ impl ResultsDb {
         let mut jobs: Vec<Job> = Vec::new();
         for w in all27() {
             for d in CORE_DESIGNS {
-                jobs.push(Job { profile: w.clone(), design: d, channels: 2 });
+                jobs.push(Job::new(w.clone(), d, 2));
             }
         }
         let names27: std::collections::HashSet<_> =
@@ -82,18 +116,37 @@ impl ResultsDb {
         for w in all64() {
             if !names27.contains(w.name) {
                 for d in [Design::Uncompressed, Design::Dynamic] {
-                    jobs.push(Job { profile: w.clone(), design: d, channels: 2 });
+                    jobs.push(Job::new(w.clone(), d, 2));
                 }
             }
         }
         for w in all27() {
             for ch in [1usize, 4] {
                 for d in [Design::Uncompressed, Design::Dynamic] {
-                    jobs.push(Job { profile: w.clone(), design: d, channels: ch });
+                    jobs.push(Job::new(w.clone(), d, ch));
                 }
             }
         }
+        jobs.extend(Self::t1_jobs());
         self.run_jobs(jobs, progress);
+    }
+
+    /// The Figure T1 matrix: far-memory-pressure workloads × {flat DDR,
+    /// uncompressed far tier, CRAM-compressed far tier} at the T1 split.
+    fn t1_jobs() -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for w in far_pressure() {
+            jobs.push(Job::new(w.clone(), Design::Uncompressed, 2));
+            for d in TIERED_DESIGNS {
+                jobs.push(Job::new(w.clone(), d, 2));
+            }
+        }
+        jobs
+    }
+
+    /// Run the Figure T1 matrix only.
+    pub fn run_tiered_t1(&mut self, progress: bool) {
+        self.run_jobs(Self::t1_jobs(), progress);
     }
 
     /// Smaller matrix: the 27 workloads × the designs needed by a single
@@ -103,7 +156,7 @@ impl ResultsDb {
         let mut jobs = Vec::new();
         for w in set {
             for &d in designs {
-                jobs.push(Job { profile: w.clone(), design: d, channels: 2 });
+                jobs.push(Job::new(w.clone(), d, 2));
             }
         }
         self.run_jobs(jobs, progress);
@@ -114,7 +167,7 @@ impl ResultsDb {
         for w in all27() {
             for ch in [1usize, 2, 4] {
                 for d in [Design::Uncompressed, Design::Dynamic] {
-                    jobs.push(Job { profile: w.clone(), design: d, channels: ch });
+                    jobs.push(Job::new(w.clone(), d, ch));
                 }
             }
         }
@@ -130,6 +183,7 @@ impl ResultsDb {
                     workload: j.profile.name.to_string(),
                     design: j.design.name(),
                     channels: j.channels,
+                    far_mill: far_mill_of(j.far_ratio),
                 })
             })
             .collect();
@@ -176,6 +230,9 @@ impl ResultsDb {
                     }
                     .with_insts(insts)
                     .with_channels(job.channels);
+                    if let Some(r) = job.far_ratio {
+                        cfg = cfg.with_far_ratio(r);
+                    }
                     // 2x warmup: the LLC, memory layout AND the Dynamic
                     // gate must all reach steady state before measurement
                     // (the paper's 1B-inst slices warm up for free).
@@ -185,6 +242,7 @@ impl ResultsDb {
                         workload: job.profile.name.to_string(),
                         design: job.design.name(),
                         channels: job.channels,
+                        far_mill: far_mill_of(job.far_ratio),
                     };
                     out.lock().unwrap().push((key, r));
                     let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
@@ -205,10 +263,16 @@ impl ResultsDb {
     }
 
     pub fn get_ch(&self, workload: &str, design: Design, channels: usize) -> Option<&SimResult> {
+        // tiered runs are produced at the Figure T1 split; flat runs at 0
+        let far_mill = match design {
+            Design::Tiered { .. } => far_mill_of(Some(T1_FAR_RATIO)),
+            _ => 0,
+        };
         self.results.get(&RunKey {
             workload: workload.to_string(),
             design: design.name(),
             channels,
+            far_mill,
         })
     }
 
@@ -253,5 +317,23 @@ mod tests {
         let before = db.len();
         db.run_designs(&[Design::Uncompressed], false, false);
         assert_eq!(db.len(), before);
+    }
+
+    #[test]
+    fn t1_matrix_covers_far_pressure_set() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 30_000,
+            seed: 2,
+            threads: 4,
+        });
+        db.run_tiered_t1(false);
+        assert_eq!(db.len(), far_pressure().len() * 3);
+        for w in far_pressure() {
+            for d in TIERED_DESIGNS {
+                let r = db.get(w.name, d).expect("tiered result cached");
+                assert!(r.tier.is_some(), "{} {} has tier stats", w.name, d.name());
+            }
+            assert!(db.get(w.name, Design::Uncompressed).is_some());
+        }
     }
 }

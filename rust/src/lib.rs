@@ -27,13 +27,14 @@
 //! | [`cram`] | markers, LIT, LLP, group layout, compressed store, metadata, Dynamic-CRAM |
 //! | [`cache`] | set-associative cache hierarchy with ganged eviction |
 //! | [`dram`] | DDR4 channel/rank/bank timing model with FR-FCFS scheduling |
-//! | [`controller`] | memory-controller variants (the paper's designs + baselines) |
-//! | [`workloads`] | synthetic SPEC/GAP/MIX workload models (Table II calibrated) |
+//! | [`tier`] | tiered memory: CXL link model + near/far routing with hot-page migration and an expander-side CRAM engine (Figure T1) |
+//! | [`controller`] | memory-controller variants (the paper's designs + baselines + the `tiered-*` designs) |
+//! | [`workloads`] | synthetic SPEC/GAP/MIX workload models (Table II calibrated) + the far-memory-pressure set |
 //! | [`sim`] | multi-core trace-driven system simulator |
 //! | [`energy`] | DRAM energy / power / EDP model (Fig. 19) |
-//! | [`stats`] | counters, bandwidth breakdown, weighted speedup |
+//! | [`stats`] | counters, bandwidth breakdown, per-tier traffic, weighted speedup |
 //! | [`coordinator`] | experiment orchestrator: figure/table harnesses |
-//! | [`runtime`] | PJRT loader/executor for the AOT compression-analysis HLO |
+//! | [`runtime`] | loader/executor for the AOT compression-analysis artifact |
 //! | [`util`] | RNG, geomean, mini bench + property-test harnesses |
 
 pub mod cache;
@@ -47,5 +48,6 @@ pub mod mem;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod tier;
 pub mod util;
 pub mod workloads;

@@ -2,12 +2,18 @@
 //!
 //! ```text
 //! repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]
-//! repro figure <3|4|7|8|12|14|15|16|18|19|20> [--insts N]
+//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1> [--insts N]
 //! repro table <2|3|4|5> [--insts N]
 //! repro sim --workload W --design D [--insts N] [--channels C]
+//!           [--far-ratio R] [--trace FILE]
 //! repro analyze [--artifact PATH] [--workload W] [--groups N]
 //! repro list
 //! ```
+//!
+//! `figure t1` is the tiered-memory exhibit: uncompressed vs
+//! CRAM-compressed CXL far tier over the far-memory-pressure workloads.
+//! The `tiered-uncomp` / `tiered-cram` designs take `--far-ratio R`
+//! (fraction of capacity behind the link, default 0.5).
 //!
 //! (clap is unavailable in this offline environment; argument parsing is
 //! hand-rolled — see DESIGN.md §Substitutions.)
@@ -16,9 +22,9 @@ use std::collections::HashMap;
 
 use cram::controller::Design;
 use cram::coordinator::figures;
-use cram::coordinator::runner::{ResultsDb, RunPlan, CORE_DESIGNS};
+use cram::coordinator::runner::{ResultsDb, RunPlan, CORE_DESIGNS, TIERED_DESIGNS};
 use cram::sim::{simulate, SimConfig};
-use cram::workloads::profiles::{all64, by_name};
+use cram::workloads::profiles::{all64, by_name, far_pressure};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -56,7 +62,11 @@ fn plan_from(flags: &HashMap<String, String>) -> RunPlan {
 }
 
 fn design_by_name(name: &str) -> Option<Design> {
-    CORE_DESIGNS.iter().copied().find(|d| d.name() == name)
+    CORE_DESIGNS
+        .iter()
+        .chain(TIERED_DESIGNS.iter())
+        .copied()
+        .find(|d| d.name() == name)
 }
 
 fn main() {
@@ -92,6 +102,7 @@ fn main() {
             // run only the designs the exhibit needs
             match id.as_str() {
                 "fig4" | "table3" => {}
+                "figt1" => db.run_tiered_t1(true),
                 "fig18" => db.run_designs(&[Design::Uncompressed, Design::Dynamic], true, true),
                 "table4" => db.run_channel_sweep(true),
                 "fig3" => db.run_designs(
@@ -162,9 +173,12 @@ fn main() {
             if let Some(c) = flags.get("channels") {
                 cfg = cfg.with_channels(c.parse().expect("--channels"));
             }
+            if let Some(r) = flags.get("far-ratio") {
+                cfg = cfg.with_far_ratio(r.parse().expect("--far-ratio"));
+            }
             if let Some(path) = flags.get("trace") {
                 cfg.trace = Some(
-                    cram::workloads::TraceReplay::load(path).expect("load trace file"),
+                    cram::workloads::TraceReplay::from_file(path).expect("load trace file"),
                 );
             }
             let base_cfg = SimConfig { design: Design::Uncompressed, ..cfg.clone() };
@@ -193,6 +207,25 @@ fn main() {
             if !r.dyn_counters.is_empty() {
                 println!("  dyn counters(end)  {:?}", r.dyn_counters);
             }
+            if let Some(t) = &r.tier {
+                println!("  tier near/far      {} / {} accesses", t.near.total(), t.far.total());
+                println!("  far access share   {:.1}%", 100.0 * t.far_frac());
+                println!(
+                    "  migrations         {} promoted, {} demoted, {} lines",
+                    t.promotions, t.demotions, t.migrated_lines
+                );
+                println!(
+                    "  link flits tx/rx   {} / {}  (waits {} / {} cycles)",
+                    t.link.tx_flits, t.link.rx_flits,
+                    t.link.tx_wait_cycles, t.link.rx_wait_cycles
+                );
+                println!("  far prefetches     {}", t.far_prefetch_installs);
+                assert_eq!(
+                    t.total_accesses(),
+                    r.bw.total(),
+                    "per-tier counters must sum to total traffic"
+                );
+            }
         }
         "analyze" => {
             let artifact = flags
@@ -209,7 +242,7 @@ fn main() {
                 None => usage(&format!("unknown workload {wl}")),
             };
             let engine = cram::runtime::AnalysisEngine::load(&artifact)
-                .expect("load artifact (run `make artifacts` first)");
+                .expect("load analysis engine (a present artifact failed validation — rebuild with `python -m compile.aot`)");
             let model = profile.value_model(0xF16_4);
             let groups: Vec<[cram::mem::CacheLine; 4]> = (0..n_groups as u64)
                 .map(|g| core::array::from_fn(|s| model.gen_line(g * 4 + s as u64, 0)))
@@ -219,7 +252,13 @@ fn main() {
             for a in &analysis {
                 counts[a.csi as usize] += 1;
             }
-            println!("workload {wl}: {n_groups} groups via PJRT artifact {artifact}");
+            let backend = match engine.backend() {
+                cram::runtime::Backend::ArtifactValidated => {
+                    format!("native engine, artifact validated ({artifact})")
+                }
+                cram::runtime::Backend::NativeOnly => "native engine, no artifact".into(),
+            };
+            println!("workload {wl}: {n_groups} groups via {backend}");
             for (i, label) in ["uncompressed", "pair-AB", "pair-CD", "pair-both", "quad"]
                 .iter()
                 .enumerate()
@@ -274,11 +313,12 @@ fn main() {
         }
         "list" => {
             println!("designs:");
-            for d in CORE_DESIGNS {
+            for d in CORE_DESIGNS.iter().chain(TIERED_DESIGNS.iter()) {
                 println!("  {}", d.name());
             }
-            println!("workloads ({}):", all64().len());
-            for w in all64() {
+            let far = far_pressure();
+            println!("workloads ({} + {} far-pressure):", all64().len(), far.len());
+            for w in all64().iter().chain(far.iter()) {
                 println!("  {:<14} {}", w.name, w.suite);
             }
         }
@@ -293,7 +333,7 @@ fn usage(msg: &str) -> ! {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|all> [--insts N]\n  repro list"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|all> [--insts N]\n  repro list\n\ntiered designs (figure t1): tiered-uncomp, tiered-cram — near DDR + far CXL\nexpander; --far-ratio R puts fraction R of capacity behind the link"
     );
     std::process::exit(2);
 }

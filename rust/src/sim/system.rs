@@ -60,6 +60,9 @@ pub struct SimConfig {
     /// Replay this trace on every core instead of the synthetic generator
     /// (the profile still supplies the value model / MLP / footprint).
     pub trace: Option<TraceReplay>,
+    /// Tiered-memory knobs (used by `Design::Tiered` only): capacity
+    /// split, link width, migration policy.
+    pub tier: crate::tier::TierConfig,
 }
 
 impl Default for SimConfig {
@@ -77,6 +80,7 @@ impl Default for SimConfig {
             algo: crate::compress::AlgoSet::FpcBdi,
             private_caches: false,
             trace: None,
+            tier: crate::tier::TierConfig::default(),
         }
     }
 }
@@ -95,6 +99,12 @@ impl SimConfig {
 
     pub fn with_channels(mut self, ch: usize) -> Self {
         self.dram = self.dram.with_channels(ch);
+        self
+    }
+
+    /// Fraction of capacity on the far tier (tiered designs).
+    pub fn with_far_ratio(mut self, r: f64) -> Self {
+        self.tier = self.tier.with_far_ratio(r);
         self
     }
 }
@@ -130,12 +140,13 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
     let mut dram = DramSim::new(cfg.dram);
     // metadata region: just past the 16GB data space
     let meta_base = 16u64 * 1024 * 1024 * 1024 / 64;
-    let mut mc = MemoryController::with_knobs(
+    let mut mc = MemoryController::with_tier_config(
         cfg.design,
         cfg.cores,
         meta_base,
         cfg.llp_entries,
         cfg.meta_cache_bytes,
+        cfg.tier,
     );
     // per-core private caches (optional Table I hierarchy)
     let mut l1s: Vec<SetAssocCache> = (0..cfg.cores)
@@ -284,6 +295,7 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
     let warm_llc = (llc.hits, llc.misses);
     let warm_pref = (mc.prefetch_installed, mc.prefetch_used);
     let warm_dram = dram.stats;
+    let warm_tier = mc.tier.as_ref().map(|t| t.snapshot()).unwrap_or_default();
 
     // Phase 2: measurement.
     run_until(
@@ -331,6 +343,7 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
             meta_reads: mc.bw.meta_reads - warm_bw.meta_reads,
             meta_writes: mc.bw.meta_writes - warm_bw.meta_writes,
             prefetch_reads: mc.bw.prefetch_reads - warm_bw.prefetch_reads,
+            migration: mc.bw.migration - warm_bw.migration,
         },
         llp_accuracy: mc.llp.stats.accuracy(),
         meta_hit_rate: mc.meta.as_ref().map(|m| m.hit_rate()),
@@ -349,6 +362,7 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
             .as_ref()
             .map(|d| (0..cfg.cores).map(|c| d.counter(c)).collect())
             .unwrap_or_default(),
+        tier: mc.tier.as_ref().map(|t| t.snapshot().since(&warm_tier)),
     }
 }
 
@@ -447,5 +461,69 @@ mod tests {
         let r = quick(Design::Dynamic, "mix1");
         assert!(r.cycles > 0);
         assert_eq!(r.ipc.len(), 8);
+    }
+
+    #[test]
+    fn tiered_run_reports_consistent_per_tier_breakdown() {
+        let cfg = SimConfig::default()
+            .with_design(Design::Tiered { far_compressed: true })
+            .with_insts(400_000)
+            .with_far_ratio(0.75);
+        let r = simulate(&by_name("cap_stream").unwrap(), &cfg);
+        let t = r.tier.expect("tiered run has tier stats");
+        assert!(r.cycles > 0);
+        assert!(t.far.total() > 0, "far tier must see traffic at ratio 0.75");
+        assert!(t.near.total() > 0, "near tier must see traffic too");
+        assert_eq!(
+            t.total_accesses(),
+            r.bw.total(),
+            "per-tier counters must sum to the bandwidth total"
+        );
+        assert!(t.link.rx_flits > 0);
+    }
+
+    #[test]
+    fn tiered_is_slower_than_flat_and_cram_far_recovers() {
+        // far-memory pressure: the narrow link must cost performance vs
+        // flat DDR, and the compressed far tier must claw some back
+        let p = by_name("cap_stream").unwrap();
+        let mk = |design| {
+            let cfg = SimConfig::default()
+                .with_design(design)
+                .with_insts(600_000)
+                .with_far_ratio(0.75);
+            simulate(&p, &cfg)
+        };
+        let flat = mk(Design::Uncompressed);
+        let far_raw = mk(Design::Tiered { far_compressed: false });
+        let far_cram = mk(Design::Tiered { far_compressed: true });
+        let s_raw = far_raw.weighted_speedup(&flat);
+        let s_cram = far_cram.weighted_speedup(&flat);
+        assert!(s_raw < 0.98, "narrow far link must cost perf: {s_raw}");
+        assert!(
+            s_cram > s_raw,
+            "CRAM far tier must beat the uncompressed far tier: {s_cram} vs {s_raw}"
+        );
+        assert!(
+            far_cram.tier.unwrap().far_prefetch_installs > 0,
+            "packed far blocks must co-fetch lines"
+        );
+    }
+
+    #[test]
+    fn tiered_migration_policy_promotes_hot_pages() {
+        let cfg = SimConfig::default()
+            .with_design(Design::Tiered { far_compressed: true })
+            .with_insts(600_000)
+            .with_far_ratio(0.5);
+        let r = simulate(&by_name("cap_ptr").unwrap(), &cfg);
+        let t = r.tier.unwrap();
+        // warm-up alone exceeds the promotion threshold on hot pages, so
+        // measured-phase counters may be small — check the invariants and
+        // that migration traffic is accounted when present
+        assert_eq!(t.total_accesses(), r.bw.total());
+        if t.promotions > 0 {
+            assert!(t.migrated_lines >= 64 * t.promotions);
+        }
     }
 }

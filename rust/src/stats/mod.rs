@@ -1,6 +1,8 @@
-//! Simulation statistics: the bandwidth breakdown of Figs. 8/15 and the
-//! weighted-speedup metric of §III-B.
+//! Simulation statistics: the bandwidth breakdown of Figs. 8/15, the
+//! weighted-speedup metric of §III-B, and the per-tier traffic breakdown
+//! of the tiered-memory subsystem (Figure T1).
 
+use crate::tier::link::LinkStats;
 use crate::util::geomean;
 
 /// Memory-traffic breakdown by cause, in 64-byte accesses.
@@ -24,6 +26,9 @@ pub struct Bandwidth {
     pub meta_writes: u64,
     /// Extra prefetch reads (next-line-prefetch baseline only).
     pub prefetch_reads: u64,
+    /// Accesses issued by tiered-memory page migration (promotion reads +
+    /// fills, demotion reads + writes — tiered designs only).
+    pub migration: u64,
 }
 
 impl Bandwidth {
@@ -36,6 +41,7 @@ impl Bandwidth {
             + self.meta_reads
             + self.meta_writes
             + self.prefetch_reads
+            + self.migration
     }
 
     /// Overhead accesses (everything a plain uncompressed memory would not
@@ -47,6 +53,97 @@ impl Bandwidth {
             + self.meta_reads
             + self.meta_writes
             + self.prefetch_reads
+            + self.migration
+    }
+}
+
+/// Traffic reaching one tier of a tiered memory, in 64-byte accesses.
+/// The categories mirror [`Bandwidth`]; for any tiered run,
+/// `near.total() + far.total() == bw.total()` — every access the
+/// controller charges is attributed to exactly one tier.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierTraffic {
+    pub demand_reads: u64,
+    pub demand_writes: u64,
+    /// Clean packed writes on the compressed far tier.
+    pub clean_writes: u64,
+    /// Stale-slot invalidates on the compressed far tier.
+    pub invalidates: u64,
+    /// Accesses caused by page migration (both directions count the
+    /// accesses they issue on *this* tier).
+    pub migr_accesses: u64,
+}
+
+impl TierTraffic {
+    pub fn total(&self) -> u64 {
+        self.demand_reads
+            + self.demand_writes
+            + self.clean_writes
+            + self.invalidates
+            + self.migr_accesses
+    }
+
+    fn since(&self, warm: &TierTraffic) -> TierTraffic {
+        TierTraffic {
+            demand_reads: self.demand_reads - warm.demand_reads,
+            demand_writes: self.demand_writes - warm.demand_writes,
+            clean_writes: self.clean_writes - warm.clean_writes,
+            invalidates: self.invalidates - warm.invalidates,
+            migr_accesses: self.migr_accesses - warm.migr_accesses,
+        }
+    }
+}
+
+/// Full tiered-memory breakdown: per-tier traffic, migration policy
+/// activity, link utilization, and far-tier compression diagnostics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    pub near: TierTraffic,
+    pub far: TierTraffic,
+    /// Hot pages promoted far→near / cold pages demoted near→far.
+    pub promotions: u64,
+    pub demotions: u64,
+    /// Lines moved by migrations (both directions).
+    pub migrated_lines: u64,
+    pub link: LinkStats,
+    /// Lines installed for free from packed far blocks.
+    pub far_prefetch_installs: u64,
+    /// Far groups written / written packed (compressed far only).
+    pub far_groups_written: u64,
+    pub far_groups_packed: u64,
+}
+
+impl TierStats {
+    /// Accesses across both tiers; equals [`Bandwidth::total`] for the
+    /// same run (the acceptance invariant of the tier subsystem).
+    pub fn total_accesses(&self) -> u64 {
+        self.near.total() + self.far.total()
+    }
+
+    /// Fraction of all accesses served by the far tier.
+    pub fn far_frac(&self) -> f64 {
+        let t = self.total_accesses();
+        if t == 0 {
+            0.0
+        } else {
+            self.far.total() as f64 / t as f64
+        }
+    }
+
+    /// Field-wise difference vs a warmup snapshot.
+    pub fn since(&self, warm: &TierStats) -> TierStats {
+        TierStats {
+            near: self.near.since(&warm.near),
+            far: self.far.since(&warm.far),
+            promotions: self.promotions - warm.promotions,
+            demotions: self.demotions - warm.demotions,
+            migrated_lines: self.migrated_lines - warm.migrated_lines,
+            link: self.link.since(&warm.link),
+            far_prefetch_installs: self.far_prefetch_installs
+                - warm.far_prefetch_installs,
+            far_groups_written: self.far_groups_written - warm.far_groups_written,
+            far_groups_packed: self.far_groups_packed - warm.far_groups_packed,
+        }
     }
 }
 
@@ -80,6 +177,8 @@ pub struct SimResult {
     pub dyn_benefits: u64,
     /// Final per-core Dynamic-CRAM counter values (empty for non-dynamic).
     pub dyn_counters: Vec<i32>,
+    /// Tiered-memory breakdown (None for flat designs).
+    pub tier: Option<TierStats>,
 }
 
 impl SimResult {
@@ -137,6 +236,7 @@ mod tests {
             dyn_costs: 0,
             dyn_benefits: 0,
             dyn_counters: vec![],
+            tier: None,
         }
     }
 
@@ -170,8 +270,28 @@ mod tests {
             meta_reads: 3,
             meta_writes: 1,
             prefetch_reads: 0,
+            migration: 0,
         };
         assert_eq!(bw.total(), 23);
         assert_eq!(bw.overhead(), 8);
+    }
+
+    #[test]
+    fn tier_traffic_sums_per_tier() {
+        let near = TierTraffic { demand_reads: 7, demand_writes: 3, ..Default::default() };
+        let far = TierTraffic {
+            demand_reads: 4,
+            demand_writes: 1,
+            clean_writes: 2,
+            invalidates: 1,
+            migr_accesses: 6,
+        };
+        let t = TierStats { near, far, ..Default::default() };
+        assert_eq!(near.total(), 10);
+        assert_eq!(far.total(), 14);
+        assert_eq!(t.total_accesses(), 24);
+        assert!((t.far_frac() - 14.0 / 24.0).abs() < 1e-12);
+        // since() against itself zeroes every counter
+        assert_eq!(t.since(&t), TierStats::default());
     }
 }

@@ -1,0 +1,193 @@
+//! CXL link model: a narrow, full-duplex serialized channel.
+//!
+//! The far tier sits behind a CXL.mem-style point-to-point link.  Unlike a
+//! DDR channel (parallel bus, 16B per bus cycle at our 800 MHz time base),
+//! the link serializes traffic into 64-byte data flits over a configurable
+//! number of lanes, with each direction (TX = host→device commands and
+//! write data, RX = device→host read completions) occupied independently.
+//!
+//! The model captures the three effects the tiered evaluation hinges on:
+//!
+//! * **narrowness** — a lane moves one byte per DRAM bus cycle
+//!   (~0.8 GB/s effective), so the default x8 link is half a DDR4 channel;
+//!   a 64B flit occupies the direction for `64 / lanes` cycles;
+//! * **queuing delay** — each direction is a single serialized resource;
+//!   bursts (writebacks, page migrations) queue demand reads behind them,
+//!   and the wait is tracked per direction;
+//! * **port latency** — a fixed one-way controller + propagation delay on
+//!   top of serialization (retimers, CXL stack).
+//!
+//! All times are DRAM bus cycles (800 MHz, 1.25 ns) to match
+//! [`crate::dram::DramSim`].
+
+/// Link geometry and latency.
+#[derive(Clone, Copy, Debug)]
+pub struct CxlLinkConfig {
+    /// Lane count; one lane carries 1 byte per bus cycle (~0.8 GB/s).
+    pub lanes: u64,
+    /// One-way port/controller latency in bus cycles (~30 ns default).
+    pub port_latency: u64,
+}
+
+impl Default for CxlLinkConfig {
+    fn default() -> Self {
+        Self { lanes: 8, port_latency: 24 }
+    }
+}
+
+impl CxlLinkConfig {
+    pub fn with_lanes(mut self, lanes: u64) -> Self {
+        self.lanes = lanes;
+        self
+    }
+
+    /// Cycles a transfer of `bytes` occupies one direction.
+    #[inline]
+    pub fn flit_cycles(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.lanes).max(1)
+    }
+
+    /// Peak per-direction bandwidth in bytes per bus cycle.
+    pub fn peak_bytes_per_cycle(&self) -> f64 {
+        self.lanes as f64
+    }
+}
+
+/// Per-direction traffic counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Flits sent host→device (commands, write data, demoted pages).
+    pub tx_flits: u64,
+    /// Flits sent device→host (read completions, promoted pages).
+    pub rx_flits: u64,
+    pub tx_busy_cycles: u64,
+    pub rx_busy_cycles: u64,
+    /// Cycles transfers spent queued behind earlier traffic, per direction.
+    pub tx_wait_cycles: u64,
+    pub rx_wait_cycles: u64,
+}
+
+impl LinkStats {
+    /// Field-wise difference (measurement-phase accounting).
+    pub fn since(&self, warm: &LinkStats) -> LinkStats {
+        LinkStats {
+            tx_flits: self.tx_flits - warm.tx_flits,
+            rx_flits: self.rx_flits - warm.rx_flits,
+            tx_busy_cycles: self.tx_busy_cycles - warm.tx_busy_cycles,
+            rx_busy_cycles: self.rx_busy_cycles - warm.rx_busy_cycles,
+            tx_wait_cycles: self.tx_wait_cycles - warm.tx_wait_cycles,
+            rx_wait_cycles: self.rx_wait_cycles - warm.rx_wait_cycles,
+        }
+    }
+}
+
+/// The link: two independent serialized directions plus port latency.
+pub struct CxlLink {
+    cfg: CxlLinkConfig,
+    /// TX direction occupied until this cycle.
+    tx_free: u64,
+    /// RX direction occupied until this cycle.
+    rx_free: u64,
+    pub stats: LinkStats,
+}
+
+/// A read command / header flit on the wire (address + opcode).
+pub const CMD_BYTES: u64 = 8;
+/// A full data flit (one 64B line or packed block).
+pub const DATA_BYTES: u64 = 64;
+
+impl CxlLink {
+    pub fn new(cfg: CxlLinkConfig) -> Self {
+        Self { cfg, tx_free: 0, rx_free: 0, stats: LinkStats::default() }
+    }
+
+    pub fn config(&self) -> &CxlLinkConfig {
+        &self.cfg
+    }
+
+    /// Occupy one direction for `bytes` starting no earlier than `now`.
+    /// Returns (arrival cycle after port latency, queuing wait, cycles).
+    fn occupy(cfg: &CxlLinkConfig, free: &mut u64, now: u64, bytes: u64) -> (u64, u64, u64) {
+        let cycles = cfg.flit_cycles(bytes);
+        let start = now.max(*free);
+        let wait = start - now;
+        *free = start + cycles;
+        (*free + cfg.port_latency, wait, cycles)
+    }
+
+    /// Transfer `bytes` host→device starting no earlier than `now`.
+    /// Returns the cycle the payload is available at the device (after
+    /// serialization + port latency).  Occupies TX for the serialization.
+    pub fn send(&mut self, now: u64, bytes: u64) -> u64 {
+        let (arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.tx_free, now, bytes);
+        self.stats.tx_flits += 1;
+        self.stats.tx_busy_cycles += cycles;
+        self.stats.tx_wait_cycles += wait;
+        arrival
+    }
+
+    /// Transfer `bytes` device→host starting no earlier than `now`.
+    /// Returns the cycle the payload arrives at the host.
+    pub fn recv(&mut self, now: u64, bytes: u64) -> u64 {
+        let (arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.rx_free, now, bytes);
+        self.stats.rx_flits += 1;
+        self.stats.rx_busy_cycles += cycles;
+        self.stats.rx_wait_cycles += wait;
+        arrival
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flit_serialization_scales_with_lanes() {
+        let x8 = CxlLinkConfig::default();
+        assert_eq!(x8.flit_cycles(DATA_BYTES), 8);
+        assert_eq!(x8.flit_cycles(CMD_BYTES), 1);
+        let x16 = CxlLinkConfig::default().with_lanes(16);
+        assert_eq!(x16.flit_cycles(DATA_BYTES), 4);
+        let x4 = CxlLinkConfig::default().with_lanes(4);
+        assert_eq!(x4.flit_cycles(DATA_BYTES), 16);
+    }
+
+    #[test]
+    fn directions_are_independent() {
+        let mut l = CxlLink::new(CxlLinkConfig::default());
+        let a = l.send(0, DATA_BYTES);
+        let b = l.recv(0, DATA_BYTES);
+        // both transfer concurrently: same completion, no cross-queuing
+        assert_eq!(a, b);
+        assert_eq!(l.stats.tx_wait_cycles + l.stats.rx_wait_cycles, 0);
+    }
+
+    #[test]
+    fn same_direction_queues() {
+        let mut l = CxlLink::new(CxlLinkConfig::default());
+        let a = l.recv(0, DATA_BYTES); // 8 serialize + 24 port = 32
+        let b = l.recv(0, DATA_BYTES); // queued 8 cycles behind
+        assert_eq!(a, 8 + 24);
+        assert_eq!(b, 16 + 24);
+        assert_eq!(l.stats.rx_wait_cycles, 8);
+        assert_eq!(l.stats.rx_flits, 2);
+    }
+
+    #[test]
+    fn idle_link_pays_only_latency_and_serialization() {
+        let mut l = CxlLink::new(CxlLinkConfig::default());
+        let done = l.send(1000, CMD_BYTES);
+        assert_eq!(done, 1000 + 1 + 24);
+    }
+
+    #[test]
+    fn stats_since_subtracts() {
+        let mut l = CxlLink::new(CxlLinkConfig::default());
+        l.send(0, DATA_BYTES);
+        let warm = l.stats;
+        l.send(0, DATA_BYTES);
+        let d = l.stats.since(&warm);
+        assert_eq!(d.tx_flits, 1);
+        assert_eq!(d.tx_busy_cycles, 8);
+    }
+}

@@ -1,0 +1,628 @@
+//! The tiered-memory front-end: near DDR + far CXL expander.
+//!
+//! Routes line addresses to the near tier (the host's DDR4 channels,
+//! always uncompressed) or the far tier (expander-internal DRAM behind a
+//! [`CxlLink`]), runs a hot-page promotion / cold-page demotion policy,
+//! and — when the far tier is CRAM-compressed — keeps the expander's
+//! group layouts so packed far reads deliver co-located lines in a single
+//! link flit.
+//!
+//! **Placement.**  Pages default to near/far by a deterministic hash
+//! against `far_ratio` (the capacity split: `far_ratio` = fraction of
+//! capacity on the expander), first-touch-style.  The migration policy
+//! overrides the default per page: a far page whose access counter
+//! crosses `promote_threshold` is promoted, and a cold near page is
+//! demoted in exchange to preserve the split.  Counters decay by halving
+//! every `epoch_accesses` accesses.
+//!
+//! **Far-tier CRAM.**  The expander runs its own CRAM engine with
+//! device-held metadata (IBEX-style): layouts live next to the data, so
+//! there is no host-side predictor and no second-probe traffic — the
+//! device always reads the right location.  What the host *does* pay is
+//! the link: one 64-byte flit per far access.  Compression earns its keep
+//! there — a packed block moves up to four lines per flit, cutting
+//! demand flits on the narrow link, and packed pages migrate in fewer
+//! flits too.  Demoted pages land raw and are re-packed lazily by later
+//! writebacks (the migration engine moves data, not compressibility
+//! analysis).
+//!
+//! Every access is charged to exactly one tier, so
+//! `TierStats::total_accesses() == Bandwidth::total()` for a tiered run —
+//! the subsystem's accounting invariant (checked in tests).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::controller::{Install, ReadOutcome};
+use crate::cram::group::Csi;
+use crate::dram::{DramConfig, DramSim, ReqKind};
+use crate::mem::{group_base, page_of_line};
+use crate::stats::{Bandwidth, TierStats};
+use crate::tier::link::{CxlLink, CxlLinkConfig, CMD_BYTES, DATA_BYTES};
+use crate::util::rng::splitmix64;
+use crate::workloads::SizeOracle;
+
+/// Lines per 4KB page.
+const PAGE_LINES: u64 = 64;
+/// Groups per page.
+const PAGE_GROUPS: u64 = PAGE_LINES / 4;
+
+/// Tiered-memory configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TierConfig {
+    /// Fraction of capacity (pages) placed on the far tier by default.
+    pub far_ratio: f64,
+    pub link: CxlLinkConfig,
+    /// Expander-internal DRAM (default: a single channel).
+    pub far_dram: DramConfig,
+    /// Accesses to a far page before it is promoted near.
+    pub promote_threshold: u32,
+    /// Heat counters halve every this many accesses.
+    pub epoch_accesses: u64,
+    /// Near pages sampled when picking a demotion victim.
+    pub victim_samples: usize,
+    /// Placement-hash seed.
+    pub seed: u64,
+}
+
+impl Default for TierConfig {
+    fn default() -> Self {
+        Self {
+            far_ratio: 0.5,
+            link: CxlLinkConfig::default(),
+            far_dram: DramConfig::default().with_channels(1),
+            // Promotion is reserved for *sustained* heat: the threshold
+            // sits above the ~64 touches a streaming pass leaves on a
+            // page, and the decay epoch is short enough that heat from a
+            // single pass evaporates before a second pass tops it up.
+            // Pages a stream merely traverses stay far (a one-time
+            // migration storm would just move the stream off the link it
+            // is supposed to stress); pages re-touched heavily between
+            // decays promote.
+            promote_threshold: 96,
+            epoch_accesses: 100_000,
+            victim_samples: 8,
+            seed: 0x7153,
+        }
+    }
+}
+
+impl TierConfig {
+    pub fn with_far_ratio(mut self, r: f64) -> Self {
+        self.far_ratio = r.clamp(0.0, 1.0);
+        self
+    }
+}
+
+/// The two-tier memory behind the controller.
+pub struct TieredMemory {
+    cfg: TierConfig,
+    far_compressed: bool,
+    /// Placement-hash cutoff: page is far iff hash % 4096 < far_cut.
+    far_cut: u64,
+    pub link: CxlLink,
+    pub far_dram: DramSim,
+    /// Far-tier group layouts (expander-held metadata).
+    far_csi: HashMap<u64, Csi>,
+    /// Per-page placement overrides from migration (true = far).
+    placement: HashMap<u64, bool>,
+    /// Per-page access heat with the epoch it was last updated.  Decay is
+    /// lazy — applied when an entry is next touched or read — so no
+    /// stop-the-world sweep ever runs on the demand path.
+    heat: HashMap<u64, (u32, u32)>,
+    /// Near pages eligible as demotion victims (dedup + ring order).
+    listed: HashSet<u64>,
+    near_pages: Vec<u64>,
+    victim_cursor: usize,
+    accesses: u64,
+    stats: TierStats,
+}
+
+impl TieredMemory {
+    pub fn new(cfg: TierConfig, far_compressed: bool) -> Self {
+        Self {
+            far_cut: (cfg.far_ratio.clamp(0.0, 1.0) * 4096.0) as u64,
+            link: CxlLink::new(cfg.link),
+            far_dram: DramSim::new(cfg.far_dram),
+            far_csi: HashMap::new(),
+            placement: HashMap::new(),
+            heat: HashMap::new(),
+            listed: HashSet::new(),
+            near_pages: Vec::new(),
+            victim_cursor: 0,
+            accesses: 0,
+            stats: TierStats::default(),
+            cfg,
+            far_compressed,
+        }
+    }
+
+    pub fn config(&self) -> &TierConfig {
+        &self.cfg
+    }
+
+    pub fn far_compressed(&self) -> bool {
+        self.far_compressed
+    }
+
+    /// Current placement of a page (override, else the capacity-split hash).
+    pub fn is_far_page(&self, page: u64) -> bool {
+        match self.placement.get(&page) {
+            Some(&far) => far,
+            None => splitmix64(self.cfg.seed ^ 0x7165_72, page) % 4096 < self.far_cut,
+        }
+    }
+
+    /// Current placement of a line.
+    pub fn is_far_line(&self, line: u64) -> bool {
+        self.is_far_page(page_of_line(line))
+    }
+
+    /// Stats snapshot with the link counters folded in.
+    pub fn snapshot(&self) -> TierStats {
+        let mut s = self.stats;
+        s.link = self.link.stats;
+        s
+    }
+
+    /// Demand read of `line` at bus-cycle `now`.  `near` is the host DDR.
+    pub fn read(
+        &mut self,
+        line: u64,
+        now: u64,
+        near: &mut DramSim,
+        bw: &mut Bandwidth,
+    ) -> ReadOutcome {
+        let page = page_of_line(line);
+        self.touch(page, now, near, bw);
+        if !self.is_far_page(page) {
+            bw.demand_reads += 1;
+            self.stats.near.demand_reads += 1;
+            let done = near.access(line, ReqKind::Read, now, false);
+            return ReadOutcome {
+                done,
+                installs: vec![Install { line_addr: line, level: 0, prefetch: false }],
+            };
+        }
+        bw.demand_reads += 1;
+        self.stats.far.demand_reads += 1;
+        // request flit out, device access, completion flit back
+        let at_device = self.link.send(now, CMD_BYTES);
+        if !self.far_compressed {
+            let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
+            let done = self.link.recv(far_done, DATA_BYTES);
+            return ReadOutcome {
+                done,
+                installs: vec![Install { line_addr: line, level: 0, prefetch: false }],
+            };
+        }
+        // device-held metadata: the expander reads the correct (possibly
+        // packed) location directly; one flit returns every co-located line
+        let base = group_base(line);
+        let slot = (line - base) as u8;
+        let csi = *self.far_csi.get(&base).unwrap_or(&Csi::Uncompressed);
+        let loc = csi.location(slot);
+        let far_done = self.far_dram.access(base + loc as u64, ReqKind::Read, at_device, false);
+        let done = self.link.recv(far_done, DATA_BYTES);
+        let mut installs = Vec::with_capacity(4);
+        for &s in csi.colocated(loc) {
+            let la = base + s as u64;
+            let prefetch = la != line;
+            if prefetch {
+                self.stats.far_prefetch_installs += 1;
+            }
+            installs.push(Install { line_addr: la, level: csi.level_of(s), prefetch });
+        }
+        debug_assert!(installs.iter().any(|i| i.line_addr == line));
+        ReadOutcome { done, installs }
+    }
+
+    /// Ganged writeback of one group (mirrors the controller contract).
+    pub fn writeback(
+        &mut self,
+        gang: &[crate::cache::Evicted],
+        now: u64,
+        near: &mut DramSim,
+        oracle: &mut SizeOracle,
+        bw: &mut Bandwidth,
+    ) {
+        if gang.is_empty() {
+            return;
+        }
+        let (base, present, dirty) = crate::controller::gang_masks(gang);
+        for s in 0..4 {
+            if present[s] && dirty[s] {
+                oracle.dirty_update(base + s as u64);
+            }
+        }
+
+        if !self.is_far_page(page_of_line(base)) {
+            // near tier: plain DDR, dirty lines write back raw
+            for s in 0..4 {
+                if present[s] && dirty[s] {
+                    bw.demand_writes += 1;
+                    self.stats.near.demand_writes += 1;
+                    near.access(base + s as u64, ReqKind::Write, now, false);
+                }
+            }
+            return;
+        }
+
+        if !self.far_compressed {
+            for s in 0..4 {
+                if present[s] && dirty[s] {
+                    bw.demand_writes += 1;
+                    self.stats.far.demand_writes += 1;
+                    let at = self.link.send(now, DATA_BYTES);
+                    self.far_dram.access(base + s as u64, ReqKind::Write, at, false);
+                }
+            }
+            return;
+        }
+
+        // CRAM on the expander: the same residency-constrained packing
+        // decision as the host-side controller (shared helper; the far
+        // engine always compresses — no Dynamic gating, the link is
+        // always the bottleneck it is sized against), then issue device
+        // writes / invalidates — each one a flit on the link.
+        let old = *self.far_csi.get(&base).unwrap_or(&Csi::Uncompressed);
+        let sizes = oracle.group_sizes(base);
+        let new = crate::controller::decide_packed_layout(old, present, sizes);
+
+        if new == old && !dirty.iter().any(|&d| d) {
+            return; // clean re-eviction of an unchanged layout: free drop
+        }
+        self.stats.far_groups_written += 1;
+        if new != Csi::Uncompressed {
+            self.stats.far_groups_packed += 1;
+        }
+        for loc in 0..4u8 {
+            let addr = base + loc as u64;
+            let old_res = old.colocated(loc);
+            let new_res = new.colocated(loc);
+            if new_res.is_empty() {
+                if !old_res.is_empty() {
+                    // stale under the new layout: device writes the
+                    // invalid-line marker (command flit on the link)
+                    bw.invalidates += 1;
+                    self.stats.far.invalidates += 1;
+                    let at = self.link.send(now, CMD_BYTES);
+                    self.far_dram.access(addr, ReqKind::Invalidate, at, false);
+                }
+                continue;
+            }
+            if new_res.len() > 1 {
+                let any_dirty = new_res.iter().any(|&s| dirty[s as usize]);
+                if !any_dirty && crate::controller::layout_half_same(old, new, loc) {
+                    continue; // packed block already in device memory
+                }
+                if any_dirty {
+                    bw.demand_writes += 1;
+                    self.stats.far.demand_writes += 1;
+                } else {
+                    bw.clean_writes += 1;
+                    self.stats.far.clean_writes += 1;
+                }
+                let at = self.link.send(now, DATA_BYTES);
+                self.far_dram.access(addr, ReqKind::Write, at, false);
+            } else {
+                let s = new_res[0] as usize;
+                let relocated = old.location(s as u8) != loc || old.colocated(loc).len() > 1;
+                if dirty[s] {
+                    bw.demand_writes += 1;
+                    self.stats.far.demand_writes += 1;
+                    let at = self.link.send(now, DATA_BYTES);
+                    self.far_dram.access(addr, ReqKind::Write, at, false);
+                } else if relocated && present[s] {
+                    bw.clean_writes += 1;
+                    self.stats.far.clean_writes += 1;
+                    let at = self.link.send(now, DATA_BYTES);
+                    self.far_dram.access(addr, ReqKind::Write, at, false);
+                }
+            }
+        }
+        if new == Csi::Uncompressed {
+            self.far_csi.remove(&base);
+        } else {
+            self.far_csi.insert(base, new);
+        }
+    }
+
+    /// Heat-decay epoch counter (heat halves once per elapsed epoch).
+    #[inline]
+    fn epoch(&self) -> u32 {
+        (self.accesses / self.cfg.epoch_accesses) as u32
+    }
+
+    /// Current (decayed) heat of a page.
+    fn heat_of(&self, page: u64) -> u32 {
+        let cur = self.epoch();
+        self.heat
+            .get(&page)
+            .map(|&(h, ep)| h >> cur.saturating_sub(ep).min(31))
+            .unwrap_or(0)
+    }
+
+    /// Record a page access: heat bookkeeping, lazy decay, promotion.
+    fn touch(&mut self, page: u64, now: u64, near: &mut DramSim, bw: &mut Bandwidth) {
+        self.accesses += 1;
+        let cur = self.epoch();
+        let h = {
+            let e = self.heat.entry(page).or_insert((0, cur));
+            let lag = cur.saturating_sub(e.1).min(31);
+            e.0 >>= lag;
+            e.1 = cur;
+            e.0 = e.0.saturating_add(1);
+            e.0
+        };
+        if self.is_far_page(page) {
+            if h >= self.cfg.promote_threshold {
+                self.promote(page, now, near, bw);
+            }
+        } else if self.listed.insert(page) {
+            self.near_pages.push(page);
+        }
+    }
+
+    /// Move a hot far page near; demote a cold near page in exchange.
+    fn promote(&mut self, page: u64, now: u64, near: &mut DramSim, bw: &mut Bandwidth) {
+        self.stats.promotions += 1;
+        let first = page * PAGE_LINES;
+        for g in 0..PAGE_GROUPS {
+            let gbase = first + g * 4;
+            // a packed group travels in fewer device reads + link flits;
+            // live data sits at the non-stale physical slots (e.g. PairAb
+            // lives at locs {0, 2, 3}, not 0..3).  Each block crosses the
+            // link only after its device read completes, same sequencing
+            // as the demand path.
+            let csi = self.far_csi.remove(&gbase).unwrap_or_default();
+            let mut arrived = now;
+            for loc in 0..4u8 {
+                if csi.is_stale(loc) {
+                    continue;
+                }
+                bw.migration += 1;
+                self.stats.far.migr_accesses += 1;
+                let far_done =
+                    self.far_dram.access(gbase + loc as u64, ReqKind::Read, now, false);
+                arrived = arrived.max(self.link.recv(far_done, DATA_BYTES));
+            }
+            // lands near unpacked: four raw line fills once the data is here
+            for s in 0..4 {
+                bw.migration += 1;
+                self.stats.near.migr_accesses += 1;
+                near.access(gbase + s, ReqKind::Write, arrived, false);
+            }
+        }
+        self.stats.migrated_lines += PAGE_LINES;
+        self.placement.insert(page, false);
+        if self.listed.insert(page) {
+            self.near_pages.push(page);
+        }
+        if let Some(victim) = self.pick_victim(page) {
+            self.demote(victim, now, near, bw);
+        }
+    }
+
+    /// Coldest of a small sample of near pages (deterministic ring scan).
+    /// Entries for pages demoted since they were listed are dropped as
+    /// they are encountered, so the ring cannot silt up with stale pages
+    /// and stop yielding victims.
+    fn pick_victim(&mut self, exclude: u64) -> Option<u64> {
+        let mut best: Option<(u32, u64)> = None;
+        let mut scanned = 0;
+        while scanned < self.cfg.victim_samples && !self.near_pages.is_empty() {
+            let i = self.victim_cursor % self.near_pages.len();
+            let p = self.near_pages[i];
+            scanned += 1;
+            if self.is_far_page(p) {
+                // demoted since listing: drop (swap_remove keeps the slot
+                // occupied by a fresh entry, so do not advance the cursor)
+                self.near_pages.swap_remove(i);
+                self.listed.remove(&p);
+                continue;
+            }
+            self.victim_cursor = i + 1;
+            if p == exclude {
+                continue;
+            }
+            let h = self.heat_of(p);
+            if best.map(|(bh, _)| h < bh).unwrap_or(true) {
+                best = Some((h, p));
+            }
+        }
+        best.map(|(_, p)| p)
+    }
+
+    /// Move a cold near page to the expander (stored raw; the far tier
+    /// re-packs lazily on later writebacks).
+    fn demote(&mut self, page: u64, now: u64, near: &mut DramSim, bw: &mut Bandwidth) {
+        self.stats.demotions += 1;
+        let first = page * PAGE_LINES;
+        for l in 0..PAGE_LINES {
+            // near read, then the line crosses the link, then the device
+            // write lands — each stage waits for the one before it
+            bw.migration += 1;
+            self.stats.near.migr_accesses += 1;
+            let read_done = near.access(first + l, ReqKind::Read, now, false);
+            let at_device = self.link.send(read_done, DATA_BYTES);
+            bw.migration += 1;
+            self.stats.far.migr_accesses += 1;
+            self.far_dram.access(first + l, ReqKind::Write, at_device, false);
+        }
+        for g in 0..PAGE_GROUPS {
+            self.far_csi.remove(&(first + g * 4));
+        }
+        self.stats.migrated_lines += PAGE_LINES;
+        self.placement.insert(page, true);
+        self.heat.insert(page, (0, self.epoch())); // must re-earn promotion
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Evicted;
+    use crate::workloads::ValueModel;
+
+    fn packable_oracle() -> SizeOracle {
+        // all-SmallInt pages: every group packs 4:1
+        SizeOracle::new(ValueModel::new([0.0, 1.0, 0.0, 0.0, 0.0], 7))
+    }
+
+    fn setup(far_compressed: bool) -> (TieredMemory, DramSim, SizeOracle, Bandwidth) {
+        let t = TieredMemory::new(TierConfig::default(), far_compressed);
+        (t, DramSim::new(DramConfig::default()), packable_oracle(), Bandwidth::default())
+    }
+
+    fn gang(base: u64, dirty_mask: [bool; 4]) -> Vec<Evicted> {
+        (0..4)
+            .map(|i| Evicted {
+                line_addr: base + i as u64,
+                dirty: dirty_mask[i],
+                level: 0,
+                core: 0,
+                referenced: true,
+                was_prefetch: false,
+            })
+            .collect()
+    }
+
+    /// First line of a page currently placed in the requested tier.
+    fn page_in(t: &TieredMemory, far: bool) -> u64 {
+        (0..10_000u64)
+            .find(|&p| t.is_far_page(p) == far)
+            .expect("both tiers populated at default ratio")
+            * PAGE_LINES
+    }
+
+    #[test]
+    fn split_ratio_roughly_respected() {
+        let t = TieredMemory::new(TierConfig::default().with_far_ratio(0.75), false);
+        let far = (0..4000u64).filter(|&p| t.is_far_page(p)).count();
+        let frac = far as f64 / 4000.0;
+        assert!((frac - 0.75).abs() < 0.05, "far fraction {frac}");
+        let none = TieredMemory::new(TierConfig::default().with_far_ratio(0.0), false);
+        assert_eq!((0..1000u64).filter(|&p| none.is_far_page(p)).count(), 0);
+    }
+
+    #[test]
+    fn far_read_slower_than_near_read() {
+        let (mut t, mut near, _o, mut bw) = setup(false);
+        let nl = page_in(&t, false);
+        let fl = page_in(&t, true);
+        let rn = t.read(nl, 0, &mut near, &mut bw);
+        let rf = t.read(fl, 0, &mut near, &mut bw);
+        assert!(
+            rf.done > rn.done + 2 * t.link.config().port_latency,
+            "far {} vs near {}",
+            rf.done,
+            rn.done
+        );
+        assert_eq!(t.snapshot().near.demand_reads, 1);
+        assert_eq!(t.snapshot().far.demand_reads, 1);
+        assert_eq!(bw.demand_reads, 2);
+    }
+
+    #[test]
+    fn compressed_far_read_prefetches_group() {
+        let (mut t, mut near, mut o, mut bw) = setup(true);
+        let fl = page_in(&t, true);
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw);
+        let s = t.snapshot();
+        assert_eq!(s.far_groups_written, 1);
+        assert_eq!(s.far_groups_packed, 1);
+        let r = t.read(fl + 2, 1000, &mut near, &mut bw);
+        assert_eq!(r.installs.len(), 4, "quad block: whole group per flit");
+        assert_eq!(r.installs.iter().filter(|i| i.prefetch).count(), 3);
+        assert_eq!(t.snapshot().far_prefetch_installs, 3);
+        // exactly one data flit came back over the link for 4 lines
+        assert_eq!(t.snapshot().link.rx_flits, 1);
+    }
+
+    #[test]
+    fn uncompressed_far_read_returns_single_line() {
+        let (mut t, mut near, mut o, mut bw) = setup(false);
+        let fl = page_in(&t, true);
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw);
+        let r = t.read(fl + 2, 1000, &mut near, &mut bw);
+        assert_eq!(r.installs.len(), 1);
+    }
+
+    #[test]
+    fn tier_counters_sum_to_bandwidth_total() {
+        let (mut t, mut near, mut o, mut bw) = setup(true);
+        for i in 0..200u64 {
+            let line = i * 37 % 4096;
+            t.read(line, i * 10, &mut near, &mut bw);
+            if i % 3 == 0 {
+                t.writeback(
+                    &gang(group_base(line), [true, false, i % 2 == 0, false]),
+                    i * 10,
+                    &mut near,
+                    &mut o,
+                    &mut bw,
+                );
+            }
+        }
+        assert_eq!(t.snapshot().total_accesses(), bw.total());
+    }
+
+    #[test]
+    fn hot_far_page_promotes_and_demotes_a_victim() {
+        let mut cfg = TierConfig::default();
+        cfg.promote_threshold = 8;
+        let mut t = TieredMemory::new(cfg, true);
+        let mut near = DramSim::new(DramConfig::default());
+        let mut bw = Bandwidth::default();
+        let near_page = page_in(&t, false) / PAGE_LINES;
+        let far_line = page_in(&t, true);
+        // make a near page known (victim candidate)
+        t.read(near_page * PAGE_LINES, 0, &mut near, &mut bw);
+        assert!(t.is_far_line(far_line));
+        for i in 0..8u64 {
+            t.read(far_line + i, i * 100, &mut near, &mut bw);
+        }
+        let s = t.snapshot();
+        assert_eq!(s.promotions, 1);
+        assert_eq!(s.demotions, 1);
+        assert_eq!(s.migrated_lines, 2 * PAGE_LINES);
+        assert!(!t.is_far_line(far_line), "hot page now near");
+        assert!(t.is_far_page(near_page), "cold victim now far");
+        // accounting invariant holds through migrations
+        assert_eq!(s.total_accesses(), bw.total());
+        // further reads hit the near tier
+        let before = t.snapshot().near.demand_reads;
+        t.read(far_line, 10_000, &mut near, &mut bw);
+        assert_eq!(t.snapshot().near.demand_reads, before + 1);
+    }
+
+    #[test]
+    fn clean_reeviction_of_packed_far_group_is_free() {
+        let (mut t, mut near, mut o, mut bw) = setup(true);
+        let fl = page_in(&t, true);
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw);
+        let total_before = bw.total();
+        t.writeback(&gang(fl, [false; 4]), 100, &mut near, &mut o, &mut bw);
+        assert_eq!(bw.total(), total_before, "clean unchanged layout: no traffic");
+    }
+
+    #[test]
+    fn far_layout_decision_matches_controller_semantics() {
+        use crate::controller::decide_packed_layout;
+        // quad packs when everything fits
+        assert_eq!(
+            decide_packed_layout(Csi::Uncompressed, [true; 4], [9, 9, 9, 9]),
+            Csi::Quad
+        );
+        // absent half keeps its old packed arrangement
+        assert_eq!(
+            decide_packed_layout(Csi::PairCd, [true, true, false, false], [9, 9, 64, 64]),
+            Csi::PairBoth
+        );
+        // nothing fits: unpack
+        assert_eq!(
+            decide_packed_layout(Csi::Quad, [true; 4], [64, 64, 64, 64]),
+            Csi::Uncompressed
+        );
+    }
+}

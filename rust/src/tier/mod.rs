@@ -1,0 +1,30 @@
+//! Tiered memory: a CRAM-compressed CXL far-memory expander behind the
+//! controller.
+//!
+//! The paper evaluates CRAM on a flat DDR4 system; the industry pull
+//! (IBEX, hyperscale CXL adoption) is toward *memory expanders* — extra
+//! capacity behind a narrow serialized link, where bandwidth is scarcest
+//! and compression pays off most.  This subsystem models that system:
+//!
+//! * [`link::CxlLink`] — the narrow full-duplex link: 64B flits
+//!   serialized over configurable lanes, per-direction queuing, port
+//!   latency;
+//! * [`memory::TieredMemory`] — near-DDR + far-expander routing by a
+//!   configurable capacity split, hot-page promotion / cold-page
+//!   demotion, and an expander-side CRAM engine (device-held metadata)
+//!   when the far tier is compressed;
+//! * [`crate::controller::Design::Tiered`] — composes the tier with the
+//!   rest of the system; `repro figure t1` compares an uncompressed far
+//!   tier against a CRAM-compressed one on far-memory-pressure
+//!   workloads ([`crate::workloads::profiles::far_pressure`]).
+//!
+//! Per-tier traffic lands in [`crate::stats::TierStats`], whose
+//! `total_accesses()` equals the run's `Bandwidth::total()` — the
+//! accounting invariant tying the tier breakdown to the paper's
+//! bandwidth methodology.  See DESIGN.md §Tiered memory.
+
+pub mod link;
+pub mod memory;
+
+pub use link::{CxlLink, CxlLinkConfig, LinkStats};
+pub use memory::{TierConfig, TieredMemory};

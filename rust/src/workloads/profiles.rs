@@ -22,6 +22,8 @@ pub enum Suite {
     Spec17,
     Gap,
     Mix,
+    /// Far-memory-pressure set for the tiered-memory evaluation (Fig. T1).
+    Far,
 }
 
 impl std::fmt::Display for Suite {
@@ -31,6 +33,7 @@ impl std::fmt::Display for Suite {
             Suite::Spec17 => write!(f, "SPEC17"),
             Suite::Gap => write!(f, "GAP"),
             Suite::Mix => write!(f, "MIX"),
+            Suite::Far => write!(f, "FAR"),
         }
     }
 }
@@ -249,6 +252,57 @@ pub fn mixes() -> Vec<WorkloadProfile> {
     ]
 }
 
+/// Far-memory-pressure workloads for the tiered-memory evaluation
+/// (Figure T1).  Each models a capacity-bound deployment: the footprint
+/// maxes out the per-core cap so a large slice of it lives on the far
+/// tier, and the hot set is big enough that migration cannot simply pull
+/// the working set near — the far tier stays on the demand path, which is
+/// exactly where a compressed expander earns (or fails to earn) its keep.
+///
+/// * `cap_stream` — capacity-bound streaming analytics over small-value
+///   arrays (libq-like); quad-packable → the best case for a CRAM far
+///   tier (4 lines per link flit).
+/// * `cap_ptr` — in-memory index sweep: pointer-dense nodes, moderate
+///   sequentiality; mostly 2:1-packable.
+/// * `cap_gap` — capacity-bound graph analytics (pr_twi-like): scattered
+///   demand over a huge footprint, pointer/small mix.
+/// * `cap_float` — an HPC checkpoint-like FP footprint: high mantissa
+///   entropy, rarely packs — the honesty case (a compressed far tier
+///   must not *lose* here).
+/// * `cap_mix` — rate-mode mix of the above on 8 cores.
+pub fn far_pressure() -> Vec<WorkloadProfile> {
+    use Suite::*;
+    let mut v = vec![
+        wl!("cap_stream", Far, 30.0, 256, 40.0, 0.80, 0.30, 0.55, 0.30, 8, 0.25,
+            [0.35, 0.40, 0.10, 0.10, 0.05]),
+        wl!("cap_ptr", Far, 25.0, 256, 34.0, 0.55, 0.30, 0.60, 0.25, 6, 0.40,
+            [0.10, 0.20, 0.50, 0.05, 0.15]),
+        wl!("cap_gap", Far, 60.0, 256, 70.0, 0.12, 0.25, 0.50, 0.20, 5, 0.50,
+            [0.08, 0.20, 0.35, 0.00, 0.37]),
+        wl!("cap_float", Far, 20.0, 256, 28.0, 0.75, 0.25, 0.50, 0.30, 7, 0.30,
+            [0.05, 0.10, 0.10, 0.45, 0.30]),
+    ];
+    v.push(WorkloadProfile {
+        name: "cap_mix",
+        suite: Suite::Far,
+        table_mpki: 0.0,
+        footprint_mb: 0,
+        apki: 0.0,
+        p_seq: 0.0,
+        hot_frac: 0.0,
+        p_hot: 0.0,
+        write_frac: 0.0,
+        mlp: 0,
+        p_dep: 0.0,
+        values: [0.0; 5],
+        mix_of: &[
+            "cap_stream", "cap_ptr", "cap_gap", "cap_float",
+            "cap_stream", "cap_ptr", "cap_gap", "cap_float",
+        ],
+    });
+    v
+}
+
 /// The paper's 27-workload memory-intensive evaluation set
 /// (15 SPEC + 6 GAP + 6 MIX).
 pub fn all27() -> Vec<WorkloadProfile> {
@@ -266,9 +320,13 @@ pub fn all64() -> Vec<WorkloadProfile> {
     v
 }
 
-/// Look up a profile by name across the full set.
+/// Look up a profile by name across the full set (including the
+/// far-memory-pressure set).
 pub fn by_name(name: &str) -> Option<WorkloadProfile> {
-    all64().into_iter().find(|w| w.name == name)
+    all64()
+        .into_iter()
+        .chain(far_pressure())
+        .find(|w| w.name == name)
 }
 
 #[cfg(test)]
@@ -327,5 +385,28 @@ mod tests {
         assert!(by_name("libq").is_some());
         assert!(by_name("pr_twi").is_some());
         assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn far_pressure_set_well_formed() {
+        let far = far_pressure();
+        assert!(far.len() >= 4, "at least 4 far-memory-pressure profiles");
+        for w in &far {
+            assert_eq!(w.suite, Suite::Far);
+            assert!(by_name(w.name).is_some(), "{} resolvable", w.name);
+            if w.mix_of.is_empty() {
+                assert_eq!(w.footprint_mb, 256, "{}: capacity-bound", w.name);
+                assert!(w.apki > 0.0);
+            } else {
+                assert_eq!(w.mix_of.len(), 8);
+                for c in w.mix_of {
+                    assert!(by_name(c).unwrap().mix_of.is_empty());
+                }
+            }
+        }
+        // the far set must not leak into the paper's evaluation sets
+        for w in all64() {
+            assert_ne!(w.suite, Suite::Far);
+        }
     }
 }

@@ -83,10 +83,12 @@ impl TraceReplay {
         Self { events, pos: 0, wraps: 0 }
     }
 
-    /// Load from a file path.
-    pub fn load(path: &str) -> Result<Self, Box<dyn std::error::Error>> {
-        let text = std::fs::read_to_string(path)?;
-        Ok(Self::parse(&text)?)
+    /// Load from a file path (the CLI's `--trace FILE` entry point).
+    /// I/O and parse failures both surface with the path for context.
+    pub fn from_file(path: &str) -> Result<Self, Box<dyn std::error::Error>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read trace {path}: {e}"))?;
+        Self::parse(&text).map_err(|e| format!("{path}: {e}").into())
     }
 
     pub fn len(&self) -> usize {
@@ -175,6 +177,87 @@ mod tests {
         let e = TraceReplay::parse("nope R 0\n").unwrap_err();
         assert!(e.reason.contains("integer"));
         assert!(TraceReplay::parse("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn bad_gap_rejected_with_line_number() {
+        // line 1 is a comment, line 2 blank — the bad gap is on line 3
+        let e = TraceReplay::parse("# hdr\n\n-5 R 10\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.reason.contains("integer"), "{}", e.reason);
+        let e = TraceReplay::parse("1.5 R 10\n").unwrap_err();
+        assert!(e.reason.contains("integer"));
+    }
+
+    #[test]
+    fn bad_rw_flag_rejected() {
+        for bad in ["RW", "read", "0", "-"] {
+            let e = TraceReplay::parse(&format!("1 {bad} 10\n")).unwrap_err();
+            assert!(e.reason.contains("R or W"), "{bad}: {}", e.reason);
+        }
+    }
+
+    #[test]
+    fn bad_hex_address_rejected() {
+        for bad in ["zz", "0xGG", "0x"] {
+            let e = TraceReplay::parse(&format!("1 R {bad}\n")).unwrap_err();
+            assert!(e.reason.contains("hex"), "{bad}: {}", e.reason);
+        }
+        // 0x prefix and bare hex both accepted
+        assert!(TraceReplay::parse("1 R 0xff\n").is_ok());
+        assert!(TraceReplay::parse("1 R ff\n").is_ok());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(TraceReplay::parse("1\n").unwrap_err().reason.contains("missing R|W"));
+        assert!(TraceReplay::parse("1 R\n").unwrap_err().reason.contains("missing address"));
+    }
+
+    #[test]
+    fn empty_trace_rejected() {
+        let e = TraceReplay::parse("").unwrap_err();
+        assert_eq!(e.line, 0);
+        assert!(e.reason.contains("empty"));
+        assert!(TraceReplay::parse("   \n\n# nothing\n").is_err());
+    }
+
+    #[test]
+    fn wraps_accounting_counts_full_cycles_only() {
+        let mut t = TraceReplay::parse("1 R 0\n1 R 1\n1 R 2\n").unwrap();
+        assert_eq!(t.wraps, 0);
+        for _ in 0..3 {
+            t.next_event();
+        }
+        assert_eq!(t.wraps, 1, "exactly one wrap after consuming the trace once");
+        for _ in 0..2 {
+            t.next_event();
+        }
+        assert_eq!(t.wraps, 1, "mid-cycle: no extra wrap");
+        t.next_event();
+        assert_eq!(t.wraps, 2);
+    }
+
+    #[test]
+    fn from_file_round_trip_and_errors() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("cram_trace_test.txt");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let t = TraceReplay::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(t.len(), 3);
+        let _ = std::fs::remove_file(&path);
+
+        // missing file: error mentions the path
+        let missing = dir.join("cram_no_such_trace.txt");
+        let e = TraceReplay::from_file(missing.to_str().unwrap()).unwrap_err();
+        assert!(e.to_string().contains("cram_no_such_trace"));
+
+        // parse error surfaces through from_file with the path
+        let bad = dir.join("cram_bad_trace.txt");
+        std::fs::write(&bad, "1 Q 0\n").unwrap();
+        let e = TraceReplay::from_file(bad.to_str().unwrap()).unwrap_err();
+        assert!(e.to_string().contains("R or W"));
+        let _ = std::fs::remove_file(&bad);
     }
 
     #[test]

@@ -1,8 +1,14 @@
-//! Cross-language parity: the AOT HLO artifact (Pallas L1 kernel inside
-//! the jax L2 graph, executed via PJRT) must agree bit-for-bit with the
-//! native rust compressors used in the simulator hot loop.
+//! Analysis-engine contract tests + the cross-language spec pins.
 //!
-//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! Since the offline engine evaluates the model through the *same* native
+//! compressors the simulator uses (see `runtime` module docs), the
+//! engine-vs-native sweeps below cannot catch compressor bugs — they pin
+//! the engine's *contract*: batch-length preservation, partial-batch
+//! handling, and stability across every value regime.  The detection
+//! power for the math itself lives in `hlo_spec_pins`, whose literal
+//! values are hand-computed from the paper's spec and pinned identically
+//! by `python/tests/test_kernel.py` on the Pallas/jax side — if either
+//! implementation drifts, one of the two suites breaks.
 
 use cram::compress::hybrid;
 use cram::cram::group::Csi;
@@ -11,15 +17,9 @@ use cram::runtime::AnalysisEngine;
 use cram::util::rng::Rng;
 use cram::workloads::ValueModel;
 
-fn artifact() -> Option<AnalysisEngine> {
-    let path = AnalysisEngine::DEFAULT_ARTIFACT;
-    if !std::path::Path::new(path).exists() {
-        panic!(
-            "artifact {path} missing — run `make artifacts` before `cargo test` \
-             (the Makefile `test` target does this automatically)"
-        );
-    }
-    Some(AnalysisEngine::load(path).expect("load + compile artifact"))
+fn artifact() -> AnalysisEngine {
+    AnalysisEngine::load(AnalysisEngine::DEFAULT_ARTIFACT)
+        .expect("load analysis engine (validates the artifact when present)")
 }
 
 fn native(group: &[CacheLine; 4]) -> (Csi, [u32; 4]) {
@@ -29,7 +29,7 @@ fn native(group: &[CacheLine; 4]) -> (Csi, [u32; 4]) {
 
 #[test]
 fn hlo_matches_native_on_workload_values() {
-    let engine = artifact().unwrap();
+    let engine = artifact();
     // every workload value class, 512 groups each
     for weights in [
         [1.0, 0.0, 0.0, 0.0, 0.0],
@@ -55,7 +55,7 @@ fn hlo_matches_native_on_workload_values() {
 
 #[test]
 fn hlo_matches_native_on_random_bits() {
-    let engine = artifact().unwrap();
+    let engine = artifact();
     let mut rng = Rng::new(0xF00D);
     let groups: Vec<[CacheLine; 4]> = (0..1024)
         .map(|_| {
@@ -73,7 +73,7 @@ fn hlo_matches_native_on_random_bits() {
 
 #[test]
 fn hlo_handles_partial_batches() {
-    let engine = artifact().unwrap();
+    let engine = artifact();
     // non-multiple-of-batch sizes exercise the padding path
     for n in [1usize, 3, 1023, 1024, 1025, 2500] {
         let model = ValueModel::new([1.0, 1.0, 1.0, 1.0, 1.0], n as u64);
@@ -93,7 +93,7 @@ fn hlo_handles_partial_batches() {
 #[test]
 fn hlo_spec_pins() {
     // the same hand pins as python/tests/test_kernel.py, through PJRT
-    let engine = artifact().unwrap();
+    let engine = artifact();
     let zero = CacheLine::zero();
     let sevens = CacheLine::from_words([7; 16]);
     let rep = CacheLine::from_words([0x4141_4141; 16]);
