@@ -3,15 +3,26 @@
 //! The L3 perf target (DESIGN.md §Perf): the simulator must sustain
 //! millions of LLC accesses per second so the full evaluation matrix is
 //! tractable on one core.  Run: `cargo bench --bench simulator`
+//!
+//! Knobs (for the CI bench job):
+//! * `CRAM_BENCH_INSTS` — instructions per core per run (default 400000)
+//! * `BENCH_JSON` — where to write the JSON result array
+//!   (default `BENCH_sim.json`; name/median ns/Melem-per-s per entry)
 
 use cram::controller::Design;
 use cram::sim::{simulate, SimConfig};
-use cram::util::bench::{black_box, Bencher};
+use cram::util::bench::{black_box, write_json, BenchResult, Bencher};
 use cram::workloads::profiles::by_name;
 
 fn main() {
     let b = Bencher::quick();
-    let insts = 400_000u64;
+    let insts: u64 = std::env::var("CRAM_BENCH_INSTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400_000);
+    let json_path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_sim.json".into());
+    let mut results: Vec<BenchResult> = Vec::new();
 
     for wl in ["libq", "pr_twi"] {
         println!("# simulator — {wl}, {insts} insts/core x8 cores (+= equal warmup)");
@@ -27,10 +38,13 @@ fn main() {
             let cfg = SimConfig::default().with_design(design).with_insts(insts);
             // throughput denominator: total instructions simulated
             let elems = insts * 8 * 2; // warmup + measure
-            b.run(&format!("{wl}/{}", design.name()), Some(elems), || {
+            results.push(b.run(&format!("{wl}/{}", design.name()), Some(elems), || {
                 black_box(simulate(&profile, &cfg));
-            });
+            }));
         }
         println!();
     }
+
+    write_json(&json_path, &results).expect("write bench json");
+    println!("wrote {} results to {json_path}", results.len());
 }

@@ -24,7 +24,7 @@ use crate::cram::llp::LineLocationPredictor;
 use crate::cram::metadata::{MetaAccess, MetadataStore};
 use crate::dram::{DramSim, ReqKind};
 use crate::mem::{group_base, page_of_line};
-use crate::stats::Bandwidth;
+use crate::stats::{Bandwidth, LatencyHist};
 use crate::tier::{TierConfig, TieredMemory};
 use crate::workloads::SizeOracle;
 
@@ -96,6 +96,10 @@ pub struct MemoryController {
     /// The two-tier memory front-end (tiered designs only).
     pub tier: Option<TieredMemory>,
     pub bw: Bandwidth,
+    /// CPU-visible latency of every demand read this controller served
+    /// (one sample per [`MemoryController::read`] call — the Figure Q1
+    /// tail-latency exhibit; `read_lat.count() == bw.demand_reads`).
+    pub read_lat: LatencyHist,
     pub prefetch_installed: u64,
     pub prefetch_used: u64,
     /// Groups written compressed vs total group writebacks (diagnostics).
@@ -162,6 +166,7 @@ impl MemoryController {
             meta,
             dynamic,
             bw: Bandwidth::default(),
+            read_lat: LatencyHist::default(),
             prefetch_installed: 0,
             prefetch_used: 0,
             groups_written: 0,
@@ -176,7 +181,26 @@ impl MemoryController {
 
     /// Demand read of `line` for `core` at bus-cycle `now`.
     /// `sampled` = the line maps to a Dynamic-CRAM sampled LLC set.
+    ///
+    /// Every call records exactly one sample in [`Self::read_lat`]: the
+    /// CPU-visible completion latency of the demanded data, whatever the
+    /// design serialized in front of it (metadata lookups, mispredicted
+    /// probes, link crossings, scheduler queueing).
     pub fn read(
+        &mut self,
+        line: u64,
+        core: usize,
+        now: u64,
+        dram: &mut DramSim,
+        oracle: &mut SizeOracle,
+        sampled: bool,
+    ) -> ReadOutcome {
+        let out = self.read_inner(line, core, now, dram, oracle, sampled);
+        self.read_lat.record(out.done.saturating_sub(now));
+        out
+    }
+
+    fn read_inner(
         &mut self,
         line: u64,
         core: usize,
@@ -876,6 +900,18 @@ mod tests {
         let r = mc.read(1, 0, t0, &mut dram, &mut oracle, false);
         // two serialized reads: strictly more than one access latency
         assert!(r.done > t0 + 22, "done {} vs issue {t0}", r.done);
+    }
+
+    #[test]
+    fn read_latency_recorded_once_per_demand_read() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        mc.llp.update(0, Csi::Uncompressed); // poison -> second probe
+        mc.read(1, 0, 1000, &mut dram, &mut oracle, false);
+        mc.read(2, 0, 2000, &mut dram, &mut oracle, false);
+        assert_eq!(mc.read_lat.count(), mc.bw.demand_reads, "one sample per read");
+        // the mispredicted read's serialized probes land in the tail
+        assert!(mc.read_lat.percentile(1.0) > 22.0);
     }
 
     #[test]

@@ -8,11 +8,15 @@
 //!   the compressor; FPC+BDI vs FPC+BDI+C-Pack packing rates.
 //! * **Marker width** — Fig. 4's argument: how much pair-compressibility
 //!   is lost as the reserved marker grows?
+//! * **Scheduler geometry** — read-queue depth and write-drain
+//!   watermarks vs tail latency (the Figure Q1 knobs).
 
 use crate::compress::hybrid::{self, AlgoSet};
 use crate::controller::Design;
 use crate::coordinator::figures::Report;
+use crate::dram::SchedConfig;
 use crate::sim::{simulate, SimConfig};
+use crate::stats::NS_PER_BUS_CYCLE;
 use crate::util::pct;
 use crate::workloads::profiles::by_name;
 use crate::workloads::SizeOracle;
@@ -127,6 +131,61 @@ pub fn ablate_compressor(insts: u64) -> Report {
     Report {
         id: "ablate-compressor".into(),
         title: "Compressor-set ablation: FPC+BDI vs FPC+BDI+C-Pack".into(),
+        body,
+    }
+}
+
+/// Scheduler-geometry ablation: read-queue depth and write-drain
+/// watermarks vs p99 read latency and aggregate IPC, under Dynamic-CRAM.
+/// Shallow read queues serialize misses; lazy (high/wide) watermarks
+/// batch writes into longer read-blocking drains; tight watermarks drain
+/// eagerly and steal bus slots more often but in smaller bites.
+pub fn ablate_sched(insts: u64) -> Report {
+    const WORKLOADS: [&str; 3] = ["lat_wrburst", "lat_chase", "libq"];
+    let configs: [(&str, SchedConfig); 4] = [
+        ("shallow-8", SchedConfig { read_slots: 8, ..Default::default() }),
+        ("default-32", SchedConfig::default()),
+        (
+            "lazy-drain",
+            SchedConfig { read_slots: 32, write_slots: 64, write_hi: 60, write_lo: 8 },
+        ),
+        (
+            "tight-drain",
+            SchedConfig { read_slots: 32, write_slots: 64, write_hi: 12, write_lo: 4 },
+        ),
+    ];
+    let mut body = format!("{:<12}", "sched");
+    for wl in WORKLOADS {
+        body.push_str(&format!(" {:>22}", format!("{wl} p99 | ipc")));
+    }
+    body.push('\n');
+    for (label, sc) in configs {
+        body.push_str(&format!("{label:<12}"));
+        for wl in WORKLOADS {
+            let p = by_name(wl).unwrap();
+            let cfg = SimConfig::default()
+                .with_design(Design::Dynamic)
+                .with_insts(insts)
+                .with_sched(sc);
+            let r = simulate(&p, &cfg);
+            body.push_str(&format!(
+                " {:>22}",
+                format!(
+                    "{:.0} ns | {:.2}",
+                    r.read_lat.percentile(0.99) * NS_PER_BUS_CYCLE,
+                    r.total_ipc()
+                )
+            ));
+        }
+        body.push('\n');
+    }
+    body.push_str(
+        "(p99 CPU-visible read latency; watermarks are per-channel write-queue\n \
+         depths: drain arms at hi, read-blocking until lo)\n",
+    );
+    Report {
+        id: "ablate-sched".into(),
+        title: "Transaction-scheduler geometry (queue depth, drain watermarks)".into(),
         body,
     }
 }

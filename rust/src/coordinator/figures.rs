@@ -1,15 +1,15 @@
 //! Figure/table harnesses: format each paper exhibit from cached results.
 
 use crate::controller::{Design, MemoryController};
-use crate::coordinator::runner::{ResultsDb, T1_FAR_RATIO};
+use crate::coordinator::runner::{ResultsDb, Q1_DESIGNS, T1_FAR_RATIO};
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::lit::LineInversionTable;
 use crate::cram::llp::LineLocationPredictor;
 use crate::cram::marker::MarkerEngine;
 use crate::energy::{energy_of, EnergyConfig};
-use crate::stats::geomean_speedup;
+use crate::stats::{geomean_speedup, NS_PER_BUS_CYCLE};
 use crate::util::pct;
-use crate::workloads::profiles::{all27, all64, far_pressure, Suite};
+use crate::workloads::profiles::{all27, all64, far_pressure, latency_sensitive, Suite};
 use crate::workloads::SizeOracle;
 
 /// A formatted report for one figure or table.
@@ -388,6 +388,64 @@ pub fn figure_t1(db: &ResultsDb) -> Report {
     }
 }
 
+/// Figure Q1: demand-read tail latency per design — the transaction
+/// scheduler's exhibit.  For every workload in the 27-suite plus the
+/// latency-sensitive set, prints p50/p95/p99 (and mean) CPU-visible
+/// read latency in nanoseconds under the uncompressed baseline,
+/// explicit-metadata CRAM, and Dynamic-CRAM.
+///
+/// The story the columns tell: explicit metadata serializes a lookup in
+/// front of cache-miss reads, which barely moves p50 but stretches the
+/// tail; Dynamic-CRAM keeps the tail near the baseline while its
+/// co-fetches cut queue pressure on compressible workloads.
+pub fn figure_q1(db: &ResultsDb) -> Report {
+    let mut body = format!("{:<12}", "workload");
+    for d in Q1_DESIGNS {
+        body.push_str(&format!(" {:>26}", format!("{} p50/p95/p99", d.name())));
+    }
+    body.push('\n');
+    let mut p99s: Vec<Vec<f64>> = vec![Vec::new(); Q1_DESIGNS.len()];
+    let mut means: Vec<Vec<f64>> = vec![Vec::new(); Q1_DESIGNS.len()];
+    for w in all27().into_iter().chain(latency_sensitive()) {
+        let results: Vec<_> = Q1_DESIGNS.iter().map(|d| db.get(w.name, *d)).collect();
+        if results.iter().any(|r| r.is_none()) {
+            continue;
+        }
+        body.push_str(&format!("{:<12}", w.name));
+        for (i, r) in results.iter().enumerate() {
+            let h = &r.expect("checked above").read_lat;
+            let ns = |p: f64| h.percentile(p) * NS_PER_BUS_CYCLE;
+            p99s[i].push(ns(0.99));
+            means[i].push(h.mean() * NS_PER_BUS_CYCLE);
+            body.push_str(&format!(
+                " {:>26}",
+                format!("{:.0}/{:.0}/{:.0} ns", ns(0.50), ns(0.95), ns(0.99))
+            ));
+        }
+        body.push('\n');
+    }
+    body.push_str(&format!("{:<12}", "MEAN p99"));
+    for col in &p99s {
+        body.push_str(&format!(" {:>23.0} ns", crate::util::mean(col)));
+    }
+    body.push('\n');
+    body.push_str(&format!("{:<12}", "MEAN lat"));
+    for col in &means {
+        body.push_str(&format!(" {:>23.0} ns", crate::util::mean(col)));
+    }
+    body.push('\n');
+    body.push_str(
+        "(CPU-visible demand-read latency through the FR-FCFS scheduler; \
+         lat_* rows are the latency-sensitive profiles where scheduling \
+         dominates)\n",
+    );
+    Report {
+        id: "figq1".into(),
+        title: "Read-latency tail: uncompressed vs explicit metadata vs CRAM".into(),
+        body,
+    }
+}
+
 /// Table II: measured workload characteristics vs calibration targets.
 pub fn table2(db: &ResultsDb) -> Report {
     let mut body = format!(
@@ -514,11 +572,12 @@ pub fn table5(db: &ResultsDb) -> Report {
     }
 }
 
-/// All figure/table ids, in paper order (figt1 is this repo's tiered
-/// extension, not a paper exhibit).
-pub const ALL_IDS: [&str; 15] = [
+/// All figure/table ids, in paper order (figt1 and figq1 are this
+/// repo's tiered-memory and tail-latency extensions, not paper
+/// exhibits).
+pub const ALL_IDS: [&str; 16] = [
     "fig3", "fig4", "fig7", "fig8", "fig12", "fig14", "fig15", "fig16", "fig18",
-    "fig19", "fig20", "figt1", "table2", "table3", "table4",
+    "fig19", "fig20", "figt1", "figq1", "table2", "table3", "table4",
 ];
 
 /// Produce one report by id (None for an unknown id).
@@ -526,6 +585,7 @@ pub fn report(db: &ResultsDb, id: &str) -> Option<Report> {
     Some(match id {
         "fig3" => figure3(db),
         "figt1" => figure_t1(db),
+        "figq1" => figure_q1(db),
         "fig4" => figure4(),
         "fig7" => figure7(db),
         "fig8" => figure8(db),
@@ -582,6 +642,21 @@ mod tests {
         assert!(r.body.contains("cap_stream"), "{}", r.body);
         assert!(r.body.contains("GEOMEAN"));
         assert!(report(&db, "figt1").is_some());
+    }
+
+    #[test]
+    fn figure_q1_reports_tail_latency_per_design() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 20_000,
+            seed: 6,
+            threads: 4,
+        });
+        db.run_q1(false);
+        let r = figure_q1(&db);
+        assert!(r.body.contains("lat_chase"), "{}", r.body);
+        assert!(r.body.contains("p50/p95/p99"));
+        assert!(r.body.contains("MEAN p99"));
+        assert!(report(&db, "figq1").is_some());
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::sync::Mutex;
 use crate::controller::Design;
 use crate::sim::{simulate, SimConfig};
 use crate::stats::SimResult;
-use crate::workloads::profiles::{all27, all64, far_pressure, WorkloadProfile};
+use crate::workloads::profiles::{all27, all64, far_pressure, latency_sensitive, WorkloadProfile};
 
 /// Key identifying one simulation run.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -89,6 +89,15 @@ pub const TIERED_DESIGNS: [Design; 2] = [
 /// expansion because it needed it.
 pub const T1_FAR_RATIO: f64 = 0.75;
 
+/// The designs the Figure Q1 tail-latency exhibit compares:
+/// uncompressed baseline, explicit-metadata CRAM (serialized lookups in
+/// the tail), and Dynamic-CRAM.
+pub const Q1_DESIGNS: [Design; 3] = [
+    Design::Uncompressed,
+    Design::Explicit { row_opt: false },
+    Design::Dynamic,
+];
+
 /// Results cache for the full evaluation.
 pub struct ResultsDb {
     pub plan: RunPlan,
@@ -128,6 +137,33 @@ impl ResultsDb {
             }
         }
         jobs.extend(Self::t1_jobs());
+        jobs.extend(Self::q1_extra_jobs());
+        self.run_jobs(jobs, progress);
+    }
+
+    /// The Figure Q1 jobs not already covered by the core matrix: the
+    /// latency-sensitive workloads under the Q1 design triple (the 27
+    /// paper workloads run these designs via `CORE_DESIGNS`).
+    fn q1_extra_jobs() -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for w in latency_sensitive() {
+            for d in Q1_DESIGNS {
+                jobs.push(Job::new(w.clone(), d, 2));
+            }
+        }
+        jobs
+    }
+
+    /// Run the Figure Q1 matrix: the 27-workload suite plus the
+    /// latency-sensitive set, each under the Q1 design triple.
+    pub fn run_q1(&mut self, progress: bool) {
+        let mut jobs = Vec::new();
+        for w in all27() {
+            for d in Q1_DESIGNS {
+                jobs.push(Job::new(w.clone(), d, 2));
+            }
+        }
+        jobs.extend(Self::q1_extra_jobs());
         self.run_jobs(jobs, progress);
     }
 
@@ -317,6 +353,23 @@ mod tests {
         let before = db.len();
         db.run_designs(&[Design::Uncompressed], false, false);
         assert_eq!(db.len(), before);
+    }
+
+    #[test]
+    fn q1_matrix_covers_latency_set() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 20_000,
+            seed: 4,
+            threads: 4,
+        });
+        db.run_q1(false);
+        assert_eq!(db.len(), (27 + latency_sensitive().len()) * Q1_DESIGNS.len());
+        for w in latency_sensitive() {
+            for d in Q1_DESIGNS {
+                let r = db.get(w.name, d).expect("q1 result cached");
+                assert_eq!(r.read_lat.count(), r.bw.demand_reads);
+            }
+        }
     }
 
     #[test]

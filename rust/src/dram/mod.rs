@@ -1,20 +1,30 @@
-//! DDR4 main-memory timing model (the USIMM substitute).
+//! DDR4 main-memory model (the USIMM substitute): per-channel FR-FCFS
+//! transaction scheduling over bank-state + bus-occupancy timing.
 //!
-//! Bank-state + bus-occupancy model at DRAM-bus-cycle granularity
-//! (800 MHz, 1.25 ns/cycle; Table I timings).  Captures the three effects
-//! CRAM's evaluation hinges on:
+//! Modeled at DRAM-bus-cycle granularity (800 MHz, 1.25 ns/cycle;
+//! Table I timings).  Captures the effects CRAM's evaluation hinges on:
 //!
 //! * **bandwidth contention** — every access (data, metadata, second
 //!   access, compressed writeback, invalidate) occupies a channel's data
 //!   bus for a burst; extra accesses queue behind demand traffic;
 //! * **row-buffer locality** — row hits cost tCAS, row conflicts
 //!   tRP+tRCD+tCAS (plus tRAS-limited re-activation);
-//! * **bank-level parallelism** — requests to different banks overlap.
+//! * **bank-level parallelism** — requests to different banks overlap;
+//! * **transaction scheduling** ([`sched`]) — per-channel read/write
+//!   queues with FR-FCFS arbitration (row-hit-first, oldest-first),
+//!   read-over-write priority with high/low-watermark write-drain
+//!   hysteresis, read-slot occupancy, and CRAM-aware issue (stale-slot
+//!   invalidates fold into write drains; a packed co-fetch is one
+//!   transaction).  This is what makes *tail latency* — not just
+//!   bandwidth — observable per design (Figure Q1).
 //!
 //! Reads are serviced with the requester waiting; writes are posted (the
-//! write queue drains opportunistically and charges bandwidth without
-//! stalling the core — §VI "extra writebacks" are pure bandwidth cost).
+//! write queue drains in the bank-prep shadow of reads and charges
+//! bandwidth without stalling the core, until the drain hysteresis says
+//! otherwise — §VI "extra writebacks" are bandwidth *and* tail cost).
 
+pub mod sched;
 pub mod timing;
 
+pub use sched::SchedConfig;
 pub use timing::{DramConfig, DramSim, ReqKind};

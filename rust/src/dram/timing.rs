@@ -1,11 +1,14 @@
-//! The bank/bus occupancy engine.
+//! The bank/bus occupancy engine behind the per-channel FR-FCFS
+//! transaction scheduler ([`super::sched`]).
+
+use crate::dram::sched::{ChannelSched, SchedConfig};
 
 /// Request type, for stats and scheduling priority.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReqKind {
     /// Demand read — requester stalls until done.
     Read,
-    /// Posted write — charges occupancy only.
+    /// Posted write — queues in the channel's write queue.
     Write,
     /// Metadata read (explicit-metadata designs).
     MetaRead,
@@ -36,6 +39,8 @@ pub struct DramConfig {
     /// Data burst occupancy on the channel bus (64B over a 64-bit DDR bus
     /// = 8 beats = 4 bus cycles).
     pub t_burst: u64,
+    /// Per-channel transaction-scheduler knobs (queues + watermarks).
+    pub sched: SchedConfig,
 }
 
 impl Default for DramConfig {
@@ -50,6 +55,7 @@ impl Default for DramConfig {
             t_rp: 9,
             t_ras: 31,
             t_burst: 4,
+            sched: SchedConfig::default(),
         }
     }
 }
@@ -60,37 +66,19 @@ impl DramConfig {
         self
     }
 
+    pub fn with_sched(mut self, sched: SchedConfig) -> Self {
+        self.sched = sched;
+        self
+    }
+
     /// Peak bandwidth in bytes per cycle across all channels.
     pub fn peak_bytes_per_cycle(&self) -> f64 {
         self.channels as f64 * 64.0 / self.t_burst as f64
     }
 }
 
-#[derive(Clone, Copy, Debug, Default)]
-struct Bank {
-    /// Earliest cycle the bank can start a new column/row command.
-    ready: u64,
-    /// Cycle the current row was activated (for tRAS).
-    activated: u64,
-    open_row: Option<u64>,
-}
-
-/// Write-queue capacity in bus cycles of pending bursts (64 entries × 4
-/// cycles).  Below this, posted writes drain opportunistically into idle
-/// bus gaps; beyond it, reads stall while the queue force-drains — so
-/// write bandwidth is never free, it just avoids head-of-line blocking.
-const WRITE_DEBT_CAP: u64 = 64 * 4;
-
-#[derive(Clone, Debug)]
-struct Channel {
-    /// Data-bus occupied until this cycle.
-    bus_free: u64,
-    /// Pending posted-write bus cycles not yet scheduled.
-    write_debt: u64,
-    banks: Vec<Bank>,
-}
-
-/// Per-kind access counters (the bandwidth breakdown of Figs. 8 & 15).
+/// Per-kind access counters (the bandwidth breakdown of Figs. 8 & 15)
+/// plus the scheduler's queue/drain diagnostics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DramStats {
     pub reads: u64,
@@ -101,6 +89,18 @@ pub struct DramStats {
     pub row_hits: u64,
     pub row_misses: u64,
     pub busy_cycles: u64,
+    /// Writes issued from the per-channel write queues.
+    pub drained_writes: u64,
+    /// Stale-slot invalidates folded into a same-row write drain (free).
+    pub folded_invalidates: u64,
+    /// Forced (read-blocking) write drains triggered by the high
+    /// watermark.
+    pub forced_drains: u64,
+    /// Reads whose data burst claimed an idle bus gap ahead of an older
+    /// request (FR-FCFS row-hit bypass).
+    pub gap_fills: u64,
+    /// Cycles reads waited for a free read-transaction slot.
+    pub read_slot_wait_cycles: u64,
 }
 
 impl DramStats {
@@ -118,26 +118,20 @@ impl DramStats {
     }
 }
 
-/// The memory system: banks + buses, serviced in arrival order with posted
-/// writes (an FR-FCFS approximation adequate at this abstraction level —
-/// see DESIGN.md §Substitutions).
+/// The memory system: per-channel FR-FCFS transaction schedulers over
+/// shared bank state (see `sched.rs` and DESIGN.md §Scheduler).
 pub struct DramSim {
     cfg: DramConfig,
-    channels: Vec<Channel>,
+    channels: Vec<ChannelSched>,
     pub stats: DramStats,
 }
 
 impl DramSim {
     pub fn new(cfg: DramConfig) -> Self {
         Self {
-            channels: vec![
-                Channel {
-                    bus_free: 0,
-                    write_debt: 0,
-                    banks: vec![Bank::default(); cfg.ranks * cfg.banks],
-                };
-                cfg.channels
-            ],
+            channels: (0..cfg.channels)
+                .map(|_| ChannelSched::new(cfg.ranks * cfg.banks))
+                .collect(),
             cfg,
             stats: DramStats::default(),
         }
@@ -145,6 +139,11 @@ impl DramSim {
 
     pub fn config(&self) -> &DramConfig {
         &self.cfg
+    }
+
+    /// Pending writes queued on one channel (diagnostics / tests).
+    pub fn write_queue_len(&self, ch: usize) -> usize {
+        self.channels[ch].write_queue_len()
     }
 
     /// Address decomposition: line-interleaved channels, then banks, with
@@ -163,83 +162,43 @@ impl DramSim {
     /// completion cycle (data fully transferred).  `same_row_hint` forces
     /// row-hit latency (the Fig. 20 row-co-located-metadata variant).
     ///
-    /// Reads (and metadata reads) are latency-critical and go through the
-    /// bank + bus path.  Writes/invalidates are *posted*: they accumulate
-    /// as per-channel write debt that drains into idle bus gaps, stalling
-    /// reads only when the write queue saturates — the standard
-    /// write-drain behaviour of DDR controllers (and of USIMM).
+    /// Reads (and metadata reads) are latency-critical: they go through
+    /// the read path of the channel scheduler (slot occupancy, forced
+    /// write drains, bank timing, FR-FCFS bus arbitration).
+    /// Writes/invalidates are *posted*: they join the channel's write
+    /// queue and drain in the bank-prep shadow of later reads, stalling
+    /// reads only through the high-watermark drain hysteresis.
     pub fn access(&mut self, line_addr: u64, kind: ReqKind, now: u64, same_row_hint: bool) -> u64 {
         let cfg = self.cfg;
         let (ch_i, bank_i, row) = self.map(line_addr);
-        let ch = &mut self.channels[ch_i];
-
         match kind {
             ReqKind::Write | ReqKind::MetaWrite | ReqKind::Invalidate => {
-                ch.write_debt += cfg.t_burst;
-                self.stats.busy_cycles += cfg.t_burst;
-                // writes burst into open rows most of the time at this
-                // abstraction level; count as row hits for energy
-                self.stats.row_hits += 1;
                 match kind {
                     ReqKind::Write => self.stats.writes += 1,
                     ReqKind::MetaWrite => self.stats.meta_writes += 1,
                     _ => self.stats.invalidates += 1,
                 }
-                return now; // posted
+                // busy_cycles is charged at *issue* time (in the drain),
+                // with the actual bus cost — folded invalidates are free,
+                // row-miss writes pay their turnaround
+                self.channels[ch_i].post_write(&cfg, &mut self.stats, bank_i, row, kind, now);
+                now // posted
             }
-            _ => {}
-        }
-
-        // Opportunistic write drain: pending write bursts fill the idle
-        // gap between the last bus activity and this read's arrival.
-        if ch.write_debt > 0 {
-            let idle = now.saturating_sub(ch.bus_free);
-            let drained = ch.write_debt.min(idle);
-            ch.write_debt -= drained;
-            ch.bus_free += drained;
-            // Saturated write queue: force-drain the excess ahead of the
-            // read (this is where write bandwidth costs reads time).
-            if ch.write_debt > WRITE_DEBT_CAP {
-                let forced = ch.write_debt - WRITE_DEBT_CAP;
-                ch.bus_free = ch.bus_free.max(now) + forced;
-                ch.write_debt = WRITE_DEBT_CAP;
+            ReqKind::Read | ReqKind::MetaRead => {
+                match kind {
+                    ReqKind::Read => self.stats.reads += 1,
+                    _ => self.stats.meta_reads += 1,
+                }
+                self.channels[ch_i].read(
+                    &cfg,
+                    &mut self.stats,
+                    bank_i,
+                    row,
+                    now,
+                    same_row_hint,
+                )
             }
         }
-
-        let bank = &mut ch.banks[bank_i];
-        let start = now.max(bank.ready);
-        let row_hit = same_row_hint || bank.open_row == Some(row);
-        let cas_done = if row_hit {
-            self.stats.row_hits += 1;
-            start + cfg.t_cas
-        } else {
-            self.stats.row_misses += 1;
-            // respect tRAS on the previously open row, then precharge +
-            // activate + cas
-            let pre_start = if bank.open_row.is_some() {
-                start.max(bank.activated + cfg.t_ras)
-            } else {
-                start
-            };
-            let act = pre_start + if bank.open_row.is_some() { cfg.t_rp } else { 0 };
-            bank.activated = act;
-            bank.open_row = Some(row);
-            act + cfg.t_rcd + cfg.t_cas
-        };
-        // data transfer serializes on the channel bus
-        let data_start = cas_done.max(ch.bus_free);
-        let done = data_start + cfg.t_burst;
-        ch.bus_free = done;
-        // bank can take its next command once the column access finishes
-        bank.ready = data_start;
-        self.stats.busy_cycles += cfg.t_burst;
-
-        match kind {
-            ReqKind::Read => self.stats.reads += 1,
-            ReqKind::MetaRead => self.stats.meta_reads += 1,
-            _ => unreachable!("writes are posted above"),
-        }
-        done
     }
 
     /// Aggregate achieved bandwidth in bytes/cycle over `elapsed` cycles.
@@ -345,6 +304,7 @@ mod tests {
         // ...must not delay an isolated read that arrives much later
         let t = d.access(100, ReqKind::Read, 1000, false);
         assert_eq!(t - 1000, 9 + 9 + 4, "read pays only its own latency");
+        assert_eq!(d.write_queue_len(0), 0, "writes drained in the shadow");
     }
 
     #[test]
@@ -360,6 +320,7 @@ mod tests {
             t > 300 * 4 / 2,
             "forced write drain must delay the read: done at {t}"
         );
+        assert!(d.stats.forced_drains >= 1);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]
-//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1> [--insts N]
+//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1> [--insts N]
 //! repro table <2|3|4|5> [--insts N]
 //! repro sim --workload W --design D [--insts N] [--channels C]
 //!           [--far-ratio R] [--trace FILE]
@@ -15,6 +15,11 @@
 //! The `tiered-uncomp` / `tiered-cram` designs take `--far-ratio R`
 //! (fraction of capacity behind the link, default 0.5).
 //!
+//! `figure q1` is the tail-latency exhibit: p50/p95/p99 demand-read
+//! latency through the per-channel FR-FCFS transaction scheduler, for
+//! the uncompressed baseline vs explicit-metadata CRAM vs Dynamic-CRAM,
+//! over the 27-workload suite plus the latency-sensitive `lat_*` set.
+//!
 //! (clap is unavailable in this offline environment; argument parsing is
 //! hand-rolled — see DESIGN.md §Substitutions.)
 
@@ -24,7 +29,7 @@ use cram::controller::Design;
 use cram::coordinator::figures;
 use cram::coordinator::runner::{ResultsDb, RunPlan, CORE_DESIGNS, TIERED_DESIGNS};
 use cram::sim::{simulate, SimConfig};
-use cram::workloads::profiles::{all64, by_name, far_pressure};
+use cram::workloads::profiles::{all64, by_name, far_pressure, latency_sensitive};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -103,6 +108,7 @@ fn main() {
             match id.as_str() {
                 "fig4" | "table3" => {}
                 "figt1" => db.run_tiered_t1(true),
+                "figq1" => db.run_q1(true),
                 "fig18" => db.run_designs(&[Design::Uncompressed, Design::Dynamic], true, true),
                 "table4" => db.run_channel_sweep(true),
                 "fig3" => db.run_designs(
@@ -197,6 +203,13 @@ fn main() {
                 100.0 * r.llc_hits as f64 / (r.llc_hits + r.llc_misses).max(1) as f64
             );
             println!("  LLP accuracy       {:.1}%", 100.0 * r.llp_accuracy);
+            println!(
+                "  read lat (ns)      mean {:.0} | p50 {:.0} | p95 {:.0} | p99 {:.0}",
+                r.read_lat.mean() * cram::stats::NS_PER_BUS_CYCLE,
+                r.read_lat.percentile(0.50) * cram::stats::NS_PER_BUS_CYCLE,
+                r.read_lat.percentile(0.95) * cram::stats::NS_PER_BUS_CYCLE,
+                r.read_lat.percentile(0.99) * cram::stats::NS_PER_BUS_CYCLE,
+            );
             if let Some(mh) = r.meta_hit_rate {
                 println!("  meta$ hit rate     {:.1}%", 100.0 * mh);
             }
@@ -299,11 +312,13 @@ fn main() {
                 "metacache" => vec![ablation::ablate_metacache(insts)],
                 "compressor" => vec![ablation::ablate_compressor(insts)],
                 "marker" => vec![ablation::ablate_marker_width()],
+                "sched" => vec![ablation::ablate_sched(insts)],
                 "all" => vec![
                     ablation::ablate_marker_width(),
                     ablation::ablate_llp(insts),
                     ablation::ablate_metacache(insts),
                     ablation::ablate_compressor(insts),
+                    ablation::ablate_sched(insts),
                 ],
                 other => usage(&format!("unknown ablation {other}")),
             };
@@ -317,8 +332,14 @@ fn main() {
                 println!("  {}", d.name());
             }
             let far = far_pressure();
-            println!("workloads ({} + {} far-pressure):", all64().len(), far.len());
-            for w in all64().iter().chain(far.iter()) {
+            let lat = latency_sensitive();
+            println!(
+                "workloads ({} + {} far-pressure + {} latency-sensitive):",
+                all64().len(),
+                far.len(),
+                lat.len()
+            );
+            for w in all64().iter().chain(far.iter()).chain(lat.iter()) {
                 println!("  {:<14} {}", w.name, w.suite);
             }
         }
@@ -333,7 +354,7 @@ fn usage(msg: &str) -> ! {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|all> [--insts N]\n  repro list\n\ntiered designs (figure t1): tiered-uncomp, tiered-cram — near DDR + far CXL\nexpander; --far-ratio R puts fraction R of capacity behind the link"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|all> [--insts N]\n  repro list\n\ntiered designs (figure t1): tiered-uncomp, tiered-cram — near DDR + far CXL\nexpander; --far-ratio R puts fraction R of capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler"
     );
     std::process::exit(2);
 }

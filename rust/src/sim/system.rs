@@ -102,6 +102,14 @@ impl SimConfig {
         self
     }
 
+    /// Transaction-scheduler knobs (queue depths, drain watermarks) for
+    /// both the host channels and, in tiered designs, the expander DRAM.
+    pub fn with_sched(mut self, s: crate::dram::SchedConfig) -> Self {
+        self.dram.sched = s;
+        self.tier.far_dram.sched = s;
+        self
+    }
+
     /// Fraction of capacity on the far tier (tiered designs).
     pub fn with_far_ratio(mut self, r: f64) -> Self {
         self.tier = self.tier.with_far_ratio(r);
@@ -292,6 +300,7 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
     let warm_time: Vec<u64> = cores.iter().map(|k| k.time).collect();
     let warm_insts: Vec<u64> = cores.iter().map(|k| k.insts).collect();
     let warm_bw = mc.bw;
+    let warm_lat = mc.read_lat;
     let warm_llc = (llc.hits, llc.misses);
     let warm_pref = (mc.prefetch_installed, mc.prefetch_used);
     let warm_dram = dram.stats;
@@ -346,6 +355,7 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
             migration: mc.bw.migration - warm_bw.migration,
         },
         llp_accuracy: mc.llp.stats.accuracy(),
+        read_lat: mc.read_lat.since(&warm_lat),
         meta_hit_rate: mc.meta.as_ref().map(|m| m.hit_rate()),
         prefetch_installed: mc.prefetch_installed - warm_pref.0,
         prefetch_used: mc.prefetch_used - warm_pref.1,
@@ -454,6 +464,45 @@ mod tests {
         let r = quick(Design::Explicit { row_opt: false }, "xz");
         assert!(r.bw.meta_reads > 0, "xz thrashes the metadata cache");
         assert!(r.meta_hit_rate.unwrap() < 0.9);
+    }
+
+    #[test]
+    fn read_latency_histogram_counts_demand_reads() {
+        for design in [Design::Uncompressed, Design::Implicit, Design::Tiered { far_compressed: true }] {
+            let r = quick(design, "sphinx");
+            assert_eq!(
+                r.read_lat.count(),
+                r.bw.demand_reads,
+                "{}: one latency sample per demand read",
+                r.design
+            );
+            let (p50, p95, p99) = (
+                r.read_lat.percentile(0.50),
+                r.read_lat.percentile(0.95),
+                r.read_lat.percentile(0.99),
+            );
+            assert!(p50 <= p95 && p95 <= p99, "{}: {p50}/{p95}/{p99}", r.design);
+            assert!(r.read_lat.mean() > 0.0);
+        }
+    }
+
+    #[test]
+    fn scheduler_knobs_are_plumbed_through() {
+        // a single read slot serializes every outstanding miss: the
+        // tail must stretch vs the default scheduler
+        let p = by_name("libq").unwrap();
+        let base_cfg = SimConfig::default().with_insts(300_000);
+        let tight_cfg = SimConfig::default().with_insts(300_000).with_sched(
+            crate::dram::SchedConfig { read_slots: 1, ..Default::default() },
+        );
+        let base = simulate(&p, &base_cfg);
+        let tight = simulate(&p, &tight_cfg);
+        assert!(
+            tight.read_lat.percentile(0.95) >= base.read_lat.percentile(0.95),
+            "1-slot scheduler cannot have a shorter tail: {} vs {}",
+            tight.read_lat.percentile(0.95),
+            base.read_lat.percentile(0.95)
+        );
     }
 
     #[test]

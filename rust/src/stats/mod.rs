@@ -1,9 +1,106 @@
 //! Simulation statistics: the bandwidth breakdown of Figs. 8/15, the
-//! weighted-speedup metric of §III-B, and the per-tier traffic breakdown
-//! of the tiered-memory subsystem (Figure T1).
+//! weighted-speedup metric of §III-B, the per-tier traffic breakdown of
+//! the tiered-memory subsystem (Figure T1), and the read-latency
+//! histogram behind the tail-latency exhibit (Figure Q1).
 
 use crate::tier::link::LinkStats;
 use crate::util::geomean;
+
+/// DRAM bus cycle length in nanoseconds (800 MHz bus).
+pub const NS_PER_BUS_CYCLE: f64 = 1.25;
+
+/// Histogram buckets: values 0..7 exact, then four sub-buckets per
+/// power of two up to the overflow bucket (~2^16 bus cycles).
+const LAT_BUCKETS: usize = 64;
+
+/// Fixed-size log-scaled latency histogram (bus cycles).  Records every
+/// demand read's CPU-visible memory latency — queueing, drains, bank
+/// conflicts, metadata serialization, second probes, link crossings —
+/// and reports mean/p50/p95/p99.  `Copy`, so warmup snapshots subtract
+/// the same way the scalar counters do.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyHist {
+    buckets: [u64; LAT_BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self { buckets: [0; LAT_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl LatencyHist {
+    fn bucket_of(v: u64) -> usize {
+        if v < 8 {
+            return v as usize;
+        }
+        let l = 63 - u64::from(v.leading_zeros()); // floor(log2 v) >= 3
+        let sub = (v >> (l - 2)) & 3;
+        ((8 + (l - 3) * 4 + sub) as usize).min(LAT_BUCKETS - 1)
+    }
+
+    /// Representative latency (bucket midpoint) for percentile queries.
+    fn bucket_mid(i: usize) -> f64 {
+        if i < 8 {
+            return i as f64;
+        }
+        let l = 3 + (i - 8) / 4;
+        let sub = ((i - 8) % 4) as u64;
+        let quarter = 1u64 << (l - 2);
+        ((1u64 << l) + sub * quarter) as f64 + quarter as f64 / 2.0
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Samples recorded.  For any simulated design this equals the
+    /// demand reads issued — the Figure Q1 accounting invariant.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact arithmetic mean (the sum is tracked outside the buckets).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Latency below which fraction `p` of reads completed, at bucket
+    /// resolution (`p` in [0, 1]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return Self::bucket_mid(i);
+            }
+        }
+        Self::bucket_mid(LAT_BUCKETS - 1)
+    }
+
+    /// Per-bucket difference vs a warmup snapshot.
+    pub fn since(&self, warm: &LatencyHist) -> LatencyHist {
+        let mut out = *self;
+        for (o, w) in out.buckets.iter_mut().zip(warm.buckets.iter()) {
+            *o -= *w;
+        }
+        out.count -= warm.count;
+        out.sum -= warm.sum;
+        out
+    }
+}
 
 /// Memory-traffic breakdown by cause, in 64-byte accesses.
 /// `demand_*` exists in an uncompressed baseline too; everything else is
@@ -170,6 +267,11 @@ pub struct SimResult {
     pub prefetch_used: u64,
     /// DRAM row-buffer hit rate.
     pub row_hit_rate: f64,
+    /// CPU-visible demand-read latency histogram (bus cycles): one
+    /// sample per LLC read miss, including queueing, forced write
+    /// drains, metadata serialization, second probes, and link
+    /// crossings.  `count()` equals `bw.demand_reads`.
+    pub read_lat: LatencyHist,
     /// Fraction of groups written compressed (Dynamic-CRAM diagnostics).
     pub compression_enabled_frac: f64,
     /// Dynamic-CRAM sampled-set cost / benefit event totals.
@@ -232,6 +334,7 @@ mod tests {
             prefetch_installed: 0,
             prefetch_used: 0,
             row_hit_rate: 0.0,
+            read_lat: LatencyHist::default(),
             compression_enabled_frac: 1.0,
             dyn_costs: 0,
             dyn_benefits: 0,
@@ -274,6 +377,64 @@ mod tests {
         };
         assert_eq!(bw.total(), 23);
         assert_eq!(bw.overhead(), 8);
+    }
+
+    #[test]
+    fn latency_hist_mean_and_count_exact() {
+        let mut h = LatencyHist::default();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_hist_percentiles_ordered_and_bracketed() {
+        let mut h = LatencyHist::default();
+        // 95 fast reads at 13 cycles, 5 slow tail reads at 1000
+        for _ in 0..95 {
+            h.record(13);
+        }
+        for _ in 0..5 {
+            h.record(1000);
+        }
+        let (p50, p95, p99) = (h.percentile(0.5), h.percentile(0.95), h.percentile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "p50 {p50} p95 {p95} p99 {p99}");
+        // bucket resolution: within a factor of ~1.25 of the true value
+        assert!(p50 >= 10.0 && p50 <= 18.0, "p50 {p50}");
+        assert!(p99 >= 750.0 && p99 <= 1300.0, "p99 {p99}");
+    }
+
+    #[test]
+    fn latency_hist_since_subtracts_per_bucket() {
+        let mut warm = LatencyHist::default();
+        warm.record(5);
+        warm.record(100);
+        let mut full = warm;
+        full.record(100);
+        full.record(7);
+        let d = full.since(&warm);
+        assert_eq!(d.count(), 2);
+        assert!((d.mean() - 53.5).abs() < 1e-12);
+        assert!(d.percentile(1.0) > 64.0, "the 100-cycle sample survived");
+    }
+
+    #[test]
+    fn latency_hist_bucket_roundtrip_monotone() {
+        // bucket index must be monotone in the value, and the midpoint
+        // must land inside [value/1.3, value*1.3] for in-range values
+        let mut prev = 0usize;
+        for v in 1..5000u64 {
+            let b = LatencyHist::bucket_of(v);
+            assert!(b >= prev, "bucket order at {v}");
+            prev = b;
+            let mid = LatencyHist::bucket_mid(b);
+            assert!(
+                mid >= v as f64 / 1.3 && mid <= v as f64 * 1.3,
+                "v {v} bucket {b} mid {mid}"
+            );
+        }
     }
 
     #[test]

@@ -26,6 +26,14 @@
 //! writebacks (the migration engine moves data, not compressibility
 //! analysis).
 //!
+//! **Scheduling.**  The expander's device DRAM is a [`DramSim`] like the
+//! host's, so it runs the same per-channel FR-FCFS transaction scheduler
+//! ([`crate::dram::sched`]): device-side write drains (including packed
+//! writebacks and stale-slot invalidates, which fold into drains) queue
+//! behind the same watermark hysteresis, and device queueing shows up in
+//! the far-read tail.  [`TierConfig::far_dram`]`.sched` carries the
+//! expander's knobs; `SimConfig::with_sched` sets host and device alike.
+//!
 //! Every access is charged to exactly one tier, so
 //! `TierStats::total_accesses() == Bandwidth::total()` for a tiered run —
 //! the subsystem's accounting invariant (checked in tests).
@@ -604,6 +612,23 @@ mod tests {
         let total_before = bw.total();
         t.writeback(&gang(fl, [false; 4]), 100, &mut near, &mut o, &mut bw);
         assert_eq!(bw.total(), total_before, "clean unchanged layout: no traffic");
+    }
+
+    #[test]
+    fn far_expander_scheduler_folds_invalidates() {
+        let (mut t, mut near, mut o, mut bw) = setup(true);
+        let fl = page_in(&t, true);
+        // packing a quad issues one block write + three stale-slot
+        // invalidates on the device; they queue in the expander's
+        // write queue, not on the demand path
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw);
+        assert_eq!(t.far_dram.stats.invalidates, 3);
+        assert_eq!(t.far_dram.write_queue_len(0), 4, "device writes queue");
+        // a later far read drains the device queue in its bank-prep
+        // shadow, folding the markers into the packed-block write
+        t.read(fl, 100_000, &mut near, &mut bw);
+        assert_eq!(t.far_dram.write_queue_len(0), 0);
+        assert_eq!(t.far_dram.stats.folded_invalidates, 3);
     }
 
     #[test]

@@ -37,6 +37,32 @@ impl BenchResult {
             self.name, self.p10, self.median, self.p90, thr
         )
     }
+
+    /// One JSON object for the CI bench artifact:
+    /// `{"name": ..., "median_ns": ..., "melem_per_s": ...}`.
+    pub fn json(&self) -> String {
+        let name = self.name.replace('\\', "\\\\").replace('"', "\\\"");
+        match self.elems_per_sec() {
+            Some(t) => format!(
+                "{{\"name\":\"{}\",\"median_ns\":{},\"melem_per_s\":{:.3}}}",
+                name,
+                self.median.as_nanos(),
+                t / 1e6
+            ),
+            None => format!(
+                "{{\"name\":\"{}\",\"median_ns\":{}}}",
+                name,
+                self.median.as_nanos()
+            ),
+        }
+    }
+}
+
+/// Write a bench-result set as a JSON array (the `BENCH_*.json` CI
+/// artifacts that record the repo's perf trajectory).
+pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let body: Vec<String> = results.iter().map(|r| r.json()).collect();
+    std::fs::write(path, format!("[\n  {}\n]\n", body.join(",\n  ")))
 }
 
 /// Benchmark runner with criterion-like defaults.
@@ -131,5 +157,24 @@ mod tests {
         assert!(r.median <= r.p90);
         assert!(r.p10 <= r.median);
         assert!(r.elems_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_line_shape() {
+        let r = BenchResult {
+            name: "sim/\"quoted\"".into(),
+            iters: 1,
+            median: Duration::from_nanos(1500),
+            mean: Duration::from_nanos(1500),
+            p10: Duration::from_nanos(1000),
+            p90: Duration::from_nanos(2000),
+            elements: Some(3_000_000),
+        };
+        let j = r.json();
+        assert!(j.contains("\"median_ns\":1500"), "{j}");
+        assert!(j.contains("melem_per_s"), "{j}");
+        assert!(j.contains("\\\"quoted\\\""), "escaped: {j}");
+        let no_thr = BenchResult { elements: None, ..r };
+        assert!(!no_thr.json().contains("melem_per_s"));
     }
 }

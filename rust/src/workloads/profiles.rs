@@ -24,6 +24,8 @@ pub enum Suite {
     Mix,
     /// Far-memory-pressure set for the tiered-memory evaluation (Fig. T1).
     Far,
+    /// Latency-sensitive set for the scheduler evaluation (Figure Q1).
+    Lat,
 }
 
 impl std::fmt::Display for Suite {
@@ -34,6 +36,7 @@ impl std::fmt::Display for Suite {
             Suite::Gap => write!(f, "GAP"),
             Suite::Mix => write!(f, "MIX"),
             Suite::Far => write!(f, "FAR"),
+            Suite::Lat => write!(f, "LAT"),
         }
     }
 }
@@ -303,6 +306,34 @@ pub fn far_pressure() -> Vec<WorkloadProfile> {
     v
 }
 
+/// Latency-sensitive workloads for the transaction-scheduler evaluation
+/// (Figure Q1).  Low memory-level parallelism and high load dependence
+/// make these *tail-latency-bound*: IPC barely moves with raw bandwidth,
+/// but p95/p99 read latency moves with scheduling policy (queue depth,
+/// write-drain watermarks, row-hit bypass) — which is exactly what the
+/// Q1 exhibit isolates.
+///
+/// * `lat_chase` — a single-chain pointer walk over a large working set:
+///   MLP 1, almost every access a dependent load.  Every miss exposes
+///   queueing, row conflicts, and any write drain in its way.
+/// * `lat_zipf` — zipf-skewed key-value lookups: a tiny hot set keeps a
+///   few rows warm while the cold tail rides behind conflicts — the
+///   p50/p99 split is the signature.
+/// * `lat_wrburst` — read-mostly scans with bursty logging writes:
+///   dependent reads race the write-drain hysteresis, the case the
+///   high/low watermarks exist for.
+pub fn latency_sensitive() -> Vec<WorkloadProfile> {
+    use Suite::*;
+    vec![
+        wl!("lat_chase", Lat, 18.0, 192, 24.0, 0.05, 0.10, 0.35, 0.05, 1, 0.95,
+            [0.08, 0.20, 0.45, 0.02, 0.25]),
+        wl!("lat_zipf", Lat, 12.0, 224, 18.0, 0.10, 0.02, 0.90, 0.10, 2, 0.85,
+            [0.10, 0.30, 0.30, 0.05, 0.25]),
+        wl!("lat_wrburst", Lat, 16.0, 208, 22.0, 0.45, 0.10, 0.40, 0.50, 3, 0.70,
+            [0.12, 0.30, 0.20, 0.08, 0.30]),
+    ]
+}
+
 /// The paper's 27-workload memory-intensive evaluation set
 /// (15 SPEC + 6 GAP + 6 MIX).
 pub fn all27() -> Vec<WorkloadProfile> {
@@ -321,11 +352,12 @@ pub fn all64() -> Vec<WorkloadProfile> {
 }
 
 /// Look up a profile by name across the full set (including the
-/// far-memory-pressure set).
+/// far-memory-pressure and latency-sensitive sets).
 pub fn by_name(name: &str) -> Option<WorkloadProfile> {
     all64()
         .into_iter()
         .chain(far_pressure())
+        .chain(latency_sensitive())
         .find(|w| w.name == name)
 }
 
@@ -407,6 +439,23 @@ mod tests {
         // the far set must not leak into the paper's evaluation sets
         for w in all64() {
             assert_ne!(w.suite, Suite::Far);
+        }
+    }
+
+    #[test]
+    fn latency_set_well_formed() {
+        let lat = latency_sensitive();
+        assert!(lat.len() >= 3, "at least 3 latency-sensitive profiles");
+        for w in &lat {
+            assert_eq!(w.suite, Suite::Lat);
+            assert!(by_name(w.name).is_some(), "{} resolvable", w.name);
+            assert!(w.mlp <= 3, "{}: scheduling-dominated means low MLP", w.name);
+            assert!(w.p_dep >= 0.7, "{}: dependent-load heavy", w.name);
+            assert!(w.footprint_mb * 1024 * 1024 / 64 > 128 * 1024, "{}: footprint >> LLC", w.name);
+        }
+        // the latency set must not leak into the paper's evaluation sets
+        for w in all64() {
+            assert_ne!(w.suite, Suite::Lat);
         }
     }
 }

@@ -175,6 +175,55 @@ fn private_caches_filter_llc_traffic() {
 }
 
 #[test]
+fn latency_histogram_counts_demand_reads_across_designs() {
+    // the Figure Q1 accounting invariant: one latency sample per demand
+    // read, under every design family (flat, metadata, CRAM, tiered)
+    for design in [
+        Design::Uncompressed,
+        Design::Explicit { row_opt: false },
+        Design::Dynamic,
+        Design::NextLinePrefetch,
+        Design::Tiered { far_compressed: true },
+    ] {
+        let r = run("sphinx", design, 200_000);
+        assert_eq!(
+            r.read_lat.count(),
+            r.bw.demand_reads,
+            "{}: histogram count vs demand reads",
+            r.design
+        );
+    }
+}
+
+#[test]
+fn latency_sensitive_workloads_expose_the_tail() {
+    // the lat_* profiles exist to make scheduling visible: dependent
+    // pointer chases must show a p99 well above p50
+    let r = run("lat_chase", Design::Uncompressed, 300_000);
+    assert!(r.mpki() > 1.0, "lat_chase misses: {}", r.mpki());
+    let (p50, p99) = (r.read_lat.percentile(0.5), r.read_lat.percentile(0.99));
+    assert!(
+        p99 > p50,
+        "pointer chase has a distinguishable tail: p50 {p50} p99 {p99}"
+    );
+    assert!(r.read_lat.count() == r.bw.demand_reads);
+}
+
+#[test]
+fn explicit_metadata_stretches_the_tail_on_scattered_reads() {
+    // xz thrashes the 32KB metadata cache, serializing a metadata read
+    // in front of demand reads — that must show up in read latency
+    let base = run("xz", Design::Uncompressed, 300_000);
+    let explicit = run("xz", Design::Explicit { row_opt: false }, 300_000);
+    assert!(
+        explicit.read_lat.mean() > base.read_lat.mean(),
+        "serialized metadata lookups must raise mean read latency: {} vs {}",
+        explicit.read_lat.mean(),
+        base.read_lat.mean()
+    );
+}
+
+#[test]
 fn cpack_algo_set_runs_end_to_end() {
     let p = by_name("omnet17").unwrap();
     let mut cfg = SimConfig::default()
