@@ -1,18 +1,21 @@
 //! End-to-end simulator throughput per memory-system design.
 //!
-//! The L3 perf target (DESIGN.md §Perf): the simulator must sustain
-//! millions of LLC accesses per second so the full evaluation matrix is
-//! tractable on one core.  Run: `cargo bench --bench simulator`
+//! The L3 perf target (DESIGN.md §Simulation performance): the simulator
+//! must sustain millions of LLC accesses per second so the full
+//! evaluation matrix is tractable on one core.  Run:
+//! `cargo bench --bench simulator`
+//!
+//! The matrix itself lives in `coordinator::bench::run_sim_matrix` and is
+//! shared with `repro bench`, whose `--check` flag gates regressions
+//! against the committed `BENCH_sim.json` baseline.
 //!
 //! Knobs (for the CI bench job):
 //! * `CRAM_BENCH_INSTS` — instructions per core per run (default 400000)
 //! * `BENCH_JSON` — where to write the JSON result array
 //!   (default `BENCH_sim.json`; name/median ns/Melem-per-s per entry)
 
-use cram::controller::Design;
-use cram::sim::{simulate, SimConfig};
-use cram::util::bench::{black_box, write_json, BenchResult, Bencher};
-use cram::workloads::profiles::by_name;
+use cram::coordinator::bench::run_sim_matrix;
+use cram::util::bench::{write_json, Bencher};
 
 fn main() {
     let b = Bencher::quick();
@@ -22,29 +25,7 @@ fn main() {
         .unwrap_or(400_000);
     let json_path =
         std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_sim.json".into());
-    let mut results: Vec<BenchResult> = Vec::new();
-
-    for wl in ["libq", "pr_twi"] {
-        println!("# simulator — {wl}, {insts} insts/core x8 cores (+= equal warmup)");
-        let profile = by_name(wl).unwrap();
-        for design in [
-            Design::Uncompressed,
-            Design::Ideal,
-            Design::Explicit { row_opt: false },
-            Design::Implicit,
-            Design::Dynamic,
-            Design::NextLinePrefetch,
-        ] {
-            let cfg = SimConfig::default().with_design(design).with_insts(insts);
-            // throughput denominator: total instructions simulated
-            let elems = insts * 8 * 2; // warmup + measure
-            results.push(b.run(&format!("{wl}/{}", design.name()), Some(elems), || {
-                black_box(simulate(&profile, &cfg));
-            }));
-        }
-        println!();
-    }
-
+    let results = run_sim_matrix(insts, &b);
     write_json(&json_path, &results).expect("write bench json");
     println!("wrote {} results to {json_path}", results.len());
 }

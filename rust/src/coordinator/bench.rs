@@ -1,0 +1,49 @@
+//! The simulator throughput matrix — one definition shared by the
+//! `cargo bench --bench simulator` target and the `repro bench` CLI
+//! subcommand, so the CI bench job and the local regression gate measure
+//! exactly the same thing.
+//!
+//! Throughput is reported in Melem/s where an element is one simulated
+//! instruction (warmup + measurement phases, all cores); `BENCH_sim.json`
+//! records the trajectory and `repro bench --check` fails the run when
+//! the median regresses beyond tolerance (DESIGN.md §Simulation
+//! performance).
+
+use crate::controller::Design;
+use crate::sim::{simulate, SimConfig};
+use crate::util::bench::{black_box, BenchResult, Bencher};
+use crate::workloads::profiles::by_name;
+
+/// Workloads in the matrix: one streaming/compressible, one graph/
+/// incompressible — the two ends of the simulator's behaviour space.
+pub const BENCH_WORKLOADS: [&str; 2] = ["libq", "pr_twi"];
+
+/// Every core design (the tiered designs run their own exhibit).
+pub const BENCH_DESIGNS: [Design; 6] = [
+    Design::Uncompressed,
+    Design::Ideal,
+    Design::Explicit { row_opt: false },
+    Design::Implicit,
+    Design::Dynamic,
+    Design::NextLinePrefetch,
+];
+
+/// Run the full (workload × design) simulator bench matrix at
+/// `insts` instructions per core.
+pub fn run_sim_matrix(insts: u64, b: &Bencher) -> Vec<BenchResult> {
+    let mut results: Vec<BenchResult> = Vec::new();
+    for wl in BENCH_WORKLOADS {
+        println!("# simulator — {wl}, {insts} insts/core x8 cores (+= equal warmup)");
+        let profile = by_name(wl).expect("bench workload exists");
+        for design in BENCH_DESIGNS {
+            let cfg = SimConfig::default().with_design(design).with_insts(insts);
+            // throughput denominator: total instructions simulated
+            let elems = insts * 8 * 2; // warmup + measure
+            results.push(b.run(&format!("{wl}/{}", design.name()), Some(elems), || {
+                black_box(simulate(&profile, &cfg));
+            }));
+        }
+        println!();
+    }
+    results
+}

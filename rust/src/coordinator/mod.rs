@@ -6,6 +6,7 @@
 //! reproduce-all` regenerates the complete evaluation section.
 
 pub mod ablation;
+pub mod bench;
 pub mod figures;
 pub mod runner;
 

@@ -326,6 +326,48 @@ fn main() {
                 print!("{}", r.render());
             }
         }
+        "bench" => {
+            // `repro bench` — the simulator throughput matrix + regression
+            // gate, runnable locally and by the CI bench job:
+            //   repro bench [--insts N] [--json OUT]
+            //               [--check [BASELINE]] [--current FILE]
+            //               [--tolerance PCT]
+            // --check compares the run (or --current, a previously written
+            // BENCH_*.json, skipping the re-run) against BASELINE (default
+            // BENCH_sim.json) and exits 1 on a >PCT% median Melem/s drop.
+            let tolerance: f64 = flags
+                .get("tolerance")
+                .map(|v| v.parse().expect("--tolerance must be a number"))
+                .unwrap_or(15.0);
+            let melems: Vec<f64> = if let Some(cur) = flags.get("current") {
+                let text = std::fs::read_to_string(cur)
+                    .unwrap_or_else(|e| usage(&format!("cannot read --current {cur}: {e}")));
+                cram::util::bench::read_json_melems(&text)
+            } else {
+                let insts: u64 = flags
+                    .get("insts")
+                    .map(|v| v.parse().expect("--insts must be an integer"))
+                    .unwrap_or(150_000);
+                let b = cram::util::bench::Bencher::quick();
+                let results = cram::coordinator::bench::run_sim_matrix(insts, &b);
+                if let Some(path) = flags.get("json") {
+                    cram::util::bench::write_json(path, &results).expect("write bench json");
+                    println!("wrote {} results to {path}", results.len());
+                }
+                results.iter().filter_map(|r| r.elems_per_sec()).map(|t| t / 1e6).collect()
+            };
+            if let Some(check) = flags.get("check") {
+                let baseline =
+                    if check == "true" { "BENCH_sim.json" } else { check.as_str() };
+                match cram::util::bench::check_regression(baseline, &melems, tolerance) {
+                    Ok(msg) => println!("{msg}"),
+                    Err(msg) => {
+                        eprintln!("{msg}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
         "list" => {
             println!("designs:");
             for d in CORE_DESIGNS.iter().chain(TIERED_DESIGNS.iter()) {
@@ -354,7 +396,7 @@ fn usage(msg: &str) -> ! {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|all> [--insts N]\n  repro list\n\ntiered designs (figure t1): tiered-uncomp, tiered-cram — near DDR + far CXL\nexpander; --far-ratio R puts fraction R of capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ntiered designs (figure t1): tiered-uncomp, tiered-cram — near DDR + far CXL\nexpander; --far-ratio R puts fraction R of capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline (exit 1)"
     );
     std::process::exit(2);
 }

@@ -65,6 +65,80 @@ pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
     std::fs::write(path, format!("[\n  {}\n]\n", body.join(",\n  ")))
 }
 
+/// Extract every `melem_per_s` value from a `BENCH_*.json` body (the
+/// format [`write_json`] emits; a full JSON parser would be a dependency
+/// this crate deliberately avoids).
+pub fn read_json_melems(text: &str) -> Vec<f64> {
+    let key = "\"melem_per_s\":";
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(i) = rest.find(key) {
+        rest = &rest[i + key.len()..];
+        let end = rest
+            .find(|c: char| c == ',' || c == '}')
+            .unwrap_or(rest.len());
+        if let Ok(v) = rest[..end].trim().parse::<f64>() {
+            out.push(v);
+        }
+        rest = &rest[end..];
+    }
+    out
+}
+
+/// Median of a non-empty value set.
+pub fn median(mut xs: Vec<f64>) -> f64 {
+    assert!(!xs.is_empty(), "median of empty set");
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("no NaN throughputs"));
+    xs[xs.len() / 2]
+}
+
+/// The bench regression gate (`repro bench --check`, run by CI and
+/// locally): compare the median Melem/s of `current` against the
+/// committed baseline at `baseline_path`, failing when throughput
+/// regressed by more than `tolerance_pct` percent.
+///
+/// A missing or throughput-free baseline is a *bootstrap pass* (the gate
+/// reports how to record one) so the job stays green on branches created
+/// before the baseline landed.
+pub fn check_regression(
+    baseline_path: &str,
+    current_melems: &[f64],
+    tolerance_pct: f64,
+) -> Result<String, String> {
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(_) => {
+            return Ok(format!(
+                "bench check: no baseline at {baseline_path} — bootstrap pass \
+                 (record one with `repro bench --json {baseline_path}` and commit it)"
+            ))
+        }
+    };
+    let base = read_json_melems(&text);
+    if base.is_empty() {
+        return Ok(format!(
+            "bench check: baseline {baseline_path} has no melem_per_s entries — bootstrap pass"
+        ));
+    }
+    if current_melems.is_empty() {
+        return Err("bench check: current run produced no throughput entries".into());
+    }
+    let base_med = median(base);
+    let cur_med = median(current_melems.to_vec());
+    let floor = base_med * (1.0 - tolerance_pct / 100.0);
+    let delta = (cur_med / base_med - 1.0) * 100.0;
+    if cur_med < floor {
+        Err(format!(
+            "bench check FAILED: median {cur_med:.2} Melem/s vs baseline {base_med:.2} \
+             ({delta:+.1}%, tolerance -{tolerance_pct:.0}%)"
+        ))
+    } else {
+        Ok(format!(
+            "bench check OK: median {cur_med:.2} Melem/s vs baseline {base_med:.2} ({delta:+.1}%)"
+        ))
+    }
+}
+
 /// Benchmark runner with criterion-like defaults.
 pub struct Bencher {
     warmup: Duration,
@@ -157,6 +231,60 @@ mod tests {
         assert!(r.median <= r.p90);
         assert!(r.p10 <= r.median);
         assert!(r.elems_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn read_json_melems_roundtrips_write_json() {
+        let mk = |name: &str, melems: Option<u64>| BenchResult {
+            name: name.into(),
+            iters: 1,
+            median: Duration::from_millis(1),
+            mean: Duration::from_millis(1),
+            p10: Duration::from_millis(1),
+            p90: Duration::from_millis(1),
+            elements: melems,
+        };
+        // 2000 elems / 1ms = 2 Melem/s; 5000 -> 5 Melem/s
+        let results = vec![mk("a", Some(2_000)), mk("b", None), mk("c", Some(5_000))];
+        let path = std::env::temp_dir().join("cram_bench_rt.json");
+        let path = path.to_str().unwrap().to_string();
+        write_json(&path, &results).unwrap();
+        let melems = read_json_melems(&std::fs::read_to_string(&path).unwrap());
+        assert_eq!(melems.len(), 2, "entries without throughput are skipped");
+        assert!((melems[0] - 2.0).abs() < 1e-9 && (melems[1] - 5.0).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn median_is_positional() {
+        assert_eq!(median(vec![3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(vec![4.0, 1.0]), 4.0); // upper median
+    }
+
+    #[test]
+    fn regression_gate_passes_within_tolerance_and_fails_beyond() {
+        let path = std::env::temp_dir().join("cram_bench_base.json");
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(
+            &path,
+            "[\n  {\"name\":\"x\",\"median_ns\":1,\"melem_per_s\":10.000}\n]\n",
+        )
+        .unwrap();
+        // -10% with 15% tolerance: pass
+        assert!(check_regression(&path, &[9.0], 15.0).is_ok());
+        // -20%: fail
+        let err = check_regression(&path, &[8.0], 15.0).unwrap_err();
+        assert!(err.contains("FAILED"), "{err}");
+        // improvement: pass
+        assert!(check_regression(&path, &[30.0], 15.0).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn regression_gate_bootstraps_without_baseline() {
+        let msg =
+            check_regression("/nonexistent/cram/BENCH.json", &[1.0], 15.0).unwrap();
+        assert!(msg.contains("bootstrap"), "{msg}");
     }
 
     #[test]
