@@ -10,6 +10,7 @@
 //!   out all members, avoiding read-modify-write of packed lines.
 
 use crate::mem::{group_base, GROUP_LINES};
+use crate::util::small::InlineVec;
 
 /// Cache geometry.
 #[derive(Clone, Copy, Debug)]
@@ -38,7 +39,7 @@ pub struct AccessInfo {
 }
 
 /// An evicted line with everything the memory controller needs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub struct Evicted {
     pub line_addr: u64,
     pub dirty: bool,
@@ -229,12 +230,17 @@ impl SetAssocCache {
     }
 
     /// Ganged eviction: force out every resident member of `line_addr`'s
-    /// group (including the line itself).  Order is slot order.
-    pub fn evict_group(&mut self, line_addr: u64) -> Vec<Evicted> {
+    /// group (including the line itself).  Order is slot order.  Returns
+    /// an inline (heap-free) gang — a group has at most four members.
+    pub fn evict_group(&mut self, line_addr: u64) -> InlineVec<Evicted, 4> {
         let base = group_base(line_addr);
-        (0..GROUP_LINES)
-            .filter_map(|i| self.invalidate(base + i))
-            .collect()
+        let mut gang = InlineVec::new();
+        for i in 0..GROUP_LINES {
+            if let Some(e) = self.invalidate(base + i) {
+                gang.push(e);
+            }
+        }
+        gang
     }
 
     /// Which members of the group are currently resident (slot mask).

@@ -98,20 +98,75 @@ pub fn fits(line: &CacheLine, m: BdiMode) -> bool {
     }
 }
 
-/// Best (smallest) applicable mode, or `None` if nothing fits.
+/// One pass over the qword view: fit flags for every 8-byte-base mode
+/// (Zeros, Rep8, B8D1, B8D2, B8D4).  Equivalent to five [`fits`] calls.
+#[inline]
+fn qword_flags(line: &CacheLine) -> (bool, bool, bool, bool, bool) {
+    let q = line.qwords();
+    let base = q[0];
+    let (mut zeros, mut rep) = (true, true);
+    let (mut d1, mut d2, mut d4) = (true, true, true);
+    for &v in &q {
+        zeros &= v == 0;
+        rep &= v == base;
+        let d = v.wrapping_sub(base) as i64;
+        d1 &= d as i8 as i64 == d;
+        d2 &= d as i16 as i64 == d;
+        d4 &= d as i32 as i64 == d;
+    }
+    (zeros, rep, d1, d2, d4)
+}
+
+/// One pass over the word view: fit flags for B4D1 and B4D2.
+#[inline]
+fn word_flags(line: &CacheLine) -> (bool, bool) {
+    let w = line.words();
+    let base = w[0];
+    let (mut d1, mut d2) = (true, true);
+    for &v in w {
+        let d = v.wrapping_sub(base) as i32;
+        d1 &= d as i8 as i32 == d;
+        d2 &= d as i16 as i32 == d;
+    }
+    (d1, d2)
+}
+
+/// Best (smallest) applicable mode, or `None` if nothing fits — the
+/// size-only fast path: mode search in ascending-size order over fused
+/// single-pass fit analyses, early-exiting at the first fitting mode (the
+/// common classes resolve from the qword pass alone; the word and
+/// halfword views are only scanned when a cheaper mode missed).
+/// Bit-identical to probing [`fits`] per mode in ascending-size order
+/// (Zeros 1, Rep8 8, B8D1 16, B4D1 20, B8D2 24, B2D1 34, B4D2 36,
+/// B8D4 40) — pinned by `size_only_agrees_with_fits_probe`.
 pub fn best_mode(line: &CacheLine) -> Option<BdiMode> {
-    // Sorted by ascending size; first hit wins.
-    const BY_SIZE: [BdiMode; 8] = [
-        BdiMode::Zeros, // 1
-        BdiMode::Rep8,  // 8
-        BdiMode::B8D1,  // 16
-        BdiMode::B4D1,  // 20
-        BdiMode::B8D2,  // 24
-        BdiMode::B2D1,  // 34
-        BdiMode::B4D2,  // 36
-        BdiMode::B8D4,  // 40
-    ];
-    BY_SIZE.into_iter().find(|&m| fits(line, m))
+    let (zeros, rep, d1, d2, d4) = qword_flags(line);
+    if zeros {
+        return Some(BdiMode::Zeros); // 1 B
+    }
+    if rep {
+        return Some(BdiMode::Rep8); // 8 B
+    }
+    if d1 {
+        return Some(BdiMode::B8D1); // 16 B
+    }
+    let (w1, w2) = word_flags(line);
+    if w1 {
+        return Some(BdiMode::B4D1); // 20 B
+    }
+    if d2 {
+        return Some(BdiMode::B8D2); // 24 B
+    }
+    if fits(line, BdiMode::B2D1) {
+        return Some(BdiMode::B2D1); // 34 B
+    }
+    if w2 {
+        return Some(BdiMode::B4D2); // 36 B
+    }
+    if d4 {
+        return Some(BdiMode::B8D4); // 40 B
+    }
+    None
 }
 
 /// BDI compressed size in bytes; 64 if nothing fits.
@@ -277,6 +332,100 @@ mod tests {
         let line = CacheLine::from_words(w);
         assert_eq!(size_bytes(&line), 64);
         assert_eq!(best_mode(&line), None);
+    }
+
+    /// Reference oracle for the fused fast path: probe [`fits`] per mode
+    /// in ascending-size order (the pre-optimization implementation).
+    fn best_mode_by_probe(line: &CacheLine) -> Option<BdiMode> {
+        const BY_SIZE: [BdiMode; 8] = [
+            BdiMode::Zeros,
+            BdiMode::Rep8,
+            BdiMode::B8D1,
+            BdiMode::B4D1,
+            BdiMode::B8D2,
+            BdiMode::B2D1,
+            BdiMode::B4D2,
+            BdiMode::B8D4,
+        ];
+        BY_SIZE.into_iter().find(|&m| fits(line, m))
+    }
+
+    #[test]
+    fn size_only_agrees_with_fits_probe() {
+        // mode-targeted lines plus raw random ones: the single-pass mode
+        // search must pick exactly what the per-mode probe picks
+        forall("bdi fast path == probe", 2048, |rng| {
+            let line = targeted_line(rng);
+            assert_eq!(best_mode(&line), best_mode_by_probe(&line), "{line:?}");
+            let raw = CacheLine::from_words(core::array::from_fn(|_| rng.next_u32()));
+            assert_eq!(best_mode(&raw), best_mode_by_probe(&raw), "{raw:?}");
+        });
+    }
+
+    #[test]
+    fn size_only_agrees_with_materializing_encoder_all_modes() {
+        // For every mode and many lines: the size-only path must report
+        // exactly the byte length the materializing encoder produces.
+        forall("bdi size == encode len", 1024, |rng| {
+            let line = targeted_line(rng);
+            if let Some(m) = best_mode(&line) {
+                assert_eq!(size_bytes(&line), m.size_bytes(), "mode {m:?}");
+                assert_eq!(encode(&line, m).len() as u32, size_bytes(&line));
+            } else {
+                assert_eq!(size_bytes(&line), 64);
+            }
+            // and for every mode that fits (not just the best one)
+            for m in BdiMode::ALL {
+                if fits(&line, m) {
+                    assert_eq!(encode(&line, m).len() as u32, m.size_bytes());
+                    assert_eq!(decode(&encode(&line, m), m), line);
+                }
+            }
+        });
+    }
+
+    /// A line biased toward a randomly chosen BDI mode (same generators as
+    /// `roundtrip_every_mode`).
+    fn targeted_line(rng: &mut crate::util::rng::Rng) -> CacheLine {
+        let m = BdiMode::ALL[rng.below(8) as usize];
+        match m {
+            BdiMode::Zeros => CacheLine::zero(),
+            BdiMode::Rep8 => CacheLine::from_qwords([rng.next_u64(); 8]),
+            BdiMode::B8D1 | BdiMode::B8D2 | BdiMode::B8D4 => {
+                let bits = match m {
+                    BdiMode::B8D1 => 7,
+                    BdiMode::B8D2 => 15,
+                    _ => 31,
+                };
+                let base = rng.next_u64();
+                CacheLine::from_qwords(core::array::from_fn(|_| {
+                    let d =
+                        (rng.next_u64() & ((1 << bits) - 1)) as i64 - (1i64 << (bits - 1));
+                    base.wrapping_add(d as u64)
+                }))
+            }
+            BdiMode::B4D1 | BdiMode::B4D2 => {
+                let bits = if m == BdiMode::B4D1 { 7 } else { 15 };
+                let base = rng.next_u32();
+                CacheLine::from_words(core::array::from_fn(|_| {
+                    let d =
+                        (rng.next_u32() & ((1 << bits) - 1)) as i32 - (1i32 << (bits - 1));
+                    base.wrapping_add(d as u32)
+                }))
+            }
+            BdiMode::B2D1 => {
+                let base = rng.next_u32() as u16;
+                let h: [u16; 32] = core::array::from_fn(|_| {
+                    let d = (rng.next_u32() & 0x7F) as i32 - 64;
+                    base.wrapping_add(d as u16)
+                });
+                let mut w = [0u32; 16];
+                for i in 0..16 {
+                    w[i] = h[2 * i] as u32 | ((h[2 * i + 1] as u32) << 16);
+                }
+                CacheLine::from_words(w)
+            }
+        }
     }
 
     #[test]

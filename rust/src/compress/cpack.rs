@@ -27,6 +27,42 @@ use crate::mem::CacheLine;
 
 const DICT_WORDS: usize = 16;
 
+/// Smallest possible C-Pack output: 16 zero words × 2 bits = 4 bytes.
+/// Lets the hybrid selector skip the C-Pack pass when FPC/BDI already
+/// produced a size it cannot beat.
+pub const MIN_SIZE: u32 = 4;
+
+/// Fixed-capacity FIFO dictionary (the hardware's 16-word structure) —
+/// no heap allocation on the size-only path.
+struct Dict {
+    words: [u32; DICT_WORDS],
+    len: usize,
+}
+
+impl Dict {
+    #[inline]
+    fn new() -> Self {
+        Self { words: [0; DICT_WORDS], len: 0 }
+    }
+
+    #[inline]
+    fn as_slice(&self) -> &[u32] {
+        &self.words[..self.len]
+    }
+
+    /// FIFO push of the last 16 dictionary-eligible words.
+    #[inline]
+    fn push(&mut self, w: u32) {
+        if self.len == DICT_WORDS {
+            self.words.copy_within(1.., 0);
+            self.words[DICT_WORDS - 1] = w;
+        } else {
+            self.words[self.len] = w;
+            self.len += 1;
+        }
+    }
+}
+
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 enum Code {
     Zero,
@@ -67,14 +103,6 @@ fn classify(w: u32, dict: &[u32]) -> Code {
     Code::Raw
 }
 
-fn push_dict(dict: &mut Vec<u32>, w: u32) {
-    // FIFO of the last 16 dictionary-eligible words
-    if dict.len() == DICT_WORDS {
-        dict.remove(0);
-    }
-    dict.push(w);
-}
-
 fn code_bits(c: Code) -> u32 {
     match c {
         Code::Zero => 2,
@@ -86,15 +114,17 @@ fn code_bits(c: Code) -> u32 {
     }
 }
 
-/// C-Pack compressed size in bytes.
+/// C-Pack compressed size in bytes — the size-only fast path: one pass,
+/// fixed-array dictionary, no heap allocation, no bitstream built.
+/// `size_bytes(line) == encode(line).len()` always (pinned by tests).
 pub fn size_bytes(line: &CacheLine) -> u32 {
-    let mut dict: Vec<u32> = Vec::with_capacity(DICT_WORDS);
+    let mut dict = Dict::new();
     let mut bits = 0u32;
     for &w in line.words() {
-        let c = classify(w, &dict);
+        let c = classify(w, dict.as_slice());
         bits += code_bits(c);
         if !matches!(c, Code::Zero | Code::LowByte) {
-            push_dict(&mut dict, w);
+            dict.push(w);
         }
     }
     bits.div_ceil(8)
@@ -102,10 +132,10 @@ pub fn size_bytes(line: &CacheLine) -> u32 {
 
 /// Encode a line to its C-Pack bitstream.
 pub fn encode(line: &CacheLine) -> Vec<u8> {
-    let mut dict: Vec<u32> = Vec::with_capacity(DICT_WORDS);
+    let mut dict = Dict::new();
     let mut out = BitWriter::new();
     for &w in line.words() {
-        let c = classify(w, &dict);
+        let c = classify(w, dict.as_slice());
         // prefix code, emitted selector-first (the BitWriter is LSB-first,
         // so each field is pushed separately in decode order)
         match c {
@@ -137,7 +167,7 @@ pub fn encode(line: &CacheLine) -> Vec<u8> {
             }
         }
         if !matches!(c, Code::Zero | Code::LowByte) {
-            push_dict(&mut dict, w);
+            dict.push(w);
         }
     }
     out.into_bytes()
@@ -150,7 +180,7 @@ pub fn decode(bytes: &[u8]) -> CacheLine {
 
 /// Decode and report bytes consumed (for back-to-back packed payloads).
 pub fn decode_with_len(bytes: &[u8]) -> (CacheLine, usize) {
-    let mut dict: Vec<u32> = Vec::with_capacity(DICT_WORDS);
+    let mut dict = Dict::new();
     let mut r = BitReader::new(bytes);
     let mut words = [0u32; 16];
     for w in &mut words {
@@ -160,19 +190,19 @@ pub fn decode_with_len(bytes: &[u8]) -> (CacheLine, usize) {
             1 => (r.pull(32), true),
             2 => {
                 let i = r.pull(4) as usize;
-                (dict[i], true)
+                (dict.as_slice()[i], true)
             }
             3 => match r.pull(2) {
                 0 => {
                     let i = r.pull(4) as usize;
                     let low = r.pull(16);
-                    ((dict[i] & 0xFFFF_0000) | low, true)
+                    ((dict.as_slice()[i] & 0xFFFF_0000) | low, true)
                 }
                 1 => (r.pull(8), false),
                 2 => {
                     let i = r.pull(4) as usize;
                     let low = r.pull(8);
-                    ((dict[i] & 0xFFFF_FF00) | low, true)
+                    ((dict.as_slice()[i] & 0xFFFF_FF00) | low, true)
                 }
                 _ => unreachable!("extended code 3 unused"),
             },
@@ -180,7 +210,7 @@ pub fn decode_with_len(bytes: &[u8]) -> (CacheLine, usize) {
         };
         *w = value;
         if dict_eligible {
-            push_dict(&mut dict, value);
+            dict.push(value);
         }
     }
     (CacheLine::from_words(words), r.bits_read().div_ceil(8))

@@ -21,6 +21,11 @@
 use crate::compress::bits::{BitReader, BitWriter};
 use crate::mem::CacheLine;
 
+/// Smallest possible FPC output: 16 words × 3 prefix bits = 48 bits.
+/// The hybrid selector uses this floor to skip the FPC pass entirely when
+/// BDI already produced a size FPC cannot beat.
+pub const MIN_SIZE: u32 = 6;
+
 /// True if `v` (as i32) fits in `bits` bits sign-extended.
 #[inline]
 fn se_fits(v: i32, bits: u32) -> bool {

@@ -37,18 +37,35 @@ impl CompressedLine {
 
 /// Hybrid compressed size in bytes; [`RAW_SIZE`] (=64) means raw.
 /// (Canonical FPC+BDI — bit-identical to the L1 kernel / jnp oracle.)
+///
+/// Size-only fast path: algorithms run in hit-rate order and later passes
+/// are skipped when an earlier result already reaches the later
+/// algorithm's output floor.  BDI goes first — its floor (1 B, the Zeros
+/// mode that dominates real heaps) is far below FPC's 6 B floor, so a
+/// strong BDI hit proves FPC cannot win and the common case runs one
+/// algorithm, not two.  The skip is exact, never heuristic: results are
+/// bit-identical to evaluating everything and taking the min.
 pub fn compressed_size(line: &CacheLine) -> u32 {
-    let f = fpc::size_bytes(line);
     let b = bdi::size_bytes(line);
+    if b <= fpc::MIN_SIZE {
+        return 1 + b; // <= 7: already compressed, FPC can't beat it
+    }
+    let f = fpc::size_bytes(line);
     (1 + f.min(b)).min(RAW_SIZE)
 }
 
-/// Hybrid size under a configurable algorithm set.
+/// Hybrid size under a configurable algorithm set (same exact-skip
+/// ordering: the C-Pack pass only runs when FPC/BDI left room above the
+/// C-Pack output floor).
 pub fn compressed_size_with(line: &CacheLine, set: AlgoSet) -> u32 {
     match set {
         AlgoSet::FpcBdi => compressed_size(line),
         AlgoSet::FpcBdiCpack => {
-            compressed_size(line).min((1 + cpack::size_bytes(line)).min(RAW_SIZE))
+            let fb = compressed_size(line);
+            if fb <= 1 + cpack::MIN_SIZE {
+                return fb; // C-Pack's best possible can't improve on this
+            }
+            fb.min((1 + cpack::size_bytes(line)).min(RAW_SIZE))
         }
     }
 }
@@ -169,6 +186,23 @@ mod tests {
                 Some(c) => assert_eq!(c.size(), size),
                 None => assert_eq!(size, RAW_SIZE),
             }
+        });
+    }
+
+    #[test]
+    fn ordered_fast_path_is_exact() {
+        // the hit-rate-ordered selector with floor-based skips must equal
+        // the exhaustive min over every algorithm, on every line
+        forall("hybrid skip exactness", 1024, |rng| {
+            let line = random_line(rng);
+            let f = fpc::size_bytes(&line);
+            let b = bdi::size_bytes(&line);
+            let c = cpack::size_bytes(&line);
+            assert_eq!(compressed_size(&line), (1 + f.min(b)).min(RAW_SIZE));
+            assert_eq!(
+                compressed_size_with(&line, AlgoSet::FpcBdiCpack),
+                (1 + f.min(b).min(c)).min(RAW_SIZE)
+            );
         });
     }
 

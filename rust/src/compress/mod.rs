@@ -10,6 +10,15 @@
 //! needs real *bitstreams*: the compressed-store substrate packs actual
 //! bytes into physical lines, and the round-trip `decode(encode(x)) == x`
 //! is a property-test target.
+//!
+//! **Size-only contract** (DESIGN.md §Simulation performance): every
+//! compressor exposes a `size_bytes` fast path that runs in a single pass
+//! with no heap allocation and no bitstream materialization, and must
+//! report exactly the byte length its materializing `encode` would
+//! produce.  The timing simulator only ever calls the size path; `encode`
+//! / `decode` serve the byte-accurate store and the round-trip tests.
+//! Property tests in each module (and `rust/tests/store_invariants.rs`)
+//! pin the size/encode agreement for all compressors and all BDI modes.
 
 pub mod bdi;
 pub mod bits;

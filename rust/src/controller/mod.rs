@@ -16,16 +16,15 @@
 //! | `NextLinePrefetch` | Table V baseline |
 //! | `Tiered` | Figure T1: near DDR + far CXL expander (`tier` module) |
 
-use std::collections::HashMap;
-
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::group::{possible_locations, Csi};
 use crate::cram::llp::LineLocationPredictor;
 use crate::cram::metadata::{MetaAccess, MetadataStore};
 use crate::dram::{DramSim, ReqKind};
-use crate::mem::{group_base, page_of_line};
+use crate::mem::{group_base, group_of, page_of_line, PagedArena};
 use crate::stats::{Bandwidth, LatencyHist};
 use crate::tier::{TierConfig, TieredMemory};
+use crate::util::small::InlineVec;
 use crate::workloads::SizeOracle;
 
 /// Which memory-system design the controller implements.
@@ -68,7 +67,7 @@ impl Design {
 }
 
 /// A line the LLC should install after a read.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct Install {
     pub line_addr: u64,
     /// Prior-compressibility tag bits (0/1/2).
@@ -77,19 +76,25 @@ pub struct Install {
     pub prefetch: bool,
 }
 
+/// Install list of one read: at most the four lines of a group, inline
+/// (no heap allocation per LLC miss).
+pub type Installs = InlineVec<Install, 4>;
+
 /// Outcome of a demand read.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct ReadOutcome {
     /// CPU-visible completion time (bus cycles) of the demanded data.
     pub done: u64,
-    pub installs: Vec<Install>,
+    pub installs: Installs,
 }
 
 /// The memory controller.
 pub struct MemoryController {
     pub design: Design,
-    /// Current physical layout per group (what is actually in DRAM).
-    mem_csi: HashMap<u64, Csi>,
+    /// Current physical layout per group index (what is actually in DRAM)
+    /// — a paged arena: O(1) shifted-address indexing, no hashing on the
+    /// per-access path.
+    mem_csi: PagedArena<Csi>,
     pub llp: LineLocationPredictor,
     pub meta: Option<MetadataStore>,
     pub dynamic: Option<DynamicCram>,
@@ -161,7 +166,7 @@ impl MemoryController {
         Self {
             design,
             tier,
-            mem_csi: HashMap::new(),
+            mem_csi: PagedArena::new(Csi::Uncompressed),
             llp: LineLocationPredictor::new(llp_entries, 0xD1CE),
             meta,
             dynamic,
@@ -176,7 +181,7 @@ impl MemoryController {
 
     #[inline]
     fn csi_of(&self, line: u64) -> Csi {
-        *self.mem_csi.get(&group_base(line)).unwrap_or(&Csi::Uncompressed)
+        self.mem_csi.copied_or_default(group_of(line))
     }
 
     /// Demand read of `line` for `core` at bus-cycle `now`.
@@ -215,7 +220,11 @@ impl MemoryController {
                 let done = dram.access(line, ReqKind::Read, now, false);
                 ReadOutcome {
                     done,
-                    installs: vec![Install { line_addr: line, level: 0, prefetch: false }],
+                    installs: Installs::of(&[Install {
+                        line_addr: line,
+                        level: 0,
+                        prefetch: false,
+                    }]),
                 }
             }
             Design::Tiered { .. } => {
@@ -237,10 +246,10 @@ impl MemoryController {
                 self.prefetch_installed += 1;
                 ReadOutcome {
                     done,
-                    installs: vec![
+                    installs: Installs::of(&[
                         Install { line_addr: line, level: 0, prefetch: false },
                         Install { line_addr: line + 1, level: 0, prefetch: true },
-                    ],
+                    ]),
                 }
             }
             Design::Ideal => {
@@ -290,7 +299,8 @@ impl MemoryController {
                 }
                 // Probe predicted first, then remaining possible locations;
                 // the markers in each fetched line verify the guess.
-                let mut probes = vec![pred_loc];
+                let mut probes: InlineVec<u8, 4> = InlineVec::new();
+                probes.push(pred_loc);
                 for &s in possible_locations(slot) {
                     if s != pred_loc {
                         probes.push(s);
@@ -299,7 +309,7 @@ impl MemoryController {
                 let mut t = now;
                 let mut first = true;
                 let mut done = 0;
-                for p in probes {
+                for &p in probes.iter() {
                     if first {
                         self.bw.demand_reads += 1;
                     } else {
@@ -327,8 +337,8 @@ impl MemoryController {
 
     /// Lines recovered by reading physical slot `loc` of the group — the
     /// demanded line plus bandwidth-free prefetches.
-    fn installs_for(&mut self, base: u64, csi: Csi, loc: u8, demanded: u64) -> Vec<Install> {
-        let mut v = Vec::with_capacity(4);
+    fn installs_for(&mut self, base: u64, csi: Csi, loc: u8, demanded: u64) -> Installs {
+        let mut v = Installs::new();
         for &s in csi.colocated(loc) {
             let la = base + s as u64;
             let prefetch = la != demanded;
@@ -537,10 +547,10 @@ impl MemoryController {
             }
         }
 
-        if new == old && !self.mem_csi.contains_key(&base) && new == Csi::Uncompressed {
+        if new == old && !self.mem_csi.contains(group_of(base)) && new == Csi::Uncompressed {
             // nothing to record
         } else {
-            self.mem_csi.insert(base, new);
+            self.mem_csi.insert(group_of(base), new);
         }
 
         // Explicit designs must persist the CSI change to the metadata

@@ -13,54 +13,95 @@
 //! 3. stale locations always hold Marker-IL (never interpretable as data).
 //!
 //! `rust/tests/` property-tests all three.
-
-use std::collections::HashMap;
+//!
+//! **Hot-path layout** (DESIGN.md §Simulation performance): the physical
+//! lines and per-group CSI live in [`PagedArena`]s — O(1) shifted-address
+//! indexing, no hashing, and a 4-line group contiguous in one page — and
+//! per-access results travel in fixed inline vectors, so neither reads
+//! nor group writes allocate.  A per-line compressibility memo
+//! (content fingerprint → hybrid size, refreshed whenever a write changes
+//! the content) lets [`CompressedStore::write_group_auto`] skip
+//! recompressing the unmodified lines of a group on every dirty eviction.
 
 use crate::compress::{hybrid, PACK_BUDGET};
 use crate::cram::group::Csi;
 use crate::cram::lit::{LineInversionTable, LitInsert};
 use crate::cram::marker::{LineKind, MarkerEngine};
-use crate::mem::{group_base, CacheLine, GROUP_LINES};
+use crate::mem::{group_base, group_of, CacheLine, PagedArena, GROUP_LINES};
+use crate::util::small::InlineVec;
+
+/// Physical locations touched by a group write (≤ 4, inline).
+pub type WrittenLocs = InlineVec<u64, 4>;
+
+/// Logical lines recovered by one physical access (≤ 4, inline).
+pub type RecoveredLines = InlineVec<(u64, CacheLine), 4>;
 
 /// Result of interpreting a physical read.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct Interpreted {
     pub kind: LineKind,
     /// Logical (line_addr, data) pairs recovered from this access.
-    pub lines: Vec<(u64, CacheLine)>,
+    pub lines: RecoveredLines,
     /// Whether the LIT had to be consulted (complement match).
     pub lit_checked: bool,
 }
 
 /// Byte-accurate physical memory with CRAM packing.
 pub struct CompressedStore {
-    /// Physical contents by line address (sparse; unwritten = zeros).
-    phys: HashMap<u64, CacheLine>,
+    /// Physical contents by line address (paged arena; unwritten = zeros).
+    phys: PagedArena<CacheLine>,
     pub markers: MarkerEngine,
     pub lit: LineInversionTable,
-    /// Ground-truth CSI per group (what a perfect metadata store would
-    /// hold) — used by tests and by the explicit-metadata baseline.
-    csi: HashMap<u64, Csi>,
+    /// Ground-truth CSI per group index (what a perfect metadata store
+    /// would hold) — used by tests and by the explicit-metadata baseline.
+    csi: PagedArena<Csi>,
+    /// Compressibility memo: line address → (content fingerprint, hybrid
+    /// size).  A hit whose fingerprint matches the incoming data skips the
+    /// compressor stack entirely.
+    memo: PagedArena<(u64, u8)>,
+    /// Memo diagnostics (hits = compressor passes avoided).
+    pub memo_hits: u64,
+    pub memo_misses: u64,
 }
 
 impl CompressedStore {
     pub fn new(seed: u64) -> Self {
         Self {
-            phys: HashMap::new(),
+            phys: PagedArena::new(CacheLine::zero()),
             markers: MarkerEngine::new(seed),
             lit: LineInversionTable::default(),
-            csi: HashMap::new(),
+            csi: PagedArena::new(Csi::Uncompressed),
+            memo: PagedArena::new((0, 0)),
+            memo_hits: 0,
+            memo_misses: 0,
         }
     }
 
     /// Ground-truth CSI of the group containing `line` (tests/baselines).
     pub fn csi_of(&self, line: u64) -> Csi {
-        *self.csi.get(&group_base(line)).unwrap_or(&Csi::Uncompressed)
+        self.csi.copied_or_default(group_of(line))
     }
 
     /// Raw physical line at `loc` (what the DRAM bus would deliver).
     pub fn read_phys(&self, loc: u64) -> CacheLine {
-        *self.phys.get(&loc).unwrap_or(&CacheLine::zero())
+        self.phys.copied_or_default(loc)
+    }
+
+    /// Hybrid size of `line` destined for `line_addr`, via the memo: the
+    /// compressor stack only runs when the content actually changed since
+    /// the last write to this address.
+    fn memo_size(&mut self, line_addr: u64, line: &CacheLine) -> u32 {
+        let fp = line.fingerprint();
+        if let Some(&(f, s)) = self.memo.get(line_addr) {
+            if f == fp {
+                self.memo_hits += 1;
+                return s as u32;
+            }
+        }
+        self.memo_misses += 1;
+        let s = hybrid::compressed_size(line);
+        self.memo.insert(line_addr, (fp, s as u8));
+        s
     }
 
     /// Write one *uncompressed* logical line to its own slot, handling
@@ -95,11 +136,10 @@ impl CompressedStore {
         let inverted: Vec<u64> = self
             .phys
             .keys()
-            .copied()
             .filter(|l| self.lit.contains(*l))
             .collect();
         for loc in &inverted {
-            if let Some(line) = self.phys.get(loc).copied() {
+            if let Some(line) = self.phys.get(*loc).copied() {
                 self.phys.insert(*loc, line.inverted()); // revert to raw
             }
         }
@@ -108,14 +148,14 @@ impl CompressedStore {
         // Re-encode the memory under the new keys (paper Option-2): stale
         // slots get the fresh Marker-IL, and packed blocks get their tails
         // re-stamped with the fresh 2:1 / 4:1 markers (payload unchanged).
-        let groups: Vec<(u64, Csi)> = self.csi.iter().map(|(g, c)| (*g, *c)).collect();
+        let groups: Vec<(u64, Csi)> = self.groups().collect();
         for (g, csi) in groups {
             for loc_slot in 0..GROUP_LINES as u8 {
-                let loc = g + loc_slot as u64; // csi map keys are base lines
+                let loc = g + loc_slot as u64;
                 if csi.is_stale(loc_slot) {
                     self.phys.insert(loc, self.markers.marker_il(loc));
                 } else if csi.is_compressed_at(loc_slot) {
-                    let mut phys = *self.phys.get(&loc).expect("packed block exists");
+                    let mut phys = *self.phys.get(loc).expect("packed block exists");
                     let n = csi.colocated(loc_slot).len();
                     let marker = if n == 4 {
                         self.markers.marker4(loc)
@@ -133,10 +173,15 @@ impl CompressedStore {
     /// lines).  `lines[i]` is the data of logical slot i.  Returns the
     /// physical locations written (for bandwidth accounting): live slots +
     /// newly-stale slots that needed a Marker-IL write.
-    pub fn write_group(&mut self, base_line: u64, lines: &[CacheLine; 4], csi: Csi) -> Vec<u64> {
+    pub fn write_group(
+        &mut self,
+        base_line: u64,
+        lines: &[CacheLine; 4],
+        csi: Csi,
+    ) -> WrittenLocs {
         debug_assert_eq!(base_line % GROUP_LINES, 0);
         let prev_csi = self.csi_of(base_line);
-        let mut written = Vec::new();
+        let mut written = WrittenLocs::new();
 
         for loc_slot in 0..GROUP_LINES as u8 {
             let loc = base_line + loc_slot as u64;
@@ -145,7 +190,7 @@ impl CompressedStore {
                 0 => {
                     // Stale under the new layout: invalidate if it held
                     // live data before (avoid rewriting IL repeatedly).
-                    if !prev_csi.is_stale(loc_slot) || !self.phys.contains_key(&loc) {
+                    if !prev_csi.is_stale(loc_slot) || !self.phys.contains(loc) {
                         self.phys.insert(loc, self.markers.marker_il(loc));
                         written.push(loc);
                     }
@@ -183,15 +228,21 @@ impl CompressedStore {
                 }
             }
         }
-        self.csi.insert(base_line, csi);
+        self.csi.insert(group_of(base_line), csi);
         written
     }
 
     /// Convenience: compress-and-write a group from its four lines using
-    /// the canonical CSI decision.
-    pub fn write_group_auto(&mut self, base_line: u64, lines: &[CacheLine; 4]) -> (Csi, Vec<u64>) {
+    /// the canonical CSI decision.  Sizes come through the per-line memo,
+    /// so re-evicting a group with (say) one dirtied line re-runs the
+    /// compressor stack on that line only.
+    pub fn write_group_auto(
+        &mut self,
+        base_line: u64,
+        lines: &[CacheLine; 4],
+    ) -> (Csi, WrittenLocs) {
         let sizes: [u32; 4] =
-            core::array::from_fn(|i| hybrid::compressed_size(&lines[i]));
+            core::array::from_fn(|i| self.memo_size(base_line + i as u64, &lines[i]));
         let csi = Csi::from_sizes(sizes);
         let written = self.write_group(base_line, lines, csi);
         (csi, written)
@@ -213,7 +264,7 @@ impl CompressedStore {
                 // slot0 holds [A,B] (2:1) or [A,B,C,D] (4:1); slot2 holds
                 // [C,D].
                 let first_slot = if loc_slot == 0 { 0u8 } else { 2 };
-                let mut lines = Vec::with_capacity(n);
+                let mut lines = RecoveredLines::new();
                 let mut off = 0usize;
                 for k in 0..n {
                     let (line, used) = hybrid::decode_prefix(&bytes[off..]);
@@ -222,19 +273,23 @@ impl CompressedStore {
                 }
                 Interpreted { kind, lines, lit_checked: false }
             }
-            LineKind::Invalid => Interpreted { kind, lines: vec![], lit_checked: false },
+            LineKind::Invalid => Interpreted {
+                kind,
+                lines: RecoveredLines::new(),
+                lit_checked: false,
+            },
             LineKind::NeedsLitCheck => {
                 let (inverted, _how) = self.lit.query(loc);
                 let data = if inverted { phys.inverted() } else { phys };
                 Interpreted {
                     kind,
-                    lines: vec![(loc, data)],
+                    lines: RecoveredLines::of(&[(loc, data)]),
                     lit_checked: true,
                 }
             }
             LineKind::Uncompressed => Interpreted {
                 kind,
-                lines: vec![(loc, phys)],
+                lines: RecoveredLines::of(&[(loc, phys)]),
                 lit_checked: false,
             },
         }
@@ -248,13 +303,13 @@ impl CompressedStore {
         &mut self,
         line_addr: u64,
         predicted_loc: u64,
-    ) -> (CacheLine, u32, Vec<(u64, CacheLine)>) {
+    ) -> (CacheLine, u32, RecoveredLines) {
         let base = group_base(line_addr);
         let slot = (line_addr - base) as u8;
         // Probe the prediction first, then every remaining possible
         // location in the restricted-placement order.
         let order = crate::cram::group::possible_locations(slot);
-        let mut probes = Vec::with_capacity(order.len());
+        let mut probes: InlineVec<u64, 4> = InlineVec::new();
         probes.push(predicted_loc);
         for &s in order {
             let loc = base + s as u64;
@@ -263,7 +318,7 @@ impl CompressedStore {
             }
         }
         let mut accesses = 0u32;
-        for probe in probes {
+        for &probe in probes.iter() {
             accesses += 1;
             let interp = self.read_interpret(probe);
             if let Some((_, data)) = interp.lines.iter().find(|(a, _)| *a == line_addr) {
@@ -271,12 +326,12 @@ impl CompressedStore {
             }
         }
         // Exhausted: line was never written — fresh memory reads zero.
-        (CacheLine::zero(), accesses, vec![])
+        (CacheLine::zero(), accesses, RecoveredLines::new())
     }
 
-    /// Iterate over the ground-truth group CSIs (diagnostics).
-    pub fn groups(&self) -> impl Iterator<Item = (&u64, &Csi)> {
-        self.csi.iter()
+    /// Iterate over the ground-truth group CSIs as (base line, csi).
+    pub fn groups(&self) -> impl Iterator<Item = (u64, Csi)> + '_ {
+        self.csi.iter().map(|(g, c)| (g * GROUP_LINES, c))
     }
 
     /// Number of physical lines materialized.
@@ -333,11 +388,11 @@ mod tests {
         assert_eq!(csi, Csi::PairAb);
         let interp = store.read_interpret(8);
         assert_eq!(interp.kind, LineKind::Compressed2);
-        assert_eq!(interp.lines, vec![(8, lines[0]), (9, lines[1])]);
+        assert_eq!(interp.lines.as_slice(), &[(8, lines[0]), (9, lines[1])]);
         assert_eq!(store.read_interpret(9).kind, LineKind::Invalid);
         // C and D raw in place
-        assert_eq!(store.read_interpret(10).lines, vec![(10, lines[2])]);
-        assert_eq!(store.read_interpret(11).lines, vec![(11, lines[3])]);
+        assert_eq!(store.read_interpret(10).lines.as_slice(), &[(10, lines[2])]);
+        assert_eq!(store.read_interpret(11).lines.as_slice(), &[(11, lines[3])]);
     }
 
     #[test]
@@ -373,6 +428,30 @@ mod tests {
     }
 
     #[test]
+    fn memo_skips_recompression_of_unmodified_lines() {
+        let mut store = CompressedStore::new(50);
+        let mut rng = Rng::new(3);
+        let lines: [CacheLine; 4] = core::array::from_fn(|i| compressible_line(i as u32));
+        store.write_group_auto(0, &lines);
+        assert_eq!(store.memo_misses, 4, "cold memo: all four compressed");
+        assert_eq!(store.memo_hits, 0);
+        // re-evict with exactly one line dirtied: three memo hits, one miss
+        let mut dirtied = lines;
+        dirtied[2] = incompressible_line(&mut rng);
+        store.write_group_auto(0, &dirtied);
+        assert_eq!(store.memo_hits, 3, "unmodified lines skip the compressors");
+        assert_eq!(store.memo_misses, 5, "the dirtied line recompresses");
+        // the memoized decision must still be the ground truth
+        let sizes: [u32; 4] =
+            core::array::from_fn(|i| hybrid::compressed_size(&dirtied[i]));
+        assert_eq!(store.csi_of(0), Csi::from_sizes(sizes));
+        // clean re-eviction: all hits, layout unchanged
+        let (csi, _) = store.write_group_auto(0, &dirtied);
+        assert_eq!(store.memo_hits, 7);
+        assert_eq!(csi, Csi::from_sizes(sizes));
+    }
+
+    #[test]
     fn marker_collision_roundtrips_via_inversion() {
         let mut store = CompressedStore::new(46);
         let mut rng = Rng::new(5);
@@ -392,7 +471,7 @@ mod tests {
         // read back: classified NeedsLitCheck, inverted back correctly
         let interp = store.read_interpret(loc);
         assert!(interp.lit_checked);
-        assert_eq!(interp.lines, vec![(loc, evil)]);
+        assert_eq!(interp.lines.as_slice(), &[(loc, evil)]);
         // rewrite with a benign line: LIT entry retired
         let benign = incompressible_line(&mut rng);
         let group2 = [benign, group[1], group[2], group[3]];
@@ -417,7 +496,7 @@ mod tests {
             }
             // invariant: every physical line whose tail matches a marker is
             // compressed (per ground-truth CSI) or is in the LIT or is IL.
-            let locs: Vec<u64> = store.phys.keys().copied().collect();
+            let locs: Vec<u64> = store.phys.keys().collect();
             for loc in locs {
                 let phys = store.read_phys(loc);
                 let kind = store.markers.classify(loc, &phys);

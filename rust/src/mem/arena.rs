@@ -1,0 +1,296 @@
+//! Paged arena — the dense replacement for the simulator's hot-path
+//! `HashMap`s (physical line store, per-group CSI maps).
+//!
+//! Physical line and group addresses are drawn from a bounded, mostly
+//! contiguous space (per-core regions of a 16GB machine), so a sparse
+//! hash map pays SipHash plus probe chains on every access for no
+//! benefit.  The arena instead splits a key into (page, slot):
+//! fixed-size pages of `1 << page_shift` slots, allocated lazily on first
+//! touch, indexed by plain shifts — O(1) with no hashing, and the four
+//! lines of a CRAM group land in adjacent slots of one page, so a group
+//! read touches one cache line of metadata instead of four hash probes.
+//!
+//! A per-page occupancy bitmap preserves exact `HashMap` semantics
+//! (`contains`/`remove`/`len` distinguish "never inserted" from "inserted
+//! with the default value"); the randomized shadow-model test below pins
+//! the equivalence.
+
+/// Default page size: 4096 slots (one shift, one mask per lookup).
+pub const ARENA_PAGE_SHIFT: u32 = 12;
+
+struct Page<T> {
+    slots: Box<[T]>,
+    /// One bit per slot: has this slot been inserted (and not removed)?
+    occupied: Box<[u64]>,
+}
+
+impl<T: Copy> Page<T> {
+    fn new(slots_per_page: usize, default: T) -> Self {
+        Self {
+            slots: vec![default; slots_per_page].into_boxed_slice(),
+            occupied: vec![0u64; slots_per_page.div_ceil(64)].into_boxed_slice(),
+        }
+    }
+
+    #[inline]
+    fn is_occupied(&self, slot: usize) -> bool {
+        (self.occupied[slot >> 6] >> (slot & 63)) & 1 == 1
+    }
+
+    #[inline]
+    fn set_occupied(&mut self, slot: usize) {
+        self.occupied[slot >> 6] |= 1u64 << (slot & 63);
+    }
+
+    #[inline]
+    fn clear_occupied(&mut self, slot: usize) {
+        self.occupied[slot >> 6] &= !(1u64 << (slot & 63));
+    }
+}
+
+/// Lazily-paged flat map from `u64` keys to `T`, with `HashMap`-equivalent
+/// insert/get/remove/contains/len semantics.
+pub struct PagedArena<T: Copy> {
+    page_shift: u32,
+    slots_per_page: usize,
+    pages: Vec<Option<Page<T>>>,
+    default: T,
+    len: usize,
+}
+
+impl<T: Copy> PagedArena<T> {
+    /// Arena with the default page geometry.  `default` is the value
+    /// reported by [`PagedArena::copied_or_default`] for absent keys (and
+    /// the fill value of fresh pages).
+    pub fn new(default: T) -> Self {
+        Self::with_page_shift(default, ARENA_PAGE_SHIFT)
+    }
+
+    pub fn with_page_shift(default: T, page_shift: u32) -> Self {
+        assert!((4..=20).contains(&page_shift), "unreasonable page shift");
+        Self {
+            page_shift,
+            slots_per_page: 1usize << page_shift,
+            pages: Vec::new(),
+            default,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn split(&self, key: u64) -> (usize, usize) {
+        (
+            (key >> self.page_shift) as usize,
+            (key & ((1u64 << self.page_shift) - 1)) as usize,
+        )
+    }
+
+    /// Reference to the value at `key`, if one was inserted.
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<&T> {
+        let (p, s) = self.split(key);
+        match self.pages.get(p) {
+            Some(Some(page)) if page.is_occupied(s) => Some(&page.slots[s]),
+            _ => None,
+        }
+    }
+
+    /// The value at `key`, or the arena default for absent keys — the
+    /// hot-path read (one shift, one mask, no hashing, no branching on
+    /// `Option` at the caller).
+    #[inline]
+    pub fn copied_or_default(&self, key: u64) -> T {
+        let (p, s) = self.split(key);
+        match self.pages.get(p) {
+            Some(Some(page)) if page.is_occupied(s) => page.slots[s],
+            _ => self.default,
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// Insert, returning the previous value if the key was occupied.
+    pub fn insert(&mut self, key: u64, value: T) -> Option<T> {
+        let (p, s) = self.split(key);
+        if p >= self.pages.len() {
+            self.pages.resize_with(p + 1, || None);
+        }
+        let slots_per_page = self.slots_per_page;
+        let default = self.default;
+        let page = self.pages[p].get_or_insert_with(|| Page::new(slots_per_page, default));
+        let old = if page.is_occupied(s) {
+            Some(page.slots[s])
+        } else {
+            page.set_occupied(s);
+            self.len += 1;
+            None
+        };
+        page.slots[s] = value;
+        old
+    }
+
+    /// Remove, returning the value if the key was occupied.
+    pub fn remove(&mut self, key: u64) -> Option<T> {
+        let (p, s) = self.split(key);
+        let default = self.default;
+        match self.pages.get_mut(p) {
+            Some(Some(page)) if page.is_occupied(s) => {
+                let old = page.slots[s];
+                page.slots[s] = default;
+                page.clear_occupied(s);
+                self.len -= 1;
+                Some(old)
+            }
+            _ => None,
+        }
+    }
+
+    /// Number of occupied keys.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of materialized pages (diagnostics).
+    pub fn pages_allocated(&self) -> usize {
+        self.pages.iter().filter(|p| p.is_some()).count()
+    }
+
+    /// Iterate occupied `(key, value)` pairs in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, T)> + '_ {
+        let shift = self.page_shift;
+        self.pages.iter().enumerate().flat_map(move |(pi, page)| {
+            page.as_ref().into_iter().flat_map(move |pg| {
+                pg.slots.iter().enumerate().filter_map(move |(si, v)| {
+                    if pg.is_occupied(si) {
+                        Some((((pi as u64) << shift) | si as u64, *v))
+                    } else {
+                        None
+                    }
+                })
+            })
+        })
+    }
+
+    /// Iterate occupied keys in key order.
+    pub fn keys(&self) -> impl Iterator<Item = u64> + '_ {
+        self.iter().map(|(k, _)| k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::forall;
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut a: PagedArena<u32> = PagedArena::new(0);
+        assert!(a.is_empty());
+        assert_eq!(a.get(5), None);
+        assert_eq!(a.copied_or_default(5), 0);
+        assert_eq!(a.insert(5, 7), None);
+        assert_eq!(a.insert(5, 9), Some(7));
+        assert_eq!(a.get(5), Some(&9));
+        assert_eq!(a.copied_or_default(5), 9);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.remove(5), Some(9));
+        assert_eq!(a.remove(5), None);
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn default_valued_inserts_are_still_occupied() {
+        // inserting the default value must be observable (HashMap parity)
+        let mut a: PagedArena<u8> = PagedArena::new(0);
+        a.insert(100, 0);
+        assert!(a.contains(100));
+        assert_eq!(a.len(), 1);
+        assert!(!a.contains(101));
+    }
+
+    #[test]
+    fn pages_materialize_lazily_and_group_locality_holds() {
+        let mut a: PagedArena<u8> = PagedArena::with_page_shift(0, 6); // 64 slots/page
+        a.insert(0, 1);
+        a.insert(3, 1); // same page as key 0 (a 4-line group shares a page)
+        assert_eq!(a.pages_allocated(), 1);
+        a.insert(1 << 20, 2); // far key: exactly one more page
+        assert_eq!(a.pages_allocated(), 2);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn iteration_yields_sorted_occupied_keys() {
+        let mut a: PagedArena<u64> = PagedArena::with_page_shift(0, 6);
+        for k in [300u64, 2, 65, 64] {
+            a.insert(k, k * 10);
+        }
+        a.remove(65);
+        let pairs: Vec<(u64, u64)> = a.iter().collect();
+        assert_eq!(pairs, vec![(2, 20), (64, 640), (300, 3000)]);
+        let keys: Vec<u64> = a.keys().collect();
+        assert_eq!(keys, vec![2, 64, 300]);
+    }
+
+    /// Shadow-model test: the arena must behave exactly like a `HashMap`
+    /// under randomized insert/remove/get sequences, including group-pack
+    /// style bursts over four consecutive keys.
+    #[test]
+    fn shadow_model_matches_hashmap() {
+        forall("arena vs hashmap", 64, |rng| {
+            let mut arena: PagedArena<u32> = PagedArena::with_page_shift(0, 6);
+            let mut shadow: HashMap<u64, u32> = HashMap::new();
+            for _ in 0..400 {
+                // keys span several pages; occasional far outliers
+                let key = if rng.chance(0.05) {
+                    rng.below(1 << 16)
+                } else {
+                    rng.below(512)
+                };
+                match rng.below(4) {
+                    0 => {
+                        let v = rng.next_u32();
+                        assert_eq!(arena.insert(key, v), shadow.insert(key, v));
+                    }
+                    1 => {
+                        assert_eq!(arena.remove(key), shadow.remove(&key));
+                    }
+                    2 => {
+                        // group-pack burst: write all four lines of a group
+                        let base = key & !3;
+                        for i in 0..4 {
+                            let v = rng.next_u32();
+                            assert_eq!(
+                                arena.insert(base + i, v),
+                                shadow.insert(base + i, v)
+                            );
+                        }
+                    }
+                    _ => {
+                        assert_eq!(arena.get(key), shadow.get(&key));
+                        assert_eq!(arena.contains(key), shadow.contains_key(&key));
+                        assert_eq!(
+                            arena.copied_or_default(key),
+                            shadow.get(&key).copied().unwrap_or(0)
+                        );
+                    }
+                }
+                assert_eq!(arena.len(), shadow.len());
+            }
+            // full-content equivalence at the end
+            let mut from_shadow: Vec<(u64, u32)> =
+                shadow.iter().map(|(k, v)| (*k, *v)).collect();
+            from_shadow.sort();
+            let from_arena: Vec<(u64, u32)> = arena.iter().collect();
+            assert_eq!(from_arena, from_shadow);
+        });
+    }
+}

@@ -114,6 +114,21 @@ impl CacheLine {
     pub fn is_zero(&self) -> bool {
         self.words.iter().all(|&w| w == 0)
     }
+
+    /// 64-bit content fingerprint (FNV-1a over the words, with a final
+    /// avalanche).  Keys the compressibility memo: two lines with equal
+    /// fingerprints are treated as having equal compressed size — the
+    /// standard memoization tradeoff at ~2^-64 collision probability.
+    #[inline]
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for &w in &self.words {
+            h = (h ^ w as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h ^= h >> 33;
+        h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        h ^ (h >> 33)
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +176,17 @@ mod tests {
         line.set_tail_u32(0x2222_2222);
         assert_eq!(line.tail_u32(), 0x2222_2222);
         assert_eq!(line.to_bytes()[60..64], [0x22, 0x22, 0x22, 0x22]);
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let a = CacheLine::from_words(core::array::from_fn(|i| i as u32));
+        let b = CacheLine::from_words(core::array::from_fn(|i| i as u32));
+        assert_eq!(a.fingerprint(), b.fingerprint(), "deterministic");
+        let mut c = a;
+        c.words_mut()[3] ^= 1;
+        assert_ne!(a.fingerprint(), c.fingerprint(), "one-bit sensitivity");
+        assert_ne!(CacheLine::zero().fingerprint(), a.fingerprint());
     }
 
     #[test]

@@ -1,7 +1,10 @@
-//! Memory data model: the 64-byte cacheline and physical-address helpers.
+//! Memory data model: the 64-byte cacheline, physical-address helpers,
+//! and the paged-arena map backing the hot-path physical stores.
 
+pub mod arena;
 pub mod line;
 
+pub use arena::PagedArena;
 pub use line::{CacheLine, LINE_BYTES, LINE_WORDS};
 
 /// Bytes per cacheline everywhere in the system (paper Table I).

@@ -1,12 +1,13 @@
 //! The system simulator: cores + shared LLC + memory controller + DRAM.
 
-use crate::cache::{CacheConfig, SetAssocCache};
+use crate::cache::{CacheConfig, Evicted, SetAssocCache};
 use crate::controller::{Design, MemoryController};
 use crate::cram::dynamic::DynamicCram;
 use crate::dram::{DramConfig, DramSim};
 use crate::energy::{energy_of, EnergyConfig, EnergyResult};
 use crate::sim::vm::VirtualMemory;
 use crate::stats::SimResult;
+use crate::util::small::InlineVec;
 use crate::workloads::{AccessStream, SizeOracle, TraceReplay, WorkloadProfile};
 
 /// Where a core's access stream comes from: the synthetic generator or a
@@ -280,12 +281,17 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
                 if let Some(victim) =
                     llc.fill(ins.line_addr, dirty, ins.level, c as u8, ins.prefetch)
                 {
-                    let mut gang = vec![victim];
-                    gang.extend(llc.evict_group(victim.line_addr));
+                    // the victim plus its still-resident group members: at
+                    // most the 4-line group, gathered heap-free
+                    let mut gang: InlineVec<Evicted, 4> = InlineVec::new();
+                    gang.push(victim);
+                    for &e in llc.evict_group(victim.line_addr).iter() {
+                        gang.push(e);
+                    }
                     let v_sampled =
                         DynamicCram::is_sampled_group(crate::mem::group_of(victim.line_addr));
                     let owner = victim.core as usize;
-                    mc.writeback(&gang, now_bus, dram, &mut oracles[owner], v_sampled);
+                    mc.writeback(gang.as_slice(), now_bus, dram, &mut oracles[owner], v_sampled);
                 }
             }
         }

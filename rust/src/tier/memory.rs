@@ -40,10 +40,10 @@
 
 use std::collections::{HashMap, HashSet};
 
-use crate::controller::{Install, ReadOutcome};
+use crate::controller::{Install, Installs, ReadOutcome};
 use crate::cram::group::Csi;
 use crate::dram::{DramConfig, DramSim, ReqKind};
-use crate::mem::{group_base, page_of_line};
+use crate::mem::{group_base, group_of, page_of_line, PagedArena};
 use crate::stats::{Bandwidth, TierStats};
 use crate::tier::link::{CxlLink, CxlLinkConfig, CMD_BYTES, DATA_BYTES};
 use crate::util::rng::splitmix64;
@@ -109,8 +109,9 @@ pub struct TieredMemory {
     far_cut: u64,
     pub link: CxlLink,
     pub far_dram: DramSim,
-    /// Far-tier group layouts (expander-held metadata).
-    far_csi: HashMap<u64, Csi>,
+    /// Far-tier group layouts by group index (expander-held metadata) —
+    /// paged arena, no hashing on the demand path.
+    far_csi: PagedArena<Csi>,
     /// Per-page placement overrides from migration (true = far).
     placement: HashMap<u64, bool>,
     /// Per-page access heat with the epoch it was last updated.  Decay is
@@ -131,7 +132,7 @@ impl TieredMemory {
             far_cut: (cfg.far_ratio.clamp(0.0, 1.0) * 4096.0) as u64,
             link: CxlLink::new(cfg.link),
             far_dram: DramSim::new(cfg.far_dram),
-            far_csi: HashMap::new(),
+            far_csi: PagedArena::new(Csi::Uncompressed),
             placement: HashMap::new(),
             heat: HashMap::new(),
             listed: HashSet::new(),
@@ -188,7 +189,11 @@ impl TieredMemory {
             let done = near.access(line, ReqKind::Read, now, false);
             return ReadOutcome {
                 done,
-                installs: vec![Install { line_addr: line, level: 0, prefetch: false }],
+                installs: Installs::of(&[Install {
+                    line_addr: line,
+                    level: 0,
+                    prefetch: false,
+                }]),
             };
         }
         bw.demand_reads += 1;
@@ -200,18 +205,22 @@ impl TieredMemory {
             let done = self.link.recv(far_done, DATA_BYTES);
             return ReadOutcome {
                 done,
-                installs: vec![Install { line_addr: line, level: 0, prefetch: false }],
+                installs: Installs::of(&[Install {
+                    line_addr: line,
+                    level: 0,
+                    prefetch: false,
+                }]),
             };
         }
         // device-held metadata: the expander reads the correct (possibly
         // packed) location directly; one flit returns every co-located line
         let base = group_base(line);
         let slot = (line - base) as u8;
-        let csi = *self.far_csi.get(&base).unwrap_or(&Csi::Uncompressed);
+        let csi = self.far_csi.copied_or_default(group_of(base));
         let loc = csi.location(slot);
         let far_done = self.far_dram.access(base + loc as u64, ReqKind::Read, at_device, false);
         let done = self.link.recv(far_done, DATA_BYTES);
-        let mut installs = Vec::with_capacity(4);
+        let mut installs = Installs::new();
         for &s in csi.colocated(loc) {
             let la = base + s as u64;
             let prefetch = la != line;
@@ -272,7 +281,7 @@ impl TieredMemory {
         // engine always compresses — no Dynamic gating, the link is
         // always the bottleneck it is sized against), then issue device
         // writes / invalidates — each one a flit on the link.
-        let old = *self.far_csi.get(&base).unwrap_or(&Csi::Uncompressed);
+        let old = self.far_csi.copied_or_default(group_of(base));
         let sizes = oracle.group_sizes(base);
         let new = crate::controller::decide_packed_layout(old, present, sizes);
 
@@ -329,9 +338,9 @@ impl TieredMemory {
             }
         }
         if new == Csi::Uncompressed {
-            self.far_csi.remove(&base);
+            self.far_csi.remove(group_of(base));
         } else {
-            self.far_csi.insert(base, new);
+            self.far_csi.insert(group_of(base), new);
         }
     }
 
@@ -382,7 +391,7 @@ impl TieredMemory {
             // lives at locs {0, 2, 3}, not 0..3).  Each block crosses the
             // link only after its device read completes, same sequencing
             // as the demand path.
-            let csi = self.far_csi.remove(&gbase).unwrap_or_default();
+            let csi = self.far_csi.remove(group_of(gbase)).unwrap_or_default();
             let mut arrived = now;
             for loc in 0..4u8 {
                 if csi.is_stale(loc) {
@@ -458,7 +467,7 @@ impl TieredMemory {
             self.far_dram.access(first + l, ReqKind::Write, at_device, false);
         }
         for g in 0..PAGE_GROUPS {
-            self.far_csi.remove(&(first + g * 4));
+            self.far_csi.remove(group_of(first + g * 4));
         }
         self.stats.migrated_lines += PAGE_LINES;
         self.placement.insert(page, true);

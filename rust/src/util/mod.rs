@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod rng;
+pub mod small;
 pub mod testkit;
 
 /// Geometric mean of a slice of positive values.

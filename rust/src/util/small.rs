@@ -1,0 +1,138 @@
+//! `InlineVec` — a fixed-capacity, stack-allocated vector (SmallVec-style
+//! without the heap spill), used on the simulator's per-access hot paths
+//! where the element count is architecturally bounded: a compression group
+//! has exactly four lines, so probe lists, install lists, written-location
+//! lists and ganged-eviction sets never exceed four entries.  Replacing
+//! `Vec` with this type removes one heap allocation per LLC miss / group
+//! writeback.
+//!
+//! Pushing beyond `N` panics — on these paths that is a simulator bug, not
+//! a recoverable condition.
+
+/// Fixed-capacity inline vector.  Derefs to a slice, so all `&[T]` reads
+/// (`len`, `iter`, indexing, `contains`, ...) work unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct InlineVec<T: Copy + Default, const N: usize> {
+    items: [T; N],
+    len: u8,
+}
+
+impl<T: Copy + Default, const N: usize> InlineVec<T, N> {
+    pub fn new() -> Self {
+        Self { items: [T::default(); N], len: 0 }
+    }
+
+    /// Build from a slice (must fit in `N`).
+    pub fn of(items: &[T]) -> Self {
+        let mut v = Self::new();
+        for &x in items {
+            v.push(x);
+        }
+        v
+    }
+
+    /// Append an element.  Panics if the vector is full.
+    #[inline]
+    pub fn push(&mut self, x: T) {
+        assert!((self.len as usize) < N, "InlineVec overflow (capacity {N})");
+        self.items[self.len as usize] = x;
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        &self.items[..self.len as usize]
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+impl<T: Copy + Default, const N: usize> Default for InlineVec<T, N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy + Default, const N: usize> std::ops::Deref for InlineVec<T, N> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy + Default + PartialEq, const N: usize> PartialEq for InlineVec<T, N> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + Default + Eq, const N: usize> Eq for InlineVec<T, N> {}
+
+impl<'a, T: Copy + Default, const N: usize> IntoIterator for &'a InlineVec<T, N> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_read_back() {
+        let mut v: InlineVec<u64, 4> = InlineVec::new();
+        assert!(v.is_empty());
+        v.push(10);
+        v.push(20);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.as_slice(), &[10, 20]);
+        assert_eq!(v[1], 20);
+        assert!(v.contains(&10));
+    }
+
+    #[test]
+    fn of_builds_from_slice() {
+        let v: InlineVec<u32, 4> = InlineVec::of(&[1, 2, 3]);
+        assert_eq!(v.as_slice(), &[1, 2, 3]);
+        let empty: InlineVec<u32, 4> = InlineVec::of(&[]);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn equality_ignores_spare_capacity() {
+        let a: InlineVec<u8, 4> = InlineVec::of(&[1, 2]);
+        let mut b: InlineVec<u8, 4> = InlineVec::of(&[1, 2, 9]);
+        assert_ne!(a, b);
+        b.clear();
+        let b = InlineVec::of(&[1, 2]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn iterates_like_a_slice() {
+        let v: InlineVec<u64, 4> = InlineVec::of(&[5, 6, 7]);
+        let mut sum = 0;
+        for &x in &v {
+            sum += x;
+        }
+        assert_eq!(sum, 18);
+        assert_eq!(v.iter().copied().max(), Some(7));
+    }
+
+    #[test]
+    #[should_panic(expected = "InlineVec overflow")]
+    fn overflow_panics() {
+        let mut v: InlineVec<u8, 2> = InlineVec::new();
+        v.push(1);
+        v.push(2);
+        v.push(3);
+    }
+}

@@ -80,7 +80,7 @@ fn bcde_store_invariants_under_random_schedules() {
             }
 
             // (b)+(e): audit every materialized physical line
-            let groups: Vec<(u64, Csi)> = store.groups().map(|(g, c)| (*g, *c)).collect();
+            let groups: Vec<(u64, Csi)> = store.groups().collect();
             for (gbase, csi) in groups {
                 for loc_slot in 0..4u8 {
                     let loc = gbase + loc_slot as u64;
@@ -108,6 +108,45 @@ fn bcde_store_invariants_under_random_schedules() {
                         }
                     }
                 }
+            }
+        }
+    });
+}
+
+/// Size-only / materializing agreement across every compressor: the
+/// simulator's fast size paths must report exactly the byte counts the
+/// encoders produce, over workload-realistic value regimes (the contract
+/// in `compress/mod.rs` §Size-only contract).
+#[test]
+fn a2_size_only_paths_agree_with_materializing_encoders() {
+    use cram::compress::hybrid::AlgoSet;
+    use cram::compress::{bdi, cpack, fpc};
+    forall("size-only parity", 1500, |rng| {
+        let model = mixed_model(rng.next_u64());
+        let line = random_line(rng, &model);
+        // FPC
+        assert_eq!(fpc::encode(&line).len() as u32, fpc::size_bytes(&line));
+        // C-Pack
+        assert_eq!(cpack::encode(&line).len() as u32, cpack::size_bytes(&line));
+        // BDI: best mode and every fitting mode
+        match bdi::best_mode(&line) {
+            Some(m) => {
+                assert_eq!(bdi::size_bytes(&line), m.size_bytes());
+                assert_eq!(bdi::encode(&line, m).len() as u32, m.size_bytes());
+            }
+            None => assert_eq!(bdi::size_bytes(&line), 64),
+        }
+        for m in bdi::BdiMode::ALL {
+            if bdi::fits(&line, m) {
+                assert_eq!(bdi::encode(&line, m).len() as u32, m.size_bytes());
+            }
+        }
+        // hybrid, both algorithm sets
+        for set in [AlgoSet::FpcBdi, AlgoSet::FpcBdiCpack] {
+            let size = hybrid::compressed_size_with(&line, set);
+            match hybrid::encode_with(&line, set) {
+                Some(c) => assert_eq!(c.size(), size),
+                None => assert_eq!(size, 64),
             }
         }
     });
