@@ -1,0 +1,718 @@
+//! Compressed LLC: Touché-style superblock tags over a fixed data budget.
+//!
+//! The baseline [`SetAssocCache`](crate::cache::SetAssocCache) holds every
+//! line uncompressed, so compression-friendly workloads leave LLC capacity
+//! on the table exactly where they would benefit most.  This cache stores
+//! lines at their hybrid-compressor size instead:
+//!
+//! * **Data budget.**  Each set owns a fixed byte budget (default: the
+//!   base `ways` × 64 B — the same silicon as the uncompressed array).
+//!   Compressed lines pack into it, so a set can hold more lines than it
+//!   has ways' worth of data.
+//! * **Superblock tags.**  Extra residency needs extra tags, and naive
+//!   per-line tags would double the tag array.  Touché's observation:
+//!   co-compressible lines are *neighbors*, so one tag per CRAM group
+//!   (superblock) with four sector-valid bits covers up to four lines.
+//!   Sets are indexed by **group** (not line), each set holding
+//!   `ways × tag_ratio` superblock tags (default 2×) — a bounded tag
+//!   array that still doubles reachable residency.
+//! * **Superblock replacement.**  The victim unit is a whole superblock:
+//!   evicting one member of a CRAM group forces out all resident members
+//!   *by construction*, which is exactly the ganged-eviction contract the
+//!   memory-side CRAM engine needs (packed halves never split, so
+//!   writebacks never read-modify-write packed blocks).  Preference
+//!   order mirrors the baseline: unreferenced prefetched superblocks
+//!   first, then LRU.
+//!
+//! Capacity telemetry ([`CacheStats`]) samples resident lines/bytes on
+//! every demand access, counts evictions forced by tag exhaustion vs the
+//! data budget (tag pressure vs data pressure), and reports *effective
+//! capacity* — time-averaged resident lines over the uncompressed-
+//! equivalent capacity at the same data budget.
+
+use crate::cache::set_assoc::{AccessInfo, CacheConfig, Evicted};
+use crate::mem::{group_base, group_of, GROUP_LINES};
+use crate::util::small::InlineVec;
+
+/// Knobs of the compressed LLC (the `repro ablate llc` sweep axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompressedLlcConfig {
+    /// Superblock tags per set, as a multiple of the base ways (Touché
+    /// provisions 2×).
+    pub tag_ratio: usize,
+    /// Data budget per set in 64-byte lines' worth (0 ⇒ the base ways,
+    /// i.e. the same data array as the uncompressed cache).
+    pub data_lines: usize,
+}
+
+impl Default for CompressedLlcConfig {
+    fn default() -> Self {
+        Self { tag_ratio: 2, data_lines: 0 }
+    }
+}
+
+/// Compressed-LLC occupancy / pressure counters.  All counting fields are
+/// monotone, so a warmup snapshot subtracts with [`CacheStats::since`]
+/// exactly like the scalar bandwidth counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Occupancy samples taken (one per demand access).
+    pub samples: u64,
+    /// Sum over samples of resident lines (÷ `samples` = average).
+    pub lines_sum: u64,
+    /// Sum over samples of resident compressed bytes.
+    pub bytes_sum: u64,
+    /// Superblock evictions forced by tag exhaustion (tag pressure).
+    pub tag_evictions: u64,
+    /// Superblock evictions forced by the data budget (data pressure).
+    pub data_evictions: u64,
+    /// Uncompressed-equivalent capacity in lines at the same data budget
+    /// (sets × data budget ÷ 64 B) — the denominator of effective capacity.
+    pub baseline_lines: u64,
+    /// Total superblock tags across the cache.
+    pub tag_capacity: u64,
+}
+
+impl CacheStats {
+    /// Time-averaged resident lines.
+    pub fn avg_lines(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.lines_sum as f64 / self.samples as f64
+        }
+    }
+
+    /// Time-averaged resident compressed bytes.
+    pub fn avg_bytes(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.bytes_sum as f64 / self.samples as f64
+        }
+    }
+
+    /// Effective capacity: average resident lines over the uncompressed-
+    /// equivalent capacity (> 1.0 ⇔ compression bought real residency).
+    pub fn effective_ratio(&self) -> f64 {
+        if self.baseline_lines == 0 {
+            0.0
+        } else {
+            self.avg_lines() / self.baseline_lines as f64
+        }
+    }
+
+    /// Counter-wise difference vs a warmup snapshot (capacities carry
+    /// over unchanged).
+    pub fn since(&self, warm: &CacheStats) -> CacheStats {
+        CacheStats {
+            samples: self.samples - warm.samples,
+            lines_sum: self.lines_sum - warm.lines_sum,
+            bytes_sum: self.bytes_sum - warm.bytes_sum,
+            tag_evictions: self.tag_evictions - warm.tag_evictions,
+            data_evictions: self.data_evictions - warm.data_evictions,
+            baseline_lines: self.baseline_lines,
+            tag_capacity: self.tag_capacity,
+        }
+    }
+}
+
+/// One superblock tag: a CRAM group with per-slot sector state.
+#[derive(Clone, Copy, Debug, Default)]
+struct SuperBlock {
+    /// Group index (line address ÷ 4).  Meaningless when `valid == 0`.
+    tag: u64,
+    /// Per-slot residency bits (bit s ⇔ line `tag*4 + s` resident).
+    valid: u8,
+    dirty: u8,
+    referenced: u8,
+    prefetch: u8,
+    /// LRU clock at superblock granularity (access or fill of any member).
+    lru: u64,
+    /// Prior-compressibility tag bits per slot (0/1/2 — §V-A).
+    level: [u8; 4],
+    /// Requesting core per slot (Dynamic-CRAM attribution).
+    core: [u8; 4],
+    /// Stored (compressed) size per slot in bytes; counts against the
+    /// set's data budget while the slot is valid.
+    size: [u8; 4],
+}
+
+impl SuperBlock {
+    #[inline]
+    fn evicted(&self, slot: usize) -> Evicted {
+        Evicted {
+            line_addr: self.tag * GROUP_LINES + slot as u64,
+            dirty: self.dirty & (1 << slot) != 0,
+            level: self.level[slot],
+            core: self.core[slot],
+            referenced: self.referenced & (1 << slot) != 0,
+            was_prefetch: self.prefetch & (1 << slot) != 0,
+        }
+    }
+}
+
+/// The compressed LLC.  API mirrors [`SetAssocCache`] where the
+/// simulator needs it; `fill` additionally takes the line's compressed
+/// size and may evict several superblocks to make room.
+pub struct CompressedCache {
+    sets: Vec<Vec<SuperBlock>>,
+    /// Resident compressed bytes per set (kept incrementally).
+    occ: Vec<u32>,
+    set_mask: u64,
+    /// Data budget per set in bytes.
+    budget: u32,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Currently resident lines / compressed bytes (cache-wide).
+    lines_now: u64,
+    bytes_now: u64,
+    stats: CacheStats,
+}
+
+impl CompressedCache {
+    pub fn new(base: CacheConfig, cfg: CompressedLlcConfig) -> Self {
+        let n = base.sets();
+        assert!(n.is_power_of_two(), "set count must be a power of two");
+        let tags = base.ways * cfg.tag_ratio.max(1);
+        let data_lines = if cfg.data_lines == 0 { base.ways } else { cfg.data_lines };
+        let budget = (data_lines * 64) as u32;
+        // a full superblock is at most 4 × 64 B; the budget must hold one
+        // so the eviction loop (which spares the superblock being filled)
+        // always terminates within budget
+        assert!(
+            budget >= 64 * GROUP_LINES as u32,
+            "data budget must hold one full superblock (got {budget} B)"
+        );
+        Self {
+            sets: vec![vec![SuperBlock::default(); tags]; n],
+            occ: vec![0; n],
+            set_mask: n as u64 - 1,
+            budget,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            lines_now: 0,
+            bytes_now: 0,
+            stats: CacheStats {
+                baseline_lines: (n * data_lines) as u64,
+                tag_capacity: (n * tags) as u64,
+                ..CacheStats::default()
+            },
+        }
+    }
+
+    /// Sets are indexed by *group* so a superblock tag covers all four
+    /// members (they must co-reside for the tag to reach them).
+    #[inline]
+    fn set_of(&self, line_addr: u64) -> usize {
+        (group_of(line_addr) & self.set_mask) as usize
+    }
+
+    pub fn num_sets(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// Occupancy / pressure counters (plus hits/misses on the struct).
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    #[inline]
+    fn find(&self, si: usize, group: u64) -> Option<usize> {
+        self.sets[si]
+            .iter()
+            .position(|sb| sb.valid != 0 && sb.tag == group)
+    }
+
+    /// Demand access.  Returns hit status plus the first-use flag of a
+    /// compression-prefetched line (Dynamic-CRAM's benefit event), and
+    /// samples the occupancy telemetry.
+    pub fn access_ex(&mut self, line_addr: u64, write: bool) -> AccessInfo {
+        self.tick += 1;
+        let tick = self.tick;
+        self.stats.samples += 1;
+        self.stats.lines_sum += self.lines_now;
+        self.stats.bytes_sum += self.bytes_now;
+        let si = self.set_of(line_addr);
+        let group = group_of(line_addr);
+        let slot = (line_addr - group_base(line_addr)) as usize;
+        let bit = 1u8 << slot;
+        if let Some(i) = self.find(si, group) {
+            let sb = &mut self.sets[si][i];
+            if sb.valid & bit != 0 {
+                let first_prefetch_use =
+                    sb.prefetch & bit != 0 && sb.referenced & bit == 0;
+                sb.lru = tick;
+                if write {
+                    sb.dirty |= bit;
+                }
+                sb.referenced |= bit;
+                self.hits += 1;
+                return AccessInfo { hit: true, first_prefetch_use };
+            }
+        }
+        self.misses += 1;
+        AccessInfo { hit: false, first_prefetch_use: false }
+    }
+
+    /// Probe without updating state.
+    pub fn contains(&self, line_addr: u64) -> bool {
+        let si = self.set_of(line_addr);
+        let group = group_of(line_addr);
+        let slot = (line_addr % GROUP_LINES) as usize;
+        self.find(si, group)
+            .is_some_and(|i| self.sets[si][i].valid & (1 << slot) != 0)
+    }
+
+    /// Dirty status of a resident line.
+    pub fn is_dirty(&self, line_addr: u64) -> bool {
+        let si = self.set_of(line_addr);
+        let group = group_of(line_addr);
+        let slot = (line_addr % GROUP_LINES) as usize;
+        self.find(si, group)
+            .is_some_and(|i| self.sets[si][i].dirty & (1 << slot) != 0)
+    }
+
+    /// Prior-compressibility level of a resident line, if present.
+    pub fn level_of(&self, line_addr: u64) -> Option<u8> {
+        let si = self.set_of(line_addr);
+        let group = group_of(line_addr);
+        let slot = (line_addr % GROUP_LINES) as usize;
+        self.find(si, group).and_then(|i| {
+            let sb = &self.sets[si][i];
+            (sb.valid & (1 << slot) != 0).then_some(sb.level[slot])
+        })
+    }
+
+    /// Stored (compressed) size of a resident line.
+    pub fn size_of(&self, line_addr: u64) -> Option<u32> {
+        let si = self.set_of(line_addr);
+        let group = group_of(line_addr);
+        let slot = (line_addr % GROUP_LINES) as usize;
+        self.find(si, group).and_then(|i| {
+            let sb = &self.sets[si][i];
+            (sb.valid & (1 << slot) != 0).then_some(sb.size[slot] as u32)
+        })
+    }
+
+    /// Evict the whole superblock at `sets[si][idx]`, appending every
+    /// resident member to `victims` in slot order (a natural gang).
+    fn evict_superblock(&mut self, si: usize, idx: usize, victims: &mut Vec<Evicted>) {
+        let sb = self.sets[si][idx];
+        for slot in 0..GROUP_LINES as usize {
+            if sb.valid & (1 << slot) != 0 {
+                victims.push(sb.evicted(slot));
+                self.lines_now -= 1;
+                self.bytes_now -= sb.size[slot] as u64;
+                self.occ[si] -= sb.size[slot] as u32;
+            }
+        }
+        self.sets[si][idx] = SuperBlock::default();
+    }
+
+    /// Victim superblock in `si`, sparing index `keep`: unreferenced
+    /// prefetched superblocks first (cheapest to lose — mirrors the
+    /// baseline cache), then LRU.  `None` when only `keep` is live.
+    fn pick_victim(&self, si: usize, keep: usize) -> Option<usize> {
+        self.sets[si]
+            .iter()
+            .enumerate()
+            .filter(|&(i, sb)| i != keep && sb.valid != 0)
+            .min_by_key(|(_, sb)| ((sb.referenced != 0) as u64, sb.lru))
+            .map(|(i, _)| i)
+    }
+
+    /// Install a line stored at `size` compressed bytes.  Every line
+    /// forced out lands in `victims` — whole superblocks in slot order,
+    /// so consecutive entries of one group form the gang the memory
+    /// controller's ganged-writeback contract expects.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill(
+        &mut self,
+        line_addr: u64,
+        dirty: bool,
+        level: u8,
+        core: u8,
+        prefetch: bool,
+        size: u32,
+        victims: &mut Vec<Evicted>,
+    ) {
+        debug_assert!((1..=64).contains(&size), "line size {size} out of range");
+        self.tick += 1;
+        let tick = self.tick;
+        let si = self.set_of(line_addr);
+        let group = group_of(line_addr);
+        let slot = (line_addr % GROUP_LINES) as usize;
+        let bit = 1u8 << slot;
+
+        let idx = match self.find(si, group) {
+            Some(i) => i,
+            None => {
+                // allocate a tag: a free entry if any, else evict the
+                // victim superblock (tag pressure)
+                match self.sets[si].iter().position(|sb| sb.valid == 0) {
+                    Some(free) => free,
+                    None => {
+                        let v = self
+                            .pick_victim(si, usize::MAX)
+                            .expect("a full tag array has a victim");
+                        self.stats.tag_evictions += 1;
+                        self.evict_superblock(si, v, victims);
+                        v
+                    }
+                }
+            }
+        };
+
+        {
+            let sb = &mut self.sets[si][idx];
+            if sb.valid == 0 {
+                sb.tag = group;
+            }
+            if sb.valid & bit != 0 {
+                // already resident (e.g. racing prefetch): merge flags,
+                // refresh the stored size (mirrors the baseline merge) —
+                // and fall through to the budget loop below, since a line
+                // re-installed at a larger size can push the set over
+                if dirty {
+                    sb.dirty |= bit;
+                }
+                sb.level[slot] = level;
+                let old = sb.size[slot] as u32;
+                sb.size[slot] = size as u8;
+                self.occ[si] = self.occ[si] - old + size;
+                self.bytes_now = self.bytes_now - old as u64 + size as u64;
+            } else {
+                sb.valid |= bit;
+                if dirty {
+                    sb.dirty |= bit;
+                } else {
+                    sb.dirty &= !bit;
+                }
+                sb.level[slot] = level;
+                sb.core[slot] = core;
+                sb.size[slot] = size as u8;
+                if prefetch {
+                    sb.prefetch |= bit;
+                    sb.referenced &= !bit;
+                    // prefetches age like the baseline: one tick older
+                    // than a demand fill, so they lose LRU ties to
+                    // demanded data
+                    sb.lru = sb.lru.max(tick.saturating_sub(1));
+                } else {
+                    sb.prefetch &= !bit;
+                    sb.referenced |= bit;
+                    sb.lru = tick;
+                }
+                self.occ[si] += size;
+                self.lines_now += 1;
+                self.bytes_now += size as u64;
+            }
+        }
+
+        // data budget: shed LRU superblocks (sparing the one just filled)
+        // until the set fits again
+        while self.occ[si] > self.budget {
+            let Some(v) = self.pick_victim(si, idx) else {
+                // only the filled superblock is live; it fits the budget
+                // by the constructor invariant (budget >= 256 B)
+                debug_assert!(self.occ[si] <= self.budget);
+                break;
+            };
+            self.stats.data_evictions += 1;
+            self.evict_superblock(si, v, victims);
+        }
+    }
+
+    /// Remove a specific line (returns it if it was present).
+    pub fn invalidate(&mut self, line_addr: u64) -> Option<Evicted> {
+        let si = self.set_of(line_addr);
+        let group = group_of(line_addr);
+        let slot = (line_addr % GROUP_LINES) as usize;
+        let bit = 1u8 << slot;
+        let i = self.find(si, group)?;
+        let sb = &mut self.sets[si][i];
+        if sb.valid & bit == 0 {
+            return None;
+        }
+        let out = sb.evicted(slot);
+        let size = sb.size[slot];
+        sb.valid &= !bit;
+        sb.dirty &= !bit;
+        sb.referenced &= !bit;
+        sb.prefetch &= !bit;
+        if sb.valid == 0 {
+            *sb = SuperBlock::default();
+        }
+        self.occ[si] -= size as u32;
+        self.lines_now -= 1;
+        self.bytes_now -= size as u64;
+        Some(out)
+    }
+
+    /// Ganged eviction: force out every resident member of `line_addr`'s
+    /// group.  With superblock tags the group lives under one tag in one
+    /// set, so this clears a single superblock; order is slot order.
+    pub fn evict_group(&mut self, line_addr: u64) -> InlineVec<Evicted, 4> {
+        let base = group_base(line_addr);
+        let mut gang = InlineVec::new();
+        for i in 0..GROUP_LINES {
+            if let Some(e) = self.invalidate(base + i) {
+                gang.push(e);
+            }
+        }
+        gang
+    }
+
+    /// Which members of the group are currently resident (slot mask).
+    pub fn group_residency(&self, line_addr: u64) -> [bool; 4] {
+        let base = group_base(line_addr);
+        core::array::from_fn(|i| self.contains(base + i as u64))
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 16 KB, 4-way base geometry: 64 sets, 256 B data budget per set,
+    /// 8 superblock tags per set at the default 2× ratio.
+    fn small() -> CompressedCache {
+        CompressedCache::new(
+            CacheConfig { bytes: 16384, ways: 4 },
+            CompressedLlcConfig::default(),
+        )
+    }
+
+    fn fill1(c: &mut CompressedCache, line: u64, dirty: bool, size: u32) -> Vec<Evicted> {
+        let mut v = Vec::new();
+        c.fill(line, dirty, 0, 0, false, size, &mut v);
+        v
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = small();
+        assert!(!c.access_ex(100, false).hit);
+        assert!(fill1(&mut c, 100, false, 32).is_empty());
+        assert!(c.access_ex(100, false).hit);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.size_of(100), Some(32));
+    }
+
+    #[test]
+    fn group_members_share_one_set_and_tag() {
+        let mut c = small();
+        for i in 0..4 {
+            fill1(&mut c, 256 + i, false, 16);
+        }
+        assert_eq!(c.group_residency(257), [true; 4]);
+        // one superblock: evicting via the group API clears all four
+        let gang = c.evict_group(258);
+        assert_eq!(gang.len(), 4);
+        assert_eq!(c.group_residency(257), [false; 4]);
+    }
+
+    #[test]
+    fn compressed_lines_exceed_base_ways() {
+        let mut c = small();
+        // 8 whole groups of 8-byte lines map to set 0 (groups 0, 64, ...):
+        // 32 resident lines in a set whose base geometry holds 4 raw lines
+        for g in 0..8u64 {
+            for s in 0..4u64 {
+                let v = fill1(&mut c, g * 64 * 4 + s, false, 8);
+                assert!(v.is_empty(), "256 B of 8 B lines fit the budget");
+            }
+        }
+        for g in 0..8u64 {
+            for s in 0..4u64 {
+                assert!(c.contains(g * 64 * 4 + s));
+            }
+        }
+        let st = c.stats();
+        assert_eq!(st.tag_evictions + st.data_evictions, 0);
+    }
+
+    #[test]
+    fn tag_exhaustion_evicts_whole_superblock() {
+        let mut c = small();
+        // fill all 8 tags of set 0 with full groups of tiny lines
+        for g in 0..8u64 {
+            for s in 0..4u64 {
+                fill1(&mut c, g * 64 * 4 + s, s == 1, 4);
+            }
+        }
+        // a 9th group in the same set: no free tag, data budget fine
+        let v = fill1(&mut c, 8 * 64 * 4, false, 4);
+        assert_eq!(v.len(), 4, "tag victim is a whole superblock (a gang)");
+        let base = group_base(v[0].line_addr);
+        assert!(v.iter().all(|e| group_base(e.line_addr) == base));
+        assert!(v.iter().any(|e| e.dirty), "dirty bit travels with the gang");
+        assert_eq!(c.stats().tag_evictions, 1);
+        assert_eq!(c.stats().data_evictions, 0);
+    }
+
+    #[test]
+    fn data_budget_evicts_under_incompressible_fill() {
+        let mut c = small();
+        // 64-byte (raw) lines: the 256 B budget holds four; a fifth in the
+        // same set must force a data eviction despite free tags
+        for g in 0..4u64 {
+            let v = fill1(&mut c, g * 64 * 4, false, 64);
+            assert!(v.is_empty());
+        }
+        let v = fill1(&mut c, 4 * 64 * 4, false, 64);
+        assert_eq!(v.len(), 1);
+        assert_eq!(c.stats().data_evictions, 1);
+        assert_eq!(c.stats().tag_evictions, 0);
+    }
+
+    #[test]
+    fn lru_and_prefetch_preference_mirror_baseline() {
+        let mut c = small();
+        fill1(&mut c, 0, false, 64); // group 0
+        c.access_ex(0, false);
+        // prefetched, never-referenced group: preferred victim
+        let mut v = Vec::new();
+        c.fill(64 * 4, false, 0, 0, true, 64, &mut v);
+        c.access_ex(0, false); // group 0 clearly MRU and referenced
+        fill1(&mut c, 2 * 64 * 4, false, 64);
+        fill1(&mut c, 3 * 64 * 4, false, 64);
+        let vict = fill1(&mut c, 4 * 64 * 4, false, 64);
+        assert_eq!(vict.len(), 1);
+        assert_eq!(vict[0].line_addr, 64 * 4, "unreferenced prefetch evicted first");
+        assert!(vict[0].was_prefetch);
+        assert!(!vict[0].referenced);
+    }
+
+    #[test]
+    fn first_prefetch_use_reported_once() {
+        let mut c = small();
+        let mut v = Vec::new();
+        c.fill(8, false, 1, 2, true, 16, &mut v);
+        let a = c.access_ex(8, false);
+        assert!(a.hit && a.first_prefetch_use);
+        let b = c.access_ex(8, false);
+        assert!(b.hit && !b.first_prefetch_use);
+    }
+
+    #[test]
+    fn invalidate_round_trips_flags() {
+        let mut c = small();
+        let mut v = Vec::new();
+        c.fill(8, true, 2, 3, false, 24, &mut v);
+        assert!(c.is_dirty(8));
+        assert_eq!(c.level_of(8), Some(2));
+        let e = c.invalidate(8).unwrap();
+        assert_eq!(e.line_addr, 8);
+        assert!(e.dirty);
+        assert_eq!(e.level, 2);
+        assert_eq!(e.core, 3);
+        assert!(!c.contains(8));
+        assert_eq!(c.invalidate(8), None);
+    }
+
+    #[test]
+    fn occupancy_telemetry_tracks_residency() {
+        let mut c = small();
+        fill1(&mut c, 0, false, 8);
+        fill1(&mut c, 1, false, 8);
+        c.access_ex(0, false); // sample: 2 lines, 16 bytes
+        c.access_ex(1, false); // sample: 2 lines, 16 bytes
+        let st = c.stats();
+        assert_eq!(st.samples, 2);
+        assert_eq!(st.lines_sum, 4);
+        assert_eq!(st.bytes_sum, 32);
+        assert!((st.avg_lines() - 2.0).abs() < 1e-12);
+        assert!((st.avg_bytes() - 16.0).abs() < 1e-12);
+        // warmup subtraction
+        let warm = st;
+        c.access_ex(0, false);
+        let d = c.stats().since(&warm);
+        assert_eq!(d.samples, 1);
+        assert_eq!(d.lines_sum, 2);
+        assert_eq!(d.baseline_lines, warm.baseline_lines);
+    }
+
+    #[test]
+    fn effective_ratio_exceeds_one_when_packed() {
+        let mut c = small();
+        // resident: 8 sets' worth is irrelevant — stuff one set beyond its
+        // base ways and sample
+        for g in 0..8u64 {
+            for s in 0..4u64 {
+                fill1(&mut c, g * 64 * 4 + s, false, 8);
+            }
+        }
+        c.access_ex(0, false);
+        let st = c.stats();
+        // 32 lines resident vs baseline 64 sets * 4 ways = 256 — the
+        // *cache-wide* ratio needs every set filled; check the raw sums
+        assert_eq!(st.lines_sum, 32);
+        assert_eq!(st.baseline_lines, 256);
+        assert_eq!(st.tag_capacity, 64 * 8);
+    }
+
+    #[test]
+    fn merge_refreshes_size_and_occupancy() {
+        let mut c = small();
+        fill1(&mut c, 0, false, 64);
+        fill1(&mut c, 0, true, 16); // re-fill resident line at smaller size
+        assert!(c.is_dirty(0));
+        assert_eq!(c.size_of(0), Some(16));
+        // freed budget: three more raw lines now fit without eviction
+        for g in 1..4u64 {
+            assert!(fill1(&mut c, g * 64 * 4, false, 64).is_empty());
+        }
+        assert!(fill1(&mut c, 4 * 64 * 4, false, 16).is_empty());
+        assert_eq!(c.stats().data_evictions, 0);
+    }
+
+    #[test]
+    fn merge_growth_enforces_budget() {
+        let mut c = small();
+        fill1(&mut c, 0, false, 8);
+        fill1(&mut c, 1, false, 8);
+        for g in 1..5u64 {
+            let sz = if g == 4 { 32 } else { 64 };
+            assert!(fill1(&mut c, g * 64 * 4, false, sz).is_empty());
+        }
+        // resident line 0 re-installed at raw size: occupancy grows past
+        // the 256 B budget and the set must shed a victim superblock
+        let v = fill1(&mut c, 0, false, 64);
+        assert_eq!(c.size_of(0), Some(64));
+        assert!(!v.is_empty(), "growth past the budget must evict");
+        assert_eq!(c.stats().data_evictions, 1);
+        assert!(c.contains(1), "the merged superblock itself is spared");
+    }
+
+    #[test]
+    #[should_panic(expected = "data budget must hold one full superblock")]
+    fn tiny_data_budget_rejected() {
+        let _ = CompressedCache::new(
+            CacheConfig { bytes: 8192, ways: 2 },
+            CompressedLlcConfig::default(),
+        );
+    }
+
+    #[test]
+    fn paper_llc_geometry_budget() {
+        let c = CompressedCache::new(CacheConfig::paper_llc(), CompressedLlcConfig::default());
+        assert_eq!(c.num_sets(), 8192);
+        let st = c.stats();
+        assert_eq!(st.baseline_lines, 8192 * 16);
+        assert_eq!(st.tag_capacity, 8192 * 32);
+    }
+}

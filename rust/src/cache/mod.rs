@@ -2,10 +2,20 @@
 //! the CRAM-specific tag extensions (2-bit prior-compressibility, core id
 //! + reuse bit for sampled sets) and ganged eviction of compressed groups.
 //!
-//! The simulator is trace-driven at line granularity, so the cache tracks
-//! tags and flags only — data bytes live in the byte-accurate
-//! [`crate::cram::store::CompressedStore`] when fidelity demands it.
+//! Two LLC organizations share the `Evicted`/`AccessInfo` contracts:
+//!
+//! * [`SetAssocCache`] — the baseline uncompressed tag array;
+//! * [`CompressedCache`] — the Touché-style compressed LLC (superblock
+//!   tags over a fixed per-set data budget), selected by
+//!   `SimConfig::llc_compressed`.
+//!
+//! The simulator is trace-driven at line granularity, so the caches track
+//! tags, flags and (compressed) sizes only — data bytes live in the
+//! byte-accurate [`crate::cram::store::CompressedStore`] when fidelity
+//! demands it.
 
+pub mod compressed;
 pub mod set_assoc;
 
+pub use compressed::{CacheStats, CompressedCache, CompressedLlcConfig};
 pub use set_assoc::{AccessInfo, CacheConfig, Evicted, SetAssocCache};

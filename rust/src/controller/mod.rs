@@ -74,6 +74,10 @@ pub struct Install {
     pub level: u8,
     /// Installed for free by compression (not the demanded line).
     pub prefetch: bool,
+    /// Hybrid-compressed size in bytes, filled only when the LLC stores
+    /// lines compressed ([`MemoryController::llc_compressed`]); 0 when
+    /// the LLC is uncompressed and never looks at it.
+    pub size: u8,
 }
 
 /// Install list of one read: at most the four lines of a group, inline
@@ -100,6 +104,10 @@ pub struct MemoryController {
     pub dynamic: Option<DynamicCram>,
     /// The two-tier memory front-end (tiered designs only).
     pub tier: Option<TieredMemory>,
+    /// The LLC stores lines compressed (`SimConfig::llc_compressed`):
+    /// every [`Install`] this controller returns carries the line's
+    /// hybrid-compressed size so the cache can charge its data budget.
+    pub llc_compressed: bool,
     pub bw: Bandwidth,
     /// CPU-visible latency of every demand read this controller served
     /// (one sample per [`MemoryController::read`] call — the Figure Q1
@@ -166,6 +174,7 @@ impl MemoryController {
         Self {
             design,
             tier,
+            llc_compressed: false,
             mem_csi: PagedArena::new(Csi::Uncompressed),
             llp: LineLocationPredictor::new(llp_entries, 0xD1CE),
             meta,
@@ -200,7 +209,15 @@ impl MemoryController {
         oracle: &mut SizeOracle,
         sampled: bool,
     ) -> ReadOutcome {
-        let out = self.read_inner(line, core, now, dram, oracle, sampled);
+        let mut out = self.read_inner(line, core, now, dram, oracle, sampled);
+        if self.llc_compressed {
+            // a compressed LLC charges its data budget per line: stamp
+            // every install with the hybrid size (memoized in the oracle,
+            // so this is an O(1) lookup on the steady-state path)
+            for ins in out.installs.as_mut_slice() {
+                ins.size = oracle.size(ins.line_addr) as u8;
+            }
+        }
         self.read_lat.record(out.done.saturating_sub(now));
         out
     }
@@ -224,6 +241,7 @@ impl MemoryController {
                         line_addr: line,
                         level: 0,
                         prefetch: false,
+                        size: 0,
                     }]),
                 }
             }
@@ -247,8 +265,8 @@ impl MemoryController {
                 ReadOutcome {
                     done,
                     installs: Installs::of(&[
-                        Install { line_addr: line, level: 0, prefetch: false },
-                        Install { line_addr: line + 1, level: 0, prefetch: true },
+                        Install { line_addr: line, level: 0, prefetch: false, size: 0 },
+                        Install { line_addr: line + 1, level: 0, prefetch: true, size: 0 },
                     ]),
                 }
             }
@@ -345,7 +363,7 @@ impl MemoryController {
             if prefetch {
                 self.prefetch_installed += 1;
             }
-            v.push(Install { line_addr: la, level: csi.level_of(s), prefetch });
+            v.push(Install { line_addr: la, level: csi.level_of(s), prefetch, size: 0 });
         }
         // The demanded line is always recoverable at `loc` by construction.
         debug_assert!(v.iter().any(|i| i.line_addr == demanded));
@@ -765,7 +783,7 @@ mod tests {
         let r = mc.read(1, 0, 100, &mut dram, &mut oracle, false);
         assert_eq!(mc.bw.second_reads, 1, "mispredicted: slot1 then slot0");
         assert_eq!(r.installs.len(), 4);
-        assert!((mc.llp.stats.accuracy() - 0.0).abs() < 1e-12);
+        assert_eq!(mc.llp.stats.accuracy(), Some(0.0));
     }
 
     #[test]
@@ -962,6 +980,27 @@ mod tests {
         // per-tier counters account for every access the controller charged
         let stats = mc.tier.as_ref().unwrap().snapshot();
         assert_eq!(stats.total_accesses(), mc.bw.total());
+    }
+
+    #[test]
+    fn compressed_llc_mode_stamps_install_sizes() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.llc_compressed = true;
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        let r = mc.read(2, 0, 100, &mut dram, &mut oracle, false);
+        assert_eq!(r.installs.len(), 4);
+        for i in r.installs.iter() {
+            assert!(
+                (2..=64).contains(&i.size),
+                "compressed-LLC install must carry a real size, got {}",
+                i.size
+            );
+            assert_eq!(i.size as u32, oracle.size(i.line_addr));
+        }
+        // with the knob off, sizes stay 0 (the plain LLC never reads them)
+        let (mut mc2, mut dram2, mut oracle2) = setup(Design::Implicit);
+        let r2 = mc2.read(2, 0, 0, &mut dram2, &mut oracle2, false);
+        assert!(r2.installs.iter().all(|i| i.size == 0));
     }
 
     #[test]

@@ -6,7 +6,9 @@ use std::sync::Mutex;
 use crate::controller::Design;
 use crate::sim::{simulate, SimConfig};
 use crate::stats::SimResult;
-use crate::workloads::profiles::{all27, all64, far_pressure, latency_sensitive, WorkloadProfile};
+use crate::workloads::profiles::{
+    all27, all64, cache_pressure, far_pressure, latency_sensitive, WorkloadProfile,
+};
 
 /// Key identifying one simulation run.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -17,6 +19,8 @@ pub struct RunKey {
     /// Far-tier capacity split in thousandths (0 for flat designs), so
     /// tiered runs at different ratios never collide in the cache.
     pub far_mill: u16,
+    /// Compressed LLC (Figure C1 runs) — plain-LLC runs use `false`.
+    pub llc_comp: bool,
 }
 
 /// Far ratio → cache-key thousandths.
@@ -52,6 +56,8 @@ struct Job {
     channels: usize,
     /// Far-tier capacity fraction for tiered designs (None = flat).
     far_ratio: Option<f64>,
+    /// Run with the compressed LLC (Figure C1).
+    llc_comp: bool,
 }
 
 impl Job {
@@ -63,7 +69,22 @@ impl Job {
             Design::Tiered { .. } => Some(T1_FAR_RATIO),
             _ => None,
         };
-        Self { profile, design, channels, far_ratio }
+        Self { profile, design, channels, far_ratio, llc_comp: false }
+    }
+
+    /// Same design, compressed LLC (Figure C1's second column family).
+    fn new_comp(profile: WorkloadProfile, design: Design, channels: usize) -> Self {
+        Self { llc_comp: true, ..Self::new(profile, design, channels) }
+    }
+
+    fn key(&self) -> RunKey {
+        RunKey {
+            workload: self.profile.name.to_string(),
+            design: self.design.name(),
+            channels: self.channels,
+            far_mill: far_mill_of(self.far_ratio),
+            llc_comp: self.llc_comp,
+        }
     }
 }
 
@@ -97,6 +118,10 @@ pub const Q1_DESIGNS: [Design; 3] = [
     Design::Explicit { row_opt: false },
     Design::Dynamic,
 ];
+
+/// The memory-side designs the Figure C1 compressed-LLC exhibit crosses
+/// with the LLC organization (cache compression × memory compression).
+pub const C1_DESIGNS: [Design; 2] = [Design::Implicit, Design::Dynamic];
 
 /// Results cache for the full evaluation.
 pub struct ResultsDb {
@@ -138,7 +163,28 @@ impl ResultsDb {
         }
         jobs.extend(Self::t1_jobs());
         jobs.extend(Self::q1_extra_jobs());
+        jobs.extend(Self::c1_jobs());
         self.run_jobs(jobs, progress);
+    }
+
+    /// The Figure C1 matrix: the 27 suite plus the cache-pressure set,
+    /// each under {static, dynamic} CRAM × {plain, compressed} LLC, with
+    /// a plain-LLC uncompressed baseline for the speedup denominator.
+    fn c1_jobs() -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for w in all27().into_iter().chain(cache_pressure()) {
+            jobs.push(Job::new(w.clone(), Design::Uncompressed, 2));
+            for d in C1_DESIGNS {
+                jobs.push(Job::new(w.clone(), d, 2));
+                jobs.push(Job::new_comp(w.clone(), d, 2));
+            }
+        }
+        jobs
+    }
+
+    /// Run the Figure C1 matrix only.
+    pub fn run_c1(&mut self, progress: bool) {
+        self.run_jobs(Self::c1_jobs(), progress);
     }
 
     /// The Figure Q1 jobs not already covered by the core matrix: the
@@ -211,16 +257,14 @@ impl ResultsDb {
     }
 
     fn run_jobs(&mut self, jobs: Vec<Job>, progress: bool) {
-        // skip already-cached runs
+        // skip already-cached runs and in-batch duplicates (sub-matrices
+        // like C1 overlap the core matrix on their plain-LLC runs)
+        let mut seen = std::collections::HashSet::new();
         let jobs: Vec<Job> = jobs
             .into_iter()
             .filter(|j| {
-                !self.results.contains_key(&RunKey {
-                    workload: j.profile.name.to_string(),
-                    design: j.design.name(),
-                    channels: j.channels,
-                    far_mill: far_mill_of(j.far_ratio),
-                })
+                let key = j.key();
+                !self.results.contains_key(&key) && seen.insert(key)
             })
             .collect();
         if jobs.is_empty() {
@@ -269,18 +313,15 @@ impl ResultsDb {
                     if let Some(r) = job.far_ratio {
                         cfg = cfg.with_far_ratio(r);
                     }
+                    if job.llc_comp {
+                        cfg = cfg.with_compressed_llc();
+                    }
                     // 2x warmup: the LLC, memory layout AND the Dynamic
                     // gate must all reach steady state before measurement
                     // (the paper's 1B-inst slices warm up for free).
                     cfg.warmup_insts = insts * 2;
                     let r = simulate(&job.profile, &cfg);
-                    let key = RunKey {
-                        workload: job.profile.name.to_string(),
-                        design: job.design.name(),
-                        channels: job.channels,
-                        far_mill: far_mill_of(job.far_ratio),
-                    };
-                    out.lock().unwrap().push((key, r));
+                    out.lock().unwrap().push((job.key(), r));
                     let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
                     if progress && (d % 10 == 0 || d == total) {
                         eprintln!("  [{d}/{total}] simulations done");
@@ -309,6 +350,22 @@ impl ResultsDb {
             design: design.name(),
             channels,
             far_mill,
+            llc_comp: false,
+        })
+    }
+
+    /// Fetch a cached result by LLC organization (2 channels; Figure C1).
+    pub fn get_llc(&self, workload: &str, design: Design, llc_comp: bool) -> Option<&SimResult> {
+        let far_mill = match design {
+            Design::Tiered { .. } => far_mill_of(Some(T1_FAR_RATIO)),
+            _ => 0,
+        };
+        self.results.get(&RunKey {
+            workload: workload.to_string(),
+            design: design.name(),
+            channels: 2,
+            far_mill,
+            llc_comp,
         })
     }
 
@@ -368,6 +425,28 @@ mod tests {
             for d in Q1_DESIGNS {
                 let r = db.get(w.name, d).expect("q1 result cached");
                 assert_eq!(r.read_lat.count(), r.bw.demand_reads);
+            }
+        }
+    }
+
+    #[test]
+    fn c1_matrix_covers_both_llc_organizations() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 20_000,
+            seed: 7,
+            threads: 4,
+        });
+        db.run_c1(false);
+        let n_wl = 27 + cache_pressure().len();
+        // per workload: 1 baseline + 2 designs x {plain, compressed}
+        assert_eq!(db.len(), n_wl * (1 + 2 * C1_DESIGNS.len()));
+        for w in cache_pressure() {
+            assert!(db.get_llc(w.name, Design::Uncompressed, false).is_some());
+            for d in C1_DESIGNS {
+                let plain = db.get_llc(w.name, d, false).expect("plain run cached");
+                let comp = db.get_llc(w.name, d, true).expect("compressed run cached");
+                assert!(plain.llc_stats.is_none());
+                assert!(comp.llc_stats.is_some(), "{} {}", w.name, d.name());
             }
         }
     }

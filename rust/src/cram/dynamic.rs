@@ -1,19 +1,29 @@
-//! Dynamic-CRAM (paper §VI): set-sampled cost/benefit compression gating.
+//! Dynamic-CRAM (paper §VI): sampled cost/benefit compression gating.
 //!
-//! A small fraction of LLC sets (1%) *always* compress; only they update
-//! the statistics.  A 12-bit saturating counter per core is decremented on
-//! every bandwidth **cost** event (extra clean writeback, invalidate,
-//! mispredicted second access) and incremented on every **benefit** event
-//! (useful bandwidth-free prefetch).  The counter's MSB gates compression
-//! for the other 99% of sets, per requesting core.
+//! A small fraction (~1%) of compression *groups* always compress; only
+//! they update the statistics.  Sampling is **group-granular**: the four
+//! lines of a CRAM group span four consecutive LLC sets, so a set-granular
+//! sample (the paper's framing) can disagree between members of one group
+//! — cost/benefit events would then be attributed for lines whose group
+//! was never in the always-compress population.  Every caller (read path,
+//! writeback path, prefetch-use accounting) therefore decides sampling via
+//! [`DynamicCram::is_sampled_group`] on the group index, so one group gets
+//! one consistent verdict.
+//!
+//! A 12-bit saturating counter per core is decremented on every bandwidth
+//! **cost** event (extra clean writeback, invalidate, mispredicted second
+//! access) and incremented on every **benefit** event (useful
+//! bandwidth-free prefetch).  The counter's MSB gates compression for the
+//! other 99% of groups, per requesting core.
 
 /// Counter width (paper: 12 bits, sized for 1B-instruction slices; the
 /// simulator scales it down with the slice length — see
 /// [`DynamicCram::with_bits`]).
 pub const COUNTER_BITS: u32 = 12;
 
-/// Fraction of LLC sets that are sampled (always-compress). 1% ≈ 1/128
-/// was chosen as a power-of-two approximation of the paper's 1%.
+/// Fraction of compression groups that are sampled (always-compress).
+/// 1% ≈ 1/128 was chosen as a power-of-two approximation of the paper's
+/// 1% of LLC sets.
 pub const SAMPLE_MOD: u64 = 128;
 
 /// Per-core Dynamic-CRAM policy state.
@@ -38,7 +48,16 @@ impl DynamicCram {
     /// hysteresis depth, which must be proportional to the sampled-event
     /// rate of the simulated slice (the paper's 12 bits suit 1B-inst
     /// slices; short simulation slices use 8).
+    ///
+    /// `bits` must be at least 2: the hysteresis band is `1 << (bits - 2)`
+    /// wide, so a 1-bit counter has no representable band (and would
+    /// underflow the shift into a corrupt threshold).
     pub fn with_bits(cores: usize, bits: u32) -> Self {
+        assert!(
+            (2..=30).contains(&bits),
+            "DynamicCram counter width must be 2..=30 bits (got {bits}): \
+             the hysteresis thresholds are 1<<(bits-2) and 3<<(bits-2)"
+        );
         Self {
             // start at the enable threshold: compression on until costs
             // demonstrably dominate
@@ -55,15 +74,14 @@ impl DynamicCram {
         (1 << self.bits) - 1
     }
 
-    /// Is `set_index` one of the sampled (always-compress) LLC sets?
-    #[inline]
-    pub fn is_sampled_set(set_index: u64) -> bool {
-        set_index % SAMPLE_MOD == 0
-    }
-
     /// Group-granular sampling: a compression group's four lines span four
     /// consecutive LLC sets, so cost/benefit attribution must be decided
-    /// per *group* (all four lines agree), not per line's set.
+    /// per *group* (all four lines agree), not per line's set.  This is
+    /// the **only** sampling predicate — a former set-granular variant
+    /// (`is_sampled_set`) could disagree with this one for the same line
+    /// (set index = line mod sets, group index = line / 4), which let
+    /// cost/benefit events be recorded for sets whose group was never in
+    /// the sampled population.
     #[inline]
     pub fn is_sampled_group(group: u64) -> bool {
         group % SAMPLE_MOD == 0
@@ -192,9 +210,56 @@ mod tests {
     }
 
     #[test]
-    fn sampled_sets_are_about_one_percent() {
-        let sampled = (0..8192u64).filter(|&s| DynamicCram::is_sampled_set(s)).count();
+    fn sampled_groups_are_about_one_percent() {
+        let sampled = (0..8192u64)
+            .filter(|&g| DynamicCram::is_sampled_group(g))
+            .count();
         assert_eq!(sampled, 8192 / SAMPLE_MOD as usize);
+    }
+
+    #[test]
+    fn sampling_is_consistent_across_a_group() {
+        // every line of a group must get the same sampling verdict: the
+        // predicate is a function of the group index alone, so the four
+        // members (which span four consecutive LLC sets) always agree
+        use crate::mem::{group_base, group_of};
+        for line in 0..4096u64 {
+            let verdicts: Vec<bool> = (0..4u64)
+                .map(|s| DynamicCram::is_sampled_group(group_of(group_base(line) + s)))
+                .collect();
+            assert!(
+                verdicts.iter().all(|&v| v == verdicts[0]),
+                "line {line}: group members disagree: {verdicts:?}"
+            );
+            assert_eq!(DynamicCram::is_sampled_group(group_of(line)), verdicts[0]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "counter width must be 2..=30")]
+    fn one_bit_counter_fails_fast() {
+        // 1 << (bits - 2) underflows for bits < 2; construction must
+        // reject it instead of producing a corrupt hysteresis band
+        let _ = DynamicCram::with_bits(1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "counter width must be 2..=30")]
+    fn zero_bit_counter_fails_fast() {
+        let _ = DynamicCram::with_bits(4, 0);
+    }
+
+    #[test]
+    fn two_bit_counter_is_the_smallest_valid_width() {
+        let mut d = DynamicCram::with_bits(1, 2); // range 0..3, lo=1 hi=3
+        assert!(d.enabled(0), "starts at the enable threshold");
+        d.on_cost(0);
+        d.on_cost(0);
+        assert!(!d.enabled(0), "counter 0 < lo disables");
+        for _ in 0..3 {
+            d.on_benefit(0);
+        }
+        assert!(d.enabled(0), "counter 3 >= hi re-enables");
     }
 
     #[test]

@@ -3,7 +3,15 @@
 //! Lines within a page tend to have similar compressibility, so a tiny
 //! *Last Compressibility Table* (LCT) indexed by a hash of the page address
 //! predicts a line's CSI — and therefore its location — with ~98% accuracy.
-//! 512 entries × 2 bits ≈ 128 bytes (Table III).
+//!
+//! **Storage accounting.**  Table III provisions 2 bits per entry (128
+//! bytes for 512 entries), but the CSI has five states
+//! (`Uncompressed..Quad`) and all five are location-relevant: collapsing
+//! `Quad` into `PairBoth` mispredicts slots C and D, so a genuinely 2-bit
+//! entry cannot round-trip the layouts the predictor must distinguish.
+//! The LCT therefore stores the canonical 3-bit CSI encoding (shared with
+//! the explicit-metadata region) and [`storage_bytes`] accounts 3 bits per
+//! entry honestly: 512 entries ≈ 192 bytes.
 //!
 //! The predictor is consulted only when a line actually has location
 //! uncertainty (slot A never moves).  On a misprediction the controller
@@ -11,9 +19,15 @@
 //! the implicit-metadata markers verify every guess, which is what makes a
 //! *memory-side* location predictor sound (caches verify via tags; memory
 //! has no tags — §VIII-E).
+//!
+//! [`storage_bytes`]: LineLocationPredictor::storage_bytes
 
 use crate::cram::group::Csi;
 use crate::util::rng::splitmix64;
+
+/// Bits per LCT entry: the canonical CSI encoding.  Five states need
+/// three bits; two (the paper's Table III claim) cannot round-trip them.
+pub const LCT_ENTRY_BITS: u32 = 3;
 
 /// Prediction statistics.
 #[derive(Clone, Copy, Debug, Default)]
@@ -24,11 +38,14 @@ pub struct LlpStats {
 }
 
 impl LlpStats {
-    pub fn accuracy(&self) -> f64 {
+    /// Fraction of needed predictions that were correct, or `None` when
+    /// the LCT was never consulted (a run with no location uncertainty
+    /// has no accuracy to report — figures print it as "n/a", not 100%).
+    pub fn accuracy(&self) -> Option<f64> {
         if self.predictions == 0 {
-            1.0
+            None
         } else {
-            self.correct as f64 / self.predictions as f64
+            Some(self.correct as f64 / self.predictions as f64)
         }
     }
 }
@@ -36,8 +53,9 @@ impl LlpStats {
 /// The Line Location Predictor.
 #[derive(Clone, Debug)]
 pub struct LineLocationPredictor {
-    /// Last CSI seen per page-hash bucket.
-    lct: Vec<Csi>,
+    /// Last CSI seen per page-hash bucket, stored through the 3-bit
+    /// canonical encoding (every `Csi` round-trips — tested below).
+    lct: Vec<u8>,
     key: u64,
     pub stats: LlpStats,
 }
@@ -52,10 +70,21 @@ impl LineLocationPredictor {
     pub fn new(entries: usize, key: u64) -> Self {
         assert!(entries.is_power_of_two());
         Self {
-            lct: vec![Csi::Uncompressed; entries],
+            lct: vec![Self::encode(Csi::Uncompressed); entries],
             key,
             stats: LlpStats::default(),
         }
+    }
+
+    /// The LCT entry encoding: the canonical 3-bit CSI discriminant.
+    #[inline]
+    fn encode(csi: Csi) -> u8 {
+        csi as u8
+    }
+
+    #[inline]
+    fn decode(v: u8) -> Csi {
+        Csi::from_u8(v).expect("LCT holds canonical CSI encodings")
     }
 
     #[inline]
@@ -66,7 +95,7 @@ impl LineLocationPredictor {
     /// Predict the group CSI for a line in `page`.
     #[inline]
     pub fn predict(&self, page: u64) -> Csi {
-        self.lct[self.index(page)]
+        Self::decode(self.lct[self.index(page)])
     }
 
     /// Predict the physical location for a line at `slot` of its group.
@@ -84,21 +113,27 @@ impl LineLocationPredictor {
     /// Train with the actual CSI discovered by the read/write path.
     pub fn update(&mut self, page: u64, actual: Csi) {
         let idx = self.index(page);
-        self.lct[idx] = actual;
+        self.lct[idx] = Self::encode(actual);
     }
 
-    /// Record whether a needed prediction turned out correct.
+    /// Record whether a needed prediction turned out correct.  Must pair
+    /// with a prior `predict_location` that consulted the LCT — `correct`
+    /// can never exceed `predictions`.
     pub fn record_outcome(&mut self, correct: bool) {
         if correct {
+            assert!(
+                self.stats.correct < self.stats.predictions,
+                "record_outcome on a no-prediction path: correct would exceed predictions"
+            );
             self.stats.correct += 1;
         }
     }
 
-    /// Storage cost (paper Table III: 128 bytes for 512 entries).
+    /// Storage cost: 3 bits per entry (512 entries ≈ 192 bytes; the
+    /// paper's Table III claims 128B at 2 bits, which cannot encode the
+    /// five CSI states — see the module doc).
     pub fn storage_bytes(&self) -> u32 {
-        // 2 bits per entry is enough for the location-relevant state; the
-        // paper provisions 128B for 512 entries.
-        (self.lct.len() as u32 * 2).div_ceil(8)
+        (self.lct.len() as u32 * LCT_ENTRY_BITS).div_ceil(8)
     }
 }
 
@@ -128,6 +163,20 @@ mod tests {
     }
 
     #[test]
+    fn every_csi_round_trips_through_the_lct() {
+        let mut llp = LineLocationPredictor::default();
+        for csi in Csi::ALL {
+            llp.update(42, csi);
+            assert_eq!(llp.predict(42), csi, "{csi:?} must survive store/load");
+            // and the stored encoding fits the 3-bit budget
+            assert!(
+                (csi as u8) < (1 << LCT_ENTRY_BITS),
+                "{csi:?} exceeds {LCT_ENTRY_BITS} bits"
+            );
+        }
+    }
+
+    #[test]
     fn distinct_pages_mostly_distinct_buckets() {
         let llp = LineLocationPredictor::default();
         let mut collisions = 0;
@@ -148,11 +197,45 @@ mod tests {
         llp.predict_location(1, 2);
         llp.record_outcome(false);
         assert_eq!(llp.stats.predictions, 2);
-        assert!((llp.stats.accuracy() - 0.5).abs() < 1e-12);
+        assert!((llp.stats.accuracy().unwrap() - 0.5).abs() < 1e-12);
+        assert!(llp.stats.correct <= llp.stats.predictions);
     }
 
     #[test]
-    fn storage_overhead_table3() {
-        assert_eq!(LineLocationPredictor::default().storage_bytes(), 128);
+    fn accuracy_is_none_when_lct_never_consulted() {
+        let mut llp = LineLocationPredictor::default();
+        assert_eq!(llp.stats.accuracy(), None, "no predictions => n/a, not 100%");
+        // slot-A traffic alone never consults the LCT
+        llp.predict_location(9, 0);
+        assert_eq!(llp.stats.accuracy(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "no-prediction path")]
+    fn record_outcome_without_prediction_panics() {
+        let mut llp = LineLocationPredictor::default();
+        llp.predict_location(9, 0); // slot A: no prediction consumed
+        llp.record_outcome(true); // nothing to credit: correct > predictions
+    }
+
+    #[test]
+    fn correct_never_exceeds_predictions_under_mixed_traffic() {
+        let mut llp = LineLocationPredictor::default();
+        for i in 0..200u64 {
+            let slot = (i % 4) as u8;
+            let (_, needed) = llp.predict_location(i, slot);
+            if needed {
+                llp.record_outcome(i % 3 == 0);
+            }
+            assert!(llp.stats.correct <= llp.stats.predictions);
+        }
+    }
+
+    #[test]
+    fn storage_overhead_three_bits_per_entry() {
+        // 512 entries * 3 bits = 192 bytes (Table III's 128B claim cannot
+        // round-trip the five CSI states)
+        assert_eq!(LineLocationPredictor::default().storage_bytes(), 192);
+        assert_eq!(LineLocationPredictor::new(64, 1).storage_bytes(), 24);
     }
 }

@@ -2,10 +2,10 @@
 //!
 //! ```text
 //! repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]
-//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1> [--insts N]
+//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1> [--insts N]
 //! repro table <2|3|4|5> [--insts N]
 //! repro sim --workload W --design D [--insts N] [--channels C]
-//!           [--far-ratio R] [--trace FILE]
+//!           [--far-ratio R] [--trace FILE] [--llc-compressed]
 //! repro analyze [--artifact PATH] [--workload W] [--groups N]
 //! repro list
 //! ```
@@ -20,6 +20,12 @@
 //! the uncompressed baseline vs explicit-metadata CRAM vs Dynamic-CRAM,
 //! over the 27-workload suite plus the latency-sensitive `lat_*` set.
 //!
+//! `figure c1` is the compressed-LLC exhibit: static/dynamic CRAM under
+//! the plain vs Touché-style compressed LLC (`--llc-compressed` on
+//! `repro sim` flips the same knob), over the 27 suite plus the
+//! cache-pressure `llcfit_*` set.  `repro ablate llc` sweeps the
+//! superblock-tag ratio and the per-set data budget.
+//!
 //! (clap is unavailable in this offline environment; argument parsing is
 //! hand-rolled — see DESIGN.md §Substitutions.)
 
@@ -29,7 +35,7 @@ use cram::controller::Design;
 use cram::coordinator::figures;
 use cram::coordinator::runner::{ResultsDb, RunPlan, CORE_DESIGNS, TIERED_DESIGNS};
 use cram::sim::{simulate, SimConfig};
-use cram::workloads::profiles::{all64, by_name, far_pressure, latency_sensitive};
+use cram::workloads::profiles::{all64, by_name, cache_pressure, far_pressure, latency_sensitive};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -109,6 +115,7 @@ fn main() {
                 "fig4" | "table3" => {}
                 "figt1" => db.run_tiered_t1(true),
                 "figq1" => db.run_q1(true),
+                "figc1" => db.run_c1(true),
                 "fig18" => db.run_designs(&[Design::Uncompressed, Design::Dynamic], true, true),
                 "table4" => db.run_channel_sweep(true),
                 "fig3" => db.run_designs(
@@ -187,6 +194,9 @@ fn main() {
                     cram::workloads::TraceReplay::from_file(path).expect("load trace file"),
                 );
             }
+            if flags.contains_key("llc-compressed") {
+                cfg = cfg.with_compressed_llc();
+            }
             let base_cfg = SimConfig { design: Design::Uncompressed, ..cfg.clone() };
             let r = simulate(&profile, &cfg);
             let base = simulate(&profile, &base_cfg);
@@ -202,7 +212,10 @@ fn main() {
                 "  LLC hit rate       {:.1}%",
                 100.0 * r.llc_hits as f64 / (r.llc_hits + r.llc_misses).max(1) as f64
             );
-            println!("  LLP accuracy       {:.1}%", 100.0 * r.llp_accuracy);
+            match r.llp_accuracy {
+                Some(a) => println!("  LLP accuracy       {:.1}%", 100.0 * a),
+                None => println!("  LLP accuracy       n/a (LCT never consulted)"),
+            }
             println!(
                 "  read lat (ns)      mean {:.0} | p50 {:.0} | p95 {:.0} | p99 {:.0}",
                 r.read_lat.mean() * cram::stats::NS_PER_BUS_CYCLE,
@@ -219,6 +232,18 @@ fn main() {
             println!("  dyn cost/benefit   {} / {}", r.dyn_costs, r.dyn_benefits);
             if !r.dyn_counters.is_empty() {
                 println!("  dyn counters(end)  {:?}", r.dyn_counters);
+            }
+            if let Some(st) = &r.llc_stats {
+                println!(
+                    "  LLC eff. capacity  {:.2}x ({:.0} lines avg vs {} uncompressed)",
+                    st.effective_ratio(),
+                    st.avg_lines(),
+                    st.baseline_lines
+                );
+                println!(
+                    "  LLC evictions      {} tag-forced / {} budget-forced",
+                    st.tag_evictions, st.data_evictions
+                );
             }
             if let Some(t) = &r.tier {
                 println!("  tier near/far      {} / {} accesses", t.near.total(), t.far.total());
@@ -313,12 +338,14 @@ fn main() {
                 "compressor" => vec![ablation::ablate_compressor(insts)],
                 "marker" => vec![ablation::ablate_marker_width()],
                 "sched" => vec![ablation::ablate_sched(insts)],
+                "llc" => vec![ablation::ablate_llc(insts)],
                 "all" => vec![
                     ablation::ablate_marker_width(),
                     ablation::ablate_llp(insts),
                     ablation::ablate_metacache(insts),
                     ablation::ablate_compressor(insts),
                     ablation::ablate_sched(insts),
+                    ablation::ablate_llc(insts),
                 ],
                 other => usage(&format!("unknown ablation {other}")),
             };
@@ -375,13 +402,15 @@ fn main() {
             }
             let far = far_pressure();
             let lat = latency_sensitive();
+            let cache = cache_pressure();
             println!(
-                "workloads ({} + {} far-pressure + {} latency-sensitive):",
+                "workloads ({} + {} far-pressure + {} latency-sensitive + {} cache-pressure):",
                 all64().len(),
                 far.len(),
-                lat.len()
+                lat.len(),
+                cache.len()
             );
-            for w in all64().iter().chain(far.iter()).chain(lat.iter()) {
+            for w in all64().iter().chain(far.iter()).chain(lat.iter()).chain(cache.iter()) {
                 println!("  {:<14} {}", w.name, w.suite);
             }
         }
@@ -396,7 +425,7 @@ fn usage(msg: &str) -> ! {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ntiered designs (figure t1): tiered-uncomp, tiered-cram — near DDR + far CXL\nexpander; --far-ratio R puts fraction R of capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline (exit 1)"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE] [--llc-compressed]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ntiered designs (figure t1): tiered-uncomp, tiered-cram — near DDR + far CXL\nexpander; --far-ratio R puts fraction R of capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline (exit 1)"
     );
     std::process::exit(2);
 }

@@ -258,8 +258,12 @@ pub struct SimResult {
     pub llc_hits: u64,
     pub llc_misses: u64,
     pub bw: Bandwidth,
-    /// LLP accuracy (1.0 when the design has no predictor).
-    pub llp_accuracy: f64,
+    /// Compressed-LLC occupancy / pressure counters, warmup-subtracted
+    /// (None when the run used the plain uncompressed LLC).
+    pub llc_stats: Option<crate::cache::CacheStats>,
+    /// LLP accuracy (None when the design never consulted the LCT — a
+    /// run with zero needed predictions has no accuracy, not 100%).
+    pub llp_accuracy: Option<f64>,
     /// Metadata-cache hit rate (None for implicit designs).
     pub meta_hit_rate: Option<f64>,
     /// Lines installed for free by compression, and how many were used.
@@ -329,7 +333,8 @@ mod tests {
             llc_hits: 0,
             llc_misses: 500,
             bw: Bandwidth::default(),
-            llp_accuracy: 1.0,
+            llc_stats: None,
+            llp_accuracy: None,
             meta_hit_rate: None,
             prefetch_installed: 0,
             prefetch_used: 0,

@@ -193,6 +193,7 @@ impl TieredMemory {
                     line_addr: line,
                     level: 0,
                     prefetch: false,
+                    size: 0,
                 }]),
             };
         }
@@ -209,6 +210,7 @@ impl TieredMemory {
                     line_addr: line,
                     level: 0,
                     prefetch: false,
+                    size: 0,
                 }]),
             };
         }
@@ -227,7 +229,10 @@ impl TieredMemory {
             if prefetch {
                 self.stats.far_prefetch_installs += 1;
             }
-            installs.push(Install { line_addr: la, level: csi.level_of(s), prefetch });
+            // size stays 0 here: when the LLC is compressed the
+            // controller's read wrapper stamps hybrid sizes on every
+            // install, including these far co-fetches
+            installs.push(Install { line_addr: la, level: csi.level_of(s), prefetch, size: 0 });
         }
         debug_assert!(installs.iter().any(|i| i.line_addr == line));
         ReadOutcome { done, installs }

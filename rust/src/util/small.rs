@@ -44,6 +44,13 @@ impl<T: Copy + Default, const N: usize> InlineVec<T, N> {
         &self.items[..self.len as usize]
     }
 
+    /// Mutable view of the live elements (used to patch fields in place,
+    /// e.g. the controller filling `Install::size` for a compressed LLC).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.items[..self.len as usize]
+    }
+
     #[inline]
     pub fn clear(&mut self) {
         self.len = 0;

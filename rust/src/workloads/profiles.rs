@@ -26,6 +26,8 @@ pub enum Suite {
     Far,
     /// Latency-sensitive set for the scheduler evaluation (Figure Q1).
     Lat,
+    /// Cache-pressure set for the compressed-LLC evaluation (Figure C1).
+    Cache,
 }
 
 impl std::fmt::Display for Suite {
@@ -37,6 +39,7 @@ impl std::fmt::Display for Suite {
             Suite::Mix => write!(f, "MIX"),
             Suite::Far => write!(f, "FAR"),
             Suite::Lat => write!(f, "LAT"),
+            Suite::Cache => write!(f, "CACHE"),
         }
     }
 }
@@ -334,6 +337,32 @@ pub fn latency_sensitive() -> Vec<WorkloadProfile> {
     ]
 }
 
+/// Cache-pressure workloads for the compressed-LLC evaluation (Figure
+/// C1).  Each keeps a hot working set *slightly larger* than the 8MB
+/// shared LLC — the regime where storing lines compressed turns capacity
+/// misses into hits (Touché's motivating case).  Footprints are small
+/// enough that raw memory bandwidth is not the bottleneck; residency is.
+///
+/// * `llcfit_stream` — a hot ~10MB (8 cores × 1.25MB) array of
+///   small-value records re-touched continuously; quad-packable lines,
+///   so a 2×-tag compressed LLC holds the whole hot set.
+/// * `llcfit_ptr` — an index/pointer structure with a hot ~12MB core;
+///   pointer-dense lines pack ~2:1 — the partial-win case.
+/// * `llcfit_rand` — the honesty control: the same pressure but high-
+///   entropy values; the data budget stays the limit, so the compressed
+///   LLC must behave like the plain one (no slowdown, ratio ≈ 1).
+pub fn cache_pressure() -> Vec<WorkloadProfile> {
+    use Suite::*;
+    vec![
+        wl!("llcfit_stream", Cache, 8.0, 10, 50.0, 0.10, 0.125, 0.92, 0.20, 8, 0.30,
+            [0.30, 0.55, 0.05, 0.00, 0.10]),
+        wl!("llcfit_ptr", Cache, 9.0, 12, 40.0, 0.05, 0.125, 0.90, 0.25, 4, 0.60,
+            [0.10, 0.30, 0.45, 0.05, 0.10]),
+        wl!("llcfit_rand", Cache, 9.0, 12, 40.0, 0.10, 0.104, 0.90, 0.20, 6, 0.40,
+            [0.02, 0.08, 0.05, 0.05, 0.80]),
+    ]
+}
+
 /// The paper's 27-workload memory-intensive evaluation set
 /// (15 SPEC + 6 GAP + 6 MIX).
 pub fn all27() -> Vec<WorkloadProfile> {
@@ -352,12 +381,13 @@ pub fn all64() -> Vec<WorkloadProfile> {
 }
 
 /// Look up a profile by name across the full set (including the
-/// far-memory-pressure and latency-sensitive sets).
+/// far-memory-pressure, latency-sensitive and cache-pressure sets).
 pub fn by_name(name: &str) -> Option<WorkloadProfile> {
     all64()
         .into_iter()
         .chain(far_pressure())
         .chain(latency_sensitive())
+        .chain(cache_pressure())
         .find(|w| w.name == name)
 }
 
@@ -456,6 +486,37 @@ mod tests {
         // the latency set must not leak into the paper's evaluation sets
         for w in all64() {
             assert_ne!(w.suite, Suite::Lat);
+        }
+    }
+
+    #[test]
+    fn cache_pressure_set_well_formed() {
+        let set = cache_pressure();
+        assert!(set.len() >= 2, "at least 2 cache-pressure profiles");
+        for w in &set {
+            assert_eq!(w.suite, Suite::Cache);
+            assert!(by_name(w.name).is_some(), "{} resolvable", w.name);
+            assert!(w.mix_of.is_empty());
+            // the defining property: hot set slightly larger than the 8MB
+            // LLC (shared by 8 cores), but not so large that residency
+            // stops mattering
+            let hot_bytes =
+                (w.footprint_mb as f64 * 1024.0 * 1024.0 * w.hot_frac * 8.0) as u64;
+            let llc = 8 * 1024 * 1024u64;
+            assert!(
+                hot_bytes > llc && hot_bytes < 3 * llc,
+                "{}: hot set {}MB must straddle the LLC",
+                w.name,
+                hot_bytes / (1024 * 1024)
+            );
+            assert!(w.p_hot >= 0.85, "{}: reuse-dominated", w.name);
+        }
+        // at least one compressible winner and one incompressible control
+        assert!(set.iter().any(|w| w.values[4] <= 0.15));
+        assert!(set.iter().any(|w| w.values[4] >= 0.6));
+        // the cache set must not leak into the paper's evaluation sets
+        for w in all64() {
+            assert_ne!(w.suite, Suite::Cache);
         }
     }
 }

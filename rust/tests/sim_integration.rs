@@ -59,11 +59,12 @@ fn llp_beats_metadata_cache_on_scattered_workloads() {
     // workloads
     let implicit = run("xz", Design::Implicit, 500_000);
     let explicit = run("xz", Design::Explicit { row_opt: false }, 500_000);
-    assert!(implicit.llp_accuracy > 0.9, "llp {}", implicit.llp_accuracy);
+    let acc = implicit.llp_accuracy.expect("implicit design consults the LCT");
+    assert!(acc > 0.9, "llp {acc}");
     assert!(
-        implicit.llp_accuracy > explicit.meta_hit_rate.unwrap() + 0.1,
+        acc > explicit.meta_hit_rate.unwrap() + 0.1,
         "LLP {} must beat meta$ {}",
-        implicit.llp_accuracy,
+        acc,
         explicit.meta_hit_rate.unwrap()
     );
 }
@@ -221,6 +222,67 @@ fn explicit_metadata_stretches_the_tail_on_scattered_reads() {
         explicit.read_lat.mean(),
         base.read_lat.mean()
     );
+}
+
+#[test]
+fn uncompressed_run_reports_no_llp_accuracy() {
+    // the baseline never consults the LCT: accuracy must be n/a, not the
+    // 100% figure-13 used to print for runs with zero predictions
+    let r = run("sphinx", Design::Uncompressed, 200_000);
+    assert_eq!(r.llp_accuracy, None);
+}
+
+#[test]
+fn compressed_llc_preserves_cross_design_invariants() {
+    // the compressed LLC changes residency, not accounting: the latency
+    // and baseline-overhead invariants must survive under every family
+    for design in [Design::Uncompressed, Design::Implicit, Design::Dynamic] {
+        let p = by_name("llcfit_ptr").unwrap();
+        let cfg = SimConfig::default()
+            .with_design(design)
+            .with_insts(250_000)
+            .with_compressed_llc();
+        let r = simulate(&p, &cfg);
+        assert_eq!(
+            r.read_lat.count(),
+            r.bw.demand_reads,
+            "{}: one latency sample per demand read",
+            r.design
+        );
+        if design == Design::Uncompressed {
+            assert_eq!(r.bw.overhead(), 0, "baseline has zero overhead traffic");
+        }
+        let st = r.llc_stats.expect("compressed run records cache stats");
+        assert!(st.samples > 0);
+        assert!(st.avg_lines() > 0.0);
+    }
+}
+
+#[test]
+fn compressed_llc_control_workload_stays_data_limited() {
+    // llcfit_rand is the honesty control: high-entropy lines leave the
+    // data budget as the binding constraint, so effective capacity stays
+    // near 1x and the compressed LLC must not tank performance
+    let p = by_name("llcfit_rand").unwrap();
+    let plain = simulate(
+        &p,
+        &SimConfig::default().with_design(Design::Dynamic).with_insts(500_000),
+    );
+    let comp = simulate(
+        &p,
+        &SimConfig::default()
+            .with_design(Design::Dynamic)
+            .with_insts(500_000)
+            .with_compressed_llc(),
+    );
+    let st = comp.llc_stats.unwrap();
+    assert!(
+        st.effective_ratio() < 1.6,
+        "incompressible control cannot double residency: {}",
+        st.effective_ratio()
+    );
+    let s = comp.weighted_speedup(&plain);
+    assert!(s > 0.95, "control workload must not regress much: {s}");
 }
 
 #[test]
