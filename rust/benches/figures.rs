@@ -32,15 +32,15 @@ fn main() {
     // the matrix is shared via the ResultsDb cache so each bench times
     // (matrix population for its designs) + (report formatting)
     let exhibits: &[(&str, &[Design])] = &[
-        ("fig3", &[Design::Uncompressed, Design::Ideal, Design::Explicit { row_opt: false }]),
-        ("fig7", &[Design::Uncompressed, Design::Explicit { row_opt: false }]),
-        ("fig8", &[Design::Uncompressed, Design::Explicit { row_opt: false }]),
-        ("fig12", &[Design::Uncompressed, Design::Explicit { row_opt: false }, Design::Implicit]),
-        ("fig14", &[Design::Uncompressed, Design::Explicit { row_opt: false }, Design::Implicit]),
+        ("fig3", &[Design::Uncompressed, Design::Ideal, Design::explicit(false)]),
+        ("fig7", &[Design::Uncompressed, Design::explicit(false)]),
+        ("fig8", &[Design::Uncompressed, Design::explicit(false)]),
+        ("fig12", &[Design::Uncompressed, Design::explicit(false), Design::Implicit]),
+        ("fig14", &[Design::Uncompressed, Design::explicit(false), Design::Implicit]),
         ("fig15", &[Design::Uncompressed, Design::Implicit]),
         ("fig16", &[Design::Uncompressed, Design::Implicit, Design::Dynamic, Design::Ideal]),
         ("fig19", &[Design::Uncompressed, Design::Dynamic]),
-        ("fig20", &[Design::Uncompressed, Design::Explicit { row_opt: true }, Design::Dynamic]),
+        ("fig20", &[Design::Uncompressed, Design::explicit(true), Design::Dynamic]),
         ("table2", &[Design::Uncompressed]),
         ("table5", &[Design::Uncompressed, Design::NextLinePrefetch, Design::Dynamic]),
     ];

@@ -1,0 +1,493 @@
+//! The shared CRAM engine: one implementation of group-layout state and
+//! the packing/unpacking machinery, consumed by every compressed-memory
+//! instance in the system.
+//!
+//! Three consumers, one engine:
+//!
+//! * the **flat host controller** ([`crate::controller`]) — one engine
+//!   over all of DRAM;
+//! * the **far-tier expander** ([`crate::tier::memory`]) — one engine
+//!   per expander, behind the link;
+//! * the **byte-accurate store** ([`crate::cram::store`]) — the engine
+//!   is its layout authority while it materializes real bitstreams.
+//!
+//! The engine owns the per-group CSI arena and the *pure* layout logic:
+//! which layout a ganged eviction produces ([`CramEngine::decide_packed_layout`],
+//! [`CramEngine::decayed_layout`]), which physical slots that transition
+//! touches ([`CramEngine::plan_group_write`] → [`SlotOp`]s in slot
+//! order), which lines one physical read recovers
+//! ([`CramEngine::installs_for`]), and the probe order after a location
+//! misprediction ([`CramEngine::probe_order`]).  What it deliberately
+//! does **not** own is the issue path: callers execute the plan against
+//! their own medium (direct DDR access, or link flit + device DRAM) and
+//! do their own bandwidth/cost accounting — that is exactly the part
+//! that differs between the host path and the expander, and keeping it
+//! out of the engine is what lets both share every decision above.
+
+use crate::cache::Evicted;
+use crate::cram::group::{possible_locations, Csi};
+use crate::mem::{group_base, group_of, PagedArena};
+use crate::util::small::InlineVec;
+
+use super::{Install, Installs};
+
+/// One physical-slot action of a group writeback, produced by
+/// [`CramEngine::plan_group_write`] in slot order (the order the
+/// pre-refactor controller issued them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SlotOp {
+    /// The slot is stale under the new layout and held live data before:
+    /// write the invalid-line marker.
+    #[default]
+    Invalidate,
+    /// The slot holds a packed block (2 or 4 lines); `dirty` = some
+    /// member was dirtied (a clean packed write is pure compression
+    /// overhead the baseline would not have paid).
+    WritePacked { dirty: bool },
+    /// The slot holds a single raw line; `dirty` = the line itself was
+    /// dirtied (a clean write restores a relocated line to its home
+    /// during an unpack — overhead).
+    WriteSingle { dirty: bool },
+}
+
+/// A planned group writeback: at most one op per physical slot.
+pub type WritePlan = InlineVec<(u8, SlotOp), 4>;
+
+/// Shared group-layout engine: CSI arena + packing decisions + write
+/// planning + read-side recovery.
+pub struct CramEngine {
+    /// Current layout per group index — a paged arena: O(1)
+    /// shifted-address indexing, no hashing on the per-access path.
+    csi: PagedArena<Csi>,
+    /// Groups written / written compressed (diagnostics).
+    pub groups_written: u64,
+    pub groups_compressed: u64,
+}
+
+impl Default for CramEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CramEngine {
+    pub fn new() -> Self {
+        Self {
+            csi: PagedArena::new(Csi::Uncompressed),
+            groups_written: 0,
+            groups_compressed: 0,
+        }
+    }
+
+    /// Current layout of group `group` (unwritten groups read
+    /// uncompressed).
+    #[inline]
+    pub fn csi_of_group(&self, group: u64) -> Csi {
+        self.csi.copied_or_default(group)
+    }
+
+    /// Current layout of the group containing `line`.
+    #[inline]
+    pub fn csi_of_line(&self, line: u64) -> Csi {
+        self.csi_of_group(group_of(line))
+    }
+
+    /// Record the layout a group writeback produced.  Skips
+    /// materializing an arena entry for a group that never left the
+    /// default (uncompressed) layout — the hot-path guard from the
+    /// paged-arena overhaul: an incompressible write footprint must not
+    /// grow the arena ([`Self::csi_of_group`] already reads absent
+    /// groups as uncompressed).
+    #[inline]
+    pub fn commit(&mut self, group: u64, csi: Csi) {
+        if csi == Csi::Uncompressed && !self.csi.contains(group) {
+            return;
+        }
+        self.csi.insert(group, csi);
+    }
+
+    /// Unconditionally record a layout, default or not.  The
+    /// byte-accurate store uses this: its ground-truth audit iterates
+    /// every written group ([`Self::groups`]), so uncompressed layouts
+    /// must materialize too.
+    #[inline]
+    pub fn record(&mut self, group: u64, csi: Csi) {
+        self.csi.insert(group, csi);
+    }
+
+    /// Drop a group's layout record (page migration moves data raw),
+    /// returning what it was.
+    #[inline]
+    pub fn remove(&mut self, group: u64) -> Option<Csi> {
+        self.csi.remove(group)
+    }
+
+    /// Iterate recorded layouts as (group index, csi).
+    pub fn groups(&self) -> impl Iterator<Item = (u64, Csi)> + '_ {
+        self.csi.iter()
+    }
+
+    /// Count one group writeback in the compression diagnostics.
+    #[inline]
+    pub fn note_group_write(&mut self, new: Csi) {
+        self.groups_written += 1;
+        if new != Csi::Uncompressed {
+            self.groups_compressed += 1;
+        }
+    }
+
+    /// Fraction of written groups that ended up compressed.
+    pub fn compression_frac(&self) -> f64 {
+        if self.groups_written == 0 {
+            0.0
+        } else {
+            self.groups_compressed as f64 / self.groups_written as f64
+        }
+    }
+
+    /// The packing decision under residency constraints: pack whatever
+    /// fits among resident lines; halves with no resident members keep
+    /// their old arrangement (ganged eviction guarantees packed peers
+    /// travel together, so halves are never split).
+    pub fn decide_packed_layout(old: Csi, present: [bool; 4], sizes: [u32; 4]) -> Csi {
+        let budget = crate::compress::PACK_BUDGET;
+        let all4 = present.iter().all(|&p| p);
+        let quad_ok = all4 && sizes.iter().sum::<u32>() <= budget;
+        let pair_ab_ok = present[0] && present[1] && sizes[0] + sizes[1] <= budget;
+        let pair_cd_ok = present[2] && present[3] && sizes[2] + sizes[3] <= budget;
+        let old_ab_packed = matches!(old, Csi::PairAb | Csi::PairBoth | Csi::Quad);
+        let old_cd_packed = matches!(old, Csi::PairCd | Csi::PairBoth | Csi::Quad);
+        let new_ab = if present[0] || present[1] {
+            pair_ab_ok
+        } else {
+            old_ab_packed
+        };
+        let new_cd = if present[2] || present[3] {
+            pair_cd_ok
+        } else {
+            old_cd_packed
+        };
+        if quad_ok {
+            Csi::Quad
+        } else {
+            match (new_ab, new_cd) {
+                (true, true) => Csi::PairBoth,
+                (true, false) => Csi::PairAb,
+                (false, true) => Csi::PairCd,
+                (false, false) => Csi::Uncompressed,
+            }
+        }
+    }
+
+    /// The layout when compression is *disabled* (Dynamic gating): stop
+    /// creating packed data but leave existing packed data alone — clean
+    /// evictions of packed groups drop for free; only dirty data forces
+    /// the affected half (or the whole quad) to unpack.
+    pub fn decayed_layout(old: Csi, present: [bool; 4], dirty: [bool; 4]) -> Csi {
+        let ab_touched = present[0] || present[1];
+        let cd_touched = present[2] || present[3];
+        let dirty_ab = dirty[0] || dirty[1];
+        let dirty_cd = dirty[2] || dirty[3];
+        match old {
+            Csi::Quad => {
+                if dirty_ab || dirty_cd {
+                    Csi::Uncompressed
+                } else {
+                    Csi::Quad
+                }
+            }
+            _ => {
+                let ab_packed_old = matches!(old, Csi::PairAb | Csi::PairBoth);
+                let cd_packed_old = matches!(old, Csi::PairCd | Csi::PairBoth);
+                let new_ab = ab_packed_old && !(ab_touched && dirty_ab);
+                let new_cd = cd_packed_old && !(cd_touched && dirty_cd);
+                match (new_ab, new_cd) {
+                    (true, true) => Csi::PairBoth,
+                    (true, false) => Csi::PairAb,
+                    (false, true) => Csi::PairCd,
+                    (false, false) => Csi::Uncompressed,
+                }
+            }
+        }
+    }
+
+    /// Plan the physical writes of an `old → new` group transition: one
+    /// [`SlotOp`] per touched slot, in slot order.  Slots whose bytes
+    /// already sit in memory (clean re-eviction of an unchanged packed
+    /// half, an unmoved clean single line) produce no op — the plan is
+    /// empty exactly when a clean gang re-evicts an unchanged layout.
+    pub fn plan_group_write(
+        old: Csi,
+        new: Csi,
+        present: [bool; 4],
+        dirty: [bool; 4],
+    ) -> WritePlan {
+        let mut plan = WritePlan::new();
+        for loc in 0..4u8 {
+            let old_res = old.colocated(loc);
+            let new_res = new.colocated(loc);
+            if new_res.is_empty() {
+                // stale under the new layout: invalidate if it was live
+                if !old_res.is_empty() {
+                    plan.push((loc, SlotOp::Invalidate));
+                }
+                continue;
+            }
+            if new_res.len() > 1 {
+                let any_dirty = new_res.iter().any(|&s| dirty[s as usize]);
+                // If the half keeps its old packed layout and nothing in
+                // it was dirtied, the block already sits in memory byte-
+                // for-byte: no write needed.
+                if !any_dirty && Self::layout_half_same(old, new, loc) {
+                    continue;
+                }
+                plan.push((loc, SlotOp::WritePacked { dirty: any_dirty }));
+            } else {
+                let s = new_res[0] as usize;
+                // single line at its home: write if dirty, or if the line
+                // is being relocated back (its old location differs), or
+                // if this slot previously held a packed block that must
+                // be overwritten so its marker stops matching
+                let relocated =
+                    old.location(s as u8) != loc || old.colocated(loc).len() > 1;
+                if dirty[s] {
+                    plan.push((loc, SlotOp::WriteSingle { dirty: true }));
+                } else if relocated && present[s] {
+                    plan.push((loc, SlotOp::WriteSingle { dirty: false }));
+                }
+            }
+        }
+        plan
+    }
+
+    /// Is the half containing physical slot `loc` laid out identically
+    /// in `old` and `new`?
+    pub fn layout_half_same(old: Csi, new: Csi, loc: u8) -> bool {
+        let half = loc / 2;
+        let packed = |c: Csi| match (c, half) {
+            (Csi::Quad, _) => 2u8,
+            (Csi::PairAb, 0) | (Csi::PairBoth, 0) => 1,
+            (Csi::PairCd, 1) | (Csi::PairBoth, 1) => 1,
+            _ => 0,
+        };
+        packed(old) == packed(new)
+    }
+
+    /// Lines recovered by reading physical slot `loc` of the group at
+    /// `base` under layout `csi`: the demanded line plus bandwidth-free
+    /// prefetches.
+    pub fn installs_for(base: u64, csi: Csi, loc: u8, demanded: u64) -> Installs {
+        let mut v = Installs::new();
+        for &s in csi.colocated(loc) {
+            let la = base + s as u64;
+            v.push(Install {
+                line_addr: la,
+                level: csi.level_of(s),
+                prefetch: la != demanded,
+                size: 0,
+            });
+        }
+        // The demanded line is always recoverable at `loc` by construction.
+        debug_assert!(v.iter().any(|i| i.line_addr == demanded));
+        v
+    }
+
+    /// Probe order for the line in logical `slot` given a predicted
+    /// physical slot: the prediction first, then the remaining possible
+    /// locations in restricted-placement order.
+    pub fn probe_order(slot: u8, predicted: u8) -> InlineVec<u8, 4> {
+        let mut probes = InlineVec::new();
+        probes.push(predicted);
+        for &s in possible_locations(slot) {
+            if s != predicted {
+                probes.push(s);
+            }
+        }
+        probes
+    }
+
+    /// Gang preamble shared by every engine consumer: the group base plus
+    /// per-slot present/dirty masks.  Panics on an empty gang (all
+    /// callers check first).
+    pub fn gang_masks(gang: &[Evicted]) -> (u64, [bool; 4], [bool; 4]) {
+        let base = group_base(gang[0].line_addr);
+        debug_assert!(gang.iter().all(|e| group_base(e.line_addr) == base));
+        let mut present = [false; 4];
+        let mut dirty = [false; 4];
+        for e in gang {
+            let s = (e.line_addr - base) as usize;
+            present[s] = true;
+            dirty[s] |= e.dirty;
+        }
+        (base, present, dirty)
+    }
+
+    /// Which core to charge for an invalidate: the evictee that owned the
+    /// stale slot if identifiable, else the gang owner.
+    pub fn charged_core(gang: &[Evicted], base: u64, loc: u8, fallback: usize) -> usize {
+        gang.iter()
+            .find(|e| e.line_addr == base + loc as u64)
+            .map(|e| e.core as usize)
+            .unwrap_or(fallback)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decide_layout_matrix() {
+        // quad packs when everything fits
+        assert_eq!(
+            CramEngine::decide_packed_layout(Csi::Uncompressed, [true; 4], [9, 9, 9, 9]),
+            Csi::Quad
+        );
+        // absent half keeps its old packed arrangement
+        assert_eq!(
+            CramEngine::decide_packed_layout(
+                Csi::PairCd,
+                [true, true, false, false],
+                [9, 9, 64, 64]
+            ),
+            Csi::PairBoth
+        );
+        // nothing fits: unpack
+        assert_eq!(
+            CramEngine::decide_packed_layout(Csi::Quad, [true; 4], [64, 64, 64, 64]),
+            Csi::Uncompressed
+        );
+    }
+
+    #[test]
+    fn decayed_layout_keeps_clean_packed_data() {
+        // clean gang over a quad: stays packed (free drop)
+        assert_eq!(
+            CramEngine::decayed_layout(Csi::Quad, [true; 4], [false; 4]),
+            Csi::Quad
+        );
+        // any dirty data unpacks the quad
+        assert_eq!(
+            CramEngine::decayed_layout(Csi::Quad, [true; 4], [true, false, false, false]),
+            Csi::Uncompressed
+        );
+        // pair halves decay independently: dirty AB unpacks AB only
+        assert_eq!(
+            CramEngine::decayed_layout(
+                Csi::PairBoth,
+                [true, true, true, true],
+                [true, false, false, false]
+            ),
+            Csi::PairCd
+        );
+    }
+
+    #[test]
+    fn plan_pack_writes_block_and_invalidates_stale_slots() {
+        let plan = CramEngine::plan_group_write(
+            Csi::Uncompressed,
+            Csi::Quad,
+            [true; 4],
+            [true, false, false, false],
+        );
+        assert_eq!(
+            plan.as_slice(),
+            &[
+                (0, SlotOp::WritePacked { dirty: true }),
+                (1, SlotOp::Invalidate),
+                (2, SlotOp::Invalidate),
+                (3, SlotOp::Invalidate),
+            ]
+        );
+    }
+
+    #[test]
+    fn plan_clean_unchanged_layout_is_empty() {
+        for csi in Csi::ALL {
+            let plan = CramEngine::plan_group_write(csi, csi, [true; 4], [false; 4]);
+            assert!(plan.is_empty(), "{csi:?}: clean re-eviction must be free");
+        }
+    }
+
+    #[test]
+    fn plan_unpack_restores_relocated_lines() {
+        // Quad -> Uncompressed, whole gang dirty: four raw line writes
+        let plan =
+            CramEngine::plan_group_write(Csi::Quad, Csi::Uncompressed, [true; 4], [true; 4]);
+        assert_eq!(plan.len(), 4);
+        assert!(plan
+            .iter()
+            .all(|&(_, op)| op == SlotOp::WriteSingle { dirty: true }));
+        // Quad -> Uncompressed, clean gang: clean restores (overhead)
+        let plan =
+            CramEngine::plan_group_write(Csi::Quad, Csi::Uncompressed, [true; 4], [false; 4]);
+        assert_eq!(plan.len(), 4);
+        assert!(plan
+            .iter()
+            .all(|&(_, op)| op == SlotOp::WriteSingle { dirty: false }));
+    }
+
+    #[test]
+    fn plan_dirty_line_in_place_writes_only_it() {
+        // uncompressed group, one dirty line: exactly one raw write
+        let plan = CramEngine::plan_group_write(
+            Csi::Uncompressed,
+            Csi::Uncompressed,
+            [true; 4],
+            [false, false, true, false],
+        );
+        assert_eq!(plan.as_slice(), &[(2, SlotOp::WriteSingle { dirty: true })]);
+    }
+
+    #[test]
+    fn installs_cover_colocated_lines() {
+        let ins = CramEngine::installs_for(8, Csi::Quad, 0, 10);
+        assert_eq!(ins.len(), 4);
+        assert_eq!(ins.iter().filter(|i| i.prefetch).count(), 3);
+        assert!(ins.iter().all(|i| i.level == 2));
+        let ins = CramEngine::installs_for(8, Csi::Uncompressed, 1, 9);
+        assert_eq!(ins.len(), 1);
+        assert!(!ins[0].prefetch);
+    }
+
+    #[test]
+    fn probe_order_prediction_first_no_duplicates() {
+        assert_eq!(CramEngine::probe_order(3, 2).as_slice(), &[2, 3, 0]);
+        assert_eq!(CramEngine::probe_order(1, 1).as_slice(), &[1, 0]);
+        assert_eq!(CramEngine::probe_order(0, 0).as_slice(), &[0]);
+    }
+
+    #[test]
+    fn commit_does_not_materialize_default_layouts() {
+        // the hot-path guard: incompressible write footprints must not
+        // grow the arena (PR 3's paged-arena property)
+        let mut e = CramEngine::new();
+        for g in 0..1000u64 {
+            e.commit(g, Csi::Uncompressed);
+        }
+        assert_eq!(e.groups().count(), 0, "no entries for default layouts");
+        // packed then unpacked: the entry may persist (value Uncompressed)
+        // but csi_of always reads correctly
+        e.commit(7, Csi::Quad);
+        e.commit(7, Csi::Uncompressed);
+        assert_eq!(e.csi_of_group(7), Csi::Uncompressed);
+        // the store's unconditional record materializes defaults
+        e.record(9, Csi::Uncompressed);
+        assert!(e.groups().any(|(g, c)| g == 9 && c == Csi::Uncompressed));
+    }
+
+    #[test]
+    fn engine_tracks_layout_state() {
+        let mut e = CramEngine::new();
+        assert_eq!(e.csi_of_line(5), Csi::Uncompressed);
+        e.commit(1, Csi::Quad);
+        assert_eq!(e.csi_of_line(5), Csi::Quad);
+        assert_eq!(e.csi_of_line(4), Csi::Quad);
+        assert_eq!(e.csi_of_line(3), Csi::Uncompressed);
+        assert_eq!(e.remove(1), Some(Csi::Quad));
+        assert_eq!(e.csi_of_line(5), Csi::Uncompressed);
+        e.note_group_write(Csi::Quad);
+        e.note_group_write(Csi::Uncompressed);
+        assert!((e.compression_frac() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,268 @@
+//! The flat host path: how each [`Policy`] reads and writes back when
+//! the design's placement is [`Placement::Flat`](super::Placement).
+//!
+//! Every decision (layout transitions, slot plans, probe order, install
+//! recovery) comes from the shared [`CramEngine`]; this module owns only
+//! the *issue* side — charging [`crate::stats::Bandwidth`] categories,
+//! serializing metadata lookups and mispredicted probes in front of the
+//! demand access, training the LLP and the Dynamic-CRAM counters — which
+//! is precisely what distinguishes the host path from the far-tier
+//! executor in [`crate::tier::memory`].
+
+use crate::cram::metadata::MetaAccess;
+use crate::dram::{DramSim, ReqKind};
+use crate::mem::{group_base, group_of, page_of_line};
+use crate::workloads::SizeOracle;
+
+use super::engine::{CramEngine, SlotOp};
+use super::policy::Policy;
+use super::{Install, Installs, MemoryController, ReadOutcome};
+use crate::cram::group::Csi;
+
+impl MemoryController {
+    /// Demand read under a flat placement (dispatched by policy).
+    pub(super) fn read_flat(
+        &mut self,
+        line: u64,
+        core: usize,
+        now: u64,
+        dram: &mut DramSim,
+        oracle: &mut SizeOracle,
+        sampled: bool,
+    ) -> ReadOutcome {
+        match self.design.policy {
+            Policy::Uncompressed => {
+                self.bw.demand_reads += 1;
+                let done = dram.access(line, ReqKind::Read, now, false);
+                ReadOutcome {
+                    done,
+                    installs: Installs::of(&[Install {
+                        line_addr: line,
+                        level: 0,
+                        prefetch: false,
+                        size: 0,
+                    }]),
+                }
+            }
+            Policy::NextLinePrefetch => {
+                self.bw.demand_reads += 1;
+                let done = dram.access(line, ReqKind::Read, now, false);
+                // next-line prefetch: a full extra access (the bandwidth
+                // cost CRAM avoids — Table V)
+                self.bw.prefetch_reads += 1;
+                dram.access(line + 1, ReqKind::Read, now, false);
+                self.prefetch_installed += 1;
+                ReadOutcome {
+                    done,
+                    installs: Installs::of(&[
+                        Install { line_addr: line, level: 0, prefetch: false, size: 0 },
+                        Install { line_addr: line + 1, level: 0, prefetch: true, size: 0 },
+                    ]),
+                }
+            }
+            Policy::Ideal => {
+                // Fig. 3: all the benefits (co-fetched neighbors arrive
+                // free), none of the overheads (no metadata, no markers,
+                // no extra writebacks — layout magically always optimal).
+                self.bw.demand_reads += 1;
+                let done = dram.access(line, ReqKind::Read, now, false);
+                let sizes = oracle.group_sizes(line);
+                let csi = Csi::from_sizes(sizes);
+                let base = group_base(line);
+                let slot = (line - base) as u8;
+                let loc = csi.location(slot);
+                let installs = self.count_installs(base, csi, loc, line);
+                ReadOutcome { done, installs }
+            }
+            Policy::Explicit { row_opt } => {
+                // 1) metadata lookup (cache hit: free; miss: a DRAM access
+                //    that the data access serializes behind)
+                let meta = self.meta.as_mut().expect("explicit has metadata");
+                let meta_addr = meta.meta_addr_for(line);
+                let (_, how) = meta.lookup(line);
+                let actual = self.engine.csi_of_line(line);
+                let mut t = now;
+                if how == MetaAccess::Miss {
+                    self.bw.meta_reads += 1;
+                    t = dram.access(meta_addr, ReqKind::MetaRead, t, row_opt);
+                }
+                // 2) data access at the (now known) correct location
+                let base = group_base(line);
+                let slot = (line - base) as u8;
+                let loc = base + actual.location(slot) as u64;
+                self.bw.demand_reads += 1;
+                let done = dram.access(loc, ReqKind::Read, t, false);
+                let installs = self.count_installs(base, actual, actual.location(slot), line);
+                ReadOutcome { done, installs }
+            }
+            Policy::Implicit | Policy::Dynamic => {
+                let base = group_base(line);
+                let slot = (line - base) as u8;
+                let page = page_of_line(line);
+                let actual = self.engine.csi_of_line(line);
+                let actual_loc = actual.location(slot);
+                let (pred_loc, needed) = self.llp.predict_location(page, slot);
+                if needed {
+                    self.llp.record_outcome(pred_loc == actual_loc);
+                }
+                // Probe predicted first, then remaining possible locations;
+                // the markers in each fetched line verify the guess.
+                let probes = CramEngine::probe_order(slot, pred_loc);
+                let mut t = now;
+                let mut first = true;
+                let mut done = 0;
+                for &p in probes.iter() {
+                    if first {
+                        self.bw.demand_reads += 1;
+                    } else {
+                        self.bw.second_reads += 1;
+                        if sampled {
+                            if let Some(d) = self.dynamic.as_mut() {
+                                d.on_cost(core);
+                            }
+                        }
+                    }
+                    t = dram.access(base + p as u64, ReqKind::Read, t, false);
+                    done = t;
+                    first = false;
+                    if p == actual_loc {
+                        break;
+                    }
+                }
+                // train the LCT with the layout the markers revealed
+                self.llp.update(page, actual);
+                let installs = self.count_installs(base, actual, actual_loc, line);
+                ReadOutcome { done, installs }
+            }
+        }
+    }
+
+    /// Engine install recovery plus the controller's prefetch accounting.
+    fn count_installs(&mut self, base: u64, csi: Csi, loc: u8, demanded: u64) -> Installs {
+        let installs = CramEngine::installs_for(base, csi, loc, demanded);
+        self.prefetch_installed += installs.iter().filter(|i| i.prefetch).count() as u64;
+        installs
+    }
+
+    /// Ganged writeback under a flat placement.
+    pub(super) fn writeback_flat(
+        &mut self,
+        gang: &[crate::cache::Evicted],
+        now: u64,
+        dram: &mut DramSim,
+        oracle: &mut SizeOracle,
+        sampled: bool,
+    ) {
+        let (base, present, dirty) = CramEngine::gang_masks(gang);
+        let old = self.engine.csi_of_line(base);
+
+        if !self.design.compresses() || self.design.policy == Policy::Ideal {
+            // Baselines write dirty lines raw and drop clean lines; Ideal
+            // has no write-side overheads either (reads recompute the
+            // layout from the oracle).
+            for s in 0..4 {
+                if present[s] && dirty[s] {
+                    self.bw.demand_writes += 1;
+                    dram.access(base + s as u64, ReqKind::Write, now, false);
+                }
+            }
+            return;
+        }
+
+        // Anything dirty? If the whole gang is clean and the layout is not
+        // changing, nothing needs to touch memory (it's all clean drops) —
+        // unless compression wants to newly pack clean lines.
+        let owner_core = gang[0].core as usize;
+        let compress = match (self.design.policy, &self.dynamic) {
+            (Policy::Dynamic, Some(d)) => sampled || d.enabled(owner_core),
+            _ => true,
+        };
+
+        // Fast path: compression disabled and the group was never packed —
+        // plain dirty writebacks, no compressibility analysis needed.
+        if !compress && old == Csi::Uncompressed {
+            for s in 0..4 {
+                if present[s] && dirty[s] {
+                    oracle.dirty_update(base + s as u64);
+                    self.bw.demand_writes += 1;
+                    dram.access(base + s as u64, ReqKind::Write, now, false);
+                }
+            }
+            return;
+        }
+
+        // Dirty stores changed data: re-roll compressibility of dirty lines.
+        for s in 0..4 {
+            if present[s] && dirty[s] {
+                oracle.dirty_update(base + s as u64);
+            }
+        }
+        let sizes = oracle.group_sizes(base);
+
+        let new = if compress {
+            CramEngine::decide_packed_layout(old, present, sizes)
+        } else {
+            CramEngine::decayed_layout(old, present, dirty)
+        };
+
+        // Issue writes per physical slot, in plan order.
+        self.engine.note_group_write(new);
+        let plan = CramEngine::plan_group_write(old, new, present, dirty);
+        for &(loc, op) in plan.iter() {
+            let addr = base + loc as u64;
+            match op {
+                SlotOp::Invalidate => {
+                    self.bw.invalidates += 1;
+                    if sampled {
+                        if let Some(d) = self.dynamic.as_mut() {
+                            d.on_cost(CramEngine::charged_core(gang, base, loc, owner_core));
+                        }
+                    }
+                    dram.access(addr, ReqKind::Invalidate, now, false);
+                }
+                SlotOp::WritePacked { dirty } | SlotOp::WriteSingle { dirty } => {
+                    if dirty {
+                        self.bw.demand_writes += 1;
+                    } else {
+                        // clean packed write / clean relocated restore:
+                        // overhead the baseline never paid
+                        self.bw.clean_writes += 1;
+                        if sampled {
+                            if let Some(d) = self.dynamic.as_mut() {
+                                d.on_cost(owner_core);
+                            }
+                        }
+                    }
+                    dram.access(addr, ReqKind::Write, now, false);
+                }
+            }
+        }
+        self.engine.commit(group_of(base), new);
+
+        // Explicit designs must persist the CSI change to the metadata
+        // region (dirty-allocate in the metadata cache; misses and dirty
+        // victims cost DRAM accesses).  An unchanged CSI needs no update
+        // (the controller knows the prior level from the LLC tag bits).
+        if new != old {
+            if let Some(meta) = self.meta.as_mut() {
+                let row_opt = meta.row_optimized;
+                let meta_addr = meta.meta_addr_for(base);
+                let before_wb = meta.writebacks;
+                let how = meta.update(base, new);
+                if how == MetaAccess::Miss {
+                    self.bw.meta_reads += 1;
+                    dram.access(meta_addr, ReqKind::MetaRead, now, row_opt);
+                }
+                if meta.writebacks > before_wb {
+                    self.bw.meta_writes += 1;
+                    dram.access(meta_addr, ReqKind::MetaWrite, now, row_opt);
+                }
+            }
+        }
+
+        // Keep the LLP trained on write-side layout changes too.
+        if matches!(self.design.policy, Policy::Implicit | Policy::Dynamic) {
+            self.llp.update(page_of_line(base), new);
+        }
+    }
+}

@@ -1,70 +1,52 @@
-//! Memory-controller designs: CRAM and every baseline the paper evaluates.
+//! Memory-controller designs: CRAM and every baseline the paper
+//! evaluates, as **compositions** of a compression [`Policy`] and a
+//! [`Placement`] (see [`policy`]).
 //!
-//! One [`MemoryController`] drives all designs (selected by [`Design`]) so
-//! the read/writeback machinery — group layout transitions, marker-implied
+//! The module is layered:
+//!
+//! * [`policy`] — the design space: `Policy` × `Placement`, the
+//!   [`Design`] compatibility facade, name round-trips;
+//! * [`engine`] — the shared [`CramEngine`]: group-layout state,
+//!   packing/unpacking decisions, slot-level write plans, install
+//!   recovery and probe order — one implementation consumed by the flat
+//!   host path, the far-tier expander, and the byte-accurate store;
+//! * [`host`] — the flat host path: per-policy read/writeback issue and
+//!   accounting over the host DDR channels;
+//! * [`crate::tier::memory`] — the tiered executor: the same engine
+//!   instantiated on the far expander, behind the CXL link.
+//!
+//! One [`MemoryController`] front-ends all designs, so the read/
+//! writeback contract — group-layout transitions, marker-implied
 //! verification, LLP prediction walks, metadata traffic, Dynamic-CRAM
-//! gating — shares one audited implementation.
+//! gating — shares one audited implementation per layer.
 //!
-//! | [`Design`] | paper reference |
-//! |---|---|
-//! | `Uncompressed` | baseline of every figure |
-//! | `Ideal` | Fig. 3/16 "ideal compression" (benefits, no overheads) |
-//! | `Explicit` | Fig. 7/8/12 CRAM + metadata region + 32KB metadata cache |
-//! | `Explicit { row_opt }` | Fig. 20 MemZip/LCP-style row-co-located metadata |
-//! | `Implicit` | Fig. 12/15/16 "Static-CRAM": implicit metadata + LLP |
-//! | `Dynamic` | Fig. 16/18/19: Static-CRAM + set-sampled cost/benefit gating |
-//! | `NextLinePrefetch` | Table V baseline |
-//! | `Tiered` | Figure T1: near DDR + far CXL expander (`tier` module) |
+//! | design name | composition | paper reference |
+//! |---|---|---|
+//! | `uncompressed` | `None × Flat` | baseline of every figure |
+//! | `ideal` | `Ideal × Flat` | Fig. 3/16 (benefits, no overheads) |
+//! | `cram-explicit[-rowopt]` | `Explicit × Flat` | Fig. 7/8/12/20 |
+//! | `cram-static` | `Implicit × Flat` | Fig. 12/15/16 |
+//! | `cram-dynamic` | `Dynamic × Flat` | Fig. 16/18/19 |
+//! | `nextline-prefetch` | `NextLinePrefetch × Flat` | Table V |
+//! | `tiered-uncomp` / `tiered-cram` | `None`/`Implicit` `× Tiered` | Figure T1 |
+//! | `tiered-cram-dyn` | `Dynamic × Tiered` | Figure X1 (IBEX-style gated expander) |
+//! | `tiered-explicit` | `Explicit × Tiered` | Figure X1 (explicit metadata on far memory) |
+
+pub mod engine;
+pub mod host;
+pub mod policy;
+
+pub use engine::{CramEngine, SlotOp, WritePlan};
+pub use policy::{Design, Placement, Policy};
 
 use crate::cram::dynamic::DynamicCram;
-use crate::cram::group::{possible_locations, Csi};
 use crate::cram::llp::LineLocationPredictor;
-use crate::cram::metadata::{MetaAccess, MetadataStore};
-use crate::dram::{DramSim, ReqKind};
-use crate::mem::{group_base, group_of, page_of_line, PagedArena};
+use crate::cram::metadata::MetadataStore;
+use crate::dram::DramSim;
 use crate::stats::{Bandwidth, LatencyHist};
 use crate::tier::{TierConfig, TieredMemory};
 use crate::util::small::InlineVec;
 use crate::workloads::SizeOracle;
-
-/// Which memory-system design the controller implements.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Design {
-    Uncompressed,
-    Ideal,
-    Explicit { row_opt: bool },
-    Implicit,
-    Dynamic,
-    NextLinePrefetch,
-    /// Two-tier memory: near DDR (uncompressed) + far CXL expander,
-    /// optionally CRAM-compressed on the device (see [`crate::tier`]).
-    Tiered { far_compressed: bool },
-}
-
-impl Design {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Design::Uncompressed => "uncompressed",
-            Design::Ideal => "ideal",
-            Design::Explicit { row_opt: false } => "cram-explicit",
-            Design::Explicit { row_opt: true } => "cram-explicit-rowopt",
-            Design::Implicit => "cram-static",
-            Design::Dynamic => "cram-dynamic",
-            Design::NextLinePrefetch => "nextline-prefetch",
-            Design::Tiered { far_compressed: false } => "tiered-uncomp",
-            Design::Tiered { far_compressed: true } => "tiered-cram",
-        }
-    }
-
-    pub fn compresses(&self) -> bool {
-        // Tiered designs never pack on the host side; the far expander
-        // runs its own engine (see `tier::TieredMemory`).
-        !matches!(
-            self,
-            Design::Uncompressed | Design::NextLinePrefetch | Design::Tiered { .. }
-        )
-    }
-}
 
 /// A line the LLC should install after a read.
 #[derive(Clone, Copy, Debug, Default)]
@@ -92,17 +74,18 @@ pub struct ReadOutcome {
     pub installs: Installs,
 }
 
-/// The memory controller.
+/// The memory controller: composes the host-path policy with the
+/// placement and front-ends every design behind one read/writeback
+/// contract.
 pub struct MemoryController {
     pub design: Design,
-    /// Current physical layout per group index (what is actually in DRAM)
-    /// — a paged arena: O(1) shifted-address indexing, no hashing on the
-    /// per-access path.
-    mem_csi: PagedArena<Csi>,
+    /// The host-side CRAM engine (flat placements): group layouts in
+    /// DRAM plus the packing machinery shared with the far tier.
+    pub engine: CramEngine,
     pub llp: LineLocationPredictor,
     pub meta: Option<MetadataStore>,
     pub dynamic: Option<DynamicCram>,
-    /// The two-tier memory front-end (tiered designs only).
+    /// The two-tier memory front-end (tiered placements only).
     pub tier: Option<TieredMemory>,
     /// The LLC stores lines compressed (`SimConfig::llc_compressed`):
     /// every [`Install`] this controller returns carries the line's
@@ -115,9 +98,6 @@ pub struct MemoryController {
     pub read_lat: LatencyHist,
     pub prefetch_installed: u64,
     pub prefetch_used: u64,
-    /// Groups written compressed vs total group writebacks (diagnostics).
-    pub groups_written: u64,
-    pub groups_compressed: u64,
 }
 
 impl MemoryController {
@@ -144,7 +124,7 @@ impl MemoryController {
     }
 
     /// Full constructor: ablation knobs plus the tiered-memory
-    /// configuration (used when `design` is [`Design::Tiered`]).
+    /// configuration (used when the placement is [`Placement::Tiered`]).
     pub fn with_tier_config(
         design: Design,
         cores: usize,
@@ -153,8 +133,11 @@ impl MemoryController {
         meta_cache_bytes: usize,
         tier_cfg: TierConfig,
     ) -> Self {
-        let meta = match design {
-            Design::Explicit { row_opt } => {
+        // Flat explicit designs hold the metadata store at the host
+        // controller; tiered explicit designs hold it inside the tier
+        // (the expander's metadata region lives in device memory).
+        let meta = match (design.placement, design.policy) {
+            (Placement::Flat, Policy::Explicit { row_opt }) => {
                 let mut m = MetadataStore::new(meta_cache_bytes, 8, meta_region_base);
                 m.row_optimized = row_opt;
                 Some(m)
@@ -164,18 +147,21 @@ impl MemoryController {
         // 6-bit counters: hysteresis depth scaled to the shortened
         // simulation slices (the paper sizes 12 bits for 1B-instruction
         // slices; threshold must be crossable within a few array sweeps).
-        let dynamic = matches!(design, Design::Dynamic).then(|| DynamicCram::with_bits(cores, 6));
-        let tier = match design {
-            Design::Tiered { far_compressed } => {
-                Some(TieredMemory::new(tier_cfg, far_compressed))
-            }
-            _ => None,
+        let dynamic =
+            matches!(design.policy, Policy::Dynamic).then(|| DynamicCram::with_bits(cores, 6));
+        let tier = match design.placement {
+            Placement::Tiered => Some(TieredMemory::with_meta_cache(
+                tier_cfg,
+                design.policy,
+                meta_cache_bytes,
+            )),
+            Placement::Flat => None,
         };
         Self {
             design,
             tier,
             llc_compressed: false,
-            mem_csi: PagedArena::new(Csi::Uncompressed),
+            engine: CramEngine::new(),
             llp: LineLocationPredictor::new(llp_entries, 0xD1CE),
             meta,
             dynamic,
@@ -183,14 +169,13 @@ impl MemoryController {
             read_lat: LatencyHist::default(),
             prefetch_installed: 0,
             prefetch_used: 0,
-            groups_written: 0,
-            groups_compressed: 0,
         }
     }
 
+    /// Current host-side layout of `line`'s group (tests/diagnostics).
     #[inline]
-    fn csi_of(&self, line: u64) -> Csi {
-        self.mem_csi.copied_or_default(group_of(line))
+    pub fn csi_of(&self, line: u64) -> crate::cram::group::Csi {
+        self.engine.csi_of_line(line)
     }
 
     /// Demand read of `line` for `core` at bus-cycle `now`.
@@ -231,147 +216,22 @@ impl MemoryController {
         oracle: &mut SizeOracle,
         sampled: bool,
     ) -> ReadOutcome {
-        match self.design {
-            Design::Uncompressed => {
-                self.bw.demand_reads += 1;
-                let done = dram.access(line, ReqKind::Read, now, false);
-                ReadOutcome {
-                    done,
-                    installs: Installs::of(&[Install {
-                        line_addr: line,
-                        level: 0,
-                        prefetch: false,
-                        size: 0,
-                    }]),
-                }
-            }
-            Design::Tiered { .. } => {
-                // the tier front-end routes near/far, runs the migration
-                // policy, and (compressed far) co-fetches packed lines
-                let tier = self.tier.as_mut().expect("tiered design has a tier");
-                let out = tier.read(line, now, dram, &mut self.bw);
-                self.prefetch_installed +=
-                    out.installs.iter().filter(|i| i.prefetch).count() as u64;
-                out
-            }
-            Design::NextLinePrefetch => {
-                self.bw.demand_reads += 1;
-                let done = dram.access(line, ReqKind::Read, now, false);
-                // next-line prefetch: a full extra access (the bandwidth
-                // cost CRAM avoids — Table V)
-                self.bw.prefetch_reads += 1;
-                dram.access(line + 1, ReqKind::Read, now, false);
-                self.prefetch_installed += 1;
-                ReadOutcome {
-                    done,
-                    installs: Installs::of(&[
-                        Install { line_addr: line, level: 0, prefetch: false, size: 0 },
-                        Install { line_addr: line + 1, level: 0, prefetch: true, size: 0 },
-                    ]),
-                }
-            }
-            Design::Ideal => {
-                // Fig. 3: all the benefits (co-fetched neighbors arrive
-                // free), none of the overheads (no metadata, no markers, no
-                // extra writebacks — layout magically always optimal).
-                self.bw.demand_reads += 1;
-                let done = dram.access(line, ReqKind::Read, now, false);
-                let sizes = oracle.group_sizes(line);
-                let csi = Csi::from_sizes(sizes);
-                let base = group_base(line);
-                let slot = (line - base) as u8;
-                let loc = csi.location(slot);
-                let installs = self.installs_for(base, csi, loc, line);
-                ReadOutcome { done, installs }
-            }
-            Design::Explicit { row_opt } => {
-                // 1) metadata lookup (cache hit: free; miss: a DRAM access
-                //    that the data access serializes behind)
-                let meta = self.meta.as_mut().expect("explicit has metadata");
-                let meta_addr = meta.meta_addr_for(line);
-                let (_, how) = meta.lookup(line);
-                let actual = self.csi_of(line);
-                let mut t = now;
-                if how == MetaAccess::Miss {
-                    self.bw.meta_reads += 1;
-                    t = dram.access(meta_addr, ReqKind::MetaRead, t, row_opt);
-                }
-                // 2) data access at the (now known) correct location
-                let base = group_base(line);
-                let slot = (line - base) as u8;
-                let loc = base + actual.location(slot) as u64;
-                self.bw.demand_reads += 1;
-                let done = dram.access(loc, ReqKind::Read, t, false);
-                let installs = self.installs_for(base, actual, actual.location(slot), line);
-                ReadOutcome { done, installs }
-            }
-            Design::Implicit | Design::Dynamic => {
-                let base = group_base(line);
-                let slot = (line - base) as u8;
-                let page = page_of_line(line);
-                let actual = self.csi_of(line);
-                let actual_loc = actual.location(slot);
-                let (pred_loc, needed) = self.llp.predict_location(page, slot);
-                if needed {
-                    self.llp.record_outcome(pred_loc == actual_loc);
-                }
-                // Probe predicted first, then remaining possible locations;
-                // the markers in each fetched line verify the guess.
-                let mut probes: InlineVec<u8, 4> = InlineVec::new();
-                probes.push(pred_loc);
-                for &s in possible_locations(slot) {
-                    if s != pred_loc {
-                        probes.push(s);
-                    }
-                }
-                let mut t = now;
-                let mut first = true;
-                let mut done = 0;
-                for &p in probes.iter() {
-                    if first {
-                        self.bw.demand_reads += 1;
-                    } else {
-                        self.bw.second_reads += 1;
-                        if sampled {
-                            if let Some(d) = self.dynamic.as_mut() {
-                                d.on_cost(core);
-                            }
-                        }
-                    }
-                    t = dram.access(base + p as u64, ReqKind::Read, t, false);
-                    done = t;
-                    first = false;
-                    if p == actual_loc {
-                        break;
-                    }
-                }
-                // train the LCT with the layout the markers revealed
-                self.llp.update(page, actual);
-                let installs = self.installs_for(base, actual, actual_loc, line);
-                ReadOutcome { done, installs }
-            }
+        if self.design.placement == Placement::Tiered {
+            // the tier front-end routes near/far, runs the migration
+            // policy, and executes the far policy on the expander
+            let tier = self.tier.as_mut().expect("tiered design has a tier");
+            let out = tier.read(line, now, dram, &mut self.bw, oracle);
+            self.prefetch_installed +=
+                out.installs.iter().filter(|i| i.prefetch).count() as u64;
+            return out;
         }
-    }
-
-    /// Lines recovered by reading physical slot `loc` of the group — the
-    /// demanded line plus bandwidth-free prefetches.
-    fn installs_for(&mut self, base: u64, csi: Csi, loc: u8, demanded: u64) -> Installs {
-        let mut v = Installs::new();
-        for &s in csi.colocated(loc) {
-            let la = base + s as u64;
-            let prefetch = la != demanded;
-            if prefetch {
-                self.prefetch_installed += 1;
-            }
-            v.push(Install { line_addr: la, level: csi.level_of(s), prefetch, size: 0 });
-        }
-        // The demanded line is always recoverable at `loc` by construction.
-        debug_assert!(v.iter().any(|i| i.line_addr == demanded));
-        v
+        self.read_flat(line, core, now, dram, oracle, sampled)
     }
 
     /// A previously-prefetched line was demanded for the first time —
-    /// Dynamic-CRAM's bandwidth-benefit event (§VI-A).
+    /// Dynamic-CRAM's bandwidth-benefit event (§VI-A).  Placement-
+    /// agnostic: a useful co-fetch from a packed far block trains the
+    /// gate the same way a flat one does.
     pub fn on_prefetch_used(&mut self, core: usize, sampled: bool) {
         self.prefetch_used += 1;
         if sampled {
@@ -398,213 +258,17 @@ impl MemoryController {
         if gang.is_empty() {
             return;
         }
-        if matches!(self.design, Design::Tiered { .. }) {
+        if self.design.placement == Placement::Tiered {
             let tier = self.tier.as_mut().expect("tiered design has a tier");
-            tier.writeback(gang, now, dram, oracle, &mut self.bw);
+            tier.writeback(gang, now, dram, oracle, &mut self.bw, sampled, &mut self.dynamic);
             return;
         }
-        let (base, present, dirty) = gang_masks(gang);
-        let old = self.csi_of(base);
-
-        if !self.design.compresses() {
-            // Baselines: dirty lines write back raw; clean lines drop.
-            for s in 0..4 {
-                if present[s] && dirty[s] {
-                    self.bw.demand_writes += 1;
-                    dram.access(base + s as u64, ReqKind::Write, now, false);
-                }
-            }
-            return;
-        }
-
-        if self.design == Design::Ideal {
-            // No write-side overheads: baseline write behaviour, layout
-            // tracked implicitly via the oracle (reads recompute it).
-            for s in 0..4 {
-                if present[s] && dirty[s] {
-                    self.bw.demand_writes += 1;
-                    dram.access(base + s as u64, ReqKind::Write, now, false);
-                }
-            }
-            return;
-        }
-
-        // Anything dirty? If the whole gang is clean and the layout is not
-        // changing, nothing needs to touch memory (it's all clean drops) —
-        // unless compression wants to newly pack clean lines.
-        let owner_core = gang[0].core as usize;
-        let compress = match (&self.design, &self.dynamic) {
-            (Design::Dynamic, Some(d)) => sampled || d.enabled(owner_core),
-            _ => true,
-        };
-
-        // Fast path: compression disabled and the group was never packed —
-        // plain dirty writebacks, no compressibility analysis needed.
-        if !compress && old == Csi::Uncompressed {
-            for s in 0..4 {
-                if present[s] && dirty[s] {
-                    oracle.dirty_update(base + s as u64);
-                    self.bw.demand_writes += 1;
-                    dram.access(base + s as u64, ReqKind::Write, now, false);
-                }
-            }
-            return;
-        }
-
-        // Dirty stores changed data: re-roll compressibility of dirty lines.
-        for s in 0..4 {
-            if present[s] && dirty[s] {
-                oracle.dirty_update(base + s as u64);
-            }
-        }
-        let sizes = oracle.group_sizes(base);
-
-        // Decide the new layout under residency constraints (can only pack
-        // lines we actually hold — ganged eviction guarantees packed peers
-        // travel together, so halves are never split).
-        let ab_touched = present[0] || present[1];
-        let cd_touched = present[2] || present[3];
-        let dirty_ab = dirty[0] || dirty[1];
-        let dirty_cd = dirty[2] || dirty[3];
-
-        let new = if compress {
-            decide_packed_layout(old, present, sizes)
-        } else {
-            // Compression disabled (Dynamic-CRAM): stop *creating* packed
-            // data but leave existing packed data alone — clean evictions
-            // of packed groups drop for free; only dirty data forces the
-            // affected half (or the whole quad) to unpack.
-            match old {
-                Csi::Quad => {
-                    if dirty_ab || dirty_cd {
-                        Csi::Uncompressed
-                    } else {
-                        Csi::Quad
-                    }
-                }
-                _ => {
-                    let ab_packed_old = matches!(old, Csi::PairAb | Csi::PairBoth);
-                    let cd_packed_old = matches!(old, Csi::PairCd | Csi::PairBoth);
-                    let new_ab = ab_packed_old && !(ab_touched && dirty_ab);
-                    let new_cd = cd_packed_old && !(cd_touched && dirty_cd);
-                    match (new_ab, new_cd) {
-                        (true, true) => Csi::PairBoth,
-                        (true, false) => Csi::PairAb,
-                        (false, true) => Csi::PairCd,
-                        (false, false) => Csi::Uncompressed,
-                    }
-                }
-            }
-        };
-
-        // Issue writes per physical slot.
-        self.groups_written += 1;
-        if new != Csi::Uncompressed {
-            self.groups_compressed += 1;
-        }
-        for loc in 0..4u8 {
-            let addr = base + loc as u64;
-            let old_res = old.colocated(loc);
-            let new_res = new.colocated(loc);
-            if new_res.is_empty() {
-                // stale under the new layout: invalidate if it was live
-                if !old_res.is_empty() {
-                    self.bw.invalidates += 1;
-                    if sampled {
-                        if let Some(d) = self.dynamic.as_mut() {
-                            d.on_cost(core_of(gang, base, loc, owner_core));
-                        }
-                    }
-                    dram.access(addr, ReqKind::Invalidate, now, false);
-                }
-                continue;
-            }
-            if new_res.len() > 1 {
-                // packed block: one write; if every member is clean this is
-                // pure compression overhead (the baseline wrote nothing)
-                let any_dirty = new_res.iter().any(|&s| dirty[s as usize]);
-                // If the half keeps its old packed layout and nothing in it
-                // was dirtied, the block already sits in memory byte-for-
-                // byte: no write needed (clean re-eviction of packed data).
-                if !any_dirty && layout_half_same(old, new, loc) {
-                    continue;
-                }
-                if any_dirty {
-                    self.bw.demand_writes += 1;
-                } else {
-                    self.bw.clean_writes += 1;
-                    if sampled {
-                        if let Some(d) = self.dynamic.as_mut() {
-                            d.on_cost(owner_core);
-                        }
-                    }
-                }
-                dram.access(addr, ReqKind::Write, now, false);
-            } else {
-                let s = new_res[0] as usize;
-                // single line at its home: write if dirty, or if the line
-                // is being relocated back (its old location differs), or if
-                // this slot previously held a packed block that must be
-                // overwritten so its marker stops matching
-                let relocated =
-                    old.location(s as u8) != loc || old.colocated(loc).len() > 1;
-                if dirty[s] {
-                    self.bw.demand_writes += 1;
-                    dram.access(addr, ReqKind::Write, now, false);
-                } else if relocated && present[s] {
-                    // clean line restored to its home during an unpack:
-                    // overhead write
-                    self.bw.clean_writes += 1;
-                    if sampled {
-                        if let Some(d) = self.dynamic.as_mut() {
-                            d.on_cost(owner_core);
-                        }
-                    }
-                    dram.access(addr, ReqKind::Write, now, false);
-                }
-            }
-        }
-
-        if new == old && !self.mem_csi.contains(group_of(base)) && new == Csi::Uncompressed {
-            // nothing to record
-        } else {
-            self.mem_csi.insert(group_of(base), new);
-        }
-
-        // Explicit designs must persist the CSI change to the metadata
-        // region (dirty-allocate in the metadata cache; misses and dirty
-        // victims cost DRAM accesses).  An unchanged CSI needs no update
-        // (the controller knows the prior level from the LLC tag bits).
-        if new != old {
-            if let Some(meta) = self.meta.as_mut() {
-                let row_opt = meta.row_optimized;
-                let meta_addr = meta.meta_addr_for(base);
-                let before_wb = meta.writebacks;
-                let how = meta.update(base, new);
-                if how == MetaAccess::Miss {
-                    self.bw.meta_reads += 1;
-                    dram.access(meta_addr, ReqKind::MetaRead, now, row_opt);
-                }
-                if meta.writebacks > before_wb {
-                    self.bw.meta_writes += 1;
-                    dram.access(meta_addr, ReqKind::MetaWrite, now, row_opt);
-                }
-            }
-        }
-
-        // Keep the LLP trained on write-side layout changes too.
-        if matches!(self.design, Design::Implicit | Design::Dynamic) {
-            self.llp.update(page_of_line(base), new);
-        }
+        self.writeback_flat(gang, now, dram, oracle, sampled);
     }
 
-    /// Fraction of written groups that ended up compressed.
+    /// Fraction of written groups that ended up compressed (host engine).
     pub fn compression_frac(&self) -> f64 {
-        if self.groups_written == 0 {
-            0.0
-        } else {
-            self.groups_compressed as f64 / self.groups_written as f64
-        }
+        self.engine.compression_frac()
     }
 
     /// Probability that a pair / quad of adjacent lines fits the packing
@@ -636,84 +300,13 @@ impl MemoryController {
     }
 }
 
-/// Which core to charge for an invalidate: the evictee that owned the
-/// stale slot if identifiable, else the gang owner.
-fn core_of(gang: &[crate::cache::Evicted], base: u64, loc: u8, fallback: usize) -> usize {
-    gang.iter()
-        .find(|e| e.line_addr == base + loc as u64)
-        .map(|e| e.core as usize)
-        .unwrap_or(fallback)
-}
-
-/// Gang preamble shared by the host controller and the far-tier engine:
-/// the group base plus per-slot present/dirty masks.  Panics on an empty
-/// gang (both callers check first).
-pub(crate) fn gang_masks(gang: &[crate::cache::Evicted]) -> (u64, [bool; 4], [bool; 4]) {
-    let base = group_base(gang[0].line_addr);
-    debug_assert!(gang.iter().all(|e| group_base(e.line_addr) == base));
-    let mut present = [false; 4];
-    let mut dirty = [false; 4];
-    for e in gang {
-        let s = (e.line_addr - base) as usize;
-        present[s] = true;
-        dirty[s] |= e.dirty;
-    }
-    (base, present, dirty)
-}
-
-/// The packing decision under residency constraints: pack whatever fits
-/// among resident lines; halves with no resident members keep their old
-/// arrangement (ganged eviction guarantees packed peers travel together,
-/// so halves are never split).  Shared by the host-side controller and
-/// the far-tier CRAM engine ([`crate::tier::memory`]).
-pub(crate) fn decide_packed_layout(old: Csi, present: [bool; 4], sizes: [u32; 4]) -> Csi {
-    let budget = crate::compress::PACK_BUDGET;
-    let all4 = present.iter().all(|&p| p);
-    let quad_ok = all4 && sizes.iter().sum::<u32>() <= budget;
-    let pair_ab_ok = present[0] && present[1] && sizes[0] + sizes[1] <= budget;
-    let pair_cd_ok = present[2] && present[3] && sizes[2] + sizes[3] <= budget;
-    let old_ab_packed = matches!(old, Csi::PairAb | Csi::PairBoth | Csi::Quad);
-    let old_cd_packed = matches!(old, Csi::PairCd | Csi::PairBoth | Csi::Quad);
-    let new_ab = if present[0] || present[1] {
-        pair_ab_ok
-    } else {
-        old_ab_packed
-    };
-    let new_cd = if present[2] || present[3] {
-        pair_cd_ok
-    } else {
-        old_cd_packed
-    };
-    if quad_ok {
-        Csi::Quad
-    } else {
-        match (new_ab, new_cd) {
-            (true, true) => Csi::PairBoth,
-            (true, false) => Csi::PairAb,
-            (false, true) => Csi::PairCd,
-            (false, false) => Csi::Uncompressed,
-        }
-    }
-}
-
-/// Is the half containing physical slot `loc` laid out identically in
-/// `old` and `new`?  (Shared with the far-tier CRAM engine.)
-pub(crate) fn layout_half_same(old: Csi, new: Csi, loc: u8) -> bool {
-    let half = loc / 2;
-    let packed = |c: Csi| match (c, half) {
-        (Csi::Quad, _) => 2u8,
-        (Csi::PairAb, 0) | (Csi::PairBoth, 0) => 1,
-        (Csi::PairCd, 1) | (Csi::PairBoth, 1) => 1,
-        _ => 0,
-    };
-    packed(old) == packed(new)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cache::Evicted;
+    use crate::cram::group::Csi;
     use crate::dram::DramConfig;
+    use crate::mem::group_base;
     use crate::workloads::{SizeOracle, ValueModel};
 
     fn setup(design: Design) -> (MemoryController, DramSim, SizeOracle) {
@@ -847,7 +440,7 @@ mod tests {
 
     #[test]
     fn explicit_charges_metadata_traffic() {
-        let (mut mc, mut dram, mut oracle) = setup(Design::Explicit { row_opt: false });
+        let (mut mc, mut dram, mut oracle) = setup(Design::explicit(false));
         // first read: metadata cache cold -> metadata read + data read
         let r = mc.read(0, 0, 0, &mut dram, &mut oracle, false);
         assert_eq!(mc.bw.meta_reads, 1);
@@ -880,7 +473,7 @@ mod tests {
 
     #[test]
     fn row_opt_metadata_reads_are_row_hits() {
-        let (mut mc, mut dram, mut oracle) = setup(Design::Explicit { row_opt: true });
+        let (mut mc, mut dram, mut oracle) = setup(Design::explicit(true));
         mc.read(0, 0, 0, &mut dram, &mut oracle, false);
         // the metadata access must have been a forced row hit
         assert!(dram.stats.row_hits >= 1);
@@ -957,7 +550,7 @@ mod tests {
 
     #[test]
     fn tiered_controller_routes_and_accounts_per_tier() {
-        let (mut mc, mut dram, mut oracle) = setup(Design::Tiered { far_compressed: true });
+        let (mut mc, mut dram, mut oracle) = setup(Design::tiered(true));
         // find one near and one far group under the default 50/50 split
         let tier = mc.tier.as_ref().unwrap();
         let near_line = (0..100_000u64).find(|&l| !tier.is_far_line(l)).unwrap();
@@ -983,6 +576,67 @@ mod tests {
     }
 
     #[test]
+    fn tiered_dynamic_gates_far_packing() {
+        let (mut mc, mut dram, mut oracle) =
+            setup(Design::new(Policy::Dynamic, Placement::Tiered));
+        assert!(mc.dynamic.is_some(), "tiered-cram-dyn has the gate");
+        let tier = mc.tier.as_ref().unwrap();
+        let far_line = (0..100_000u64).find(|&l| tier.is_far_line(l)).unwrap();
+        let base = group_base(far_line);
+        // enabled gate: a far gang packs like tiered-cram
+        mc.writeback(&gang(base, [true; 4]), 0, &mut dram, &mut oracle, false);
+        assert_eq!(
+            mc.tier.as_ref().unwrap().far_csi_of(base),
+            Csi::Quad,
+            "enabled gate packs the far group"
+        );
+        // hammer costs until the gate closes, then a dirty re-evict of a
+        // *different* far group must stay raw on the expander
+        for _ in 0..3000 {
+            mc.dynamic.as_mut().unwrap().on_cost(0);
+        }
+        assert!(!mc.dynamic.as_ref().unwrap().enabled(0));
+        let far2 = (base + 4..200_000u64)
+            .step_by(4)
+            .find(|&l| mc.tier.as_ref().unwrap().is_far_line(l) && l != base)
+            .unwrap();
+        mc.writeback(&gang(far2, [true; 4]), 100, &mut dram, &mut oracle, false);
+        assert_eq!(
+            mc.tier.as_ref().unwrap().far_csi_of(far2),
+            Csi::Uncompressed,
+            "closed gate stops creating packed far data"
+        );
+        // sampled groups always compress (they train the counters)
+        let far3 = (far2 + 4..300_000u64)
+            .step_by(4)
+            .find(|&l| mc.tier.as_ref().unwrap().is_far_line(l))
+            .unwrap();
+        mc.writeback(&gang(far3, [true; 4]), 200, &mut dram, &mut oracle, true);
+        assert_eq!(mc.tier.as_ref().unwrap().far_csi_of(far3), Csi::Quad);
+    }
+
+    #[test]
+    fn tiered_explicit_charges_far_metadata_traffic() {
+        let (mut mc, mut dram, mut oracle) =
+            setup(Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered));
+        let tier = mc.tier.as_ref().unwrap();
+        let far_line = (0..100_000u64).find(|&l| tier.is_far_line(l)).unwrap();
+        let base = group_base(far_line);
+        // pack a far group: the layout change dirty-allocates in the
+        // metadata cache (cold -> miss -> device metadata read)
+        mc.writeback(&gang(base, [true; 4]), 0, &mut dram, &mut oracle, false);
+        assert_eq!(mc.bw.meta_reads, 1, "cold metadata cache misses on update");
+        // a read of the same group hits the (host-side) metadata cache
+        let r = mc.read(base + 1, 0, 1000, &mut dram, &mut oracle, false);
+        assert_eq!(mc.bw.meta_reads, 1, "metadata cached after the update");
+        assert_eq!(r.installs.len(), 4, "explicit far CRAM still co-fetches");
+        // accounting invariant: every metadata access lands on a tier
+        let stats = mc.tier.as_ref().unwrap().snapshot();
+        assert_eq!(stats.total_accesses(), mc.bw.total());
+        assert!(stats.far.meta_accesses >= 1);
+    }
+
+    #[test]
     fn compressed_llc_mode_stamps_install_sizes() {
         let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
         mc.llc_compressed = true;
@@ -1005,9 +659,9 @@ mod tests {
 
     #[test]
     fn tiered_names_resolve_both_ways() {
-        assert_eq!(Design::Tiered { far_compressed: false }.name(), "tiered-uncomp");
-        assert_eq!(Design::Tiered { far_compressed: true }.name(), "tiered-cram");
-        assert!(!Design::Tiered { far_compressed: true }.compresses());
+        assert_eq!(Design::tiered(false).name(), "tiered-uncomp");
+        assert_eq!(Design::tiered(true).name(), "tiered-cram");
+        assert!(!Design::tiered(true).compresses());
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! The composable design space: **compression policy** × **placement**.
+//!
+//! The paper's designs (explicit metadata, implicit-marker CRAM, dynamic
+//! cost/benefit gating) are orthogonal to *where* the compressed memory
+//! lives.  This module makes that orthogonality a type: a [`Design`] is a
+//! [`Policy`] (what compression machinery runs) composed with a
+//! [`Placement`] (flat DDR vs a tiered CXL expander), and every scenario
+//! the related work studies — IBEX-style dynamic gating on an expander,
+//! Pekhimenko-style explicit metadata on far memory — is a one-line
+//! composition instead of a new enum arm.
+//!
+//! With [`Placement::Flat`] the policy runs at the host memory
+//! controller over all of DRAM.  With [`Placement::Tiered`] the near
+//! tier is always plain DDR and the policy runs on the far expander
+//! (where the narrow link makes compression pay) — see
+//! [`crate::tier::memory`].
+//!
+//! **Compatibility facade.**  `Design` keeps associated constants named
+//! after the pre-refactor enum variants (`Design::Uncompressed`,
+//! `Design::Implicit`, …) and constructor shorthands
+//! ([`Design::explicit`], [`Design::tiered`]), so call sites, CLI
+//! strings, `ResultsDb` keys and figure outputs are unchanged: every
+//! pre-existing [`Design::name`] maps to the same composition the old
+//! enum arm implemented.  [`Design::parse`] round-trips every name
+//! (pinned by the `design_names_round_trip` test).
+
+/// The compression policy: which machinery runs at the controller that
+/// owns the (flat or far) compressed memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// No compression — the baseline of every figure.
+    Uncompressed,
+    /// Fig. 3 "ideal": all co-fetch benefits, no overheads.
+    Ideal,
+    /// CRAM + explicit metadata region + metadata cache (Fig. 7/8/12);
+    /// `row_opt` co-locates metadata with the data row (Fig. 20).
+    Explicit { row_opt: bool },
+    /// Static-CRAM: implicit marker metadata (+ LLP on the flat host,
+    /// device-held layouts on an expander).
+    Implicit,
+    /// Static-CRAM + set-sampled cost/benefit gating (§VI).
+    Dynamic,
+    /// Next-line prefetch baseline (Table V): the bandwidth cost CRAM's
+    /// free co-fetches avoid.
+    NextLinePrefetch,
+}
+
+/// Where the (potentially compressed) memory lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// One flat DDR memory behind the host controller.
+    Flat,
+    /// Near DDR + far CXL expander ([`crate::tier`]); the policy runs on
+    /// the expander, the near tier stays uncompressed.
+    Tiered,
+}
+
+/// A memory-system design: one policy at one placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Design {
+    pub policy: Policy,
+    pub placement: Placement,
+}
+
+/// Pre-refactor spellings (`Design::Uncompressed`, `Design::Dynamic`, …)
+/// stay valid: the enum variants became associated constants over the
+/// composition.
+#[allow(non_upper_case_globals)]
+impl Design {
+    pub const Uncompressed: Design = Design::flat(Policy::Uncompressed);
+    pub const Ideal: Design = Design::flat(Policy::Ideal);
+    pub const Implicit: Design = Design::flat(Policy::Implicit);
+    pub const Dynamic: Design = Design::flat(Policy::Dynamic);
+    pub const NextLinePrefetch: Design = Design::flat(Policy::NextLinePrefetch);
+}
+
+impl Design {
+    pub const fn new(policy: Policy, placement: Placement) -> Design {
+        Design { policy, placement }
+    }
+
+    pub const fn flat(policy: Policy) -> Design {
+        Design::new(policy, Placement::Flat)
+    }
+
+    /// Flat CRAM with an explicit metadata region (`Design::Explicit` of
+    /// the pre-refactor enum).
+    pub const fn explicit(row_opt: bool) -> Design {
+        Design::flat(Policy::Explicit { row_opt })
+    }
+
+    /// The pre-refactor `Design::Tiered { far_compressed }`: an
+    /// uncompressed far tier, or the IBEX-style always-on far CRAM
+    /// (device-held metadata = the `Implicit` policy on the expander).
+    pub const fn tiered(far_compressed: bool) -> Design {
+        Design::new(
+            if far_compressed { Policy::Implicit } else { Policy::Uncompressed },
+            Placement::Tiered,
+        )
+    }
+
+    #[inline]
+    pub fn is_tiered(&self) -> bool {
+        self.placement == Placement::Tiered
+    }
+
+    /// Every valid composition, flat designs first (paper order), then
+    /// the tiered cross-product.
+    pub fn all() -> [Design; 14] {
+        [
+            Design::Uncompressed,
+            Design::Ideal,
+            Design::explicit(false),
+            Design::explicit(true),
+            Design::Implicit,
+            Design::Dynamic,
+            Design::NextLinePrefetch,
+            Design::tiered(false),
+            Design::tiered(true),
+            Design::new(Policy::Dynamic, Placement::Tiered),
+            Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered),
+            Design::new(Policy::Explicit { row_opt: true }, Placement::Tiered),
+            Design::new(Policy::Ideal, Placement::Tiered),
+            Design::new(Policy::NextLinePrefetch, Placement::Tiered),
+        ]
+    }
+
+    /// Canonical CLI / `ResultsDb` name.  Total over the cross-product;
+    /// every pre-existing name is byte-identical to the enum era.
+    pub fn name(&self) -> &'static str {
+        match (self.placement, self.policy) {
+            (Placement::Flat, Policy::Uncompressed) => "uncompressed",
+            (Placement::Flat, Policy::Ideal) => "ideal",
+            (Placement::Flat, Policy::Explicit { row_opt: false }) => "cram-explicit",
+            (Placement::Flat, Policy::Explicit { row_opt: true }) => "cram-explicit-rowopt",
+            (Placement::Flat, Policy::Implicit) => "cram-static",
+            (Placement::Flat, Policy::Dynamic) => "cram-dynamic",
+            (Placement::Flat, Policy::NextLinePrefetch) => "nextline-prefetch",
+            (Placement::Tiered, Policy::Uncompressed) => "tiered-uncomp",
+            (Placement::Tiered, Policy::Implicit) => "tiered-cram",
+            (Placement::Tiered, Policy::Dynamic) => "tiered-cram-dyn",
+            (Placement::Tiered, Policy::Explicit { row_opt: false }) => "tiered-explicit",
+            (Placement::Tiered, Policy::Explicit { row_opt: true }) => {
+                "tiered-explicit-rowopt"
+            }
+            (Placement::Tiered, Policy::Ideal) => "tiered-ideal",
+            (Placement::Tiered, Policy::NextLinePrefetch) => "tiered-nextline",
+        }
+    }
+
+    /// Inverse of [`Design::name`] — the single parser behind `--design`
+    /// (None for an unknown name).
+    pub fn parse(name: &str) -> Option<Design> {
+        Design::all().into_iter().find(|d| d.name() == name)
+    }
+
+    /// Does the *host-side* controller pack groups in DRAM?  Tiered
+    /// designs never pack on the host side — the far expander runs its
+    /// own engine (see [`crate::tier::TieredMemory`]).
+    pub fn compresses(&self) -> bool {
+        self.placement == Placement::Flat
+            && !matches!(self.policy, Policy::Uncompressed | Policy::NextLinePrefetch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_names_round_trip() {
+        // every composed design parses back from the exact string name()
+        // emits — figures, ResultsDb keys, and --design can never drift
+        for d in Design::all() {
+            assert_eq!(Design::parse(d.name()), Some(d), "{}", d.name());
+        }
+        assert_eq!(Design::parse("no-such-design"), None);
+    }
+
+    #[test]
+    fn design_names_are_unique() {
+        let names: Vec<&str> = Design::all().iter().map(|d| d.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate design name: {names:?}");
+    }
+
+    #[test]
+    fn facade_matches_pre_refactor_names() {
+        // the compatibility constants map to the exact historical strings
+        assert_eq!(Design::Uncompressed.name(), "uncompressed");
+        assert_eq!(Design::Ideal.name(), "ideal");
+        assert_eq!(Design::explicit(false).name(), "cram-explicit");
+        assert_eq!(Design::explicit(true).name(), "cram-explicit-rowopt");
+        assert_eq!(Design::Implicit.name(), "cram-static");
+        assert_eq!(Design::Dynamic.name(), "cram-dynamic");
+        assert_eq!(Design::NextLinePrefetch.name(), "nextline-prefetch");
+        assert_eq!(Design::tiered(false).name(), "tiered-uncomp");
+        assert_eq!(Design::tiered(true).name(), "tiered-cram");
+    }
+
+    #[test]
+    fn new_compositions_exist() {
+        let dyn_far = Design::parse("tiered-cram-dyn").unwrap();
+        assert_eq!(dyn_far.policy, Policy::Dynamic);
+        assert_eq!(dyn_far.placement, Placement::Tiered);
+        let expl_far = Design::parse("tiered-explicit").unwrap();
+        assert_eq!(expl_far.policy, Policy::Explicit { row_opt: false });
+        assert!(expl_far.is_tiered());
+    }
+
+    #[test]
+    fn compresses_is_host_side_only() {
+        assert!(!Design::Uncompressed.compresses());
+        assert!(!Design::NextLinePrefetch.compresses());
+        assert!(Design::Implicit.compresses());
+        assert!(Design::Dynamic.compresses());
+        assert!(Design::explicit(false).compresses());
+        assert!(Design::Ideal.compresses());
+        // tiered: the expander packs, the host does not
+        for d in Design::all().into_iter().filter(Design::is_tiered) {
+            assert!(!d.compresses(), "{}", d.name());
+        }
+    }
+}

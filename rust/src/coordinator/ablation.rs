@@ -81,7 +81,7 @@ pub fn ablate_metacache(insts: u64) -> Report {
     for kb in [8usize, 32, 128, 512] {
         body.push_str(&format!("{:<10}", format!("{kb}KB")));
         for wl in WORKLOADS {
-            let s = run_with(wl, Design::Explicit { row_opt: false }, insts, |c| {
+            let s = run_with(wl, Design::explicit(false), insts, |c| {
                 c.meta_cache_bytes = kb * 1024;
             });
             body.push_str(&format!(" {:>12}", pct(s)));

@@ -22,7 +22,7 @@ pub const BENCH_WORKLOADS: [&str; 2] = ["libq", "pr_twi"];
 pub const BENCH_DESIGNS: [Design; 6] = [
     Design::Uncompressed,
     Design::Ideal,
-    Design::Explicit { row_opt: false },
+    Design::explicit(false),
     Design::Implicit,
     Design::Dynamic,
     Design::NextLinePrefetch,

@@ -1,7 +1,7 @@
 //! Figure/table harnesses: format each paper exhibit from cached results.
 
 use crate::controller::{Design, MemoryController};
-use crate::coordinator::runner::{ResultsDb, C1_DESIGNS, Q1_DESIGNS, T1_FAR_RATIO};
+use crate::coordinator::runner::{ResultsDb, C1_DESIGNS, Q1_DESIGNS, T1_FAR_RATIO, X1_DESIGNS};
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::lit::LineInversionTable;
 use crate::cram::llp::LineLocationPredictor;
@@ -92,7 +92,7 @@ pub fn figure3(db: &ResultsDb) -> Report {
         title: "Speedup: ideal compression vs practical (32KB metadata cache)".into(),
         body: speedup_table(
             db,
-            &[(Design::Ideal, "ideal"), (Design::Explicit { row_opt: false }, "practical")],
+            &[(Design::Ideal, "ideal"), (Design::explicit(false), "practical")],
         ),
     }
 }
@@ -138,7 +138,7 @@ pub fn figure7(db: &ResultsDb) -> Report {
     Report {
         id: "fig7".into(),
         title: "CRAM + explicit metadata (paper: avg ~-10%)".into(),
-        body: speedup_table(db, &[(Design::Explicit { row_opt: false }, "explicit")]),
+        body: speedup_table(db, &[(Design::explicit(false), "explicit")]),
     }
 }
 
@@ -147,7 +147,7 @@ pub fn figure8(db: &ResultsDb) -> Report {
     Report {
         id: "fig8".into(),
         title: "Bandwidth breakdown, CRAM w/ explicit metadata (normalized)".into(),
-        body: bandwidth_table(db, Design::Explicit { row_opt: false }),
+        body: bandwidth_table(db, Design::explicit(false)),
     }
 }
 
@@ -159,7 +159,7 @@ pub fn figure12(db: &ResultsDb) -> Report {
         body: speedup_table(
             db,
             &[
-                (Design::Explicit { row_opt: false }, "explicit"),
+                (Design::explicit(false), "explicit"),
                 (Design::Implicit, "implicit"),
             ],
         ),
@@ -175,7 +175,7 @@ pub fn figure14(db: &ResultsDb) -> Report {
     let (mut mh, mut la) = (Vec::new(), Vec::new());
     for w in all27() {
         let (Some(e), Some(i)) = (
-            db.get(w.name, Design::Explicit { row_opt: false }),
+            db.get(w.name, Design::explicit(false)),
             db.get(w.name, Design::Implicit),
         ) else {
             continue;
@@ -325,7 +325,7 @@ pub fn figure20(db: &ResultsDb) -> Report {
         body: speedup_table(
             db,
             &[
-                (Design::Explicit { row_opt: true }, "rowopt-meta"),
+                (Design::explicit(true), "rowopt-meta"),
                 (Design::Dynamic, "dynamic"),
             ],
         ),
@@ -341,8 +341,8 @@ pub fn figure20(db: &ResultsDb) -> Report {
 /// fraction of traffic served far, and the link data flits per far
 /// access (compression pushes this below 1 by co-fetching packed lines).
 pub fn figure_t1(db: &ResultsDb) -> Report {
-    let raw = Design::Tiered { far_compressed: false };
-    let cram = Design::Tiered { far_compressed: true };
+    let raw = Design::tiered(false);
+    let cram = Design::tiered(true);
     let mut body = format!(
         "{:<12} {:>12} {:>12} {:>14} {:>9} {:>11}\n",
         "workload", "far-raw", "far-cram", "cram-vs-raw", "far-frac", "flits/far"
@@ -394,6 +394,55 @@ pub fn figure_t1(db: &ResultsDb) -> Report {
     Report {
         id: "figt1".into(),
         title: "Tiered memory: CRAM-compressed vs uncompressed CXL far tier".into(),
+        body,
+    }
+}
+
+/// Figure X1: the composed-design exhibit — the {static, dynamic,
+/// explicit} × {flat, tiered} cross-product the layered controller
+/// opened, over the far-memory-pressure workloads.
+///
+/// Flat columns answer "what does each policy cost on plain DDR"; the
+/// tiered columns put the same policy on the CXL expander at the T1
+/// capacity split, where the narrow link amplifies both the co-fetch
+/// benefit and every metadata/second-access overhead.  All speedups are
+/// vs the flat uncompressed baseline, so a tiered column below 100%
+/// reads as "what capacity expansion costs under this policy".
+pub fn figure_x1(db: &ResultsDb) -> Report {
+    let labels = ["static", "dynamic", "explicit", "t-cram", "t-cram-dyn", "t-explicit"];
+    let mut body = format!("{:<12}", "workload");
+    for l in labels {
+        body.push_str(&format!(" {l:>11}"));
+    }
+    body.push('\n');
+    let mut per_col: Vec<Vec<f64>> = vec![Vec::new(); X1_DESIGNS.len()];
+    for w in far_pressure() {
+        let results: Vec<_> = X1_DESIGNS.iter().map(|d| db.speedup(w.name, *d)).collect();
+        if results.iter().any(|r| r.is_none()) {
+            continue;
+        }
+        body.push_str(&format!("{:<12}", w.name));
+        for (i, s) in results.iter().enumerate() {
+            let s = s.expect("checked above");
+            per_col[i].push(s);
+            body.push_str(&format!(" {:>11}", pct(s)));
+        }
+        body.push('\n');
+    }
+    body.push_str(&format!("{:<12}", "GEOMEAN"));
+    for col in &per_col {
+        body.push_str(&format!(" {:>11}", pct(geomean_speedup(col))));
+    }
+    body.push('\n');
+    body.push_str(&format!(
+        "(weighted speedup vs flat uncompressed DDR; t-* columns run the same \
+         policy on the CXL expander at the Figure T1 split, {:.0}% of capacity \
+         behind the link; t-explicit pays the link twice on metadata misses)\n",
+        T1_FAR_RATIO * 100.0
+    ));
+    Report {
+        id: "figx1".into(),
+        title: "Composed designs: {static, dynamic, explicit} x {flat, tiered}".into(),
         body,
     }
 }
@@ -670,12 +719,13 @@ pub fn table5(db: &ResultsDb) -> Report {
     }
 }
 
-/// All figure/table ids, in paper order (figt1, figq1 and figc1 are
-/// this repo's tiered-memory, tail-latency and compressed-LLC
-/// extensions, not paper exhibits).
-pub const ALL_IDS: [&str; 17] = [
+/// All figure/table ids, in paper order (figt1, figq1, figc1 and figx1
+/// are this repo's tiered-memory, tail-latency, compressed-LLC and
+/// composed-design extensions, not paper exhibits).
+pub const ALL_IDS: [&str; 18] = [
     "fig3", "fig4", "fig7", "fig8", "fig12", "fig14", "fig15", "fig16", "fig18",
-    "fig19", "fig20", "figt1", "figq1", "figc1", "table2", "table3", "table4",
+    "fig19", "fig20", "figt1", "figq1", "figc1", "figx1", "table2", "table3",
+    "table4",
 ];
 
 /// Produce one report by id (None for an unknown id).
@@ -685,6 +735,7 @@ pub fn report(db: &ResultsDb, id: &str) -> Option<Report> {
         "figt1" => figure_t1(db),
         "figq1" => figure_q1(db),
         "figc1" => figure_c1(db),
+        "figx1" => figure_x1(db),
         "fig4" => figure4(),
         "fig7" => figure7(db),
         "fig8" => figure8(db),
@@ -775,6 +826,22 @@ mod tests {
         assert!(r.body.contains("eff-cap"));
         assert!(r.body.contains("GEOMEAN"));
         assert!(report(&db, "figc1").is_some());
+    }
+
+    #[test]
+    fn figure_x1_reports_the_cross_product() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 20_000,
+            seed: 11,
+            threads: 4,
+        });
+        db.run_x1(false);
+        let r = figure_x1(&db);
+        assert!(r.body.contains("cap_stream"), "{}", r.body);
+        assert!(r.body.contains("t-cram-dyn"));
+        assert!(r.body.contains("t-explicit"));
+        assert!(r.body.contains("GEOMEAN"));
+        assert!(report(&db, "figx1").is_some());
     }
 
     #[test]

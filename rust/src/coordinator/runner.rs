@@ -3,7 +3,7 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use crate::controller::Design;
+use crate::controller::{Design, Placement, Policy};
 use crate::sim::{simulate, SimConfig};
 use crate::stats::SimResult;
 use crate::workloads::profiles::{
@@ -65,10 +65,7 @@ impl Job {
     /// matching the `far_mill` that [`ResultsDb::get_ch`] looks up — so a
     /// tiered job enqueued through any matrix path stays reachable.
     fn new(profile: WorkloadProfile, design: Design, channels: usize) -> Self {
-        let far_ratio = match design {
-            Design::Tiered { .. } => Some(T1_FAR_RATIO),
-            _ => None,
-        };
+        let far_ratio = design.is_tiered().then_some(T1_FAR_RATIO);
         Self { profile, design, channels, far_ratio, llc_comp: false }
     }
 
@@ -92,8 +89,8 @@ impl Job {
 pub const CORE_DESIGNS: [Design; 7] = [
     Design::Uncompressed,
     Design::Ideal,
-    Design::Explicit { row_opt: false },
-    Design::Explicit { row_opt: true },
+    Design::explicit(false),
+    Design::explicit(true),
     Design::Implicit,
     Design::Dynamic,
     Design::NextLinePrefetch,
@@ -101,8 +98,8 @@ pub const CORE_DESIGNS: [Design; 7] = [
 
 /// The tiered-memory designs (Figure T1).
 pub const TIERED_DESIGNS: [Design; 2] = [
-    Design::Tiered { far_compressed: false },
-    Design::Tiered { far_compressed: true },
+    Design::tiered(false),
+    Design::tiered(true),
 ];
 
 /// Far-tier capacity fraction used by the Figure T1 evaluation: three
@@ -115,13 +112,25 @@ pub const T1_FAR_RATIO: f64 = 0.75;
 /// the tail), and Dynamic-CRAM.
 pub const Q1_DESIGNS: [Design; 3] = [
     Design::Uncompressed,
-    Design::Explicit { row_opt: false },
+    Design::explicit(false),
     Design::Dynamic,
 ];
 
 /// The memory-side designs the Figure C1 compressed-LLC exhibit crosses
 /// with the LLC organization (cache compression × memory compression).
 pub const C1_DESIGNS: [Design; 2] = [Design::Implicit, Design::Dynamic];
+
+/// The Figure X1 cross-product: {static, dynamic, explicit} × {flat,
+/// tiered} — the design space the composable controller opened.  Tiered
+/// columns run at the T1 capacity split.
+pub const X1_DESIGNS: [Design; 6] = [
+    Design::Implicit,
+    Design::Dynamic,
+    Design::explicit(false),
+    Design::tiered(true), // Implicit × Tiered
+    Design::new(Policy::Dynamic, Placement::Tiered),
+    Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered),
+];
 
 /// Results cache for the full evaluation.
 pub struct ResultsDb {
@@ -164,6 +173,7 @@ impl ResultsDb {
         jobs.extend(Self::t1_jobs());
         jobs.extend(Self::q1_extra_jobs());
         jobs.extend(Self::c1_jobs());
+        jobs.extend(Self::x1_jobs());
         self.run_jobs(jobs, progress);
     }
 
@@ -229,6 +239,25 @@ impl ResultsDb {
     /// Run the Figure T1 matrix only.
     pub fn run_tiered_t1(&mut self, progress: bool) {
         self.run_jobs(Self::t1_jobs(), progress);
+    }
+
+    /// The Figure X1 matrix: far-memory-pressure workloads × the
+    /// {static, dynamic, explicit} × {flat, tiered} cross-product, plus
+    /// the flat uncompressed baseline for the speedup denominator.
+    fn x1_jobs() -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for w in far_pressure() {
+            jobs.push(Job::new(w.clone(), Design::Uncompressed, 2));
+            for d in X1_DESIGNS {
+                jobs.push(Job::new(w.clone(), d, 2));
+            }
+        }
+        jobs
+    }
+
+    /// Run the Figure X1 matrix only.
+    pub fn run_x1(&mut self, progress: bool) {
+        self.run_jobs(Self::x1_jobs(), progress);
     }
 
     /// Smaller matrix: the 27 workloads × the designs needed by a single
@@ -341,10 +370,7 @@ impl ResultsDb {
 
     pub fn get_ch(&self, workload: &str, design: Design, channels: usize) -> Option<&SimResult> {
         // tiered runs are produced at the Figure T1 split; flat runs at 0
-        let far_mill = match design {
-            Design::Tiered { .. } => far_mill_of(Some(T1_FAR_RATIO)),
-            _ => 0,
-        };
+        let far_mill = far_mill_of(design.is_tiered().then_some(T1_FAR_RATIO));
         self.results.get(&RunKey {
             workload: workload.to_string(),
             design: design.name(),
@@ -356,10 +382,7 @@ impl ResultsDb {
 
     /// Fetch a cached result by LLC organization (2 channels; Figure C1).
     pub fn get_llc(&self, workload: &str, design: Design, llc_comp: bool) -> Option<&SimResult> {
-        let far_mill = match design {
-            Design::Tiered { .. } => far_mill_of(Some(T1_FAR_RATIO)),
-            _ => 0,
-        };
+        let far_mill = far_mill_of(design.is_tiered().then_some(T1_FAR_RATIO));
         self.results.get(&RunKey {
             workload: workload.to_string(),
             design: design.name(),
@@ -448,6 +471,34 @@ mod tests {
                 assert!(plain.llc_stats.is_none());
                 assert!(comp.llc_stats.is_some(), "{} {}", w.name, d.name());
             }
+        }
+    }
+
+    #[test]
+    fn x1_matrix_covers_the_cross_product() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 20_000,
+            seed: 9,
+            threads: 4,
+        });
+        db.run_x1(false);
+        assert_eq!(db.len(), far_pressure().len() * (1 + X1_DESIGNS.len()));
+        for w in far_pressure() {
+            for d in X1_DESIGNS {
+                let r = db.get(w.name, d).expect("x1 result cached");
+                assert_eq!(r.design, d.name());
+                assert_eq!(
+                    r.tier.is_some(),
+                    d.is_tiered(),
+                    "{} {}: tier stats iff tiered placement",
+                    w.name,
+                    d.name()
+                );
+                if let Some(t) = &r.tier {
+                    assert_eq!(t.total_accesses(), r.bw.total(), "{} {}", w.name, d.name());
+                }
+            }
+            assert!(db.speedup(w.name, X1_DESIGNS[4]).is_some(), "tiered-cram-dyn ran");
         }
     }
 

@@ -24,6 +24,7 @@
 //! recompressing the unmodified lines of a group on every dirty eviction.
 
 use crate::compress::{hybrid, PACK_BUDGET};
+use crate::controller::CramEngine;
 use crate::cram::group::Csi;
 use crate::cram::lit::{LineInversionTable, LitInsert};
 use crate::cram::marker::{LineKind, MarkerEngine};
@@ -52,9 +53,11 @@ pub struct CompressedStore {
     phys: PagedArena<CacheLine>,
     pub markers: MarkerEngine,
     pub lit: LineInversionTable,
-    /// Ground-truth CSI per group index (what a perfect metadata store
-    /// would hold) — used by tests and by the explicit-metadata baseline.
-    csi: PagedArena<Csi>,
+    /// Ground-truth layout per group (what a perfect metadata store
+    /// would hold) — the shared [`CramEngine`] is the store's layout
+    /// authority, the same engine the host controller and the far-tier
+    /// expander run; this store adds the byte-accurate substrate on top.
+    layout: CramEngine,
     /// Compressibility memo: line address → (content fingerprint, hybrid
     /// size).  A hit whose fingerprint matches the incoming data skips the
     /// compressor stack entirely.
@@ -70,7 +73,7 @@ impl CompressedStore {
             phys: PagedArena::new(CacheLine::zero()),
             markers: MarkerEngine::new(seed),
             lit: LineInversionTable::default(),
-            csi: PagedArena::new(Csi::Uncompressed),
+            layout: CramEngine::new(),
             memo: PagedArena::new((0, 0)),
             memo_hits: 0,
             memo_misses: 0,
@@ -79,7 +82,7 @@ impl CompressedStore {
 
     /// Ground-truth CSI of the group containing `line` (tests/baselines).
     pub fn csi_of(&self, line: u64) -> Csi {
-        self.csi.copied_or_default(group_of(line))
+        self.layout.csi_of_line(line)
     }
 
     /// Raw physical line at `loc` (what the DRAM bus would deliver).
@@ -228,7 +231,7 @@ impl CompressedStore {
                 }
             }
         }
-        self.csi.insert(group_of(base_line), csi);
+        self.layout.record(group_of(base_line), csi);
         written
     }
 
@@ -307,18 +310,13 @@ impl CompressedStore {
         let base = group_base(line_addr);
         let slot = (line_addr - base) as u8;
         // Probe the prediction first, then every remaining possible
-        // location in the restricted-placement order.
-        let order = crate::cram::group::possible_locations(slot);
-        let mut probes: InlineVec<u64, 4> = InlineVec::new();
-        probes.push(predicted_loc);
-        for &s in order {
-            let loc = base + s as u64;
-            if loc != predicted_loc {
-                probes.push(loc);
-            }
-        }
+        // location — the same walk the host controller issues, from the
+        // shared engine.
+        debug_assert!(predicted_loc >= base && predicted_loc < base + GROUP_LINES);
+        let probes = CramEngine::probe_order(slot, (predicted_loc - base) as u8);
         let mut accesses = 0u32;
-        for &probe in probes.iter() {
+        for &p in probes.iter() {
+            let probe = base + p as u64;
             accesses += 1;
             let interp = self.read_interpret(probe);
             if let Some((_, data)) = interp.lines.iter().find(|(a, _)| *a == line_addr) {
@@ -331,7 +329,7 @@ impl CompressedStore {
 
     /// Iterate over the ground-truth group CSIs as (base line, csi).
     pub fn groups(&self) -> impl Iterator<Item = (u64, Csi)> + '_ {
-        self.csi.iter().map(|(g, c)| (g * GROUP_LINES, c))
+        self.layout.groups().map(|(g, c)| (g * GROUP_LINES, c))
     }
 
     /// Number of physical lines materialized.

@@ -27,8 +27,8 @@
 //! | [`cram`] | markers, LIT, LLP, group layout, compressed store, metadata, Dynamic-CRAM |
 //! | [`cache`] | set-associative cache hierarchy with ganged eviction |
 //! | [`dram`] | DDR4 channel/rank/bank timing model with FR-FCFS scheduling |
-//! | [`tier`] | tiered memory: CXL link model + near/far routing with hot-page migration and an expander-side CRAM engine (Figure T1) |
-//! | [`controller`] | memory-controller variants (the paper's designs + baselines + the `tiered-*` designs) |
+//! | [`tier`] | tiered memory: CXL link model + near/far routing with hot-page migration; executes the design's policy on the expander via the shared engine (Figures T1/X1) |
+//! | [`controller`] | the layered controller: `policy` (the Policy × Placement design space), `engine` (the shared CramEngine), `host` (flat executor); every design is a composition |
 //! | [`workloads`] | synthetic SPEC/GAP/MIX workload models (Table II calibrated) + the far-memory-pressure set |
 //! | [`sim`] | multi-core trace-driven system simulator |
 //! | [`energy`] | DRAM energy / power / EDP model (Fig. 19) |

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]
-//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1> [--insts N]
+//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1> [--insts N]
 //! repro table <2|3|4|5> [--insts N]
 //! repro sim --workload W --design D [--insts N] [--channels C]
 //!           [--far-ratio R] [--trace FILE] [--llc-compressed]
@@ -26,6 +26,12 @@
 //! cache-pressure `llcfit_*` set.  `repro ablate llc` sweeps the
 //! superblock-tag ratio and the per-set data budget.
 //!
+//! `figure x1` is the composed-design exhibit the layered controller
+//! opened: {static, dynamic, explicit} × {flat, tiered} over the
+//! far-pressure suite.  `--design` accepts any composition name
+//! (`tiered-cram-dyn`, `tiered-explicit`, …) — `repro list` prints them
+//! all; see `controller::policy`.
+//!
 //! (clap is unavailable in this offline environment; argument parsing is
 //! hand-rolled — see DESIGN.md §Substitutions.)
 
@@ -33,7 +39,7 @@ use std::collections::HashMap;
 
 use cram::controller::Design;
 use cram::coordinator::figures;
-use cram::coordinator::runner::{ResultsDb, RunPlan, CORE_DESIGNS, TIERED_DESIGNS};
+use cram::coordinator::runner::{ResultsDb, RunPlan};
 use cram::sim::{simulate, SimConfig};
 use cram::workloads::profiles::{all64, by_name, cache_pressure, far_pressure, latency_sensitive};
 
@@ -72,14 +78,6 @@ fn plan_from(flags: &HashMap<String, String>) -> RunPlan {
     plan
 }
 
-fn design_by_name(name: &str) -> Option<Design> {
-    CORE_DESIGNS
-        .iter()
-        .chain(TIERED_DESIGNS.iter())
-        .copied()
-        .find(|d| d.name() == name)
-}
-
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, flags) = parse_flags(&args);
@@ -114,24 +112,25 @@ fn main() {
             match id.as_str() {
                 "fig4" | "table3" => {}
                 "figt1" => db.run_tiered_t1(true),
+                "figx1" => db.run_x1(true),
                 "figq1" => db.run_q1(true),
                 "figc1" => db.run_c1(true),
                 "fig18" => db.run_designs(&[Design::Uncompressed, Design::Dynamic], true, true),
                 "table4" => db.run_channel_sweep(true),
                 "fig3" => db.run_designs(
-                    &[Design::Uncompressed, Design::Ideal, Design::Explicit { row_opt: false }],
+                    &[Design::Uncompressed, Design::Ideal, Design::explicit(false)],
                     false,
                     true,
                 ),
                 "fig7" | "fig8" => db.run_designs(
-                    &[Design::Uncompressed, Design::Explicit { row_opt: false }],
+                    &[Design::Uncompressed, Design::explicit(false)],
                     false,
                     true,
                 ),
                 "fig12" | "fig14" => db.run_designs(
                     &[
                         Design::Uncompressed,
-                        Design::Explicit { row_opt: false },
+                        Design::explicit(false),
                         Design::Implicit,
                     ],
                     false,
@@ -145,7 +144,7 @@ fn main() {
                 ),
                 "fig19" => db.run_designs(&[Design::Uncompressed, Design::Dynamic], false, true),
                 "fig20" => db.run_designs(
-                    &[Design::Uncompressed, Design::Explicit { row_opt: true }, Design::Dynamic],
+                    &[Design::Uncompressed, Design::explicit(true), Design::Dynamic],
                     false,
                     true,
                 ),
@@ -175,7 +174,7 @@ fn main() {
                 Some(p) => p,
                 None => usage(&format!("unknown workload {wl}")),
             };
-            let design = match design_by_name(&d) {
+            let design = match Design::parse(&d) {
                 Some(d) => d,
                 None => usage(&format!("unknown design {d}")),
             };
@@ -356,12 +355,17 @@ fn main() {
         "bench" => {
             // `repro bench` — the simulator throughput matrix + regression
             // gate, runnable locally and by the CI bench job:
-            //   repro bench [--insts N] [--json OUT]
+            //   repro bench [--insts N] [--json OUT] [--save]
             //               [--check [BASELINE]] [--current FILE]
             //               [--tolerance PCT]
             // --check compares the run (or --current, a previously written
             // BENCH_*.json, skipping the re-run) against BASELINE (default
             // BENCH_sim.json) and exits 1 on a >PCT% median Melem/s drop.
+            // --save (re)records the committed baseline: it writes the run
+            // to BENCH_sim.json in the working directory — run it on the
+            // machine class that executes the gate (see DESIGN.md
+            // §Simulation performance on arming the CI gate), then
+            // commit the file.
             let tolerance: f64 = flags
                 .get("tolerance")
                 .map(|v| v.parse().expect("--tolerance must be a number"))
@@ -377,9 +381,27 @@ fn main() {
                     .unwrap_or(150_000);
                 let b = cram::util::bench::Bencher::quick();
                 let results = cram::coordinator::bench::run_sim_matrix(insts, &b);
-                if let Some(path) = flags.get("json") {
+                // --json OUT writes wherever asked; --save always
+                // (additionally) writes the gate's baseline path, since
+                // that is the file --check and CI read
+                let mut outputs: Vec<String> = Vec::new();
+                if let Some(p) = flags.get("json") {
+                    outputs.push(p.clone());
+                }
+                if flags.contains_key("save") && !outputs.iter().any(|p| p == "BENCH_sim.json")
+                {
+                    outputs.push("BENCH_sim.json".to_string());
+                }
+                for path in &outputs {
                     cram::util::bench::write_json(path, &results).expect("write bench json");
                     println!("wrote {} results to {path}", results.len());
+                }
+                if flags.contains_key("save") {
+                    println!(
+                        "baseline recorded; commit BENCH_sim.json to arm the \
+                         regression gate on this machine class (DESIGN.md \
+                         §Simulation performance)"
+                    );
                 }
                 results.iter().filter_map(|r| r.elems_per_sec()).map(|t| t / 1e6).collect()
             };
@@ -396,8 +418,8 @@ fn main() {
             }
         }
         "list" => {
-            println!("designs:");
-            for d in CORE_DESIGNS.iter().chain(TIERED_DESIGNS.iter()) {
+            println!("designs (policy x placement compositions):");
+            for d in Design::all() {
                 println!("  {}", d.name());
             }
             let far = far_pressure();
@@ -425,7 +447,7 @@ fn usage(msg: &str) -> ! {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE] [--llc-compressed]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ntiered designs (figure t1): tiered-uncomp, tiered-cram — near DDR + far CXL\nexpander; --far-ratio R puts fraction R of capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline (exit 1)"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE] [--llc-compressed]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement compositions (repro list prints all):\ntiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/tiered-explicit\n(figure x1) — near DDR + far CXL expander; --far-ratio R puts fraction R\nof capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
     );
     std::process::exit(2);
 }

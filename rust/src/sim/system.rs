@@ -65,7 +65,7 @@ pub struct SimConfig {
     /// Replay this trace on every core instead of the synthetic generator
     /// (the profile still supplies the value model / MLP / footprint).
     pub trace: Option<TraceReplay>,
-    /// Tiered-memory knobs (used by `Design::Tiered` only): capacity
+    /// Tiered-memory knobs (used by tiered placements only): capacity
     /// split, link width, migration policy.
     pub tier: crate::tier::TierConfig,
     /// Compressed LLC (Touché-style superblock tags over the same data
@@ -495,7 +495,17 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
         },
         llp_accuracy: mc.llp.stats.accuracy(),
         read_lat: mc.read_lat.since(&warm_lat),
-        meta_hit_rate: mc.meta.as_ref().map(|m| m.hit_rate()),
+        meta_hit_rate: mc
+            .meta
+            .as_ref()
+            .map(|m| m.hit_rate())
+            .or_else(|| {
+                // tiered-explicit holds its metadata cache inside the tier
+                mc.tier
+                    .as_ref()
+                    .and_then(|t| t.meta.as_ref())
+                    .map(|m| m.hit_rate())
+            }),
         prefetch_installed: mc.prefetch_installed - warm_pref.0,
         prefetch_used: mc.prefetch_used - warm_pref.1,
         row_hit_rate: {
@@ -601,14 +611,14 @@ mod tests {
 
     #[test]
     fn explicit_pays_metadata_bandwidth() {
-        let r = quick(Design::Explicit { row_opt: false }, "xz");
+        let r = quick(Design::explicit(false), "xz");
         assert!(r.bw.meta_reads > 0, "xz thrashes the metadata cache");
         assert!(r.meta_hit_rate.unwrap() < 0.9);
     }
 
     #[test]
     fn read_latency_histogram_counts_demand_reads() {
-        for design in [Design::Uncompressed, Design::Implicit, Design::Tiered { far_compressed: true }] {
+        for design in [Design::Uncompressed, Design::Implicit, Design::tiered(true)] {
             let r = quick(design, "sphinx");
             assert_eq!(
                 r.read_lat.count(),
@@ -687,7 +697,7 @@ mod tests {
             Design::Uncompressed,
             Design::Implicit,
             Design::Dynamic,
-            Design::Tiered { far_compressed: true },
+            Design::tiered(true),
         ] {
             let cfg = SimConfig::default()
                 .with_design(design)
@@ -740,7 +750,7 @@ mod tests {
     #[test]
     fn tiered_run_reports_consistent_per_tier_breakdown() {
         let cfg = SimConfig::default()
-            .with_design(Design::Tiered { far_compressed: true })
+            .with_design(Design::tiered(true))
             .with_insts(400_000)
             .with_far_ratio(0.75);
         let r = simulate(&by_name("cap_stream").unwrap(), &cfg);
@@ -769,8 +779,8 @@ mod tests {
             simulate(&p, &cfg)
         };
         let flat = mk(Design::Uncompressed);
-        let far_raw = mk(Design::Tiered { far_compressed: false });
-        let far_cram = mk(Design::Tiered { far_compressed: true });
+        let far_raw = mk(Design::tiered(false));
+        let far_cram = mk(Design::tiered(true));
         let s_raw = far_raw.weighted_speedup(&flat);
         let s_cram = far_cram.weighted_speedup(&flat);
         assert!(s_raw < 0.98, "narrow far link must cost perf: {s_raw}");
@@ -785,9 +795,64 @@ mod tests {
     }
 
     #[test]
+    fn composed_tiered_designs_run_end_to_end() {
+        // the cross-product the layered controller opened: dynamic gating
+        // and explicit metadata on the far expander
+        for name in ["tiered-cram-dyn", "tiered-explicit"] {
+            let design = Design::parse(name).expect("composition parses");
+            let cfg = SimConfig::default()
+                .with_design(design)
+                .with_insts(300_000)
+                .with_far_ratio(0.75);
+            let r = simulate(&by_name("cap_stream").unwrap(), &cfg);
+            assert!(r.cycles > 0, "{name}");
+            assert_eq!(r.design, name);
+            let t = r.tier.expect("tiered composition records tier stats");
+            assert_eq!(
+                t.total_accesses(),
+                r.bw.total(),
+                "{name}: per-tier counters must sum to the bandwidth total"
+            );
+            assert_eq!(
+                r.read_lat.count(),
+                r.bw.demand_reads,
+                "{name}: one latency sample per demand read"
+            );
+            if name == "tiered-explicit" {
+                assert!(r.bw.meta_reads > 0, "explicit far tier pays metadata reads");
+                assert!(t.far.meta_accesses > 0, "metadata lands on the far tier");
+                assert!(r.meta_hit_rate.is_some(), "tier metadata hit rate surfaced");
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_dynamic_tracks_tiered_cram_when_compression_helps() {
+        // on a compressible far-pressure stream the gate should stay
+        // open, so tiered-cram-dyn must not collapse to tiered-uncomp
+        let p = by_name("cap_stream").unwrap();
+        let mk = |design: Design| {
+            let cfg = SimConfig::default()
+                .with_design(design)
+                .with_insts(400_000)
+                .with_far_ratio(0.75);
+            simulate(&p, &cfg)
+        };
+        let raw = mk(Design::tiered(false));
+        let dyn_far = mk(Design::parse("tiered-cram-dyn").unwrap());
+        let s = dyn_far.weighted_speedup(&raw);
+        assert!(
+            s > 1.0,
+            "gated far CRAM must beat the uncompressed far tier on a \
+             compressible stream: {s}"
+        );
+        assert!(dyn_far.tier.unwrap().far_prefetch_installs > 0);
+    }
+
+    #[test]
     fn tiered_migration_policy_promotes_hot_pages() {
         let cfg = SimConfig::default()
-            .with_design(Design::Tiered { far_compressed: true })
+            .with_design(Design::tiered(true))
             .with_insts(600_000)
             .with_far_ratio(0.5);
         let r = simulate(&by_name("cap_ptr").unwrap(), &cfg);

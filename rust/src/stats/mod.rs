@@ -166,6 +166,11 @@ pub struct TierTraffic {
     pub clean_writes: u64,
     /// Stale-slot invalidates on the compressed far tier.
     pub invalidates: u64,
+    /// Metadata-region accesses on the far device (the `tiered-explicit`
+    /// composition: meta reads + meta write-backs).
+    pub meta_accesses: u64,
+    /// Extra next-line prefetch reads (the tiered prefetch baseline).
+    pub prefetch_reads: u64,
     /// Accesses caused by page migration (both directions count the
     /// accesses they issue on *this* tier).
     pub migr_accesses: u64,
@@ -177,6 +182,8 @@ impl TierTraffic {
             + self.demand_writes
             + self.clean_writes
             + self.invalidates
+            + self.meta_accesses
+            + self.prefetch_reads
             + self.migr_accesses
     }
 
@@ -186,6 +193,8 @@ impl TierTraffic {
             demand_writes: self.demand_writes - warm.demand_writes,
             clean_writes: self.clean_writes - warm.clean_writes,
             invalidates: self.invalidates - warm.invalidates,
+            meta_accesses: self.meta_accesses - warm.meta_accesses,
+            prefetch_reads: self.prefetch_reads - warm.prefetch_reads,
             migr_accesses: self.migr_accesses - warm.migr_accesses,
         }
     }
@@ -451,6 +460,7 @@ mod tests {
             clean_writes: 2,
             invalidates: 1,
             migr_accesses: 6,
+            ..Default::default()
         };
         let t = TierStats { near, far, ..Default::default() };
         assert_eq!(near.total(), 10);

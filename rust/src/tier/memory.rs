@@ -3,9 +3,10 @@
 //! Routes line addresses to the near tier (the host's DDR4 channels,
 //! always uncompressed) or the far tier (expander-internal DRAM behind a
 //! [`CxlLink`]), runs a hot-page promotion / cold-page demotion policy,
-//! and — when the far tier is CRAM-compressed — keeps the expander's
-//! group layouts so packed far reads deliver co-located lines in a single
-//! link flit.
+//! and executes the design's compression [`Policy`] **on the expander**:
+//! the tier is the [`Placement::Tiered`](crate::controller::Placement)
+//! executor of the composable design space (see
+//! [`crate::controller::policy`]).
 //!
 //! **Placement.**  Pages default to near/far by a deterministic hash
 //! against `far_ratio` (the capacity split: `far_ratio` = fraction of
@@ -15,35 +16,50 @@
 //! demoted in exchange to preserve the split.  Counters decay by halving
 //! every `epoch_accesses` accesses.
 //!
-//! **Far-tier CRAM.**  The expander runs its own CRAM engine with
-//! device-held metadata (IBEX-style): layouts live next to the data, so
-//! there is no host-side predictor and no second-probe traffic — the
-//! device always reads the right location.  What the host *does* pay is
-//! the link: one 64-byte flit per far access.  Compression earns its keep
-//! there — a packed block moves up to four lines per flit, cutting
-//! demand flits on the narrow link, and packed pages migrate in fewer
-//! flits too.  Demoted pages land raw and are re-packed lazily by later
-//! writebacks (the migration engine moves data, not compressibility
-//! analysis).
+//! **Far-tier policies.**  All layout decisions come from the shared
+//! [`CramEngine`] — the same planner the flat host controller uses; this
+//! module owns only the expander-side issue path (link flits + device
+//! DRAM accesses + per-tier accounting):
+//!
+//! * `Implicit` (`tiered-cram`) — device-held metadata (IBEX-style):
+//!   layouts live next to the data, so there is no host-side predictor
+//!   and no second-probe traffic; one flit returns every co-located
+//!   line of a packed block.
+//! * `Dynamic` (`tiered-cram-dyn`) — the same engine gated by the
+//!   per-core Dynamic-CRAM cost/benefit counters: far invalidates and
+//!   clean packed writes charge costs, useful far co-fetches pay
+//!   benefits, and a closed gate stops *creating* packed far data while
+//!   leaving existing packed groups to decay lazily.
+//! * `Explicit` (`tiered-explicit`) — a Pekhimenko-style explicit
+//!   metadata region in device memory with a host-side metadata cache:
+//!   a meta-cache miss crosses the link **twice** (metadata fetch, then
+//!   the data access) before the demand data moves, which is the cost
+//!   story this composition exists to expose.
+//! * `Ideal` — far co-fetch benefits with no write-side overheads.
+//! * `Uncompressed` / `NextLinePrefetch` — raw far lines (the prefetch
+//!   baseline issues its extra next-line access through the same
+//!   near/far routing).
 //!
 //! **Scheduling.**  The expander's device DRAM is a [`DramSim`] like the
 //! host's, so it runs the same per-channel FR-FCFS transaction scheduler
-//! ([`crate::dram::sched`]): device-side write drains (including packed
-//! writebacks and stale-slot invalidates, which fold into drains) queue
-//! behind the same watermark hysteresis, and device queueing shows up in
-//! the far-read tail.  [`TierConfig::far_dram`]`.sched` carries the
-//! expander's knobs; `SimConfig::with_sched` sets host and device alike.
+//! ([`crate::dram::sched`]).  [`TierConfig::far_dram`]`.sched` carries
+//! the expander's knobs; `SimConfig::with_sched` sets host and device
+//! alike.
 //!
 //! Every access is charged to exactly one tier, so
 //! `TierStats::total_accesses() == Bandwidth::total()` for a tiered run —
-//! the subsystem's accounting invariant (checked in tests).
+//! the subsystem's accounting invariant (checked in tests).  This module
+//! deliberately owns **no packing logic**: `decide_packed_layout`, slot
+//! plans, install recovery and gang masks are all [`CramEngine`] calls.
 
 use std::collections::{HashMap, HashSet};
 
-use crate::controller::{Install, Installs, ReadOutcome};
+use crate::controller::{CramEngine, Install, Installs, Policy, ReadOutcome, SlotOp};
+use crate::cram::dynamic::DynamicCram;
 use crate::cram::group::Csi;
+use crate::cram::metadata::{MetaAccess, MetadataStore};
 use crate::dram::{DramConfig, DramSim, ReqKind};
-use crate::mem::{group_base, group_of, page_of_line, PagedArena};
+use crate::mem::{group_base, group_of, page_of_line};
 use crate::stats::{Bandwidth, TierStats};
 use crate::tier::link::{CxlLink, CxlLinkConfig, CMD_BYTES, DATA_BYTES};
 use crate::util::rng::splitmix64;
@@ -53,6 +69,9 @@ use crate::workloads::SizeOracle;
 const PAGE_LINES: u64 = 64;
 /// Groups per page.
 const PAGE_GROUPS: u64 = PAGE_LINES / 4;
+/// First line of the expander's metadata region (device address space,
+/// past the 16GB data window — `tiered-explicit` only).
+const FAR_META_BASE: u64 = 16 * 1024 * 1024 * 1024 / 64;
 
 /// Tiered-memory configuration.
 #[derive(Clone, Copy, Debug)]
@@ -104,14 +123,18 @@ impl TierConfig {
 /// The two-tier memory behind the controller.
 pub struct TieredMemory {
     cfg: TierConfig,
-    far_compressed: bool,
+    /// The compression policy running on the expander.
+    policy: Policy,
     /// Placement-hash cutoff: page is far iff hash % 4096 < far_cut.
     far_cut: u64,
     pub link: CxlLink,
     pub far_dram: DramSim,
-    /// Far-tier group layouts by group index (expander-held metadata) —
-    /// paged arena, no hashing on the demand path.
-    far_csi: PagedArena<Csi>,
+    /// The expander's CRAM engine: far-tier group layouts (device-held
+    /// metadata) plus the shared packing machinery.
+    engine: CramEngine,
+    /// Host-side metadata cache over the device metadata region
+    /// (`Explicit` far policy only).
+    pub meta: Option<MetadataStore>,
     /// Per-page placement overrides from migration (true = far).
     placement: HashMap<u64, bool>,
     /// Per-page access heat with the epoch it was last updated.  Decay is
@@ -127,12 +150,29 @@ pub struct TieredMemory {
 }
 
 impl TieredMemory {
-    pub fn new(cfg: TierConfig, far_compressed: bool) -> Self {
+    /// Expander with the paper-default 32KB metadata cache (when the
+    /// policy needs one).
+    pub fn new(cfg: TierConfig, policy: Policy) -> Self {
+        Self::with_meta_cache(cfg, policy, 32 * 1024)
+    }
+
+    /// Full constructor: the metadata-cache size knob applies to the
+    /// `Explicit` far policy (`SimConfig::meta_cache_bytes`).
+    pub fn with_meta_cache(cfg: TierConfig, policy: Policy, meta_cache_bytes: usize) -> Self {
+        let meta = match policy {
+            Policy::Explicit { row_opt } => {
+                let mut m = MetadataStore::new(meta_cache_bytes, 8, FAR_META_BASE);
+                m.row_optimized = row_opt;
+                Some(m)
+            }
+            _ => None,
+        };
         Self {
             far_cut: (cfg.far_ratio.clamp(0.0, 1.0) * 4096.0) as u64,
             link: CxlLink::new(cfg.link),
             far_dram: DramSim::new(cfg.far_dram),
-            far_csi: PagedArena::new(Csi::Uncompressed),
+            engine: CramEngine::new(),
+            meta,
             placement: HashMap::new(),
             heat: HashMap::new(),
             listed: HashSet::new(),
@@ -141,7 +181,7 @@ impl TieredMemory {
             accesses: 0,
             stats: TierStats::default(),
             cfg,
-            far_compressed,
+            policy,
         }
     }
 
@@ -149,8 +189,22 @@ impl TieredMemory {
         &self.cfg
     }
 
-    pub fn far_compressed(&self) -> bool {
-        self.far_compressed
+    /// The compression policy running on the expander.
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Does the far tier pack groups at all under this policy?
+    fn far_packs(&self) -> bool {
+        matches!(
+            self.policy,
+            Policy::Implicit | Policy::Dynamic | Policy::Explicit { .. }
+        )
+    }
+
+    /// Current expander-held layout of `line`'s group (diagnostics).
+    pub fn far_csi_of(&self, line: u64) -> Csi {
+        self.engine.csi_of_line(line)
     }
 
     /// Current placement of a page (override, else the capacity-split hash).
@@ -170,6 +224,8 @@ impl TieredMemory {
     pub fn snapshot(&self) -> TierStats {
         let mut s = self.stats;
         s.link = self.link.stats;
+        s.far_groups_written = self.engine.groups_written;
+        s.far_groups_packed = self.engine.groups_compressed;
         s
     }
 
@@ -180,14 +236,15 @@ impl TieredMemory {
         now: u64,
         near: &mut DramSim,
         bw: &mut Bandwidth,
+        oracle: &mut SizeOracle,
     ) -> ReadOutcome {
         let page = page_of_line(line);
         self.touch(page, now, near, bw);
-        if !self.is_far_page(page) {
+        let out = if !self.is_far_page(page) {
             bw.demand_reads += 1;
             self.stats.near.demand_reads += 1;
             let done = near.access(line, ReqKind::Read, now, false);
-            return ReadOutcome {
+            ReadOutcome {
                 done,
                 installs: Installs::of(&[Install {
                     line_addr: line,
@@ -195,50 +252,134 @@ impl TieredMemory {
                     prefetch: false,
                     size: 0,
                 }]),
-            };
+            }
+        } else {
+            bw.demand_reads += 1;
+            self.stats.far.demand_reads += 1;
+            self.read_far(line, now, bw, oracle)
+        };
+        if self.policy == Policy::NextLinePrefetch {
+            // next-line prefetch baseline: a full extra access, routed by
+            // the prefetched line's own placement (heat untouched — the
+            // migration policy is driven by demand accesses only)
+            return self.prefetch_next(line, now, near, bw, out);
         }
-        bw.demand_reads += 1;
-        self.stats.far.demand_reads += 1;
-        // request flit out, device access, completion flit back
-        let at_device = self.link.send(now, CMD_BYTES);
-        if !self.far_compressed {
-            let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
-            let done = self.link.recv(far_done, DATA_BYTES);
-            return ReadOutcome {
-                done,
-                installs: Installs::of(&[Install {
-                    line_addr: line,
-                    level: 0,
-                    prefetch: false,
-                    size: 0,
-                }]),
-            };
-        }
-        // device-held metadata: the expander reads the correct (possibly
-        // packed) location directly; one flit returns every co-located line
+        out
+    }
+
+    /// Far-tier demand read under the expander's policy.
+    fn read_far(
+        &mut self,
+        line: u64,
+        now: u64,
+        bw: &mut Bandwidth,
+        oracle: &mut SizeOracle,
+    ) -> ReadOutcome {
         let base = group_base(line);
         let slot = (line - base) as u8;
-        let csi = self.far_csi.copied_or_default(group_of(base));
-        let loc = csi.location(slot);
-        let far_done = self.far_dram.access(base + loc as u64, ReqKind::Read, at_device, false);
-        let done = self.link.recv(far_done, DATA_BYTES);
-        let mut installs = Installs::new();
-        for &s in csi.colocated(loc) {
-            let la = base + s as u64;
-            let prefetch = la != line;
-            if prefetch {
-                self.stats.far_prefetch_installs += 1;
+        match self.policy {
+            Policy::Uncompressed | Policy::NextLinePrefetch => {
+                // request flit out, device access, completion flit back
+                let at_device = self.link.send(now, CMD_BYTES);
+                let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
+                let done = self.link.recv(far_done, DATA_BYTES);
+                ReadOutcome {
+                    done,
+                    installs: Installs::of(&[Install {
+                        line_addr: line,
+                        level: 0,
+                        prefetch: false,
+                        size: 0,
+                    }]),
+                }
             }
-            // size stays 0 here: when the LLC is compressed the
-            // controller's read wrapper stamps hybrid sizes on every
-            // install, including these far co-fetches
-            installs.push(Install { line_addr: la, level: csi.level_of(s), prefetch, size: 0 });
+            Policy::Ideal => {
+                // far co-fetch benefits with none of the overheads: the
+                // layout is recomputed from the oracle, never written
+                let csi = Csi::from_sizes(oracle.group_sizes(line));
+                let loc = csi.location(slot);
+                let at_device = self.link.send(now, CMD_BYTES);
+                let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
+                let done = self.link.recv(far_done, DATA_BYTES);
+                self.far_installs(base, csi, loc, line, done)
+            }
+            Policy::Implicit | Policy::Dynamic => {
+                // device-held metadata: the expander reads the correct
+                // (possibly packed) location directly; one flit returns
+                // every co-located line
+                let csi = self.engine.csi_of_group(group_of(base));
+                let loc = csi.location(slot);
+                let at_device = self.link.send(now, CMD_BYTES);
+                let far_done =
+                    self.far_dram.access(base + loc as u64, ReqKind::Read, at_device, false);
+                let done = self.link.recv(far_done, DATA_BYTES);
+                self.far_installs(base, csi, loc, line, done)
+            }
+            Policy::Explicit { row_opt } => {
+                // host-side metadata cache over the device region: a miss
+                // crosses the link twice before the demand data moves
+                let (meta_addr, how) = {
+                    let meta = self.meta.as_mut().expect("explicit far tier has metadata");
+                    (meta.meta_addr_for(line), meta.lookup(line).1)
+                };
+                let actual = self.engine.csi_of_line(line);
+                let mut t = now;
+                if how == MetaAccess::Miss {
+                    bw.meta_reads += 1;
+                    self.stats.far.meta_accesses += 1;
+                    let at = self.link.send(t, CMD_BYTES);
+                    let meta_done =
+                        self.far_dram.access(meta_addr, ReqKind::MetaRead, at, row_opt);
+                    t = self.link.recv(meta_done, DATA_BYTES);
+                }
+                let loc = actual.location(slot);
+                let at = self.link.send(t, CMD_BYTES);
+                let far_done =
+                    self.far_dram.access(base + loc as u64, ReqKind::Read, at, false);
+                let done = self.link.recv(far_done, DATA_BYTES);
+                self.far_installs(base, actual, loc, line, done)
+            }
         }
-        debug_assert!(installs.iter().any(|i| i.line_addr == line));
+    }
+
+    /// Build the install list of a far packed read and count co-fetches.
+    fn far_installs(&mut self, base: u64, csi: Csi, loc: u8, line: u64, done: u64) -> ReadOutcome {
+        let installs = CramEngine::installs_for(base, csi, loc, line);
+        self.stats.far_prefetch_installs +=
+            installs.iter().filter(|i| i.prefetch).count() as u64;
         ReadOutcome { done, installs }
     }
 
+    /// Issue the next-line prefetch access for the `NextLinePrefetch`
+    /// far policy and append its install.
+    fn prefetch_next(
+        &mut self,
+        line: u64,
+        now: u64,
+        near: &mut DramSim,
+        bw: &mut Bandwidth,
+        mut out: ReadOutcome,
+    ) -> ReadOutcome {
+        let pf = line + 1;
+        bw.prefetch_reads += 1;
+        if self.is_far_line(pf) {
+            self.stats.far.prefetch_reads += 1;
+            let at = self.link.send(now, CMD_BYTES);
+            let far_done = self.far_dram.access(pf, ReqKind::Read, at, false);
+            self.link.recv(far_done, DATA_BYTES);
+        } else {
+            self.stats.near.prefetch_reads += 1;
+            near.access(pf, ReqKind::Read, now, false);
+        }
+        out.installs.push(Install { line_addr: pf, level: 0, prefetch: true, size: 0 });
+        out
+    }
+
     /// Ganged writeback of one group (mirrors the controller contract).
+    /// `sampled` / `gate` carry the Dynamic-CRAM sampling verdict and
+    /// per-core counters for the `Dynamic` far policy (`gate` is `None`
+    /// for every other composition).
+    #[allow(clippy::too_many_arguments)]
     pub fn writeback(
         &mut self,
         gang: &[crate::cache::Evicted],
@@ -246,11 +387,13 @@ impl TieredMemory {
         near: &mut DramSim,
         oracle: &mut SizeOracle,
         bw: &mut Bandwidth,
+        sampled: bool,
+        gate: &mut Option<DynamicCram>,
     ) {
         if gang.is_empty() {
             return;
         }
-        let (base, present, dirty) = crate::controller::gang_masks(gang);
+        let (base, present, dirty) = CramEngine::gang_masks(gang);
         for s in 0..4 {
             if present[s] && dirty[s] {
                 oracle.dirty_update(base + s as u64);
@@ -269,83 +412,125 @@ impl TieredMemory {
             return;
         }
 
-        if !self.far_compressed {
-            for s in 0..4 {
-                if present[s] && dirty[s] {
-                    bw.demand_writes += 1;
-                    self.stats.far.demand_writes += 1;
-                    let at = self.link.send(now, DATA_BYTES);
-                    self.far_dram.access(base + s as u64, ReqKind::Write, at, false);
-                }
-            }
+        if !self.far_packs() {
+            // raw far tier (Uncompressed / NextLinePrefetch baselines and
+            // Ideal's overhead-free writes): dirty lines cross the link raw
+            self.raw_far_dirty_writes(base, present, dirty, now, bw);
             return;
         }
 
         // CRAM on the expander: the same residency-constrained packing
-        // decision as the host-side controller (shared helper; the far
-        // engine always compresses — no Dynamic gating, the link is
-        // always the bottleneck it is sized against), then issue device
-        // writes / invalidates — each one a flit on the link.
-        let old = self.far_csi.copied_or_default(group_of(base));
+        // decision as the host-side controller (shared engine), then the
+        // planned device writes / invalidates — each one a flit on the
+        // link.  The Dynamic far policy gates packing exactly like the
+        // flat controller: sampled groups always compress and train the
+        // counters; the rest follow the owner core's gate.
+        let owner_core = gang[0].core as usize;
+        let compress = match (self.policy, gate.as_ref()) {
+            (Policy::Dynamic, Some(d)) => sampled || d.enabled(owner_core),
+            _ => true,
+        };
+        let old = self.engine.csi_of_line(base);
+        if !compress && old == Csi::Uncompressed {
+            // gate closed, group never packed: plain dirty far writes
+            self.raw_far_dirty_writes(base, present, dirty, now, bw);
+            return;
+        }
         let sizes = oracle.group_sizes(base);
-        let new = crate::controller::decide_packed_layout(old, present, sizes);
-
-        if new == old && !dirty.iter().any(|&d| d) {
+        let new = if compress {
+            CramEngine::decide_packed_layout(old, present, sizes)
+        } else {
+            CramEngine::decayed_layout(old, present, dirty)
+        };
+        let plan = CramEngine::plan_group_write(old, new, present, dirty);
+        if plan.is_empty() {
             return; // clean re-eviction of an unchanged layout: free drop
         }
-        self.stats.far_groups_written += 1;
-        if new != Csi::Uncompressed {
-            self.stats.far_groups_packed += 1;
-        }
-        for loc in 0..4u8 {
+        self.engine.note_group_write(new);
+        for &(loc, op) in plan.iter() {
             let addr = base + loc as u64;
-            let old_res = old.colocated(loc);
-            let new_res = new.colocated(loc);
-            if new_res.is_empty() {
-                if !old_res.is_empty() {
+            match op {
+                SlotOp::Invalidate => {
                     // stale under the new layout: device writes the
                     // invalid-line marker (command flit on the link)
                     bw.invalidates += 1;
                     self.stats.far.invalidates += 1;
+                    if sampled {
+                        if let Some(d) = gate.as_mut() {
+                            d.on_cost(CramEngine::charged_core(gang, base, loc, owner_core));
+                        }
+                    }
                     let at = self.link.send(now, CMD_BYTES);
                     self.far_dram.access(addr, ReqKind::Invalidate, at, false);
                 }
-                continue;
-            }
-            if new_res.len() > 1 {
-                let any_dirty = new_res.iter().any(|&s| dirty[s as usize]);
-                if !any_dirty && crate::controller::layout_half_same(old, new, loc) {
-                    continue; // packed block already in device memory
-                }
-                if any_dirty {
-                    bw.demand_writes += 1;
-                    self.stats.far.demand_writes += 1;
-                } else {
-                    bw.clean_writes += 1;
-                    self.stats.far.clean_writes += 1;
-                }
-                let at = self.link.send(now, DATA_BYTES);
-                self.far_dram.access(addr, ReqKind::Write, at, false);
-            } else {
-                let s = new_res[0] as usize;
-                let relocated = old.location(s as u8) != loc || old.colocated(loc).len() > 1;
-                if dirty[s] {
-                    bw.demand_writes += 1;
-                    self.stats.far.demand_writes += 1;
-                    let at = self.link.send(now, DATA_BYTES);
-                    self.far_dram.access(addr, ReqKind::Write, at, false);
-                } else if relocated && present[s] {
-                    bw.clean_writes += 1;
-                    self.stats.far.clean_writes += 1;
+                SlotOp::WritePacked { dirty } | SlotOp::WriteSingle { dirty } => {
+                    if dirty {
+                        bw.demand_writes += 1;
+                        self.stats.far.demand_writes += 1;
+                    } else {
+                        bw.clean_writes += 1;
+                        self.stats.far.clean_writes += 1;
+                        if sampled {
+                            if let Some(d) = gate.as_mut() {
+                                d.on_cost(owner_core);
+                            }
+                        }
+                    }
                     let at = self.link.send(now, DATA_BYTES);
                     self.far_dram.access(addr, ReqKind::Write, at, false);
                 }
             }
         }
-        if new == Csi::Uncompressed {
-            self.far_csi.remove(group_of(base));
-        } else {
-            self.far_csi.insert(group_of(base), new);
+        self.engine.commit(group_of(base), new);
+
+        // Explicit far policy: persist the CSI change to the device
+        // metadata region through the host-side metadata cache.
+        if new != old {
+            if let Some(meta) = self.meta.as_mut() {
+                let row_opt = meta.row_optimized;
+                let meta_addr = meta.meta_addr_for(base);
+                let before_wb = meta.writebacks;
+                let how = meta.update(base, new);
+                let victim_wb = meta.writebacks > before_wb;
+                if how == MetaAccess::Miss {
+                    // the metadata line fills the host-side cache before
+                    // being updated: command flit out, device read, data
+                    // flit back (same crossing the read path pays)
+                    bw.meta_reads += 1;
+                    self.stats.far.meta_accesses += 1;
+                    let at = self.link.send(now, CMD_BYTES);
+                    let meta_done =
+                        self.far_dram.access(meta_addr, ReqKind::MetaRead, at, row_opt);
+                    self.link.recv(meta_done, DATA_BYTES);
+                }
+                if victim_wb {
+                    bw.meta_writes += 1;
+                    self.stats.far.meta_accesses += 1;
+                    let at = self.link.send(now, DATA_BYTES);
+                    self.far_dram.access(meta_addr, ReqKind::MetaWrite, at, row_opt);
+                }
+            }
+        }
+    }
+
+    /// Dirty lines of a far group written raw across the link (the
+    /// uncompressed-far arms and the Dynamic closed-gate fast path share
+    /// this so their accounting can never diverge).
+    fn raw_far_dirty_writes(
+        &mut self,
+        base: u64,
+        present: [bool; 4],
+        dirty: [bool; 4],
+        now: u64,
+        bw: &mut Bandwidth,
+    ) {
+        for s in 0..4 {
+            if present[s] && dirty[s] {
+                bw.demand_writes += 1;
+                self.stats.far.demand_writes += 1;
+                let at = self.link.send(now, DATA_BYTES);
+                self.far_dram.access(base + s as u64, ReqKind::Write, at, false);
+            }
         }
     }
 
@@ -396,7 +581,7 @@ impl TieredMemory {
             // lives at locs {0, 2, 3}, not 0..3).  Each block crosses the
             // link only after its device read completes, same sequencing
             // as the demand path.
-            let csi = self.far_csi.remove(group_of(gbase)).unwrap_or_default();
+            let csi = self.engine.remove(group_of(gbase)).unwrap_or_default();
             let mut arrived = now;
             for loc in 0..4u8 {
                 if csi.is_stale(loc) {
@@ -472,7 +657,7 @@ impl TieredMemory {
             self.far_dram.access(first + l, ReqKind::Write, at_device, false);
         }
         for g in 0..PAGE_GROUPS {
-            self.far_csi.remove(group_of(first + g * 4));
+            self.engine.remove(group_of(first + g * 4));
         }
         self.stats.migrated_lines += PAGE_LINES;
         self.placement.insert(page, true);
@@ -491,8 +676,8 @@ mod tests {
         SizeOracle::new(ValueModel::new([0.0, 1.0, 0.0, 0.0, 0.0], 7))
     }
 
-    fn setup(far_compressed: bool) -> (TieredMemory, DramSim, SizeOracle, Bandwidth) {
-        let t = TieredMemory::new(TierConfig::default(), far_compressed);
+    fn setup(policy: Policy) -> (TieredMemory, DramSim, SizeOracle, Bandwidth) {
+        let t = TieredMemory::new(TierConfig::default(), policy);
         (t, DramSim::new(DramConfig::default()), packable_oracle(), Bandwidth::default())
     }
 
@@ -519,21 +704,27 @@ mod tests {
 
     #[test]
     fn split_ratio_roughly_respected() {
-        let t = TieredMemory::new(TierConfig::default().with_far_ratio(0.75), false);
+        let t = TieredMemory::new(
+            TierConfig::default().with_far_ratio(0.75),
+            Policy::Uncompressed,
+        );
         let far = (0..4000u64).filter(|&p| t.is_far_page(p)).count();
         let frac = far as f64 / 4000.0;
         assert!((frac - 0.75).abs() < 0.05, "far fraction {frac}");
-        let none = TieredMemory::new(TierConfig::default().with_far_ratio(0.0), false);
+        let none = TieredMemory::new(
+            TierConfig::default().with_far_ratio(0.0),
+            Policy::Uncompressed,
+        );
         assert_eq!((0..1000u64).filter(|&p| none.is_far_page(p)).count(), 0);
     }
 
     #[test]
     fn far_read_slower_than_near_read() {
-        let (mut t, mut near, _o, mut bw) = setup(false);
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Uncompressed);
         let nl = page_in(&t, false);
         let fl = page_in(&t, true);
-        let rn = t.read(nl, 0, &mut near, &mut bw);
-        let rf = t.read(fl, 0, &mut near, &mut bw);
+        let rn = t.read(nl, 0, &mut near, &mut bw, &mut o);
+        let rf = t.read(fl, 0, &mut near, &mut bw, &mut o);
         assert!(
             rf.done > rn.done + 2 * t.link.config().port_latency,
             "far {} vs near {}",
@@ -547,13 +738,13 @@ mod tests {
 
     #[test]
     fn compressed_far_read_prefetches_group() {
-        let (mut t, mut near, mut o, mut bw) = setup(true);
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Implicit);
         let fl = page_in(&t, true);
-        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw);
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut None);
         let s = t.snapshot();
         assert_eq!(s.far_groups_written, 1);
         assert_eq!(s.far_groups_packed, 1);
-        let r = t.read(fl + 2, 1000, &mut near, &mut bw);
+        let r = t.read(fl + 2, 1000, &mut near, &mut bw, &mut o);
         assert_eq!(r.installs.len(), 4, "quad block: whole group per flit");
         assert_eq!(r.installs.iter().filter(|i| i.prefetch).count(), 3);
         assert_eq!(t.snapshot().far_prefetch_installs, 3);
@@ -563,46 +754,66 @@ mod tests {
 
     #[test]
     fn uncompressed_far_read_returns_single_line() {
-        let (mut t, mut near, mut o, mut bw) = setup(false);
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Uncompressed);
         let fl = page_in(&t, true);
-        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw);
-        let r = t.read(fl + 2, 1000, &mut near, &mut bw);
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut None);
+        let r = t.read(fl + 2, 1000, &mut near, &mut bw, &mut o);
         assert_eq!(r.installs.len(), 1);
     }
 
     #[test]
     fn tier_counters_sum_to_bandwidth_total() {
-        let (mut t, mut near, mut o, mut bw) = setup(true);
-        for i in 0..200u64 {
-            let line = i * 37 % 4096;
-            t.read(line, i * 10, &mut near, &mut bw);
-            if i % 3 == 0 {
-                t.writeback(
-                    &gang(group_base(line), [true, false, i % 2 == 0, false]),
-                    i * 10,
-                    &mut near,
-                    &mut o,
-                    &mut bw,
-                );
+        // every policy the cross-product can place on the expander must
+        // keep the accounting invariant through reads and writebacks
+        for policy in [
+            Policy::Uncompressed,
+            Policy::Ideal,
+            Policy::Implicit,
+            Policy::Dynamic,
+            Policy::Explicit { row_opt: false },
+            Policy::NextLinePrefetch,
+        ] {
+            let (mut t, mut near, mut o, mut bw) = setup(policy);
+            let mut gate = matches!(policy, Policy::Dynamic)
+                .then(|| DynamicCram::with_bits(1, 6));
+            for i in 0..200u64 {
+                let line = i * 37 % 4096;
+                t.read(line, i * 10, &mut near, &mut bw, &mut o);
+                if i % 3 == 0 {
+                    t.writeback(
+                        &gang(group_base(line), [true, false, i % 2 == 0, false]),
+                        i * 10,
+                        &mut near,
+                        &mut o,
+                        &mut bw,
+                        i % 5 == 0,
+                        &mut gate,
+                    );
+                }
             }
+            assert_eq!(
+                t.snapshot().total_accesses(),
+                bw.total(),
+                "{policy:?}: per-tier counters must sum to the bandwidth total"
+            );
         }
-        assert_eq!(t.snapshot().total_accesses(), bw.total());
     }
 
     #[test]
     fn hot_far_page_promotes_and_demotes_a_victim() {
         let mut cfg = TierConfig::default();
         cfg.promote_threshold = 8;
-        let mut t = TieredMemory::new(cfg, true);
+        let mut t = TieredMemory::new(cfg, Policy::Implicit);
         let mut near = DramSim::new(DramConfig::default());
+        let mut o = packable_oracle();
         let mut bw = Bandwidth::default();
         let near_page = page_in(&t, false) / PAGE_LINES;
         let far_line = page_in(&t, true);
         // make a near page known (victim candidate)
-        t.read(near_page * PAGE_LINES, 0, &mut near, &mut bw);
+        t.read(near_page * PAGE_LINES, 0, &mut near, &mut bw, &mut o);
         assert!(t.is_far_line(far_line));
         for i in 0..8u64 {
-            t.read(far_line + i, i * 100, &mut near, &mut bw);
+            t.read(far_line + i, i * 100, &mut near, &mut bw, &mut o);
         }
         let s = t.snapshot();
         assert_eq!(s.promotions, 1);
@@ -614,53 +825,129 @@ mod tests {
         assert_eq!(s.total_accesses(), bw.total());
         // further reads hit the near tier
         let before = t.snapshot().near.demand_reads;
-        t.read(far_line, 10_000, &mut near, &mut bw);
+        t.read(far_line, 10_000, &mut near, &mut bw, &mut o);
         assert_eq!(t.snapshot().near.demand_reads, before + 1);
     }
 
     #[test]
     fn clean_reeviction_of_packed_far_group_is_free() {
-        let (mut t, mut near, mut o, mut bw) = setup(true);
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Implicit);
         let fl = page_in(&t, true);
-        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw);
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut None);
         let total_before = bw.total();
-        t.writeback(&gang(fl, [false; 4]), 100, &mut near, &mut o, &mut bw);
+        t.writeback(&gang(fl, [false; 4]), 100, &mut near, &mut o, &mut bw, false, &mut None);
         assert_eq!(bw.total(), total_before, "clean unchanged layout: no traffic");
     }
 
     #[test]
     fn far_expander_scheduler_folds_invalidates() {
-        let (mut t, mut near, mut o, mut bw) = setup(true);
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Implicit);
         let fl = page_in(&t, true);
         // packing a quad issues one block write + three stale-slot
         // invalidates on the device; they queue in the expander's
         // write queue, not on the demand path
-        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw);
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut None);
         assert_eq!(t.far_dram.stats.invalidates, 3);
         assert_eq!(t.far_dram.write_queue_len(0), 4, "device writes queue");
         // a later far read drains the device queue in its bank-prep
         // shadow, folding the markers into the packed-block write
-        t.read(fl, 100_000, &mut near, &mut bw);
+        t.read(fl, 100_000, &mut near, &mut bw, &mut o);
         assert_eq!(t.far_dram.write_queue_len(0), 0);
         assert_eq!(t.far_dram.stats.folded_invalidates, 3);
     }
 
     #[test]
-    fn far_layout_decision_matches_controller_semantics() {
-        use crate::controller::decide_packed_layout;
-        // quad packs when everything fits
+    fn dynamic_far_policy_respects_the_gate() {
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Dynamic);
+        let fl = page_in(&t, true);
+        // open gate: packs like tiered-cram
+        let mut gate = Some(DynamicCram::with_bits(1, 6));
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut gate);
+        assert_eq!(t.far_csi_of(fl), Csi::Quad);
+        // closed gate: a different group stays raw, dirty lines cross raw
+        for _ in 0..200 {
+            gate.as_mut().unwrap().on_cost(0);
+        }
+        let fl2 = (fl + PAGE_LINES..fl + 100 * PAGE_LINES)
+            .step_by(PAGE_LINES as usize)
+            .find(|&l| t.is_far_line(l))
+            .unwrap();
+        let writes_before = bw.demand_writes;
+        t.writeback(&gang(fl2, [true; 4]), 100, &mut near, &mut o, &mut bw, false, &mut gate);
+        assert_eq!(t.far_csi_of(fl2), Csi::Uncompressed, "closed gate: no new packing");
+        assert_eq!(bw.demand_writes, writes_before + 4, "four raw dirty writes");
+        assert_eq!(bw.clean_writes, 0);
+        // clean re-eviction of the already-packed group stays free
+        let total_before = bw.total();
+        t.writeback(&gang(fl, [false; 4]), 200, &mut near, &mut o, &mut bw, false, &mut gate);
+        assert_eq!(t.far_csi_of(fl), Csi::Quad, "packed data decays lazily");
+        assert_eq!(bw.total(), total_before);
+    }
+
+    #[test]
+    fn explicit_far_policy_serializes_metadata_over_the_link() {
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Explicit { row_opt: false });
+        let fl = page_in(&t, true);
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut None);
+        assert_eq!(t.far_csi_of(fl), Csi::Quad, "explicit far CRAM packs");
+        assert_eq!(bw.meta_reads, 1, "cold metadata cache missed on the update");
+        // cold-start a second tier to isolate the read path: the first
+        // read misses metadata, so the demand data pays two round trips
+        let (mut t2, mut near2, mut o2, mut bw2) = setup(Policy::Explicit { row_opt: false });
+        let (mut t3, mut near3, mut o3, mut bw3) = setup(Policy::Implicit);
+        let r_expl = t2.read(fl, 0, &mut near2, &mut bw2, &mut o2);
+        let r_impl = t3.read(fl, 0, &mut near3, &mut bw3, &mut o3);
+        assert_eq!(bw2.meta_reads, 1);
+        assert!(
+            r_expl.done > r_impl.done,
+            "meta miss must serialize ahead of the far data read: {} vs {}",
+            r_expl.done,
+            r_impl.done
+        );
+        // metadata traffic lands on the far tier: invariant intact
+        assert_eq!(t2.snapshot().total_accesses(), bw2.total());
+        assert!(t2.snapshot().far.meta_accesses >= 1);
+    }
+
+    #[test]
+    fn nextline_far_policy_pays_prefetch_flits() {
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::NextLinePrefetch);
+        let fl = page_in(&t, true);
+        let r = t.read(fl, 0, &mut near, &mut bw, &mut o);
+        assert_eq!(r.installs.len(), 2);
+        assert!(r.installs[1].prefetch);
+        assert_eq!(bw.prefetch_reads, 1);
+        assert_eq!(t.snapshot().total_accesses(), bw.total());
+    }
+
+    #[test]
+    fn ideal_far_policy_cofetches_without_write_overheads() {
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Ideal);
+        let fl = page_in(&t, true);
+        // writes: dirty lines only, no invalidates/clean writes
+        t.writeback(&gang(fl, [true, false, false, false]), 0, &mut near, &mut o, &mut bw, false, &mut None);
+        assert_eq!(bw.demand_writes, 1);
+        assert_eq!(bw.clean_writes + bw.invalidates, 0);
+        // reads co-fetch the whole (compressible) group for free
+        let r = t.read(fl + 1, 1000, &mut near, &mut bw, &mut o);
+        assert_eq!(r.installs.len(), 4);
+        assert_eq!(t.snapshot().total_accesses(), bw.total());
+    }
+
+    #[test]
+    fn far_layout_decision_comes_from_the_shared_engine() {
+        // the tier consumes CramEngine::decide_packed_layout — same
+        // semantics as the host controller, one implementation
         assert_eq!(
-            decide_packed_layout(Csi::Uncompressed, [true; 4], [9, 9, 9, 9]),
+            CramEngine::decide_packed_layout(Csi::Uncompressed, [true; 4], [9, 9, 9, 9]),
             Csi::Quad
         );
-        // absent half keeps its old packed arrangement
         assert_eq!(
-            decide_packed_layout(Csi::PairCd, [true, true, false, false], [9, 9, 64, 64]),
+            CramEngine::decide_packed_layout(Csi::PairCd, [true, true, false, false], [9, 9, 64, 64]),
             Csi::PairBoth
         );
-        // nothing fits: unpack
         assert_eq!(
-            decide_packed_layout(Csi::Quad, [true; 4], [64, 64, 64, 64]),
+            CramEngine::decide_packed_layout(Csi::Quad, [true; 4], [64, 64, 64, 64]),
             Csi::Uncompressed
         );
     }

@@ -11,12 +11,17 @@
 //!   latency;
 //! * [`memory::TieredMemory`] — near-DDR + far-expander routing by a
 //!   configurable capacity split, hot-page promotion / cold-page
-//!   demotion, and an expander-side CRAM engine (device-held metadata)
-//!   when the far tier is compressed;
-//! * [`crate::controller::Design::Tiered`] — composes the tier with the
-//!   rest of the system; `repro figure t1` compares an uncompressed far
-//!   tier against a CRAM-compressed one on far-memory-pressure
-//!   workloads ([`crate::workloads::profiles::far_pressure`]).
+//!   demotion, and the expander-side executor of the design's
+//!   compression [`Policy`](crate::controller::Policy) — every layout
+//!   decision comes from the shared
+//!   [`CramEngine`](crate::controller::CramEngine), so this module owns
+//!   no packing logic of its own;
+//! * [`crate::controller::Placement::Tiered`] — composes the tier with
+//!   the rest of the system; `repro figure t1` compares an uncompressed
+//!   far tier against a CRAM-compressed one on far-memory-pressure
+//!   workloads ([`crate::workloads::profiles::far_pressure`]), and
+//!   `repro figure x1` opens the full policy × placement cross-product
+//!   (`tiered-cram-dyn`, `tiered-explicit`, …).
 //!
 //! Per-tier traffic lands in [`crate::stats::TierStats`], whose
 //! `total_accesses()` equals the run's `Bandwidth::total()` — the

@@ -58,7 +58,7 @@ fn llp_beats_metadata_cache_on_scattered_workloads() {
     // Fig. 14's claim: tiny LLP >> 32KB metadata cache for low-locality
     // workloads
     let implicit = run("xz", Design::Implicit, 500_000);
-    let explicit = run("xz", Design::Explicit { row_opt: false }, 500_000);
+    let explicit = run("xz", Design::explicit(false), 500_000);
     let acc = implicit.llp_accuracy.expect("implicit design consults the LCT");
     assert!(acc > 0.9, "llp {acc}");
     assert!(
@@ -71,7 +71,7 @@ fn llp_beats_metadata_cache_on_scattered_workloads() {
 
 #[test]
 fn explicit_metadata_traffic_tracks_miss_rate() {
-    let r = run("xz", Design::Explicit { row_opt: false }, 500_000);
+    let r = run("xz", Design::explicit(false), 500_000);
     let expected = r.bw.demand_reads as f64 * (1.0 - r.meta_hit_rate.unwrap());
     let got = r.bw.meta_reads as f64;
     // read-side meta misses dominate meta traffic; write-side update
@@ -181,10 +181,10 @@ fn latency_histogram_counts_demand_reads_across_designs() {
     // read, under every design family (flat, metadata, CRAM, tiered)
     for design in [
         Design::Uncompressed,
-        Design::Explicit { row_opt: false },
+        Design::explicit(false),
         Design::Dynamic,
         Design::NextLinePrefetch,
-        Design::Tiered { far_compressed: true },
+        Design::tiered(true),
     ] {
         let r = run("sphinx", design, 200_000);
         assert_eq!(
@@ -215,7 +215,7 @@ fn explicit_metadata_stretches_the_tail_on_scattered_reads() {
     // xz thrashes the 32KB metadata cache, serializing a metadata read
     // in front of demand reads — that must show up in read latency
     let base = run("xz", Design::Uncompressed, 300_000);
-    let explicit = run("xz", Design::Explicit { row_opt: false }, 300_000);
+    let explicit = run("xz", Design::explicit(false), 300_000);
     assert!(
         explicit.read_lat.mean() > base.read_lat.mean(),
         "serialized metadata lookups must raise mean read latency: {} vs {}",
