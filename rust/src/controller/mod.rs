@@ -74,6 +74,64 @@ pub struct ReadOutcome {
     pub installs: Installs,
 }
 
+/// Per-tenant traffic accounting for multi-tenant runs.
+///
+/// Maps each core to its tenant and charges every bandwidth/latency
+/// event the controller records to exactly one tenant, by snapshotting
+/// [`MemoryController::bw`] around each read/writeback.  Because *all*
+/// traffic mutations flow through those two entry points, the per-tenant
+/// sums reproduce the controller totals field-for-field by construction
+/// — the conservation invariant the tenant tests pin.
+#[derive(Clone, Debug)]
+pub struct TenantTracker {
+    /// `core → tenant index` (tenants own contiguous core ranges).
+    core_tenant: Vec<usize>,
+    /// Tenant whose reads carry scheduler priority
+    /// ([`crate::dram::SchedConfig::reserved_slots`]), if any.
+    protected: Option<usize>,
+    /// Per-tenant traffic, indexed by tenant.
+    pub bw: Vec<Bandwidth>,
+    /// Per-tenant demand-read latency, indexed by tenant.
+    pub read_lat: Vec<LatencyHist>,
+}
+
+impl TenantTracker {
+    /// `core_counts[t]` cores belong to tenant `t`, in core order.
+    pub fn new(core_counts: &[usize], protected: Option<usize>) -> Self {
+        let mut core_tenant = Vec::with_capacity(core_counts.iter().sum());
+        for (t, &n) in core_counts.iter().enumerate() {
+            for _ in 0..n {
+                core_tenant.push(t);
+            }
+        }
+        Self {
+            core_tenant,
+            protected,
+            bw: vec![Bandwidth::default(); core_counts.len()],
+            read_lat: vec![LatencyHist::default(); core_counts.len()],
+        }
+    }
+
+    pub fn tenant_of(&self, core: usize) -> usize {
+        self.core_tenant[core]
+    }
+
+    /// Does `core` belong to the QoS-protected tenant?
+    pub fn is_protected(&self, core: usize) -> bool {
+        self.protected == Some(self.core_tenant[core])
+    }
+
+    fn charge_read(&mut self, core: usize, delta: &Bandwidth, lat: u64) {
+        let t = self.core_tenant[core];
+        self.bw[t].accumulate(delta);
+        self.read_lat[t].record(lat);
+    }
+
+    fn charge_write(&mut self, core: usize, delta: &Bandwidth) {
+        self.bw[self.core_tenant[core]].accumulate(delta);
+    }
+}
+
 /// The memory controller: composes the host-path policy with the
 /// placement and front-ends every design behind one read/writeback
 /// contract.
@@ -96,6 +154,9 @@ pub struct MemoryController {
     /// (one sample per [`MemoryController::read`] call — the Figure Q1
     /// tail-latency exhibit; `read_lat.count() == bw.demand_reads`).
     pub read_lat: LatencyHist,
+    /// Multi-tenant accounting + QoS priority routing (None for
+    /// single-tenant runs — the default; zero cost on that path).
+    pub tenants: Option<TenantTracker>,
     pub prefetch_installed: u64,
     pub prefetch_used: u64,
 }
@@ -167,6 +228,7 @@ impl MemoryController {
             dynamic,
             bw: Bandwidth::default(),
             read_lat: LatencyHist::default(),
+            tenants: None,
             prefetch_installed: 0,
             prefetch_used: 0,
         }
@@ -194,6 +256,16 @@ impl MemoryController {
         oracle: &mut SizeOracle,
         sampled: bool,
     ) -> ReadOutcome {
+        let bw_before = self.bw;
+        if let Some(tt) = self.tenants.as_ref() {
+            // QoS: the protected tenant's reads see the full read-slot
+            // pool, on the host channels and (tiered) the expander DRAM
+            let prio = tt.is_protected(core);
+            dram.set_priority(prio);
+            if let Some(t) = self.tier.as_mut() {
+                t.far_dram.set_priority(prio);
+            }
+        }
         let mut out = self.read_inner(line, core, now, dram, oracle, sampled);
         if self.llc_compressed {
             // a compressed LLC charges its data budget per line: stamp
@@ -203,7 +275,12 @@ impl MemoryController {
                 ins.size = oracle.size(ins.line_addr) as u8;
             }
         }
-        self.read_lat.record(out.done.saturating_sub(now));
+        let lat = out.done.saturating_sub(now);
+        self.read_lat.record(lat);
+        let delta = self.bw.since(&bw_before);
+        if let Some(tt) = self.tenants.as_mut() {
+            tt.charge_read(core, &delta, lat);
+        }
         out
     }
 
@@ -258,12 +335,19 @@ impl MemoryController {
         if gang.is_empty() {
             return;
         }
+        let bw_before = self.bw;
         if self.design.placement == Placement::Tiered {
             let tier = self.tier.as_mut().expect("tiered design has a tier");
             tier.writeback(gang, now, dram, oracle, &mut self.bw, sampled, &mut self.dynamic);
-            return;
+        } else {
+            self.writeback_flat(gang, now, dram, oracle, sampled);
         }
-        self.writeback_flat(gang, now, dram, oracle, sampled);
+        // a gang is one group, owned by one core's address space — charge
+        // the whole eviction (data, invalidates, metadata) to its tenant
+        let delta = self.bw.since(&bw_before);
+        if let Some(tt) = self.tenants.as_mut() {
+            tt.charge_write(gang[0].core as usize, &delta);
+        }
     }
 
     /// Fraction of written groups that ended up compressed (host engine).
@@ -533,6 +617,45 @@ mod tests {
         assert_eq!(mc.read_lat.count(), mc.bw.demand_reads, "one sample per read");
         // the mispredicted read's serialized probes land in the tail
         assert!(mc.read_lat.percentile(1.0) > 22.0);
+    }
+
+    #[test]
+    fn tenant_tracker_partitions_controller_totals() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.tenants = Some(TenantTracker::new(&[4, 4], Some(0)));
+        // tenant 0 (core 1): a packed writeback + a read of the group
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        mc.read(1, 1, 100, &mut dram, &mut oracle, false);
+        // tenant 1 (cores 5/6): its own gang + two reads
+        let mut g = gang(64, [true, false, false, false]);
+        for e in &mut g {
+            e.core = 5;
+        }
+        mc.writeback(&g, 200, &mut dram, &mut oracle, false);
+        mc.read(64, 6, 300, &mut dram, &mut oracle, false);
+        mc.read(65, 5, 400, &mut dram, &mut oracle, false);
+
+        let tt = mc.tenants.as_ref().unwrap();
+        assert!(tt.is_protected(0) && tt.is_protected(3));
+        assert!(!tt.is_protected(4));
+        assert_eq!(tt.tenant_of(5), 1);
+        // every field of the totals is partitioned across tenants
+        assert_eq!(tt.bw[0].total() + tt.bw[1].total(), mc.bw.total());
+        assert_eq!(
+            tt.bw[0].demand_reads + tt.bw[1].demand_reads,
+            mc.bw.demand_reads
+        );
+        assert_eq!(
+            tt.bw[0].invalidates + tt.bw[1].invalidates,
+            mc.bw.invalidates
+        );
+        assert_eq!(
+            tt.read_lat[0].count() + tt.read_lat[1].count(),
+            mc.read_lat.count()
+        );
+        assert_eq!(tt.read_lat[0].count(), 1);
+        assert_eq!(tt.read_lat[1].count(), 2);
+        assert!(tt.bw[0].total() > 0 && tt.bw[1].total() > 0);
     }
 
     #[test]

@@ -153,11 +153,11 @@ pub fn ablate_sched(insts: u64) -> Report {
         ("default-32", SchedConfig::default()),
         (
             "lazy-drain",
-            SchedConfig { read_slots: 32, write_slots: 64, write_hi: 60, write_lo: 8 },
+            SchedConfig { write_hi: 60, write_lo: 8, ..Default::default() },
         ),
         (
             "tight-drain",
-            SchedConfig { read_slots: 32, write_slots: 64, write_hi: 12, write_lo: 4 },
+            SchedConfig { write_hi: 12, write_lo: 4, ..Default::default() },
         ),
     ];
     let mut body = format!("{:<12}", "sched");

@@ -1,17 +1,20 @@
 //! Figure/table harnesses: format each paper exhibit from cached results.
 
 use crate::controller::{Design, MemoryController};
-use crate::coordinator::runner::{ResultsDb, C1_DESIGNS, Q1_DESIGNS, T1_FAR_RATIO, X1_DESIGNS};
+use crate::coordinator::runner::{
+    run_m1, ResultsDb, C1_DESIGNS, Q1_DESIGNS, T1_FAR_RATIO, X1_DESIGNS,
+};
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::lit::LineInversionTable;
 use crate::cram::llp::LineLocationPredictor;
 use crate::cram::marker::MarkerEngine;
 use crate::energy::{energy_of, EnergyConfig};
-use crate::stats::{geomean_speedup, NS_PER_BUS_CYCLE};
+use crate::stats::{geomean_speedup, jain_index, NS_PER_BUS_CYCLE};
 use crate::util::pct;
 use crate::workloads::profiles::{
     all27, all64, cache_pressure, far_pressure, latency_sensitive, Suite,
 };
+use crate::workloads::tenant::m1_mixes;
 use crate::workloads::SizeOracle;
 
 /// A formatted report for one figure or table.
@@ -719,13 +722,248 @@ pub fn table5(db: &ResultsDb) -> Report {
     }
 }
 
-/// All figure/table ids, in paper order (figt1, figq1, figc1 and figx1
-/// are this repo's tiered-memory, tail-latency, compressed-LLC and
-/// composed-design extensions, not paper exhibits).
-pub const ALL_IDS: [&str; 18] = [
+/// Figure M1: the multi-tenant exhibit — canonical co-location mixes ×
+/// {uncompressed, flat Dynamic-CRAM, tiered Dynamic-CRAM}, with
+/// per-tenant tail latency, slowdown-vs-alone, compression-interference
+/// beats, a Jain fairness index per run, and a QoS contrast re-running
+/// the `:qos`-marked mix with read slots reserved for its protected
+/// tenant.
+///
+/// Unlike the cached exhibits this one simulates on demand (per-tenant
+/// accounting is not part of the [`ResultsDb`] key space), sized by the
+/// db's [`crate::coordinator::runner::RunPlan`] like every other figure.
+pub fn figure_m1(db: &ResultsDb) -> Report {
+    let (runs, qos) = run_m1(&db.plan, false);
+    let mut body = String::new();
+    let mut cur_mix = "";
+    for r in &runs {
+        if r.mix != cur_mix {
+            cur_mix = r.mix;
+            let spec = m1_mixes()
+                .into_iter()
+                .find(|(m, _)| *m == cur_mix)
+                .map(|(_, s)| s)
+                .unwrap_or("");
+            body.push_str(&format!("-- mix {cur_mix} ({spec}) --\n"));
+            body.push_str(&format!(
+                "{:<16} {:<12} {:>5} {:>9} {:>9} {:>13}\n",
+                "design", "tenant", "cores", "p99-ns", "slowdown", "interf-beats"
+            ));
+        }
+        for t in &r.result.tenants {
+            let p99 = t.read_lat.percentile(0.99) * NS_PER_BUS_CYCLE;
+            let slow = t
+                .slowdown
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "-".into());
+            let marker = if t.protected { " [qos]" } else { "" };
+            body.push_str(&format!(
+                "{:<16} {:<12} {:>5} {:>9.0} {:>9} {:>13.0}{}\n",
+                r.design.name(),
+                t.name,
+                t.cores,
+                p99,
+                slow,
+                t.interference_beats,
+                marker
+            ));
+        }
+        let progress: Vec<f64> = r
+            .result
+            .tenants
+            .iter()
+            .filter_map(|t| t.slowdown)
+            .map(|s| 1.0 / s.max(1e-9))
+            .collect();
+        body.push_str(&format!(
+            "{:<16} fairness (Jain over 1/slowdown): {:.3}\n",
+            r.design.name(),
+            jain_index(&progress)
+        ));
+    }
+    if let Some(q) = &qos {
+        body.push_str(&format!(
+            "-- QoS contrast: mix {} under {}, {}/{} read slots reserved --\n",
+            q.mix,
+            q.design.name(),
+            q.reserved,
+            q.read_slots
+        ));
+        for (bt, qt) in q.base.tenants.iter().zip(&q.qos.tenants) {
+            let b99 = bt.read_lat.percentile(0.99) * NS_PER_BUS_CYCLE;
+            let q99 = qt.read_lat.percentile(0.99) * NS_PER_BUS_CYCLE;
+            let marker = if qt.protected { " [qos]" } else { "" };
+            body.push_str(&format!(
+                "{:<12} p99 {:>7.0} -> {:>7.0} ns{}\n",
+                bt.name, b99, q99, marker
+            ));
+        }
+    }
+    body.push_str(
+        "(slowdown = tenant alone on its cores / shared, equal instruction \
+         budget; interf-beats = bus beats of other tenants' compression \
+         overhead traffic attributed to this tenant by demand share; [qos] \
+         marks the tenant the reservation protects)\n",
+    );
+    Report {
+        id: "figm1".into(),
+        title: "Multi-tenant co-location: per-tenant tail, slowdown, interference, QoS".into(),
+        body,
+    }
+}
+
+/// Output format for [`figure_x1_sweep`] — the table is for humans, CSV
+/// and JSON feed plotting scripts (`--format csv|json`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepFormat {
+    Table,
+    Csv,
+    Json,
+}
+
+/// The Figure X1 far-ratio sweep: each tiered composition's weighted
+/// speedup vs flat uncompressed DDR at every swept capacity split, with
+/// a break-even line per composition (the largest swept ratio where the
+/// geomean still clears 100%).  Requires the sweep runs to be cached —
+/// see [`ResultsDb::run_x1_sweep`].
+pub fn figure_x1_sweep(db: &ResultsDb, ratios: &[f64], format: SweepFormat) -> Report {
+    let tiered: Vec<(Design, &str)> = X1_DESIGNS
+        .into_iter()
+        .filter(Design::is_tiered)
+        .map(|d| {
+            let label = match d.name() {
+                "tiered-cram" => "t-cram",
+                "tiered-cram-dyn" => "t-cram-dyn",
+                _ => "t-explicit",
+            };
+            (d, label)
+        })
+        .collect();
+    // geomean per (design, ratio), in tiered x ratios order
+    let mut geo: Vec<Vec<f64>> = Vec::new();
+    for (d, _) in &tiered {
+        let mut per_ratio = Vec::new();
+        for &r in ratios {
+            let sp: Vec<f64> = far_pressure()
+                .iter()
+                .filter_map(|w| db.speedup_far(w.name, *d, r))
+                .collect();
+            per_ratio.push(geomean_speedup(&sp));
+        }
+        geo.push(per_ratio);
+    }
+    let mut body = String::new();
+    match format {
+        SweepFormat::Csv => {
+            body.push_str("far_ratio,workload,design,speedup\n");
+            for (ri, &r) in ratios.iter().enumerate() {
+                for w in far_pressure() {
+                    for (d, _) in &tiered {
+                        if let Some(s) = db.speedup_far(w.name, *d, r) {
+                            body.push_str(&format!(
+                                "{r},{},{},{s:.4}\n",
+                                w.name,
+                                d.name()
+                            ));
+                        }
+                    }
+                }
+                for (di, (d, _)) in tiered.iter().enumerate() {
+                    body.push_str(&format!(
+                        "{r},GEOMEAN,{},{:.4}\n",
+                        d.name(),
+                        geo[di][ri]
+                    ));
+                }
+            }
+        }
+        SweepFormat::Json => {
+            let mut rows = Vec::new();
+            for (ri, &r) in ratios.iter().enumerate() {
+                for w in far_pressure() {
+                    for (d, _) in &tiered {
+                        if let Some(s) = db.speedup_far(w.name, *d, r) {
+                            rows.push(format!(
+                                "{{\"far_ratio\":{r},\"workload\":\"{}\",\
+                                 \"design\":\"{}\",\"speedup\":{s:.4}}}",
+                                w.name,
+                                d.name()
+                            ));
+                        }
+                    }
+                }
+                for (di, (d, _)) in tiered.iter().enumerate() {
+                    rows.push(format!(
+                        "{{\"far_ratio\":{r},\"workload\":\"GEOMEAN\",\
+                         \"design\":\"{}\",\"speedup\":{:.4}}}",
+                        d.name(),
+                        geo[di][ri]
+                    ));
+                }
+            }
+            body.push_str("[\n  ");
+            body.push_str(&rows.join(",\n  "));
+            body.push_str("\n]\n");
+        }
+        SweepFormat::Table => {
+            for (ri, &r) in ratios.iter().enumerate() {
+                body.push_str(&format!("-- far-ratio {r} --\n"));
+                body.push_str(&format!("{:<12}", "workload"));
+                for (_, l) in &tiered {
+                    body.push_str(&format!(" {l:>11}"));
+                }
+                body.push('\n');
+                for w in far_pressure() {
+                    body.push_str(&format!("{:<12}", w.name));
+                    for (d, _) in &tiered {
+                        match db.speedup_far(w.name, *d, r) {
+                            Some(s) => body.push_str(&format!(" {:>11}", pct(s))),
+                            None => body.push_str(&format!(" {:>11}", "-")),
+                        }
+                    }
+                    body.push('\n');
+                }
+                body.push_str(&format!("{:<12}", "GEOMEAN"));
+                for (di, _) in tiered.iter().enumerate() {
+                    body.push_str(&format!(" {:>11}", pct(geo[di][ri])));
+                }
+                body.push('\n');
+            }
+            body.push_str("break-even (largest swept ratio with geomean >= 100%):");
+            for (di, (_, l)) in tiered.iter().enumerate() {
+                let be = ratios
+                    .iter()
+                    .enumerate()
+                    .filter(|&(ri, _)| geo[di][ri] >= 1.0)
+                    .map(|(_, &r)| r)
+                    .fold(f64::NAN, f64::max);
+                if be.is_nan() {
+                    body.push_str(&format!(" {l}: none"));
+                } else {
+                    body.push_str(&format!(" {l}: {be}"));
+                }
+            }
+            body.push('\n');
+            body.push_str(
+                "(weighted speedup vs flat uncompressed DDR; far-ratio = fraction \
+                 of capacity behind the CXL link)\n",
+            );
+        }
+    }
+    Report {
+        id: "figx1-sweep".into(),
+        title: "Tiered compositions vs far-capacity split (break-even sweep)".into(),
+        body,
+    }
+}
+
+/// All figure/table ids, in paper order (figt1, figq1, figc1, figx1 and
+/// figm1 are this repo's tiered-memory, tail-latency, compressed-LLC,
+/// composed-design and multi-tenant extensions, not paper exhibits).
+pub const ALL_IDS: [&str; 19] = [
     "fig3", "fig4", "fig7", "fig8", "fig12", "fig14", "fig15", "fig16", "fig18",
-    "fig19", "fig20", "figt1", "figq1", "figc1", "figx1", "table2", "table3",
-    "table4",
+    "fig19", "fig20", "figt1", "figq1", "figc1", "figx1", "figm1", "table2",
+    "table3", "table4",
 ];
 
 /// Produce one report by id (None for an unknown id).
@@ -736,6 +974,7 @@ pub fn report(db: &ResultsDb, id: &str) -> Option<Report> {
         "figq1" => figure_q1(db),
         "figc1" => figure_c1(db),
         "figx1" => figure_x1(db),
+        "figm1" => figure_m1(db),
         "fig4" => figure4(),
         "fig7" => figure7(db),
         "fig8" => figure8(db),
@@ -842,6 +1081,45 @@ mod tests {
         assert!(r.body.contains("t-explicit"));
         assert!(r.body.contains("GEOMEAN"));
         assert!(report(&db, "figx1").is_some());
+    }
+
+    #[test]
+    fn figure_m1_reports_per_tenant_rows_and_qos_contrast() {
+        let db = ResultsDb::new(RunPlan {
+            insts_per_core: 6_000,
+            seed: 13,
+            threads: 4,
+        });
+        let r = report(&db, "figm1").expect("figm1 is a known id");
+        for (mix, _) in m1_mixes() {
+            assert!(r.body.contains(&format!("-- mix {mix} ")), "{}", r.body);
+        }
+        assert!(r.body.contains("tiered-cram-dyn"), "{}", r.body);
+        assert!(r.body.contains("fairness (Jain over 1/slowdown)"));
+        assert!(r.body.contains("[qos]"), "{}", r.body);
+        assert!(r.body.contains("QoS contrast"), "{}", r.body);
+    }
+
+    #[test]
+    fn figure_x1_sweep_formats_table_csv_json() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 8_000,
+            seed: 17,
+            threads: 4,
+        });
+        let ratios = [0.25, 0.75];
+        db.run_x1_sweep(&ratios, false);
+        let t = figure_x1_sweep(&db, &ratios, SweepFormat::Table);
+        assert!(t.body.contains("-- far-ratio 0.25 --"), "{}", t.body);
+        assert!(t.body.contains("break-even"), "{}", t.body);
+        let c = figure_x1_sweep(&db, &ratios, SweepFormat::Csv);
+        assert!(c.body.starts_with("far_ratio,workload,design,speedup\n"));
+        assert!(c.body.contains("0.25,cap_stream,tiered-cram,"), "{}", c.body);
+        assert!(c.body.contains(",GEOMEAN,tiered-cram-dyn,"), "{}", c.body);
+        let j = figure_x1_sweep(&db, &ratios, SweepFormat::Json);
+        assert!(j.body.trim_start().starts_with('['), "{}", j.body);
+        assert!(j.body.contains("\"far_ratio\":0.75"), "{}", j.body);
+        assert!(j.body.trim_end().ends_with(']'), "{}", j.body);
     }
 
     #[test]

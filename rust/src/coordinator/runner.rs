@@ -1,14 +1,17 @@
 //! Parallel simulation runner + results cache.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;
 
 use crate::controller::{Design, Placement, Policy};
-use crate::sim::{simulate, SimConfig};
+use crate::dram::SchedConfig;
+use crate::sim::{simulate, simulate_tenants, SimConfig};
 use crate::stats::SimResult;
 use crate::workloads::profiles::{
     all27, all64, cache_pressure, far_pressure, latency_sensitive, WorkloadProfile,
 };
+use crate::workloads::tenant::m1_mixes;
+use crate::workloads::parse_tenants;
 
 /// Key identifying one simulation run.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -131,6 +134,129 @@ pub const X1_DESIGNS: [Design; 6] = [
     Design::new(Policy::Dynamic, Placement::Tiered),
     Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered),
 ];
+
+/// The designs the Figure M1 multi-tenant exhibit compares: uncompressed
+/// sharing, flat Dynamic-CRAM, and tiered Dynamic-CRAM at the T1 split.
+pub const M1_DESIGNS: [Design; 3] = [
+    Design::Uncompressed,
+    Design::Dynamic,
+    Design::new(Policy::Dynamic, Placement::Tiered),
+];
+
+/// Read slots the M1 QoS contrast run reserves for the protected tenant
+/// (out of [`SchedConfig::default`]'s 32 per channel).  Deliberately
+/// aggressive so the shift in the protected tenant's tail is visible
+/// even at smoke-test instruction budgets.
+pub const M1_QOS_RESERVED: usize = 24;
+
+/// One shared-tenancy simulation from the Figure M1 matrix.
+pub struct M1Run {
+    pub mix: &'static str,
+    pub design: Design,
+    pub result: SimResult,
+}
+
+/// The Figure M1 QoS contrast: the `:qos`-marked mix re-run with
+/// read-slot reservation enabled, next to its unreserved baseline.
+pub struct M1Qos {
+    pub mix: &'static str,
+    pub design: Design,
+    pub reserved: usize,
+    pub read_slots: usize,
+    pub base: SimResult,
+    pub qos: SimResult,
+}
+
+/// Run the Figure M1 matrix: each canonical tenant mix under each M1
+/// design (shared run + per-tenant solo reruns for the slowdown metric),
+/// plus one QoS contrast run of the `:qos`-marked mix with read slots
+/// reserved.  Tenant runs carry per-tenant state that the [`RunKey`]
+/// cache does not key on, so this returns results directly instead of
+/// populating a [`ResultsDb`].
+pub fn run_m1(plan: &RunPlan, progress: bool) -> (Vec<M1Run>, Option<M1Qos>) {
+    #[derive(Clone, Copy)]
+    struct M1Job {
+        mix: &'static str,
+        spec: &'static str,
+        design: Design,
+        reserved: usize,
+    }
+    let mut jobs: Vec<M1Job> = Vec::new();
+    for (mix, spec) in m1_mixes() {
+        for d in M1_DESIGNS {
+            jobs.push(M1Job { mix, spec, design: d, reserved: 0 });
+        }
+    }
+    let qos_mix = m1_mixes().into_iter().find(|(_, s)| s.contains(":qos"));
+    if let Some((mix, spec)) = qos_mix {
+        jobs.push(M1Job { mix, spec, design: Design::Dynamic, reserved: M1_QOS_RESERVED });
+    }
+
+    let descs = jobs.clone();
+    let total = jobs.len();
+    let queue = Mutex::new(jobs.into_iter().enumerate().collect::<VecDeque<_>>());
+    let out: Mutex<Vec<(usize, SimResult)>> = Mutex::new(Vec::with_capacity(total));
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..plan.threads.min(total) {
+            scope.spawn(|| loop {
+                let job = { queue.lock().unwrap().pop_front() };
+                let Some((idx, job)) = job else { break };
+                let mut cfg = SimConfig {
+                    design: job.design,
+                    seed: plan.seed,
+                    ..Default::default()
+                }
+                .with_insts(plan.insts_per_core);
+                cfg.warmup_insts = plan.insts_per_core * 2;
+                if job.design.is_tiered() {
+                    cfg = cfg.with_far_ratio(T1_FAR_RATIO);
+                }
+                if job.reserved > 0 {
+                    cfg = cfg.with_sched(SchedConfig {
+                        reserved_slots: job.reserved,
+                        ..Default::default()
+                    });
+                }
+                let specs = parse_tenants(job.spec, cfg.cores).expect("m1 mixes parse");
+                let r = simulate_tenants(&specs, &cfg);
+                out.lock().unwrap().push((idx, r));
+                let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+                if progress {
+                    eprintln!("  [{d}/{total}] tenant mixes done");
+                }
+            });
+        }
+    });
+
+    let mut results = out.into_inner().unwrap();
+    results.sort_by_key(|(idx, _)| *idx);
+    let mut runs = Vec::new();
+    let mut qos_run: Option<SimResult> = None;
+    for (idx, r) in results {
+        let j = descs[idx];
+        if j.reserved > 0 {
+            qos_run = Some(r);
+        } else {
+            runs.push(M1Run { mix: j.mix, design: j.design, result: r });
+        }
+    }
+    let qos = qos_mix.and_then(|(mix, _)| {
+        let q = qos_run.take()?;
+        let base = runs
+            .iter()
+            .find(|r| r.mix == mix && r.design.name() == Design::Dynamic.name())?;
+        Some(M1Qos {
+            mix,
+            design: Design::Dynamic,
+            reserved: M1_QOS_RESERVED,
+            read_slots: SchedConfig::default().read_slots,
+            base: base.result.clone(),
+            qos: q,
+        })
+    });
+    (runs, qos)
+}
 
 /// Results cache for the full evaluation.
 pub struct ResultsDb {
@@ -260,6 +386,49 @@ impl ResultsDb {
         self.run_jobs(Self::x1_jobs(), progress);
     }
 
+    /// The Figure X1 far-ratio sweep: every tiered composition from the
+    /// X1 cross-product re-run at each requested capacity split, plus
+    /// the flat uncompressed baseline the speedups divide by (which does
+    /// not depend on the split).  Results land in the cache keyed by
+    /// `far_mill`, so sweep ratios never collide with the T1-split runs.
+    pub fn run_x1_sweep(&mut self, ratios: &[f64], progress: bool) {
+        let mut jobs = Vec::new();
+        for w in far_pressure() {
+            jobs.push(Job::new(w.clone(), Design::Uncompressed, 2));
+            for d in X1_DESIGNS.into_iter().filter(Design::is_tiered) {
+                for &r in ratios {
+                    jobs.push(Job {
+                        profile: w.clone(),
+                        design: d,
+                        channels: 2,
+                        far_ratio: Some(r),
+                        llc_comp: false,
+                    });
+                }
+            }
+        }
+        self.run_jobs(jobs, progress);
+    }
+
+    /// Fetch a tiered run simulated at an explicit far-capacity split
+    /// (2 channels, plain LLC) — the sweep counterpart of [`Self::get`].
+    pub fn get_far(&self, workload: &str, design: Design, far_ratio: f64) -> Option<&SimResult> {
+        self.results.get(&RunKey {
+            workload: workload.to_string(),
+            design: design.name(),
+            channels: 2,
+            far_mill: far_mill_of(design.is_tiered().then_some(far_ratio)),
+            llc_comp: false,
+        })
+    }
+
+    /// Speedup over the flat uncompressed baseline at an explicit split.
+    pub fn speedup_far(&self, workload: &str, design: Design, far_ratio: f64) -> Option<f64> {
+        let base = self.get(workload, Design::Uncompressed)?;
+        let r = self.get_far(workload, design, far_ratio)?;
+        Some(r.weighted_speedup(base))
+    }
+
     /// Smaller matrix: the 27 workloads × the designs needed by a single
     /// figure (used by per-figure CLI invocations).
     pub fn run_designs(&mut self, designs: &[Design], extended: bool, progress: bool) {
@@ -301,15 +470,18 @@ impl ResultsDb {
         }
         let total = jobs.len();
         let plan = self.plan.clone();
-        let queue = Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>());
+        // FIFO drain: workers take jobs in submission order, so figure
+        // sub-matrices start producing their own results first and the
+        // progress counter tracks the order jobs were enqueued in.
+        let queue = Mutex::new(jobs.into_iter().collect::<VecDeque<_>>());
         let out: Mutex<Vec<(RunKey, SimResult)>> = Mutex::new(Vec::with_capacity(total));
         let done = std::sync::atomic::AtomicUsize::new(0);
 
         std::thread::scope(|scope| {
             for _ in 0..plan.threads.min(total) {
                 scope.spawn(|| loop {
-                    let job = { queue.lock().unwrap().pop() };
-                    let Some((_, job)) = job else { break };
+                    let job = { queue.lock().unwrap().pop_front() };
+                    let Some(job) = job else { break };
                     // Equalize LLC-access counts across workloads: scale
                     // the instruction budget so every run issues a similar
                     // number of accesses (anchored at apki=30) — low-APKI
@@ -500,6 +672,50 @@ mod tests {
             }
             assert!(db.speedup(w.name, X1_DESIGNS[4]).is_some(), "tiered-cram-dyn ran");
         }
+    }
+
+    #[test]
+    fn x1_sweep_caches_each_ratio_independently() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 8_000,
+            seed: 5,
+            threads: 4,
+        });
+        let ratios = [0.25, 0.75];
+        db.run_x1_sweep(&ratios, false);
+        let tiered: Vec<Design> =
+            X1_DESIGNS.into_iter().filter(Design::is_tiered).collect();
+        assert_eq!(
+            db.len(),
+            far_pressure().len() * (1 + tiered.len() * ratios.len())
+        );
+        for w in far_pressure() {
+            for &d in &tiered {
+                for r in ratios {
+                    let run = db.get_far(w.name, d, r).expect("sweep run cached");
+                    assert!(run.tier.is_some(), "{} {} @{r}", w.name, d.name());
+                    assert!(db.speedup_far(w.name, d, r).is_some());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn m1_matrix_reports_per_tenant_rows_and_qos_contrast() {
+        let plan = RunPlan { insts_per_core: 8_000, seed: 3, threads: 4 };
+        let (runs, qos) = run_m1(&plan, false);
+        assert_eq!(runs.len(), m1_mixes().len() * M1_DESIGNS.len());
+        for r in &runs {
+            assert!(!r.result.tenants.is_empty(), "{} {}", r.mix, r.design.name());
+            for t in &r.result.tenants {
+                let s = t.slowdown.expect("slowdown-vs-alone populated");
+                assert!(s.is_finite() && s > 0.0, "{} {}: {s}", r.mix, t.name);
+            }
+        }
+        let q = qos.expect("one mix carries a :qos mark");
+        assert_eq!(q.reserved, M1_QOS_RESERVED);
+        assert!(q.base.tenants.iter().any(|t| t.protected));
+        assert!(q.qos.tenants.iter().any(|t| t.protected));
     }
 
     #[test]

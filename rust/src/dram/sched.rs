@@ -49,22 +49,36 @@ pub struct SchedConfig {
     pub write_hi: usize,
     /// A forced drain stops once the queue falls to this depth.
     pub write_lo: usize,
+    /// QoS: read slots reserved for priority traffic.  Non-priority
+    /// reads are capped at `read_slots - reserved_slots` in-flight
+    /// transactions (never below 1); reads issued while the owning
+    /// [`DramSim`](crate::dram::DramSim) has priority set see the full
+    /// pool.  0 (the default) disables the reservation entirely.
+    pub reserved_slots: usize,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        Self { read_slots: 32, write_slots: 64, write_hi: 48, write_lo: 16 }
+        Self {
+            read_slots: 32,
+            write_slots: 64,
+            write_hi: 48,
+            write_lo: 16,
+            reserved_slots: 0,
+        }
     }
 }
 
 impl SchedConfig {
     /// Clamp watermarks into a consistent ordering
-    /// (`write_lo <= write_hi <= write_slots`, at least one read slot).
+    /// (`write_lo <= write_hi <= write_slots`, at least one read slot,
+    /// reservation leaves at least one unreserved slot).
     pub fn validated(mut self) -> Self {
         self.read_slots = self.read_slots.max(1);
         self.write_slots = self.write_slots.max(1);
         self.write_hi = self.write_hi.clamp(1, self.write_slots);
         self.write_lo = self.write_lo.min(self.write_hi.saturating_sub(1));
+        self.reserved_slots = self.reserved_slots.min(self.read_slots - 1);
         self
     }
 }
@@ -253,7 +267,10 @@ impl ChannelSched {
     }
 
     /// Service one read transaction arriving at `now`; returns the cycle
-    /// its data burst completes.
+    /// its data burst completes.  `hi_prio` reads see the full read-slot
+    /// pool; others are capped below it by
+    /// [`SchedConfig::reserved_slots`] (the per-tenant QoS knob).
+    #[allow(clippy::too_many_arguments)]
     pub fn read(
         &mut self,
         cfg: &DramConfig,
@@ -262,6 +279,7 @@ impl ChannelSched {
         row: u64,
         now: u64,
         same_row_hint: bool,
+        hi_prio: bool,
     ) -> u64 {
         let sched = cfg.sched.validated();
 
@@ -272,10 +290,17 @@ impl ChannelSched {
             self.drain(cfg, stats, u64::MAX, sched.write_lo);
         }
 
-        // Read-slot occupancy: wait for a transaction slot.
+        // Read-slot occupancy: wait for a transaction slot.  Priority
+        // traffic uses the whole pool; everyone else stays below the
+        // reservation (validated() keeps at least one slot open).
+        let slot_cap = if hi_prio {
+            sched.read_slots
+        } else {
+            sched.read_slots - sched.reserved_slots
+        };
         let mut now = now;
         self.inflight.retain(|&d| d > now);
-        while self.inflight.len() >= sched.read_slots {
+        while self.inflight.len() >= slot_cap {
             let min = *self.inflight.iter().min().expect("non-empty inflight");
             stats.read_slot_wait_cycles += min - now;
             now = min;
@@ -520,10 +545,40 @@ mod tests {
 
     #[test]
     fn sched_config_validation_orders_watermarks() {
-        let s = SchedConfig { read_slots: 0, write_slots: 8, write_hi: 99, write_lo: 99 }
-            .validated();
+        let s = SchedConfig {
+            read_slots: 0,
+            write_slots: 8,
+            write_hi: 99,
+            write_lo: 99,
+            reserved_slots: 99,
+        }
+        .validated();
         assert_eq!(s.read_slots, 1);
         assert_eq!(s.write_hi, 8);
         assert!(s.write_lo < s.write_hi);
+        assert_eq!(s.reserved_slots, 0, "reservation leaves >= 1 open slot");
+        let s = SchedConfig { read_slots: 4, reserved_slots: 9, ..Default::default() }.validated();
+        assert_eq!(s.reserved_slots, 3);
+    }
+
+    #[test]
+    fn reserved_slots_cap_non_priority_reads_only() {
+        let mut cfg = cfg1();
+        cfg.sched.read_slots = 2;
+        cfg.sched.reserved_slots = 1;
+        // non-priority traffic: capped at a single in-flight read
+        let mut d = DramSim::new(cfg);
+        d.access(0, ReqKind::Read, 0, false);
+        d.access(128, ReqKind::Read, 0, false);
+        assert!(
+            d.stats.read_slot_wait_cycles > 0,
+            "second concurrent read must wait behind the reservation"
+        );
+        // priority traffic: the same pair fits the full 2-slot pool
+        let mut d = DramSim::new(cfg);
+        d.set_priority(true);
+        d.access(0, ReqKind::Read, 0, false);
+        d.access(128, ReqKind::Read, 0, false);
+        assert_eq!(d.stats.read_slot_wait_cycles, 0, "hi-prio sees the full pool");
     }
 }

@@ -123,6 +123,10 @@ impl DramStats {
 pub struct DramSim {
     cfg: DramConfig,
     channels: Vec<ChannelSched>,
+    /// Current requester priority: `true` while the access stream being
+    /// issued belongs to the QoS-protected tenant (set per-request by
+    /// the memory controller; see [`SchedConfig::reserved_slots`]).
+    hi_prio: bool,
     pub stats: DramStats,
 }
 
@@ -133,12 +137,21 @@ impl DramSim {
                 .map(|_| ChannelSched::new(cfg.ranks * cfg.banks))
                 .collect(),
             cfg,
+            hi_prio: false,
             stats: DramStats::default(),
         }
     }
 
     pub fn config(&self) -> &DramConfig {
         &self.cfg
+    }
+
+    /// Mark subsequent reads as priority (QoS) traffic — they see the
+    /// full read-slot pool instead of the unreserved remainder.  The
+    /// controller sets this per request from the issuing core's tenant;
+    /// it stays `false` in single-tenant runs.
+    pub fn set_priority(&mut self, hi_prio: bool) {
+        self.hi_prio = hi_prio;
     }
 
     /// Pending writes queued on one channel (diagnostics / tests).
@@ -196,6 +209,7 @@ impl DramSim {
                     row,
                     now,
                     same_row_hint,
+                    self.hi_prio,
                 )
             }
         }

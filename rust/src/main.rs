@@ -2,10 +2,12 @@
 //!
 //! ```text
 //! repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]
-//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1> [--insts N]
+//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|m1> [--insts N]
+//! repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]
 //! repro table <2|3|4|5> [--insts N]
 //! repro sim --workload W --design D [--insts N] [--channels C]
 //!           [--far-ratio R] [--trace FILE] [--llc-compressed]
+//! repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N]
 //! repro analyze [--artifact PATH] [--workload W] [--groups N]
 //! repro list
 //! ```
@@ -30,7 +32,16 @@
 //! opened: {static, dynamic, explicit} × {flat, tiered} over the
 //! far-pressure suite.  `--design` accepts any composition name
 //! (`tiered-cram-dyn`, `tiered-explicit`, …) — `repro list` prints them
-//! all; see `controller::policy`.
+//! all; see `controller::policy`.  With `--far-ratio R1,R2,...` it
+//! becomes the break-even sweep: each tiered composition re-run at every
+//! split, with `--format csv|json` for machine-readable output.
+//!
+//! `figure m1` is the multi-tenant exhibit: canonical co-location mixes
+//! under {uncompressed, cram-dynamic, tiered-cram-dyn}, reporting each
+//! tenant's p99 read latency, slowdown vs running alone, compression-
+//! interference beats and a Jain fairness index, plus a QoS contrast
+//! with read slots reserved for the `:qos`-marked tenant.  `repro sim
+//! --tenants` runs one such co-location directly.
 //!
 //! (clap is unavailable in this offline environment; argument parsing is
 //! hand-rolled — see DESIGN.md §Substitutions.)
@@ -108,9 +119,36 @@ fn main() {
             };
             let id = if cmd == "figure" { format!("fig{n}") } else { format!("table{n}") };
             let mut db = ResultsDb::new(plan_from(&flags));
+            // `figure x1 --far-ratio R1,R2,...`: the break-even sweep
+            // instead of the fixed-split cross-product
+            if id == "figx1" && flags.contains_key("far-ratio") {
+                let ratios: Vec<f64> = flags["far-ratio"]
+                    .split(',')
+                    .map(|s| s.trim().parse().expect("--far-ratio takes a comma list"))
+                    .collect();
+                if ratios.is_empty() {
+                    usage("--far-ratio needs at least one split");
+                }
+                let format = match flags.get("format").map(String::as_str) {
+                    None | Some("table") => figures::SweepFormat::Table,
+                    Some("csv") => figures::SweepFormat::Csv,
+                    Some("json") => figures::SweepFormat::Json,
+                    Some(f) => usage(&format!("unknown --format {f}")),
+                };
+                let human = format == figures::SweepFormat::Table;
+                db.run_x1_sweep(&ratios, human);
+                let r = figures::figure_x1_sweep(&db, &ratios, format);
+                // machine formats get the bare body so stdout pipes clean
+                if human {
+                    print!("{}", r.render());
+                } else {
+                    print!("{}", r.body);
+                }
+                return;
+            }
             // run only the designs the exhibit needs
             match id.as_str() {
-                "fig4" | "table3" => {}
+                "fig4" | "table3" | "figm1" => {}
                 "figt1" => db.run_tiered_t1(true),
                 "figx1" => db.run_x1(true),
                 "figq1" => db.run_q1(true),
@@ -162,9 +200,13 @@ fn main() {
             }
         }
         "sim" => {
+            if let Some(spec) = flags.get("tenants") {
+                sim_tenants(spec, &flags);
+                return;
+            }
             let wl = match flags.get("workload") {
                 Some(w) => w.clone(),
-                None => usage("--workload required"),
+                None => usage("--workload required (or --tenants for co-location)"),
             };
             let d = match flags.get("design") {
                 Some(d) => d.clone(),
@@ -442,12 +484,87 @@ fn main() {
     }
 }
 
+/// `repro sim --tenants W1[:CORES][:qos],W2,...` — one co-located run
+/// with per-tenant accounting (plus the per-tenant solo reruns behind
+/// the slowdown column).
+fn sim_tenants(spec: &str, flags: &HashMap<String, String>) {
+    let d = flags.get("design").map(String::as_str).unwrap_or("cram-dynamic");
+    let design = match Design::parse(d) {
+        Some(d) => d,
+        None => usage(&format!("unknown design {d}")),
+    };
+    let mut cfg = SimConfig::default().with_design(design);
+    if let Some(n) = flags.get("insts") {
+        cfg = cfg.with_insts(n.parse().expect("--insts"));
+    }
+    if let Some(c) = flags.get("channels") {
+        cfg = cfg.with_channels(c.parse().expect("--channels"));
+    }
+    if let Some(r) = flags.get("far-ratio") {
+        cfg = cfg.with_far_ratio(r.parse().expect("--far-ratio"));
+    }
+    if flags.contains_key("llc-compressed") {
+        cfg = cfg.with_compressed_llc();
+    }
+    if let Some(n) = flags.get("qos-slots") {
+        cfg = cfg.with_sched(cram::dram::SchedConfig {
+            reserved_slots: n.parse().expect("--qos-slots"),
+            ..Default::default()
+        });
+    }
+    let specs = match cram::workloads::parse_tenants(spec, cfg.cores) {
+        Ok(s) => s,
+        Err(e) => usage(&format!("bad --tenants spec: {e}")),
+    };
+    let r = cram::sim::simulate_tenants(&specs, &cfg);
+    println!("tenants {spec} design {}", design.name());
+    println!("  cycles             {}", r.cycles);
+    println!("  aggregate IPC      {:.3}", r.total_ipc());
+    println!(
+        "{:<12} {:>5} {:>10} {:>9} {:>8} {:>8} {:>8} {:>9} {:>13}",
+        "tenant", "cores", "traffic", "reads", "p50-ns", "p95-ns", "p99-ns",
+        "slowdown", "interf-beats"
+    );
+    let ns = cram::stats::NS_PER_BUS_CYCLE;
+    for t in &r.tenants {
+        let slow = t
+            .slowdown
+            .map(|s| format!("{s:.2}x"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<12} {:>5} {:>10} {:>9} {:>8.0} {:>8.0} {:>8.0} {:>9} {:>13.0}{}",
+            t.name,
+            t.cores,
+            t.bw.total(),
+            t.bw.demand_reads,
+            t.read_lat.percentile(0.50) * ns,
+            t.read_lat.percentile(0.95) * ns,
+            t.read_lat.percentile(0.99) * ns,
+            slow,
+            t.interference_beats,
+            if t.protected { "  [qos]" } else { "" }
+        );
+    }
+    let progress: Vec<f64> = r
+        .tenants
+        .iter()
+        .filter_map(|t| t.slowdown)
+        .map(|s| 1.0 / s.max(1e-9))
+        .collect();
+    println!(
+        "  fairness (Jain over 1/slowdown): {:.3}",
+        cram::stats::jain_index(&progress)
+    );
+    let sum: u64 = r.tenants.iter().map(|t| t.bw.total()).sum();
+    assert_eq!(sum, r.bw.total(), "per-tenant traffic must sum to the total");
+}
+
 fn usage(msg: &str) -> ! {
     if !msg.is_empty() {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1> [--insts N]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE] [--llc-compressed]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement compositions (repro list prints all):\ntiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/tiered-explicit\n(figure x1) — near DDR + far CXL expander; --far-ratio R puts fraction R\nof capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|m1> [--insts N]\n  repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE] [--llc-compressed]\n  repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N] [--insts N]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement compositions (repro list prints all):\ntiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/tiered-explicit\n(figure x1) — near DDR + far CXL expander; --far-ratio R puts fraction R\nof capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product; with --far-ratio R1,R2,... it\nsweeps the capacity split to each tiered composition's break-even\n(--format csv|json for machine-readable output)\nfigure m1: multi-tenant co-location mixes x {uncompressed, cram-dynamic,\ntiered-cram-dyn} — per-tenant p99, slowdown-vs-alone, interference beats,\nJain fairness, and a QoS read-slot-reservation contrast\nsim --tenants: one co-location (workload[:cores][:qos], comma-separated;\n:qos marks the protected tenant, --qos-slots N reserves N of 32 read slots)\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
     );
     std::process::exit(2);
 }

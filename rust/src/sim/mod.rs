@@ -8,7 +8,9 @@
 //! fidelity argument.
 
 pub mod system;
+pub mod tenant;
 pub mod vm;
 
 pub use system::{simulate, SimConfig};
+pub use tenant::{simulate_tenants, simulate_tenants_shared};
 pub use vm::VirtualMemory;

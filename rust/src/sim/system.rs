@@ -213,6 +213,17 @@ fn writeback_victims(
     }
 }
 
+/// Tenant layout for a multi-tenant run ([`crate::sim::tenant`]): names
+/// and contiguous core allocations, plus which tenant (if any) holds the
+/// QoS read-slot reservation.  `simulate_multi` builds the controller's
+/// [`TenantTracker`] from it and folds the per-tenant accounting into
+/// [`SimResult::tenants`].
+pub(crate) struct TenantSetup {
+    pub names: Vec<String>,
+    pub core_counts: Vec<usize>,
+    pub protected: Option<usize>,
+}
+
 /// Run one workload under one design.  Rate mode when `profile.mix_of` is
 /// empty (all cores run `profile`); MIX workloads place component
 /// profiles on their designated cores.
@@ -228,6 +239,32 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
             .map(|n| crate::workloads::profiles::by_name(n).expect("mix component"))
             .collect()
     };
+    // The historical per-core seed derivations — the single-tenant path
+    // stays bit-identical to the pre-tenant simulator.
+    let stream_seeds: Vec<u64> =
+        (0..cfg.cores).map(|c| cfg.seed ^ ((c as u64) << 32)).collect();
+    let oracle_seeds: Vec<u64> =
+        (0..cfg.cores).map(|c| cfg.seed ^ 0xDA7A ^ c as u64).collect();
+    simulate_multi(profile.name, &per_core, &stream_seeds, &oracle_seeds, None, cfg)
+}
+
+/// The simulation loop shared by the single-tenant front-end
+/// ([`simulate`]) and the multi-tenant one
+/// ([`crate::sim::tenant::simulate_tenants`]): `per_core[c]` runs on
+/// core `c` with the given stream/oracle seeds; with a [`TenantSetup`],
+/// traffic and latency are additionally charged per tenant and the
+/// result carries a [`crate::stats::TenantStats`] per tenant.
+pub(crate) fn simulate_multi(
+    workload: &str,
+    per_core: &[WorkloadProfile],
+    stream_seeds: &[u64],
+    oracle_seeds: &[u64],
+    tenants: Option<TenantSetup>,
+    cfg: &SimConfig,
+) -> SimResult {
+    assert_eq!(per_core.len(), cfg.cores);
+    assert_eq!(stream_seeds.len(), cfg.cores);
+    assert_eq!(oracle_seeds.len(), cfg.cores);
 
     let vm = VirtualMemory::new(cfg.cores);
     let mut llc = match cfg.llc_compressed {
@@ -246,6 +283,13 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
         cfg.tier,
     );
     mc.llc_compressed = cfg.llc_compressed.is_some();
+    if let Some(ts) = &tenants {
+        assert_eq!(ts.core_counts.iter().sum::<usize>(), cfg.cores);
+        mc.tenants = Some(crate::controller::TenantTracker::new(
+            &ts.core_counts,
+            ts.protected,
+        ));
+    }
     // per-core private caches (optional Table I hierarchy)
     let mut l1s: Vec<SetAssocCache> = (0..cfg.cores)
         .map(|_| SetAssocCache::new(CacheConfig { bytes: 32 * 1024, ways: 8 }))
@@ -260,7 +304,7 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
         .map(|(c, p)| Core {
             stream: match &cfg.trace {
                 Some(t) => EventSource::Replay(t.clone()),
-                None => EventSource::Synthetic(AccessStream::new(p, cfg.seed ^ ((c as u64) << 32))),
+                None => EventSource::Synthetic(AccessStream::new(p, stream_seeds[c])),
             },
             time: 0,
             insts: 0,
@@ -276,7 +320,7 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
         .map(|(c, p)| {
             {
                 let mut o = SizeOracle::with_region(
-                    p.value_model(cfg.seed ^ 0xDA7A ^ c as u64),
+                    p.value_model(oracle_seeds[c]),
                     c as u64 * vm.region_lines(),
                     p.footprint_lines().max(1024),
                 );
@@ -440,6 +484,7 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
     let warm_pref = (mc.prefetch_installed, mc.prefetch_used);
     let warm_dram = dram.stats;
     let warm_tier = mc.tier.as_ref().map(|t| t.snapshot()).unwrap_or_default();
+    let warm_tenants = mc.tenants.clone();
 
     // Phase 2: measurement.
     run_until(
@@ -469,8 +514,10 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
     );
     let _ = energy; // embedded via row hit/miss stats; re-derived by harnesses
 
+    let tenant_stats = finalize_tenants(&tenants, &mc, warm_tenants.as_ref(), &ipc, cfg);
+
     SimResult {
-        workload: profile.name.to_string(),
+        workload: workload.to_string(),
         design: cfg.design.name().to_string(),
         cycles,
         insts_per_core: cfg.insts_per_core,
@@ -482,17 +529,7 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
             (Some(full), Some(warm)) => Some(full.since(&warm)),
             _ => None,
         },
-        bw: crate::stats::Bandwidth {
-            demand_reads: mc.bw.demand_reads - warm_bw.demand_reads,
-            demand_writes: mc.bw.demand_writes - warm_bw.demand_writes,
-            clean_writes: mc.bw.clean_writes - warm_bw.clean_writes,
-            invalidates: mc.bw.invalidates - warm_bw.invalidates,
-            second_reads: mc.bw.second_reads - warm_bw.second_reads,
-            meta_reads: mc.bw.meta_reads - warm_bw.meta_reads,
-            meta_writes: mc.bw.meta_writes - warm_bw.meta_writes,
-            prefetch_reads: mc.bw.prefetch_reads - warm_bw.prefetch_reads,
-            migration: mc.bw.migration - warm_bw.migration,
-        },
+        bw: mc.bw.since(&warm_bw),
         llp_accuracy: mc.llp.stats.accuracy(),
         read_lat: mc.read_lat.since(&warm_lat),
         meta_hit_rate: mc
@@ -522,7 +559,46 @@ pub fn simulate(profile: &WorkloadProfile, cfg: &SimConfig) -> SimResult {
             .map(|d| (0..cfg.cores).map(|c| d.counter(c)).collect())
             .unwrap_or_default(),
         tier: mc.tier.as_ref().map(|t| t.snapshot().since(&warm_tier)),
+        tenants: tenant_stats,
     }
+}
+
+/// Warmup-subtract the tracker's per-tenant counters and assemble the
+/// [`TenantStats`](crate::stats::TenantStats) rows, including the
+/// compression-interference attribution.  `slowdown` stays `None` here;
+/// [`crate::sim::tenant::simulate_tenants`] fills it from the solo
+/// reference runs.
+fn finalize_tenants(
+    setup: &Option<TenantSetup>,
+    mc: &MemoryController,
+    warm: Option<&crate::controller::TenantTracker>,
+    ipc: &[f64],
+    cfg: &SimConfig,
+) -> Vec<crate::stats::TenantStats> {
+    let (Some(s), Some(tt), Some(w)) = (setup.as_ref(), mc.tenants.as_ref(), warm) else {
+        return Vec::new();
+    };
+    let per_bw: Vec<crate::stats::Bandwidth> =
+        tt.bw.iter().zip(&w.bw).map(|(full, wm)| full.since(wm)).collect();
+    let interference = crate::stats::interference_beats(&per_bw, cfg.dram.t_burst);
+    let mut out = Vec::with_capacity(s.names.len());
+    let mut first_core = 0;
+    for (t, name) in s.names.iter().enumerate() {
+        let n = s.core_counts[t];
+        out.push(crate::stats::TenantStats {
+            name: name.clone(),
+            first_core,
+            cores: n,
+            ipc: ipc[first_core..first_core + n].to_vec(),
+            bw: per_bw[t],
+            read_lat: tt.read_lat[t].since(&w.read_lat[t]),
+            slowdown: None,
+            interference_beats: interference[t],
+            protected: s.protected == Some(t),
+        });
+        first_core += n;
+    }
+    out
 }
 
 /// Energy result for a finished run (Fig. 19 harness re-derives it from

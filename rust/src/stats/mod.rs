@@ -152,6 +152,129 @@ impl Bandwidth {
             + self.prefetch_reads
             + self.migration
     }
+
+    /// Field-wise difference vs an earlier snapshot (warmup subtraction
+    /// and the per-call deltas the tenant tracker charges).
+    pub fn since(&self, warm: &Bandwidth) -> Bandwidth {
+        Bandwidth {
+            demand_reads: self.demand_reads - warm.demand_reads,
+            demand_writes: self.demand_writes - warm.demand_writes,
+            clean_writes: self.clean_writes - warm.clean_writes,
+            invalidates: self.invalidates - warm.invalidates,
+            second_reads: self.second_reads - warm.second_reads,
+            meta_reads: self.meta_reads - warm.meta_reads,
+            meta_writes: self.meta_writes - warm.meta_writes,
+            prefetch_reads: self.prefetch_reads - warm.prefetch_reads,
+            migration: self.migration - warm.migration,
+        }
+    }
+
+    /// Field-wise accumulation of a delta produced by [`Bandwidth::since`].
+    pub fn accumulate(&mut self, d: &Bandwidth) {
+        self.demand_reads += d.demand_reads;
+        self.demand_writes += d.demand_writes;
+        self.clean_writes += d.clean_writes;
+        self.invalidates += d.invalidates;
+        self.second_reads += d.second_reads;
+        self.meta_reads += d.meta_reads;
+        self.meta_writes += d.meta_writes;
+        self.prefetch_reads += d.prefetch_reads;
+        self.migration += d.migration;
+    }
+}
+
+/// Bus beats of *overhead* traffic a traffic source injects: every
+/// data-sized overhead access costs a full `t_burst`-beat transfer,
+/// while invalidates are the 1-beat folded markers of the CRAM paper.
+pub fn overhead_beats(bw: &Bandwidth, t_burst: u64) -> u64 {
+    let data_sized = bw.clean_writes
+        + bw.second_reads
+        + bw.meta_reads
+        + bw.meta_writes
+        + bw.prefetch_reads
+        + bw.migration;
+    data_sized * t_burst + bw.invalidates
+}
+
+/// Compression-interference attribution: how many bus beats of *other
+/// tenants'* compression/metadata overhead each tenant absorbs.
+///
+/// Every tenant A injects [`overhead_beats`] of non-demand traffic
+/// (packed clean writes, ganged-eviction invalidates, second reads,
+/// metadata, migration).  Those beats occupy shared channel time, and
+/// the delay lands on whoever else is queueing — so A's beats are
+/// distributed over the *other* tenants proportionally to their share
+/// of demand beats (a tenant issuing twice the demand traffic collides
+/// with twice as much of A's overhead).  The per-tenant charges sum to
+/// the total overhead beats injected (nothing is dropped), and a tenant
+/// never absorbs its own overhead.
+pub fn interference_beats(per_tenant: &[Bandwidth], t_burst: u64) -> Vec<f64> {
+    let n = per_tenant.len();
+    let demand: Vec<f64> = per_tenant
+        .iter()
+        .map(|b| ((b.demand_reads + b.demand_writes) * t_burst) as f64)
+        .collect();
+    let mut absorbed = vec![0.0; n];
+    for a in 0..n {
+        let injected = overhead_beats(&per_tenant[a], t_burst) as f64;
+        let others: f64 = (0..n).filter(|&c| c != a).map(|c| demand[c]).sum();
+        if others <= 0.0 {
+            continue;
+        }
+        for (b, acc) in absorbed.iter_mut().enumerate() {
+            if b != a {
+                *acc += injected * demand[b] / others;
+            }
+        }
+    }
+    absorbed
+}
+
+/// Jain's fairness index over per-tenant progress values:
+/// `(Σx)² / (n·Σx²)` — 1.0 when all tenants progress equally, → 1/n
+/// when one tenant starves the rest.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 == 0.0 {
+        return 1.0;
+    }
+    s * s / (xs.len() as f64 * s2)
+}
+
+/// Per-tenant slice of a multi-tenant run.  The `bw`/`read_lat` fields
+/// partition the run's totals exactly: summed over tenants they
+/// reproduce [`SimResult::bw`] field-for-field and
+/// [`SimResult::read_lat`]`.count()` — the conservation invariant the
+/// tenant tests pin.
+#[derive(Clone, Debug)]
+pub struct TenantStats {
+    pub name: String,
+    /// First core index owned by this tenant (cores are contiguous).
+    pub first_core: usize,
+    pub cores: usize,
+    /// Per-core IPC for this tenant's cores.
+    pub ipc: Vec<f64>,
+    pub bw: Bandwidth,
+    pub read_lat: LatencyHist,
+    /// Mean over the tenant's cores of `IPC_alone / IPC_shared` — ≥ 1
+    /// under contention.  `None` when the solo reference run was skipped.
+    pub slowdown: Option<f64>,
+    /// Bus beats of other tenants' compression overhead this tenant
+    /// absorbed ([`interference_beats`]).
+    pub interference_beats: f64,
+    /// This tenant holds the QoS read-slot reservation.
+    pub protected: bool,
+}
+
+impl TenantStats {
+    /// Aggregate IPC over the tenant's cores.
+    pub fn total_ipc(&self) -> f64 {
+        self.ipc.iter().sum()
+    }
 }
 
 /// Traffic reaching one tier of a tiered memory, in 64-byte accesses.
@@ -294,6 +417,9 @@ pub struct SimResult {
     pub dyn_counters: Vec<i32>,
     /// Tiered-memory breakdown (None for flat designs).
     pub tier: Option<TierStats>,
+    /// Per-tenant breakdown (empty for single-tenant runs).  Tenant
+    /// `bw` sums and `read_lat` counts partition the totals above.
+    pub tenants: Vec<TenantStats>,
 }
 
 impl SimResult {
@@ -354,6 +480,7 @@ mod tests {
             dyn_benefits: 0,
             dyn_counters: vec![],
             tier: None,
+            tenants: vec![],
         }
     }
 
@@ -449,6 +576,66 @@ mod tests {
                 "v {v} bucket {b} mid {mid}"
             );
         }
+    }
+
+    #[test]
+    fn bandwidth_since_and_accumulate_roundtrip() {
+        let warm = Bandwidth { demand_reads: 3, clean_writes: 1, ..Default::default() };
+        let full = Bandwidth {
+            demand_reads: 10,
+            demand_writes: 4,
+            clean_writes: 2,
+            invalidates: 5,
+            ..Default::default()
+        };
+        let d = full.since(&warm);
+        assert_eq!(d.demand_reads, 7);
+        assert_eq!(d.clean_writes, 1);
+        assert_eq!(d.invalidates, 5);
+        let mut acc = warm;
+        acc.accumulate(&d);
+        assert_eq!(acc.total(), full.total());
+        assert_eq!(acc.demand_writes, full.demand_writes);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert!((jain_index(&[]) - 1.0).abs() < 1e-12);
+        assert!((jain_index(&[0.7]) - 1.0).abs() < 1e-12);
+        assert!((jain_index(&[1.0, 1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        // one tenant starving three others → approaches 1/4
+        let skew = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((skew - 0.25).abs() < 1e-12, "skewed index {skew}");
+        let mid = jain_index(&[1.0, 0.5]);
+        assert!(mid > 0.25 && mid < 1.0, "partial skew {mid}");
+    }
+
+    #[test]
+    fn interference_conserves_injected_beats() {
+        let t_burst = 4;
+        let a = Bandwidth {
+            demand_reads: 100,
+            demand_writes: 20,
+            clean_writes: 30,
+            invalidates: 8,
+            ..Default::default()
+        };
+        let b = Bandwidth { demand_reads: 60, demand_writes: 20, ..Default::default() };
+        let c = Bandwidth { demand_reads: 20, demand_writes: 20, ..Default::default() };
+        let per = [a, b, c];
+        let absorbed = interference_beats(&per, t_burst);
+        // only A injects overhead: 30 data-sized accesses + 8 one-beat markers
+        let injected = (30 * t_burst + 8) as f64;
+        assert!((absorbed.iter().sum::<f64>() - injected).abs() < 1e-9);
+        assert_eq!(absorbed[0], 0.0, "a tenant never absorbs its own overhead");
+        // B has twice C's demand beats, so it absorbs twice the share
+        assert!((absorbed[1] / absorbed[2] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overhead_beats_counts_invalidates_as_one_beat() {
+        let bw = Bandwidth { clean_writes: 3, invalidates: 5, demand_reads: 99, ..Default::default() };
+        assert_eq!(overhead_beats(&bw, 4), 3 * 4 + 5);
     }
 
     #[test]

@@ -22,10 +22,12 @@
 
 pub mod generator;
 pub mod profiles;
+pub mod tenant;
 pub mod trace;
 pub mod values;
 
 pub use generator::{AccessStream, TraceEvent};
+pub use tenant::{parse_tenants, TenantSpec};
 pub use trace::TraceReplay;
 pub use profiles::{Suite, WorkloadProfile};
 pub use values::{SizeOracle, ValueClass, ValueModel};

@@ -1,0 +1,190 @@
+//! Multi-tenant workload mixes.
+//!
+//! A *tenant* is a named group of cores running one base workload
+//! profile with its own RNG salt, co-located with other tenants on the
+//! shared memory system ([`crate::sim::tenant`]).  This module owns the
+//! CLI grammar for `--tenants` and the canonical mixes the Figure M1
+//! exhibit runs.
+//!
+//! Grammar (comma-separated tenants):
+//!
+//! ```text
+//! WORKLOAD[:CORES][:qos][,WORKLOAD[:CORES][:qos],...]
+//! ```
+//!
+//! * `WORKLOAD` — any base profile name known to
+//!   [`profiles::by_name`](crate::workloads::profiles::by_name).  MIX
+//!   pseudo-profiles are rejected: a tenant is one coherent stream, not
+//!   a bag of streams.
+//! * `CORES` — how many of the machine's cores the tenant owns.
+//!   Tenants that omit it split the leftover cores evenly.
+//! * `qos` — marks the tenant whose reads get the scheduler's reserved
+//!   slots ([`crate::dram::SchedConfig::reserved_slots`]).  At most one
+//!   tenant may be marked.
+
+use crate::workloads::profiles::{by_name, WorkloadProfile};
+
+/// One tenant of the co-located machine: a workload, a core allocation,
+/// and a seed salt that keeps its streams distinct from every other
+/// tenant's (including same-profile neighbours).
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    pub profile: WorkloadProfile,
+    pub cores: usize,
+    /// Folded into each of the tenant's per-core stream/oracle seeds.
+    pub seed_salt: u64,
+    /// Reads from this tenant's cores see the full read-slot pool even
+    /// when `reserved_slots` caps everyone else.
+    pub protected: bool,
+}
+
+/// Parse a `--tenants` spec against a machine of `total_cores` cores.
+///
+/// Returns the tenants in declaration order with all core counts
+/// resolved (they sum to `total_cores`), or a human-readable error.
+pub fn parse_tenants(spec: &str, total_cores: usize) -> Result<Vec<TenantSpec>, String> {
+    let items: Vec<&str> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if items.is_empty() {
+        return Err("--tenants: empty tenant list".into());
+    }
+    if items.len() > total_cores {
+        return Err(format!(
+            "--tenants: {} tenants need at least {} cores (machine has {total_cores})",
+            items.len(),
+            items.len()
+        ));
+    }
+    let mut specs = Vec::with_capacity(items.len());
+    for (idx, item) in items.iter().enumerate() {
+        let mut fields = item.split(':').map(str::trim);
+        let name = fields.next().unwrap_or("");
+        let mut cores = 0usize; // 0 = split the leftover evenly
+        let mut protected = false;
+        for f in fields {
+            if f.eq_ignore_ascii_case("qos") {
+                protected = true;
+            } else {
+                cores = f.parse().map_err(|_| {
+                    format!("tenant {name:?}: field {f:?} is neither a core count nor `qos`")
+                })?;
+                if cores == 0 {
+                    return Err(format!("tenant {name:?}: core count must be > 0"));
+                }
+            }
+        }
+        let profile =
+            by_name(name).ok_or_else(|| format!("tenant {name:?}: unknown workload"))?;
+        if !profile.mix_of.is_empty() {
+            return Err(format!(
+                "tenant {name:?}: MIX profiles cannot be tenants; list base profiles instead"
+            ));
+        }
+        specs.push(TenantSpec {
+            name: name.to_string(),
+            profile,
+            cores,
+            seed_salt: idx as u64 + 1,
+            protected,
+        });
+    }
+    if specs.iter().filter(|t| t.protected).count() > 1 {
+        return Err("--tenants: at most one tenant may be marked `qos`".into());
+    }
+
+    let fixed: usize = specs.iter().map(|t| t.cores).sum();
+    let auto = specs.iter().filter(|t| t.cores == 0).count();
+    if fixed > total_cores {
+        return Err(format!(
+            "--tenants: core counts sum to {fixed} > machine's {total_cores}"
+        ));
+    }
+    let leftover = total_cores - fixed;
+    if auto == 0 {
+        if leftover != 0 {
+            return Err(format!(
+                "--tenants: core counts sum to {fixed}, machine has {total_cores}"
+            ));
+        }
+    } else {
+        if leftover == 0 || leftover % auto != 0 {
+            return Err(format!(
+                "--tenants: {leftover} leftover cores do not split evenly over \
+                 {auto} tenants without explicit counts"
+            ));
+        }
+        let each = leftover / auto;
+        for t in specs.iter_mut().filter(|t| t.cores == 0) {
+            t.cores = each;
+        }
+    }
+    Ok(specs)
+}
+
+/// The Figure M1 tenant mixes: `(label, --tenants spec)`.
+///
+/// * `stream+ptr` — two bandwidth-bound tenants with opposite
+///   compressibility (symmetric contention);
+/// * `lat+stream` — a latency-critical pointer chaser (marked `qos`)
+///   beside a streaming bandwidth hog (the QoS-contrast mix);
+/// * `quad` — four smaller tenants, the many-tenant fairness case.
+pub fn m1_mixes() -> [(&'static str, &'static str); 3] {
+    [
+        ("stream+ptr", "cap_stream:4,cap_ptr:4"),
+        ("lat+stream", "lat_chase:4:qos,cap_stream:4"),
+        ("quad", "cap_stream:2,cap_ptr:2,cap_gap:2,lat_zipf:2"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_counts_and_qos() {
+        let t = parse_tenants("lat_chase:4:qos,cap_stream:4", 8).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!((t[0].name.as_str(), t[0].cores, t[0].protected), ("lat_chase", 4, true));
+        assert_eq!((t[1].name.as_str(), t[1].cores, t[1].protected), ("cap_stream", 4, false));
+        assert_ne!(t[0].seed_salt, t[1].seed_salt);
+    }
+
+    #[test]
+    fn leftover_cores_split_evenly() {
+        let t = parse_tenants("libq,mcf17", 8).unwrap();
+        assert_eq!(t[0].cores, 4);
+        assert_eq!(t[1].cores, 4);
+        let t = parse_tenants("libq:2,mcf17,milc", 8).unwrap();
+        assert_eq!([t[0].cores, t[1].cores, t[2].cores], [2, 3, 3]);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(parse_tenants("", 8).is_err());
+        assert!(parse_tenants("nosuch:4,libq:4", 8).is_err());
+        assert!(parse_tenants("libq:4,mcf17:8", 8).is_err(), "over-committed cores");
+        assert!(parse_tenants("libq:2,mcf17:2", 8).is_err(), "under-committed, no auto tenants");
+        assert!(parse_tenants("libq:3,mcf17,milc", 8).is_err(), "5 leftover over 2 tenants");
+        assert!(parse_tenants("libq:4:qos,mcf17:4:qos", 8).is_err(), "two qos marks");
+        assert!(parse_tenants("libq:bogus", 8).is_err());
+        assert!(parse_tenants("mix1:8", 8).is_err(), "MIX profiles rejected");
+    }
+
+    #[test]
+    fn m1_mixes_parse_on_eight_cores() {
+        for (label, spec) in m1_mixes() {
+            let t = parse_tenants(spec, 8).unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_eq!(t.iter().map(|s| s.cores).sum::<usize>(), 8, "{label}");
+        }
+        // exactly one mix carries the QoS mark (the contrast exhibit keys on it)
+        let marked = m1_mixes()
+            .iter()
+            .filter(|(_, s)| s.contains(":qos"))
+            .count();
+        assert_eq!(marked, 1);
+    }
+}
