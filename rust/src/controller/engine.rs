@@ -27,8 +27,11 @@
 use crate::cache::Evicted;
 use crate::cram::group::{possible_locations, Csi};
 use crate::mem::{group_base, group_of, PagedArena};
+use crate::tier::link::DATA_BYTES;
 use crate::util::small::InlineVec;
+use crate::workloads::SizeOracle;
 
+use super::policy::LinkCodec;
 use super::{Install, Installs};
 
 /// One physical-slot action of a group writeback, produced by
@@ -62,6 +65,12 @@ pub struct CramEngine {
     /// Groups written / written compressed (diagnostics).
     pub groups_written: u64,
     pub groups_compressed: u64,
+    /// The design's third axis: whether payloads this engine's consumer
+    /// puts on a [`crate::tier::CxlLink`] are compressed in flight.  The
+    /// engine is the one place the codec lives, so every executor (flat
+    /// host, expander, byte-accurate store) asks it for wire sizes
+    /// instead of special-casing the codec per call site.
+    link_codec: LinkCodec,
 }
 
 impl Default for CramEngine {
@@ -72,10 +81,67 @@ impl Default for CramEngine {
 
 impl CramEngine {
     pub fn new() -> Self {
+        Self::with_link_codec(LinkCodec::Raw)
+    }
+
+    /// An engine carrying the design's link codec (the plumbing every
+    /// executor constructor threads through).
+    pub fn with_link_codec(link_codec: LinkCodec) -> Self {
         Self {
             csi: PagedArena::new(Csi::Uncompressed),
             groups_written: 0,
             groups_compressed: 0,
+            link_codec,
+        }
+    }
+
+    /// The link codec this engine serves wire sizes for.
+    #[inline]
+    pub fn link_codec(&self) -> LinkCodec {
+        self.link_codec
+    }
+
+    /// Wire bytes one 64B line occupies on the link under this engine's
+    /// codec: the full line raw, or the TX size-only compressor pass
+    /// ([`SizeOracle::size`] — the PR 3 fast path) when compressed.
+    #[inline]
+    pub fn line_wire_bytes(&self, oracle: &mut SizeOracle, line: u64) -> u64 {
+        match self.link_codec {
+            LinkCodec::Raw => DATA_BYTES,
+            LinkCodec::Compressed => u64::from(oracle.size(line)).min(DATA_BYTES),
+        }
+    }
+
+    /// Wire bytes the physical slot `loc` of the group at `base` occupies
+    /// under layout `csi`: the sum of the co-located members' compressed
+    /// sizes (a packed block already stores them back-to-back), capped at
+    /// one data flit — the block never exceeds 64B by construction.
+    pub fn block_wire_bytes(&self, oracle: &mut SizeOracle, base: u64, csi: Csi, loc: u8) -> u64 {
+        match self.link_codec {
+            LinkCodec::Raw => DATA_BYTES,
+            LinkCodec::Compressed => {
+                let members = csi.colocated(loc);
+                if members.len() <= 1 {
+                    return self.line_wire_bytes(oracle, base + loc as u64);
+                }
+                let sum: u64 = members
+                    .iter()
+                    .map(|&s| u64::from(oracle.size(base + s as u64)))
+                    .sum();
+                sum.min(DATA_BYTES)
+            }
+        }
+    }
+
+    /// Wire bytes of one metadata-region crossing.  CSI metadata is
+    /// dense small-field data (3-bit states packed 170 to a line), which
+    /// the size-only pass compresses at a fixed 4:1 — raw designs ship
+    /// the full 64B metadata line.
+    #[inline]
+    pub fn meta_wire_bytes(&self) -> u64 {
+        match self.link_codec {
+            LinkCodec::Raw => DATA_BYTES,
+            LinkCodec::Compressed => DATA_BYTES / 4,
         }
     }
 

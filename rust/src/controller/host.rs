@@ -8,6 +8,13 @@
 //! demand access, training the LLP and the Dynamic-CRAM counters — which
 //! is precisely what distinguishes the host path from the far-tier
 //! executor in [`crate::tier::memory`].
+//!
+//! The design's third axis, [`LinkCodec`](super::LinkCodec), is a no-op
+//! here by construction: flat placements have no serialized link, so the
+//! codec the controller threads into the shared engine never changes a
+//! flat access — a `cram-static+lc` run is cycle-identical to
+//! `cram-static`.  Only the tiered executor consults the engine's
+//! wire-size helpers.
 
 use crate::cram::metadata::MetaAccess;
 use crate::dram::{DramSim, ReqKind};

@@ -31,13 +31,19 @@
 //! | `tiered-uncomp` / `tiered-cram` | `None`/`Implicit` `× Tiered` | Figure T1 |
 //! | `tiered-cram-dyn` | `Dynamic × Tiered` | Figure X1 (IBEX-style gated expander) |
 //! | `tiered-explicit` | `Explicit × Tiered` | Figure X1 (explicit metadata on far memory) |
+//! | `<any>+lc` | `… × … × LinkCodec::Compressed` | Figure L1 (flit compression on the CXL link) |
+//!
+//! The third axis, [`LinkCodec`], rides in the design and reaches the
+//! executors through the shared [`CramEngine`] — the controller threads
+//! it into both the host-side engine and the tier's expander engine at
+//! construction, so no executor special-cases the link codec.
 
 pub mod engine;
 pub mod host;
 pub mod policy;
 
 pub use engine::{CramEngine, SlotOp, WritePlan};
-pub use policy::{Design, Placement, Policy};
+pub use policy::{Design, LinkCodec, Placement, Policy};
 
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::llp::LineLocationPredictor;
@@ -211,10 +217,11 @@ impl MemoryController {
         let dynamic =
             matches!(design.policy, Policy::Dynamic).then(|| DynamicCram::with_bits(cores, 6));
         let tier = match design.placement {
-            Placement::Tiered => Some(TieredMemory::with_meta_cache(
+            Placement::Tiered => Some(TieredMemory::with_codec(
                 tier_cfg,
                 design.policy,
                 meta_cache_bytes,
+                design.link_codec,
             )),
             Placement::Flat => None,
         };
@@ -222,7 +229,7 @@ impl MemoryController {
             design,
             tier,
             llc_compressed: false,
-            engine: CramEngine::new(),
+            engine: CramEngine::with_link_codec(design.link_codec),
             llp: LineLocationPredictor::new(llp_entries, 0xD1CE),
             meta,
             dynamic,
@@ -785,6 +792,38 @@ mod tests {
         assert_eq!(Design::tiered(false).name(), "tiered-uncomp");
         assert_eq!(Design::tiered(true).name(), "tiered-cram");
         assert!(!Design::tiered(true).compresses());
+    }
+
+    #[test]
+    fn link_codec_threads_through_the_shared_engines() {
+        // the design's third axis reaches both engines at construction —
+        // no per-executor special case
+        let lc = Design::tiered(true).with_link_codec(LinkCodec::Compressed);
+        let mc = MemoryController::new(lc, 8, 1 << 28);
+        assert_eq!(mc.engine.link_codec(), LinkCodec::Compressed);
+        let raw = MemoryController::new(Design::tiered(true), 8, 1 << 28);
+        assert_eq!(raw.engine.link_codec(), LinkCodec::Raw);
+    }
+
+    #[test]
+    fn compressed_link_design_saves_wire_bytes_raw_twin_does_not() {
+        let drive = |design: Design| {
+            let (mut mc, mut dram, mut oracle) = setup(design);
+            let far = (0..100_000u64)
+                .find(|&l| mc.tier.as_ref().unwrap().is_far_line(l))
+                .unwrap();
+            let base = group_base(far);
+            mc.writeback(&gang(base, [true; 4]), 0, &mut dram, &mut oracle, false);
+            mc.read(base + 1, 0, 1000, &mut dram, &mut oracle, false);
+            mc.tier.as_ref().unwrap().snapshot()
+        };
+        let raw = drive(Design::tiered(true));
+        let lc = drive(Design::tiered(true).with_link_codec(LinkCodec::Compressed));
+        assert_eq!(raw.link_traffic.raw_bytes(), raw.link_traffic.wire_bytes());
+        assert_eq!(raw.link_traffic.flits_saved, 0);
+        assert_eq!(lc.link_traffic.raw_bytes(), raw.link_traffic.raw_bytes());
+        assert!(lc.link_traffic.wire_bytes() < lc.link_traffic.raw_bytes());
+        assert!(lc.link_traffic.flits_saved > 0);
     }
 
     #[test]

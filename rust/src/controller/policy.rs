@@ -1,19 +1,27 @@
-//! The composable design space: **compression policy** × **placement**.
+//! The composable design space: **compression policy** × **placement**
+//! × **link codec**.
 //!
 //! The paper's designs (explicit metadata, implicit-marker CRAM, dynamic
 //! cost/benefit gating) are orthogonal to *where* the compressed memory
-//! lives.  This module makes that orthogonality a type: a [`Design`] is a
-//! [`Policy`] (what compression machinery runs) composed with a
-//! [`Placement`] (flat DDR vs a tiered CXL expander), and every scenario
-//! the related work studies — IBEX-style dynamic gating on an expander,
-//! Pekhimenko-style explicit metadata on far memory — is a one-line
+//! lives — and both are orthogonal to whether traffic is compressed *in
+//! flight* over the expander link.  This module makes that orthogonality
+//! a type: a [`Design`] is a [`Policy`] (what compression machinery
+//! runs) composed with a [`Placement`] (flat DDR vs a tiered CXL
+//! expander) and a [`LinkCodec`] (raw vs compressed flits on the wire),
+//! and every scenario the related work studies — IBEX-style dynamic
+//! gating on an expander, Pekhimenko-style explicit metadata on far
+//! memory, ZeroPoint-style in-flight CXL compression — is a one-line
 //! composition instead of a new enum arm.
 //!
 //! With [`Placement::Flat`] the policy runs at the host memory
 //! controller over all of DRAM.  With [`Placement::Tiered`] the near
 //! tier is always plain DDR and the policy runs on the far expander
 //! (where the narrow link makes compression pay) — see
-//! [`crate::tier::memory`].
+//! [`crate::tier::memory`].  [`LinkCodec::Compressed`] additionally runs
+//! the TX-side size-only compressor pass on every link payload, so
+//! transfers occupy fewer flit cycles at the cost of a decompression
+//! latency at the receiving port; on flat placements there is no link
+//! and the codec is a no-op.
 //!
 //! **Compatibility facade.**  `Design` keeps associated constants named
 //! after the pre-refactor enum variants (`Design::Uncompressed`,
@@ -21,8 +29,11 @@
 //! ([`Design::explicit`], [`Design::tiered`]), so call sites, CLI
 //! strings, `ResultsDb` keys and figure outputs are unchanged: every
 //! pre-existing [`Design::name`] maps to the same composition the old
-//! enum arm implemented.  [`Design::parse`] round-trips every name
-//! (pinned by the `design_names_round_trip` test).
+//! enum arm implemented, with [`LinkCodec::Raw`] as the default third
+//! field.  Names follow a `policy-placement[+lc]` grammar — the `+lc`
+//! suffix selects the compressed link codec — and [`Design::parse`]
+//! round-trips every composition (pinned by the
+//! `design_names_round_trip` test).
 
 /// The compression policy: which machinery runs at the controller that
 /// owns the (flat or far) compressed memory.
@@ -55,11 +66,31 @@ pub enum Placement {
     Tiered,
 }
 
-/// A memory-system design: one policy at one placement.
+/// Whether payloads are compressed *in flight* over the expander link,
+/// independent of how lines are stored (IBEX / ZeroPoint CXL style).
+///
+/// `Compressed` runs the TX-side size-only compressor pass
+/// ([`crate::workloads::SizeOracle::size`] — the PR 3 fast path, so the
+/// pass is nearly free) on every data payload crossing
+/// [`crate::tier::CxlLink`], serializing only the compressed bytes and
+/// paying a fixed decompression latency at the receiving port.  Command
+/// flits are never compressed.  On [`Placement::Flat`] designs there is
+/// no link, so the codec composes validly but changes nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkCodec {
+    /// Every payload crosses the link at its storage size (default).
+    Raw,
+    /// TX compresses payloads; RX pays a decompression latency.
+    Compressed,
+}
+
+/// A memory-system design: one policy at one placement over one link
+/// codec.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Design {
     pub policy: Policy,
     pub placement: Placement,
+    pub link_codec: LinkCodec,
 }
 
 /// Pre-refactor spellings (`Design::Uncompressed`, `Design::Dynamic`, …)
@@ -76,7 +107,7 @@ impl Design {
 
 impl Design {
     pub const fn new(policy: Policy, placement: Placement) -> Design {
-        Design { policy, placement }
+        Design { policy, placement, link_codec: LinkCodec::Raw }
     }
 
     pub const fn flat(policy: Policy) -> Design {
@@ -99,35 +130,59 @@ impl Design {
         )
     }
 
+    /// The same policy × placement under a different link codec — the
+    /// third-axis constructor: `Design::tiered(true).with_link_codec(
+    /// LinkCodec::Compressed)` is tiered CRAM over a compressed link.
+    pub const fn with_link_codec(mut self, link_codec: LinkCodec) -> Design {
+        self.link_codec = link_codec;
+        self
+    }
+
     #[inline]
     pub fn is_tiered(&self) -> bool {
         self.placement == Placement::Tiered
     }
 
-    /// Every valid composition, flat designs first (paper order), then
-    /// the tiered cross-product.
-    pub fn all() -> [Design; 14] {
-        [
-            Design::Uncompressed,
-            Design::Ideal,
-            Design::explicit(false),
-            Design::explicit(true),
-            Design::Implicit,
-            Design::Dynamic,
-            Design::NextLinePrefetch,
-            Design::tiered(false),
-            Design::tiered(true),
-            Design::new(Policy::Dynamic, Placement::Tiered),
-            Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered),
-            Design::new(Policy::Explicit { row_opt: true }, Placement::Tiered),
-            Design::new(Policy::Ideal, Placement::Tiered),
-            Design::new(Policy::NextLinePrefetch, Placement::Tiered),
-        ]
+    /// Does this design compress payloads on the wire?
+    #[inline]
+    pub fn link_compressed(&self) -> bool {
+        self.link_codec == LinkCodec::Compressed
     }
 
-    /// Canonical CLI / `ResultsDb` name.  Total over the cross-product;
-    /// every pre-existing name is byte-identical to the enum era.
-    pub fn name(&self) -> &'static str {
+    /// Every policy × placement pair, flat designs first (paper order),
+    /// then the tiered cross-product — all under [`LinkCodec::Raw`].
+    const BASE: [Design; 14] = [
+        Design::Uncompressed,
+        Design::Ideal,
+        Design::explicit(false),
+        Design::explicit(true),
+        Design::Implicit,
+        Design::Dynamic,
+        Design::NextLinePrefetch,
+        Design::tiered(false),
+        Design::tiered(true),
+        Design::new(Policy::Dynamic, Placement::Tiered),
+        Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered),
+        Design::new(Policy::Explicit { row_opt: true }, Placement::Tiered),
+        Design::new(Policy::Ideal, Placement::Tiered),
+        Design::new(Policy::NextLinePrefetch, Placement::Tiered),
+    ];
+
+    /// Every valid composition: the 14 raw-link pairs in their
+    /// historical order, then the same 14 over the compressed link.
+    pub fn all() -> [Design; 28] {
+        let mut out = [Design::Uncompressed; 28];
+        let mut i = 0;
+        while i < 14 {
+            out[i] = Self::BASE[i];
+            out[i + 14] = Self::BASE[i].with_link_codec(LinkCodec::Compressed);
+            i += 1;
+        }
+        out
+    }
+
+    /// The policy × placement part of the name — the historical spelling.
+    const fn base_name(&self) -> &'static str {
         match (self.placement, self.policy) {
             (Placement::Flat, Policy::Uncompressed) => "uncompressed",
             (Placement::Flat, Policy::Ideal) => "ideal",
@@ -148,15 +203,53 @@ impl Design {
         }
     }
 
+    /// Canonical CLI / `ResultsDb` name, following the
+    /// `policy-placement[+lc]` grammar.  Total over the cross-product;
+    /// every pre-existing (raw-link) name is byte-identical to the enum
+    /// era, and the `+lc` suffix selects [`LinkCodec::Compressed`].
+    /// Stays `&'static str` so [`crate::coordinator::runner::RunKey`]
+    /// keys never allocate.
+    pub fn name(&self) -> &'static str {
+        match self.link_codec {
+            LinkCodec::Raw => self.base_name(),
+            LinkCodec::Compressed => match self.base_name() {
+                "uncompressed" => "uncompressed+lc",
+                "ideal" => "ideal+lc",
+                "cram-explicit" => "cram-explicit+lc",
+                "cram-explicit-rowopt" => "cram-explicit-rowopt+lc",
+                "cram-static" => "cram-static+lc",
+                "cram-dynamic" => "cram-dynamic+lc",
+                "nextline-prefetch" => "nextline-prefetch+lc",
+                "tiered-uncomp" => "tiered-uncomp+lc",
+                "tiered-cram" => "tiered-cram+lc",
+                "tiered-cram-dyn" => "tiered-cram-dyn+lc",
+                "tiered-explicit" => "tiered-explicit+lc",
+                "tiered-explicit-rowopt" => "tiered-explicit-rowopt+lc",
+                "tiered-ideal" => "tiered-ideal+lc",
+                _ => "tiered-nextline+lc",
+            },
+        }
+    }
+
     /// Inverse of [`Design::name`] — the single parser behind `--design`
-    /// (None for an unknown name).
+    /// (None for an unknown name).  Accepts the `policy-placement[+lc]`
+    /// grammar: a `+lc` suffix selects the compressed link codec over
+    /// any base composition.
     pub fn parse(name: &str) -> Option<Design> {
-        Design::all().into_iter().find(|d| d.name() == name)
+        let (base, codec) = match name.strip_suffix("+lc") {
+            Some(base) => (base, LinkCodec::Compressed),
+            None => (name, LinkCodec::Raw),
+        };
+        Self::BASE
+            .into_iter()
+            .find(|d| d.base_name() == base)
+            .map(|d| d.with_link_codec(codec))
     }
 
     /// Does the *host-side* controller pack groups in DRAM?  Tiered
     /// designs never pack on the host side — the far expander runs its
-    /// own engine (see [`crate::tier::TieredMemory`]).
+    /// own engine (see [`crate::tier::TieredMemory`]).  The link codec
+    /// is irrelevant here: it compresses transfers, never storage.
     pub fn compresses(&self) -> bool {
         self.placement == Placement::Flat
             && !matches!(self.policy, Policy::Uncompressed | Policy::NextLinePrefetch)
@@ -175,6 +268,8 @@ mod tests {
             assert_eq!(Design::parse(d.name()), Some(d), "{}", d.name());
         }
         assert_eq!(Design::parse("no-such-design"), None);
+        assert_eq!(Design::parse("no-such-design+lc"), None);
+        assert_eq!(Design::parse("+lc"), None);
     }
 
     #[test]
@@ -201,6 +296,41 @@ mod tests {
     }
 
     #[test]
+    fn raw_link_codec_is_the_default_everywhere() {
+        // the third axis defaults off: every pre-existing constructor and
+        // constant stays the same composition (and so the same RunKey)
+        assert_eq!(Design::Uncompressed.link_codec, LinkCodec::Raw);
+        assert_eq!(Design::explicit(true).link_codec, LinkCodec::Raw);
+        assert_eq!(Design::tiered(true).link_codec, LinkCodec::Raw);
+        assert_eq!(
+            Design::new(Policy::Dynamic, Placement::Tiered).link_codec,
+            LinkCodec::Raw
+        );
+        for d in Design::all().into_iter().take(14) {
+            assert!(!d.link_compressed(), "{}", d.name());
+            assert!(!d.name().ends_with("+lc"));
+        }
+    }
+
+    #[test]
+    fn lc_suffix_grammar_parses_and_prints() {
+        let d = Design::parse("tiered-cram+lc").unwrap();
+        assert_eq!(d.policy, Policy::Implicit);
+        assert_eq!(d.placement, Placement::Tiered);
+        assert_eq!(d.link_codec, LinkCodec::Compressed);
+        assert_eq!(d.name(), "tiered-cram+lc");
+        assert_eq!(
+            d.with_link_codec(LinkCodec::Raw),
+            Design::tiered(true),
+            "stripping the codec recovers the base composition"
+        );
+        // all 28 compositions exist and split 14/14 by codec
+        let all = Design::all();
+        assert_eq!(all.len(), 28);
+        assert_eq!(all.iter().filter(|d| d.link_compressed()).count(), 14);
+    }
+
+    #[test]
     fn new_compositions_exist() {
         let dyn_far = Design::parse("tiered-cram-dyn").unwrap();
         assert_eq!(dyn_far.policy, Policy::Dynamic);
@@ -208,6 +338,9 @@ mod tests {
         let expl_far = Design::parse("tiered-explicit").unwrap();
         assert_eq!(expl_far.policy, Policy::Explicit { row_opt: false });
         assert!(expl_far.is_tiered());
+        let expl_lc = Design::parse("tiered-explicit+lc").unwrap();
+        assert_eq!(expl_lc.policy, Policy::Explicit { row_opt: false });
+        assert!(expl_lc.link_compressed());
     }
 
     #[test]
@@ -222,5 +355,9 @@ mod tests {
         for d in Design::all().into_iter().filter(Design::is_tiered) {
             assert!(!d.compresses(), "{}", d.name());
         }
+        // the link codec never makes a design "compress" storage
+        assert!(!Design::Uncompressed
+            .with_link_codec(LinkCodec::Compressed)
+            .compresses());
     }
 }

@@ -2,7 +2,7 @@
 
 use crate::controller::{Design, MemoryController};
 use crate::coordinator::runner::{
-    run_m1, ResultsDb, C1_DESIGNS, Q1_DESIGNS, T1_FAR_RATIO, X1_DESIGNS,
+    run_m1, ResultsDb, C1_DESIGNS, L1_DESIGNS, Q1_DESIGNS, T1_FAR_RATIO, X1_DESIGNS,
 };
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::lit::LineInversionTable;
@@ -460,7 +460,27 @@ pub fn figure_x1(db: &ResultsDb) -> Report {
 /// evictions forced by tag exhaustion rather than the data budget (tag
 /// pressure — Touché's 2× provisioning question), both from the
 /// dynamic-CRAM compressed-LLC run.
-pub fn figure_c1(db: &ResultsDb) -> Report {
+pub fn figure_c1(db: &ResultsDb, format: OutputFormat) -> Report {
+    if format != OutputFormat::Table {
+        let mut sink = Sink::new(&["workload", "design", "compressed_llc", "speedup"]);
+        for w in all27().into_iter().chain(cache_pressure()) {
+            let Some(base) = db.get_llc(w.name, Design::Uncompressed, false) else {
+                continue;
+            };
+            for d in C1_DESIGNS {
+                for comp in [false, true] {
+                    let Some(r) = db.get_llc(w.name, d, comp) else { continue };
+                    sink.push(vec![
+                        Cell::s(w.name),
+                        Cell::s(d.name()),
+                        Cell::n(comp),
+                        Cell::n(format!("{:.4}", r.weighted_speedup(base))),
+                    ]);
+                }
+            }
+        }
+        return c1_report(sink.render(format));
+    }
     let mut body = format!(
         "{:<14} {:>9} {:>11} {:>9} {:>11} {:>8} {:>8}\n",
         "workload", "static", "static+cL", "dynamic", "dynamic+cL", "eff-cap", "tag-ev%"
@@ -525,6 +545,10 @@ pub fn figure_c1(db: &ResultsDb) -> Report {
          eff-cap and tag-ev% from the dynamic+cL run; llcfit_* are the\n \
          cache-pressure profiles whose hot set straddles the 8MB LLC)\n",
     );
+    c1_report(body)
+}
+
+fn c1_report(body: String) -> Report {
     Report {
         id: "figc1".into(),
         title: "Compressed LLC x CRAM memory compression (speedup, effective capacity)".into(),
@@ -542,7 +566,26 @@ pub fn figure_c1(db: &ResultsDb) -> Report {
 /// front of cache-miss reads, which barely moves p50 but stretches the
 /// tail; Dynamic-CRAM keeps the tail near the baseline while its
 /// co-fetches cut queue pressure on compressible workloads.
-pub fn figure_q1(db: &ResultsDb) -> Report {
+pub fn figure_q1(db: &ResultsDb, format: OutputFormat) -> Report {
+    if format != OutputFormat::Table {
+        let mut sink =
+            Sink::new(&["workload", "design", "p50_ns", "p95_ns", "p99_ns", "mean_ns"]);
+        for w in all27().into_iter().chain(latency_sensitive()) {
+            for d in Q1_DESIGNS {
+                let Some(r) = db.get(w.name, d) else { continue };
+                let ns = |p: f64| r.read_lat.percentile(p) * NS_PER_BUS_CYCLE;
+                sink.push(vec![
+                    Cell::s(w.name),
+                    Cell::s(d.name()),
+                    Cell::n(format!("{:.1}", ns(0.50))),
+                    Cell::n(format!("{:.1}", ns(0.95))),
+                    Cell::n(format!("{:.1}", ns(0.99))),
+                    Cell::n(format!("{:.1}", r.read_lat.mean() * NS_PER_BUS_CYCLE)),
+                ]);
+            }
+        }
+        return q1_report(sink.render(format));
+    }
     let mut body = format!("{:<12}", "workload");
     for d in Q1_DESIGNS {
         body.push_str(&format!(" {:>26}", format!("{} p50/p95/p99", d.name())));
@@ -583,6 +626,10 @@ pub fn figure_q1(db: &ResultsDb) -> Report {
          lat_* rows are the latency-sensitive profiles where scheduling \
          dominates)\n",
     );
+    q1_report(body)
+}
+
+fn q1_report(body: String) -> Report {
     Report {
         id: "figq1".into(),
         title: "Read-latency tail: uncompressed vs explicit metadata vs CRAM".into(),
@@ -732,8 +779,41 @@ pub fn table5(db: &ResultsDb) -> Report {
 /// Unlike the cached exhibits this one simulates on demand (per-tenant
 /// accounting is not part of the [`ResultsDb`] key space), sized by the
 /// db's [`crate::coordinator::runner::RunPlan`] like every other figure.
-pub fn figure_m1(db: &ResultsDb) -> Report {
+pub fn figure_m1(db: &ResultsDb, format: OutputFormat) -> Report {
     let (runs, qos) = run_m1(&db.plan, false);
+    if format != OutputFormat::Table {
+        // machine formats emit the per-tenant records of the main runs;
+        // the QoS contrast stays a table-only annotation
+        let mut sink = Sink::new(&[
+            "mix",
+            "design",
+            "tenant",
+            "cores",
+            "p99_ns",
+            "slowdown",
+            "interference_beats",
+            "protected",
+        ]);
+        for r in &runs {
+            for t in &r.result.tenants {
+                let slow = t
+                    .slowdown
+                    .map(|s| format!("{s:.3}"))
+                    .unwrap_or_else(|| "null".into());
+                sink.push(vec![
+                    Cell::s(r.mix),
+                    Cell::s(r.design.name()),
+                    Cell::s(t.name.clone()),
+                    Cell::n(t.cores),
+                    Cell::n(format!("{:.1}", t.read_lat.percentile(0.99) * NS_PER_BUS_CYCLE)),
+                    Cell::n(slow),
+                    Cell::n(format!("{:.0}", t.interference_beats)),
+                    Cell::n(t.protected),
+                ]);
+            }
+        }
+        return m1_report(sink.render(format));
+    }
     let mut body = String::new();
     let mut cur_mix = "";
     for r in &runs {
@@ -805,6 +885,10 @@ pub fn figure_m1(db: &ResultsDb) -> Report {
          overhead traffic attributed to this tenant by demand share; [qos] \
          marks the tenant the reservation protects)\n",
     );
+    m1_report(body)
+}
+
+fn m1_report(body: String) -> Report {
     Report {
         id: "figm1".into(),
         title: "Multi-tenant co-location: per-tenant tail, slowdown, interference, QoS".into(),
@@ -812,13 +896,220 @@ pub fn figure_m1(db: &ResultsDb) -> Report {
     }
 }
 
-/// Output format for [`figure_x1_sweep`] — the table is for humans, CSV
-/// and JSON feed plotting scripts (`--format csv|json`).
+/// Figure L1: the link-codec exhibit — each tiered composition from
+/// [`L1_DESIGNS`] with and without flit compression over the CXL link,
+/// on the far-memory-pressure workloads at the T1 capacity split.
+///
+/// For every `+lc` design the table reports its weighted speedup over
+/// the raw-link twin (the headline), the storage bytes its far
+/// transfers moved vs the bytes that actually crossed the wire, the
+/// link flit-cycles the payload-aware serializer avoided, and the
+/// wire/raw ratio split by traffic class — demand fills, metadata,
+/// writebacks, prefetch and migration.  Command flits never compress,
+/// so a ratio of 1.00 on incompressible traffic is correct, not a bug.
+pub fn figure_l1(db: &ResultsDb, format: OutputFormat) -> Report {
+    let pairs: Vec<(Design, Design)> =
+        (0..3).map(|i| (L1_DESIGNS[i], L1_DESIGNS[i + 3])).collect();
+    if format != OutputFormat::Table {
+        let mut sink = Sink::new(&[
+            "workload",
+            "design",
+            "vs_raw_twin",
+            "flits_saved",
+            "demand_raw",
+            "demand_wire",
+            "meta_raw",
+            "meta_wire",
+            "writeback_raw",
+            "writeback_wire",
+            "prefetch_raw",
+            "prefetch_wire",
+            "migration_raw",
+            "migration_wire",
+        ]);
+        for w in far_pressure() {
+            for (raw, lc) in &pairs {
+                let (Some(r_raw), Some(r_lc)) =
+                    (db.get(w.name, *raw), db.get(w.name, *lc))
+                else {
+                    continue;
+                };
+                let t = r_lc.tier.as_ref().expect("tiered run records tier stats");
+                let l = &t.link_traffic;
+                sink.push(vec![
+                    Cell::s(w.name),
+                    Cell::s(lc.name()),
+                    Cell::n(format!("{:.4}", r_lc.weighted_speedup(r_raw))),
+                    Cell::n(l.flits_saved),
+                    Cell::n(l.demand_raw_bytes),
+                    Cell::n(l.demand_wire_bytes),
+                    Cell::n(l.meta_raw_bytes),
+                    Cell::n(l.meta_wire_bytes),
+                    Cell::n(l.writeback_raw_bytes),
+                    Cell::n(l.writeback_wire_bytes),
+                    Cell::n(l.prefetch_raw_bytes),
+                    Cell::n(l.prefetch_wire_bytes),
+                    Cell::n(l.migration_raw_bytes),
+                    Cell::n(l.migration_wire_bytes),
+                ]);
+            }
+        }
+        return l1_report(sink.render(format));
+    }
+    // per-class wire/raw ratio, "-" when the class never moved a byte
+    let ratio = |wire: u64, raw: u64| {
+        if raw == 0 {
+            format!("{:>7}", "-")
+        } else {
+            format!("{:>7.2}", wire as f64 / raw as f64)
+        }
+    };
+    let mut body = String::new();
+    let mut gains: Vec<Vec<f64>> = vec![Vec::new(); pairs.len()];
+    for w in far_pressure() {
+        let mut rows = String::new();
+        for (i, (raw, lc)) in pairs.iter().enumerate() {
+            let (Some(r_raw), Some(r_lc)) = (db.get(w.name, *raw), db.get(w.name, *lc))
+            else {
+                continue;
+            };
+            let gain = r_lc.weighted_speedup(r_raw);
+            gains[i].push(gain);
+            let t = r_lc.tier.as_ref().expect("tiered run records tier stats");
+            let l = &t.link_traffic;
+            rows.push_str(&format!(
+                "{:<20} {:>8} {:>8} {:>8} {:>9}{}{}{}{}{}\n",
+                lc.name(),
+                pct(gain),
+                l.raw_bytes() / 1024,
+                l.wire_bytes() / 1024,
+                l.flits_saved,
+                ratio(l.demand_wire_bytes, l.demand_raw_bytes),
+                ratio(l.meta_wire_bytes, l.meta_raw_bytes),
+                ratio(l.writeback_wire_bytes, l.writeback_raw_bytes),
+                ratio(l.prefetch_wire_bytes, l.prefetch_raw_bytes),
+                ratio(l.migration_wire_bytes, l.migration_raw_bytes),
+            ));
+        }
+        if rows.is_empty() {
+            continue;
+        }
+        body.push_str(&format!("-- {} --\n", w.name));
+        body.push_str(&format!(
+            "{:<20} {:>8} {:>8} {:>8} {:>9}{:>7}{:>7}{:>7}{:>7}{:>7}\n",
+            "design", "vs-raw", "raw-KB", "wire-KB", "flits-svd", "dem", "meta", "wb", "pf", "migr"
+        ));
+        body.push_str(&rows);
+    }
+    body.push_str("GEOMEAN vs-raw:");
+    for (i, (_, lc)) in pairs.iter().enumerate() {
+        body.push_str(&format!(" {} {} |", lc.name(), pct(geomean_speedup(&gains[i]))));
+    }
+    body.pop();
+    body.push('\n');
+    body.push_str(
+        "(vs-raw: weighted speedup of each +lc design over its raw-link twin at \
+         the same capacity split; raw-KB/wire-KB: storage bytes the far transfers \
+         moved vs bytes that crossed the CXL wire; per-class columns are wire/raw \
+         byte ratios; flits-svd: link flit-cycles avoided by payload-aware \
+         serialization)\n",
+    );
+    l1_report(body)
+}
+
+fn l1_report(body: String) -> Report {
+    Report {
+        id: "figl1".into(),
+        title: "Link codec: flit compression over the CXL link (wire vs storage bytes)".into(),
+        body,
+    }
+}
+
+/// Output format for the machine-readable figures — the table is for
+/// humans, CSV and JSON feed plotting scripts (`--format csv|json`).
+/// Figures q1, c1, m1, l1 and the x1 sweep all render through the same
+/// row sink; table bodies stay bespoke per figure.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SweepFormat {
+pub enum OutputFormat {
     Table,
     Csv,
     Json,
+}
+
+/// One cell of a machine-readable record.  Strings are quoted in JSON;
+/// numbers (pre-formatted by the figure, so CSV and JSON agree to the
+/// digit) pass through verbatim.
+enum Cell {
+    Str(String),
+    Num(String),
+}
+
+impl Cell {
+    fn s(v: impl Into<String>) -> Cell {
+        Cell::Str(v.into())
+    }
+    fn n(v: impl std::fmt::Display) -> Cell {
+        Cell::Num(v.to_string())
+    }
+}
+
+/// The shared sink behind every `--format`-aware figure: named columns
+/// plus rows of cells, rendered as a CSV header + lines or a JSON array
+/// of flat objects.
+struct Sink {
+    columns: &'static [&'static str],
+    rows: Vec<Vec<Cell>>,
+}
+
+impl Sink {
+    fn new(columns: &'static [&'static str]) -> Self {
+        Sink { columns, rows: Vec::new() }
+    }
+
+    fn push(&mut self, row: Vec<Cell>) {
+        debug_assert_eq!(row.len(), self.columns.len());
+        self.rows.push(row);
+    }
+
+    fn render(&self, format: OutputFormat) -> String {
+        match format {
+            OutputFormat::Csv => {
+                let mut s = self.columns.join(",");
+                s.push('\n');
+                for row in &self.rows {
+                    let cells: Vec<&str> = row
+                        .iter()
+                        .map(|c| match c {
+                            Cell::Str(v) | Cell::Num(v) => v.as_str(),
+                        })
+                        .collect();
+                    s.push_str(&cells.join(","));
+                    s.push('\n');
+                }
+                s
+            }
+            OutputFormat::Json => {
+                let objs: Vec<String> = self
+                    .rows
+                    .iter()
+                    .map(|row| {
+                        let fields: Vec<String> = self
+                            .columns
+                            .iter()
+                            .zip(row)
+                            .map(|(k, c)| match c {
+                                Cell::Str(v) => format!("{k:?}:{v:?}"),
+                                Cell::Num(v) => format!("{k:?}:{v}"),
+                            })
+                            .collect();
+                        format!("{{{}}}", fields.join(","))
+                    })
+                    .collect();
+                format!("[\n  {}\n]\n", objs.join(",\n  "))
+            }
+            OutputFormat::Table => unreachable!("table bodies are bespoke per figure"),
+        }
+    }
 }
 
 /// The Figure X1 far-ratio sweep: each tiered composition's weighted
@@ -826,7 +1117,7 @@ pub enum SweepFormat {
 /// a break-even line per composition (the largest swept ratio where the
 /// geomean still clears 100%).  Requires the sweep runs to be cached —
 /// see [`ResultsDb::run_x1_sweep`].
-pub fn figure_x1_sweep(db: &ResultsDb, ratios: &[f64], format: SweepFormat) -> Report {
+pub fn figure_x1_sweep(db: &ResultsDb, ratios: &[f64], format: OutputFormat) -> Report {
     let tiered: Vec<(Design, &str)> = X1_DESIGNS
         .into_iter()
         .filter(Design::is_tiered)
@@ -854,58 +1145,33 @@ pub fn figure_x1_sweep(db: &ResultsDb, ratios: &[f64], format: SweepFormat) -> R
     }
     let mut body = String::new();
     match format {
-        SweepFormat::Csv => {
-            body.push_str("far_ratio,workload,design,speedup\n");
+        OutputFormat::Csv | OutputFormat::Json => {
+            let mut sink = Sink::new(&["far_ratio", "workload", "design", "speedup"]);
             for (ri, &r) in ratios.iter().enumerate() {
                 for w in far_pressure() {
                     for (d, _) in &tiered {
                         if let Some(s) = db.speedup_far(w.name, *d, r) {
-                            body.push_str(&format!(
-                                "{r},{},{},{s:.4}\n",
-                                w.name,
-                                d.name()
-                            ));
+                            sink.push(vec![
+                                Cell::n(r),
+                                Cell::s(w.name),
+                                Cell::s(d.name()),
+                                Cell::n(format!("{s:.4}")),
+                            ]);
                         }
                     }
                 }
                 for (di, (d, _)) in tiered.iter().enumerate() {
-                    body.push_str(&format!(
-                        "{r},GEOMEAN,{},{:.4}\n",
-                        d.name(),
-                        geo[di][ri]
-                    ));
+                    sink.push(vec![
+                        Cell::n(r),
+                        Cell::s("GEOMEAN"),
+                        Cell::s(d.name()),
+                        Cell::n(format!("{:.4}", geo[di][ri])),
+                    ]);
                 }
             }
+            body = sink.render(format);
         }
-        SweepFormat::Json => {
-            let mut rows = Vec::new();
-            for (ri, &r) in ratios.iter().enumerate() {
-                for w in far_pressure() {
-                    for (d, _) in &tiered {
-                        if let Some(s) = db.speedup_far(w.name, *d, r) {
-                            rows.push(format!(
-                                "{{\"far_ratio\":{r},\"workload\":\"{}\",\
-                                 \"design\":\"{}\",\"speedup\":{s:.4}}}",
-                                w.name,
-                                d.name()
-                            ));
-                        }
-                    }
-                }
-                for (di, (d, _)) in tiered.iter().enumerate() {
-                    rows.push(format!(
-                        "{{\"far_ratio\":{r},\"workload\":\"GEOMEAN\",\
-                         \"design\":\"{}\",\"speedup\":{:.4}}}",
-                        d.name(),
-                        geo[di][ri]
-                    ));
-                }
-            }
-            body.push_str("[\n  ");
-            body.push_str(&rows.join(",\n  "));
-            body.push_str("\n]\n");
-        }
-        SweepFormat::Table => {
+        OutputFormat::Table => {
             for (ri, &r) in ratios.iter().enumerate() {
                 body.push_str(&format!("-- far-ratio {r} --\n"));
                 body.push_str(&format!("{:<12}", "workload"));
@@ -957,24 +1223,34 @@ pub fn figure_x1_sweep(db: &ResultsDb, ratios: &[f64], format: SweepFormat) -> R
     }
 }
 
-/// All figure/table ids, in paper order (figt1, figq1, figc1, figx1 and
-/// figm1 are this repo's tiered-memory, tail-latency, compressed-LLC,
-/// composed-design and multi-tenant extensions, not paper exhibits).
-pub const ALL_IDS: [&str; 19] = [
+/// All figure/table ids, in paper order (figt1, figq1, figc1, figx1,
+/// figl1 and figm1 are this repo's tiered-memory, tail-latency,
+/// compressed-LLC, composed-design, link-codec and multi-tenant
+/// extensions, not paper exhibits).
+pub const ALL_IDS: [&str; 20] = [
     "fig3", "fig4", "fig7", "fig8", "fig12", "fig14", "fig15", "fig16", "fig18",
-    "fig19", "fig20", "figt1", "figq1", "figc1", "figx1", "figm1", "table2",
-    "table3", "table4",
+    "fig19", "fig20", "figt1", "figq1", "figc1", "figx1", "figl1", "figm1",
+    "table2", "table3", "table4",
 ];
 
 /// Produce one report by id (None for an unknown id).
 pub fn report(db: &ResultsDb, id: &str) -> Option<Report> {
+    report_fmt(db, id, OutputFormat::Table)
+}
+
+/// Produce one report by id in the requested [`OutputFormat`].  Figures
+/// without a machine-readable form render their table regardless of the
+/// format ([`figure_x1_sweep`] has its own entry point because of the
+/// ratio argument).
+pub fn report_fmt(db: &ResultsDb, id: &str, format: OutputFormat) -> Option<Report> {
     Some(match id {
         "fig3" => figure3(db),
         "figt1" => figure_t1(db),
-        "figq1" => figure_q1(db),
-        "figc1" => figure_c1(db),
+        "figq1" => figure_q1(db, format),
+        "figc1" => figure_c1(db, format),
         "figx1" => figure_x1(db),
-        "figm1" => figure_m1(db),
+        "figl1" => figure_l1(db, format),
+        "figm1" => figure_m1(db, format),
         "fig4" => figure4(),
         "fig7" => figure7(db),
         "fig8" => figure8(db),
@@ -1045,11 +1321,21 @@ mod tests {
             threads: 4,
         });
         db.run_q1(false);
-        let r = figure_q1(&db);
+        let r = figure_q1(&db, OutputFormat::Table);
         assert!(r.body.contains("lat_chase"), "{}", r.body);
         assert!(r.body.contains("p50/p95/p99"));
         assert!(r.body.contains("MEAN p99"));
         assert!(report(&db, "figq1").is_some());
+        let c = figure_q1(&db, OutputFormat::Csv);
+        assert!(
+            c.body.starts_with("workload,design,p50_ns,p95_ns,p99_ns,mean_ns\n"),
+            "{}",
+            c.body
+        );
+        assert!(c.body.contains("lat_chase,"), "{}", c.body);
+        let j = report_fmt(&db, "figq1", OutputFormat::Json).unwrap();
+        assert!(j.body.trim_start().starts_with('['), "{}", j.body);
+        assert!(j.body.contains("\"p99_ns\":"), "{}", j.body);
     }
 
     #[test]
@@ -1060,11 +1346,19 @@ mod tests {
             threads: 4,
         });
         db.run_c1(false);
-        let r = figure_c1(&db);
+        let r = figure_c1(&db, OutputFormat::Table);
         assert!(r.body.contains("llcfit_stream"), "{}", r.body);
         assert!(r.body.contains("eff-cap"));
         assert!(r.body.contains("GEOMEAN"));
         assert!(report(&db, "figc1").is_some());
+        let c = figure_c1(&db, OutputFormat::Csv);
+        assert!(
+            c.body.starts_with("workload,design,compressed_llc,speedup\n"),
+            "{}",
+            c.body
+        );
+        assert!(c.body.contains(",true,"), "{}", c.body);
+        assert!(c.body.contains(",false,"), "{}", c.body);
     }
 
     #[test]
@@ -1109,16 +1403,45 @@ mod tests {
         });
         let ratios = [0.25, 0.75];
         db.run_x1_sweep(&ratios, false);
-        let t = figure_x1_sweep(&db, &ratios, SweepFormat::Table);
+        let t = figure_x1_sweep(&db, &ratios, OutputFormat::Table);
         assert!(t.body.contains("-- far-ratio 0.25 --"), "{}", t.body);
         assert!(t.body.contains("break-even"), "{}", t.body);
-        let c = figure_x1_sweep(&db, &ratios, SweepFormat::Csv);
+        let c = figure_x1_sweep(&db, &ratios, OutputFormat::Csv);
         assert!(c.body.starts_with("far_ratio,workload,design,speedup\n"));
         assert!(c.body.contains("0.25,cap_stream,tiered-cram,"), "{}", c.body);
         assert!(c.body.contains(",GEOMEAN,tiered-cram-dyn,"), "{}", c.body);
-        let j = figure_x1_sweep(&db, &ratios, SweepFormat::Json);
+        let j = figure_x1_sweep(&db, &ratios, OutputFormat::Json);
         assert!(j.body.trim_start().starts_with('['), "{}", j.body);
         assert!(j.body.contains("\"far_ratio\":0.75"), "{}", j.body);
+        assert!(j.body.trim_end().ends_with(']'), "{}", j.body);
+    }
+
+    #[test]
+    fn figure_l1_reports_link_vs_storage_per_class() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 20_000,
+            seed: 21,
+            threads: 4,
+        });
+        db.run_l1(false);
+        let r = figure_l1(&db, OutputFormat::Table);
+        assert!(r.body.contains("-- cap_stream --"), "{}", r.body);
+        assert!(r.body.contains("tiered-cram+lc"), "{}", r.body);
+        assert!(r.body.contains("tiered-explicit+lc"), "{}", r.body);
+        assert!(r.body.contains("flits-svd"), "{}", r.body);
+        assert!(r.body.contains("GEOMEAN vs-raw:"), "{}", r.body);
+        assert!(report(&db, "figl1").is_some());
+        let c = figure_l1(&db, OutputFormat::Csv);
+        assert!(
+            c.body
+                .starts_with("workload,design,vs_raw_twin,flits_saved,demand_raw,demand_wire,"),
+            "{}",
+            c.body
+        );
+        assert!(c.body.contains("cap_stream,tiered-cram+lc,"), "{}", c.body);
+        let j = report_fmt(&db, "figl1", OutputFormat::Json).unwrap();
+        assert!(j.body.trim_start().starts_with('['), "{}", j.body);
+        assert!(j.body.contains("\"demand_wire\":"), "{}", j.body);
         assert!(j.body.trim_end().ends_with(']'), "{}", j.body);
     }
 

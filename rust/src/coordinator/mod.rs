@@ -10,5 +10,5 @@ pub mod bench;
 pub mod figures;
 pub mod runner;
 
-pub use figures::{all_reports, report, Report};
+pub use figures::{all_reports, report, report_fmt, OutputFormat, Report};
 pub use runner::{ResultsDb, RunPlan};

@@ -3,7 +3,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;
 
-use crate::controller::{Design, Placement, Policy};
+use crate::controller::{Design, LinkCodec, Placement, Policy};
 use crate::dram::SchedConfig;
 use crate::sim::{simulate, simulate_tenants, SimConfig};
 use crate::stats::SimResult;
@@ -135,6 +135,21 @@ pub const X1_DESIGNS: [Design; 6] = [
     Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered),
 ];
 
+/// The Figure L1 matrix: {static, dynamic, explicit} tiered designs,
+/// each with a raw link and with the compressed link (`+lc`) — the
+/// third-axis exhibit.  Rows pair each design with its `+lc` twin so the
+/// figure answers where link compression still pays once storage
+/// compression has already shrunk the transfers.
+pub const L1_DESIGNS: [Design; 6] = [
+    Design::tiered(true), // Implicit × Tiered
+    Design::new(Policy::Dynamic, Placement::Tiered),
+    Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered),
+    Design::tiered(true).with_link_codec(LinkCodec::Compressed),
+    Design::new(Policy::Dynamic, Placement::Tiered).with_link_codec(LinkCodec::Compressed),
+    Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered)
+        .with_link_codec(LinkCodec::Compressed),
+];
+
 /// The designs the Figure M1 multi-tenant exhibit compares: uncompressed
 /// sharing, flat Dynamic-CRAM, and tiered Dynamic-CRAM at the T1 split.
 pub const M1_DESIGNS: [Design; 3] = [
@@ -202,22 +217,21 @@ pub fn run_m1(plan: &RunPlan, progress: bool) -> (Vec<M1Run>, Option<M1Qos>) {
             scope.spawn(|| loop {
                 let job = { queue.lock().unwrap().pop_front() };
                 let Some((idx, job)) = job else { break };
-                let mut cfg = SimConfig {
-                    design: job.design,
-                    seed: plan.seed,
-                    ..Default::default()
-                }
-                .with_insts(plan.insts_per_core);
-                cfg.warmup_insts = plan.insts_per_core * 2;
+                let mut b = SimConfig::builder()
+                    .design(job.design)
+                    .seed(plan.seed)
+                    .insts(plan.insts_per_core)
+                    .warmup(plan.insts_per_core * 2);
                 if job.design.is_tiered() {
-                    cfg = cfg.with_far_ratio(T1_FAR_RATIO);
+                    b = b.far_ratio(T1_FAR_RATIO);
                 }
                 if job.reserved > 0 {
-                    cfg = cfg.with_sched(SchedConfig {
+                    b = b.sched(SchedConfig {
                         reserved_slots: job.reserved,
                         ..Default::default()
                     });
                 }
+                let cfg = b.build();
                 let specs = parse_tenants(job.spec, cfg.cores).expect("m1 mixes parse");
                 let r = simulate_tenants(&specs, &cfg);
                 out.lock().unwrap().push((idx, r));
@@ -300,7 +314,27 @@ impl ResultsDb {
         jobs.extend(Self::q1_extra_jobs());
         jobs.extend(Self::c1_jobs());
         jobs.extend(Self::x1_jobs());
+        jobs.extend(Self::l1_jobs());
         self.run_jobs(jobs, progress);
+    }
+
+    /// The Figure L1 matrix: far-memory-pressure workloads × the
+    /// raw/compressed-link pairs of [`L1_DESIGNS`], plus the flat
+    /// uncompressed baseline for absolute speedups.
+    fn l1_jobs() -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for w in far_pressure() {
+            jobs.push(Job::new(w.clone(), Design::Uncompressed, 2));
+            for d in L1_DESIGNS {
+                jobs.push(Job::new(w.clone(), d, 2));
+            }
+        }
+        jobs
+    }
+
+    /// Run the Figure L1 matrix only.
+    pub fn run_l1(&mut self, progress: bool) {
+        self.run_jobs(Self::l1_jobs(), progress);
     }
 
     /// The Figure C1 matrix: the 27 suite plus the cache-pressure set,
@@ -504,23 +538,22 @@ impl ResultsDb {
                     };
                     let insts = ((plan.insts_per_core as f64 * 30.0 / apki) as u64)
                         .clamp(plan.insts_per_core / 4, plan.insts_per_core * 6);
-                    let mut cfg = SimConfig {
-                        design: job.design,
-                        seed: plan.seed,
-                        ..Default::default()
-                    }
-                    .with_insts(insts)
-                    .with_channels(job.channels);
-                    if let Some(r) = job.far_ratio {
-                        cfg = cfg.with_far_ratio(r);
-                    }
-                    if job.llc_comp {
-                        cfg = cfg.with_compressed_llc();
-                    }
                     // 2x warmup: the LLC, memory layout AND the Dynamic
                     // gate must all reach steady state before measurement
                     // (the paper's 1B-inst slices warm up for free).
-                    cfg.warmup_insts = insts * 2;
+                    let mut b = SimConfig::builder()
+                        .design(job.design)
+                        .seed(plan.seed)
+                        .insts(insts)
+                        .warmup(insts * 2)
+                        .channels(job.channels);
+                    if let Some(r) = job.far_ratio {
+                        b = b.far_ratio(r);
+                    }
+                    if job.llc_comp {
+                        b = b.compressed_llc();
+                    }
+                    let cfg = b.build();
                     let r = simulate(&job.profile, &cfg);
                     out.lock().unwrap().push((job.key(), r));
                     let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
@@ -698,6 +731,50 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn l1_matrix_pairs_each_design_with_its_lc_twin() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 8_000,
+            seed: 6,
+            threads: 4,
+        });
+        db.run_l1(false);
+        assert_eq!(db.len(), far_pressure().len() * (1 + L1_DESIGNS.len()));
+        for w in far_pressure() {
+            for d in L1_DESIGNS {
+                let r = db.get(w.name, d).expect("l1 result cached");
+                assert_eq!(r.design, d.name());
+                let t = r.tier.as_ref().expect("l1 designs are tiered");
+                // conservation: wire bytes never exceed raw bytes, and a
+                // raw link moves every byte at full width
+                assert!(
+                    t.link_traffic.wire_bytes() <= t.link_traffic.raw_bytes(),
+                    "{} {}", w.name, d.name()
+                );
+                if !d.link_compressed() {
+                    assert_eq!(
+                        t.link_traffic.wire_bytes(),
+                        t.link_traffic.raw_bytes(),
+                        "{} {}", w.name, d.name()
+                    );
+                    assert_eq!(t.link_traffic.flits_saved, 0, "{} {}", w.name, d.name());
+                }
+            }
+        }
+        // across the matrix, link compression must actually save traffic
+        // (per-run: wire ≤ raw is asserted above for every composition)
+        let mut saved = 0u64;
+        for w in far_pressure() {
+            for i in 0..3 {
+                let lc = db.get(w.name, L1_DESIGNS[i + 3]).unwrap();
+                let tl = lc.tier.as_ref().unwrap();
+                saved += tl.link_traffic.raw_bytes() - tl.link_traffic.wire_bytes();
+                assert!(db.speedup(w.name, L1_DESIGNS[i + 3]).is_some());
+            }
+        }
+        assert!(saved > 0, "link compression must save bytes somewhere in the matrix");
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! recompressing the unmodified lines of a group on every dirty eviction.
 
 use crate::compress::{hybrid, PACK_BUDGET};
-use crate::controller::CramEngine;
+use crate::controller::{CramEngine, LinkCodec};
 use crate::cram::group::Csi;
 use crate::cram::lit::{LineInversionTable, LitInsert};
 use crate::cram::marker::{LineKind, MarkerEngine};
@@ -69,15 +69,41 @@ pub struct CompressedStore {
 
 impl CompressedStore {
     pub fn new(seed: u64) -> Self {
+        Self::with_link_codec(seed, LinkCodec::Raw)
+    }
+
+    /// Store whose layout engine carries the design's link codec — the
+    /// same plumbing the host controller and far-tier expander use, so a
+    /// byte-accurate run can answer wire-size questions consistently.
+    pub fn with_link_codec(seed: u64, link_codec: LinkCodec) -> Self {
         Self {
             phys: PagedArena::new(CacheLine::zero()),
             markers: MarkerEngine::new(seed),
             lit: LineInversionTable::default(),
-            layout: CramEngine::new(),
+            layout: CramEngine::with_link_codec(link_codec),
             memo: PagedArena::new((0, 0)),
             memo_hits: 0,
             memo_misses: 0,
         }
+    }
+
+    /// Bytes a transfer of physical location `loc` puts on the link under
+    /// the store's codec.  Byte-accurate where the timing model uses the
+    /// size oracle: under [`LinkCodec::Compressed`] the payload is the
+    /// line's actual hybrid-compressed size (full width when the content
+    /// is incompressible or the location holds a packed bitstream, which
+    /// already fills the line).
+    pub fn wire_bytes_of(&mut self, loc: u64) -> u64 {
+        if self.layout.link_codec() == LinkCodec::Raw {
+            return 64;
+        }
+        let csi = self.csi_of(loc);
+        let slot = (loc - group_base(loc)) as u8;
+        if csi.colocated(slot).len() != 1 {
+            return 64; // packed bitstream (already at the pack budget) or IL
+        }
+        let line = self.read_phys(loc);
+        u64::from(self.memo_size(loc, &line)).min(64)
     }
 
     /// Ground-truth CSI of the group containing `line` (tests/baselines).
@@ -447,6 +473,40 @@ mod tests {
         let (csi, _) = store.write_group_auto(0, &dirtied);
         assert_eq!(store.memo_hits, 7);
         assert_eq!(csi, Csi::from_sizes(sizes));
+    }
+
+    #[test]
+    fn wire_bytes_follow_the_stores_codec() {
+        let mut raw = CompressedStore::new(60);
+        let mut lc = CompressedStore::with_link_codec(60, LinkCodec::Compressed);
+        let mut rng = Rng::new(11);
+        let lines = [
+            incompressible_line(&mut rng),
+            incompressible_line(&mut rng),
+            compressible_line(1),
+            compressible_line(2),
+        ];
+        let (csi, _) = raw.write_group_auto(0, &lines);
+        lc.write_group_auto(0, &lines);
+        assert_eq!(csi, Csi::PairCd);
+        // raw codec: every transfer is full width
+        for loc in 0..4 {
+            assert_eq!(raw.wire_bytes_of(loc), 64);
+        }
+        // compressed codec: raw-resident incompressible lines stay full
+        // width, the packed bitstream fills its line, and nothing exceeds it
+        assert_eq!(lc.wire_bytes_of(0), 64);
+        assert_eq!(lc.wire_bytes_of(2), 64, "packed slot is a full bitstream");
+        // a compressible raw-resident line shrinks: re-home C,D raw
+        let raw_group = [
+            incompressible_line(&mut rng),
+            incompressible_line(&mut rng),
+            compressible_line(3),
+            compressible_line(4),
+        ];
+        let mut lc2 = CompressedStore::with_link_codec(61, LinkCodec::Compressed);
+        lc2.write_group(8, &raw_group, Csi::Uncompressed);
+        assert!(lc2.wire_bytes_of(10) < 64, "compressible line shrinks on the wire");
     }
 
     #[test]

@@ -2,11 +2,13 @@
 //!
 //! ```text
 //! repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]
-//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|m1> [--insts N]
+//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1> [--insts N]
+//! repro figure <q1|c1|l1|m1> --format table|csv|json
 //! repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]
 //! repro table <2|3|4|5> [--insts N]
 //! repro sim --workload W --design D [--insts N] [--channels C]
-//!           [--far-ratio R] [--trace FILE] [--llc-compressed]
+//!           [--far-ratio R] [--link-codec raw|compressed] [--trace FILE]
+//!           [--llc-compressed]
 //! repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N]
 //! repro analyze [--artifact PATH] [--workload W] [--groups N]
 //! repro list
@@ -36,6 +38,15 @@
 //! becomes the break-even sweep: each tiered composition re-run at every
 //! split, with `--format csv|json` for machine-readable output.
 //!
+//! `figure l1` is the link-codec exhibit the third design axis opened:
+//! each tiered composition with a raw vs compressed CXL link (`+lc`
+//! designs run the size-only compressor pass on the TX side so
+//! transfers emit fewer flits), reporting the speedup over the raw-link
+//! twin and the wire-vs-storage byte breakdown per traffic class.
+//! `--link-codec compressed` on `repro sim` flips the same axis on any
+//! tiered design (flat placements have no serialized link, so it is a
+//! structural no-op there).
+//!
 //! `figure m1` is the multi-tenant exhibit: canonical co-location mixes
 //! under {uncompressed, cram-dynamic, tiered-cram-dyn}, reporting each
 //! tenant's p99 read latency, slowdown vs running alone, compression-
@@ -48,7 +59,7 @@
 
 use std::collections::HashMap;
 
-use cram::controller::Design;
+use cram::controller::{Design, LinkCodec};
 use cram::coordinator::figures;
 use cram::coordinator::runner::{ResultsDb, RunPlan};
 use cram::sim::{simulate, SimConfig};
@@ -119,6 +130,15 @@ fn main() {
             };
             let id = if cmd == "figure" { format!("fig{n}") } else { format!("table{n}") };
             let mut db = ResultsDb::new(plan_from(&flags));
+            let format = match flags.get("format").map(String::as_str) {
+                None | Some("table") => figures::OutputFormat::Table,
+                Some("csv") => figures::OutputFormat::Csv,
+                Some("json") => figures::OutputFormat::Json,
+                Some(f) => usage(&format!("unknown --format {f}")),
+            };
+            // machine formats get the bare body (no banner) and silent
+            // progress so stdout pipes clean
+            let human = format == figures::OutputFormat::Table;
             // `figure x1 --far-ratio R1,R2,...`: the break-even sweep
             // instead of the fixed-split cross-product
             if id == "figx1" && flags.contains_key("far-ratio") {
@@ -129,16 +149,8 @@ fn main() {
                 if ratios.is_empty() {
                     usage("--far-ratio needs at least one split");
                 }
-                let format = match flags.get("format").map(String::as_str) {
-                    None | Some("table") => figures::SweepFormat::Table,
-                    Some("csv") => figures::SweepFormat::Csv,
-                    Some("json") => figures::SweepFormat::Json,
-                    Some(f) => usage(&format!("unknown --format {f}")),
-                };
-                let human = format == figures::SweepFormat::Table;
                 db.run_x1_sweep(&ratios, human);
                 let r = figures::figure_x1_sweep(&db, &ratios, format);
-                // machine formats get the bare body so stdout pipes clean
                 if human {
                     print!("{}", r.render());
                 } else {
@@ -151,8 +163,9 @@ fn main() {
                 "fig4" | "table3" | "figm1" => {}
                 "figt1" => db.run_tiered_t1(true),
                 "figx1" => db.run_x1(true),
-                "figq1" => db.run_q1(true),
-                "figc1" => db.run_c1(true),
+                "figq1" => db.run_q1(human),
+                "figc1" => db.run_c1(human),
+                "figl1" => db.run_l1(human),
                 "fig18" => db.run_designs(&[Design::Uncompressed, Design::Dynamic], true, true),
                 "table4" => db.run_channel_sweep(true),
                 "fig3" => db.run_designs(
@@ -194,8 +207,9 @@ fn main() {
                 ),
                 _ => usage(&format!("unknown exhibit {id}")),
             }
-            match figures::report(&db, &id) {
-                Some(r) => print!("{}", r.render()),
+            match figures::report_fmt(&db, &id, format) {
+                Some(r) if human => print!("{}", r.render()),
+                Some(r) => print!("{}", r.body),
                 None => usage(&format!("unknown exhibit {id}")),
             }
         }
@@ -220,24 +234,34 @@ fn main() {
                 Some(d) => d,
                 None => usage(&format!("unknown design {d}")),
             };
-            let mut cfg = SimConfig::default().with_design(design);
+            let mut b = SimConfig::builder().design(design);
+            if let Some(lc) = flags.get("link-codec") {
+                b = b.link_codec(match lc.as_str() {
+                    "raw" => LinkCodec::Raw,
+                    "compressed" => LinkCodec::Compressed,
+                    other => usage(&format!("unknown --link-codec {other}")),
+                });
+            }
             if let Some(n) = flags.get("insts") {
-                cfg = cfg.with_insts(n.parse().expect("--insts"));
+                b = b.insts(n.parse().expect("--insts"));
             }
             if let Some(c) = flags.get("channels") {
-                cfg = cfg.with_channels(c.parse().expect("--channels"));
+                b = b.channels(c.parse().expect("--channels"));
             }
             if let Some(r) = flags.get("far-ratio") {
-                cfg = cfg.with_far_ratio(r.parse().expect("--far-ratio"));
+                b = b.far_ratio(r.parse().expect("--far-ratio"));
             }
             if let Some(path) = flags.get("trace") {
-                cfg.trace = Some(
+                b = b.trace(
                     cram::workloads::TraceReplay::from_file(path).expect("load trace file"),
                 );
             }
             if flags.contains_key("llc-compressed") {
-                cfg = cfg.with_compressed_llc();
+                b = b.compressed_llc();
             }
+            let cfg = b.build();
+            let design = cfg.design;
+            let d = design.name();
             let base_cfg = SimConfig { design: Design::Uncompressed, ..cfg.clone() };
             let r = simulate(&profile, &cfg);
             let base = simulate(&profile, &base_cfg);
@@ -297,6 +321,21 @@ fn main() {
                     "  link flits tx/rx   {} / {}  (waits {} / {} cycles)",
                     t.link.tx_flits, t.link.rx_flits,
                     t.link.tx_wait_cycles, t.link.rx_wait_cycles
+                );
+                let lt = &t.link_traffic;
+                println!(
+                    "  link bytes         {} raw -> {} wire ({} flit-cycles saved)",
+                    lt.raw_bytes(),
+                    lt.wire_bytes(),
+                    lt.flits_saved
+                );
+                println!(
+                    "  wire/raw by class  demand {} meta {} wb {} pf {} migr {}",
+                    ratio_str(lt.demand_wire_bytes, lt.demand_raw_bytes),
+                    ratio_str(lt.meta_wire_bytes, lt.meta_raw_bytes),
+                    ratio_str(lt.writeback_wire_bytes, lt.writeback_raw_bytes),
+                    ratio_str(lt.prefetch_wire_bytes, lt.prefetch_raw_bytes),
+                    ratio_str(lt.migration_wire_bytes, lt.migration_raw_bytes),
                 );
                 println!("  far prefetches     {}", t.far_prefetch_installs);
                 assert_eq!(
@@ -460,7 +499,7 @@ fn main() {
             }
         }
         "list" => {
-            println!("designs (policy x placement compositions):");
+            println!("designs (policy x placement x link-codec compositions):");
             for d in Design::all() {
                 println!("  {}", d.name());
             }
@@ -493,25 +532,26 @@ fn sim_tenants(spec: &str, flags: &HashMap<String, String>) {
         Some(d) => d,
         None => usage(&format!("unknown design {d}")),
     };
-    let mut cfg = SimConfig::default().with_design(design);
+    let mut b = SimConfig::builder().design(design);
     if let Some(n) = flags.get("insts") {
-        cfg = cfg.with_insts(n.parse().expect("--insts"));
+        b = b.insts(n.parse().expect("--insts"));
     }
     if let Some(c) = flags.get("channels") {
-        cfg = cfg.with_channels(c.parse().expect("--channels"));
+        b = b.channels(c.parse().expect("--channels"));
     }
     if let Some(r) = flags.get("far-ratio") {
-        cfg = cfg.with_far_ratio(r.parse().expect("--far-ratio"));
+        b = b.far_ratio(r.parse().expect("--far-ratio"));
     }
     if flags.contains_key("llc-compressed") {
-        cfg = cfg.with_compressed_llc();
+        b = b.compressed_llc();
     }
     if let Some(n) = flags.get("qos-slots") {
-        cfg = cfg.with_sched(cram::dram::SchedConfig {
+        b = b.sched(cram::dram::SchedConfig {
             reserved_slots: n.parse().expect("--qos-slots"),
             ..Default::default()
         });
     }
+    let cfg = b.build();
     let specs = match cram::workloads::parse_tenants(spec, cfg.cores) {
         Ok(s) => s,
         Err(e) => usage(&format!("bad --tenants spec: {e}")),
@@ -559,12 +599,22 @@ fn sim_tenants(spec: &str, flags: &HashMap<String, String>) {
     assert_eq!(sum, r.bw.total(), "per-tenant traffic must sum to the total");
 }
 
+/// Per-class wire/raw byte ratio for `repro sim` output ("-" when the
+/// class never moved a byte).
+fn ratio_str(wire: u64, raw: u64) -> String {
+    if raw == 0 {
+        "-".into()
+    } else {
+        format!("{:.2}", wire as f64 / raw as f64)
+    }
+}
+
 fn usage(msg: &str) -> ! {
     if !msg.is_empty() {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|m1> [--insts N]\n  repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--trace FILE] [--llc-compressed]\n  repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N] [--insts N]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement compositions (repro list prints all):\ntiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/tiered-explicit\n(figure x1) — near DDR + far CXL expander; --far-ratio R puts fraction R\nof capacity behind the link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product; with --far-ratio R1,R2,... it\nsweeps the capacity split to each tiered composition's break-even\n(--format csv|json for machine-readable output)\nfigure m1: multi-tenant co-location mixes x {uncompressed, cram-dynamic,\ntiered-cram-dyn} — per-tenant p99, slowdown-vs-alone, interference beats,\nJain fairness, and a QoS read-slot-reservation contrast\nsim --tenants: one co-location (workload[:cores][:qos], comma-separated;\n:qos marks the protected tenant, --qos-slots N reserves N of 32 read slots)\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1> [--insts N]\n  repro figure <q1|c1|l1|m1> --format table|csv|json\n  repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--link-codec raw|compressed] [--trace FILE] [--llc-compressed]\n  repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N] [--insts N]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement x link-codec compositions (repro list\nprints all 28): tiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/\ntiered-explicit (figure x1) — near DDR + far CXL expander; --far-ratio R\nputs fraction R of capacity behind the link; a +lc suffix (or --link-codec\ncompressed on repro sim) compresses flits over that link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product; with --far-ratio R1,R2,... it\nsweeps the capacity split to each tiered composition's break-even\nfigure l1: raw vs compressed link x {static, dynamic, explicit} tiered\ndesigns over the far-pressure suite — speedup vs the raw-link twin plus\nthe wire-vs-storage byte breakdown per traffic class\nfigure m1: multi-tenant co-location mixes x {uncompressed, cram-dynamic,\ntiered-cram-dyn} — per-tenant p99, slowdown-vs-alone, interference beats,\nJain fairness, and a QoS read-slot-reservation contrast\n--format csv|json on figures q1/c1/l1/m1 and the x1 sweep emits the bare\nmachine-readable rows for plotting scripts\nsim --tenants: one co-location (workload[:cores][:qos], comma-separated;\n:qos marks the protected tenant, --qos-slots N reserves N of 32 read slots)\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
     );
     std::process::exit(2);
 }

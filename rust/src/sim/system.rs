@@ -97,6 +97,42 @@ impl Default for SimConfig {
 }
 
 impl SimConfig {
+    /// Start a typed builder over the paper defaults.  The builder is the
+    /// one construction path that validates the composition before a run
+    /// exists ([`SimConfigBuilder::build`]), replacing ad-hoc field
+    /// mutation scattered across the runner, the CLI and tests.
+    pub fn builder() -> SimConfigBuilder {
+        SimConfigBuilder { cfg: SimConfig::default() }
+    }
+
+    /// Check cross-field consistency.  Called by
+    /// [`SimConfigBuilder::build`]; callers that assemble a `SimConfig` by
+    /// hand can invoke it directly.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cores == 0 {
+            return Err("cores must be >= 1".into());
+        }
+        if self.insts_per_core == 0 {
+            return Err("insts_per_core must be >= 1".into());
+        }
+        if self.llp_entries == 0 {
+            return Err("llp_entries must be >= 1".into());
+        }
+        if self.meta_cache_bytes < 64 {
+            return Err("meta_cache_bytes must hold at least one 64B line".into());
+        }
+        if !(0.0..=1.0).contains(&self.tier.far_ratio) {
+            return Err(format!(
+                "far_ratio must be in [0, 1], got {}",
+                self.tier.far_ratio
+            ));
+        }
+        if self.dram.channels == 0 {
+            return Err("dram channels must be >= 1".into());
+        }
+        Ok(())
+    }
+
     pub fn with_design(mut self, d: Design) -> Self {
         self.design = d;
         self
@@ -138,6 +174,119 @@ impl SimConfig {
     pub fn with_llc_knobs(mut self, knobs: CompressedLlcConfig) -> Self {
         self.llc_compressed = Some(knobs);
         self
+    }
+}
+
+/// Typed builder over [`SimConfig`] — see [`SimConfig::builder`].
+///
+/// Every setter returns `Self`; [`SimConfigBuilder::build`] validates the
+/// finished composition and panics with the validation message on an
+/// impossible one, so a bad config fails at construction instead of
+/// deep inside a run.  Defaults are the paper configuration (pinned by
+/// `builder_defaults_match_default`).
+#[derive(Clone, Debug)]
+pub struct SimConfigBuilder {
+    cfg: SimConfig,
+}
+
+impl SimConfigBuilder {
+    pub fn design(mut self, d: Design) -> Self {
+        self.cfg.design = d;
+        self
+    }
+
+    /// Override the design's link codec (the `+lc` axis) without
+    /// re-spelling the whole design.
+    pub fn link_codec(mut self, lc: crate::controller::LinkCodec) -> Self {
+        self.cfg.design = self.cfg.design.with_link_codec(lc);
+        self
+    }
+
+    pub fn cores(mut self, n: usize) -> Self {
+        self.cfg.cores = n;
+        self
+    }
+
+    /// Measurement length; warmup follows it (the historical
+    /// [`SimConfig::with_insts`] contract).
+    pub fn insts(mut self, n: u64) -> Self {
+        self.cfg.insts_per_core = n;
+        self.cfg.warmup_insts = n;
+        self
+    }
+
+    /// Decouple warmup from measurement length (call after [`Self::insts`]).
+    pub fn warmup(mut self, n: u64) -> Self {
+        self.cfg.warmup_insts = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    pub fn channels(mut self, ch: usize) -> Self {
+        self.cfg.dram = self.cfg.dram.with_channels(ch);
+        self
+    }
+
+    /// Scheduler knobs for the host channels and the expander DRAM alike.
+    pub fn sched(mut self, s: crate::dram::SchedConfig) -> Self {
+        self.cfg.dram.sched = s;
+        self.cfg.tier.far_dram.sched = s;
+        self
+    }
+
+    pub fn far_ratio(mut self, r: f64) -> Self {
+        self.cfg.tier.far_ratio = r;
+        self
+    }
+
+    pub fn llp_entries(mut self, n: usize) -> Self {
+        self.cfg.llp_entries = n;
+        self
+    }
+
+    pub fn meta_cache_bytes(mut self, n: usize) -> Self {
+        self.cfg.meta_cache_bytes = n;
+        self
+    }
+
+    pub fn algo(mut self, a: crate::compress::AlgoSet) -> Self {
+        self.cfg.algo = a;
+        self
+    }
+
+    pub fn private_caches(mut self, on: bool) -> Self {
+        self.cfg.private_caches = on;
+        self
+    }
+
+    pub fn trace(mut self, t: TraceReplay) -> Self {
+        self.cfg.trace = Some(t);
+        self
+    }
+
+    pub fn compressed_llc(mut self) -> Self {
+        self.cfg.llc_compressed = Some(CompressedLlcConfig::default());
+        self
+    }
+
+    pub fn llc_knobs(mut self, knobs: CompressedLlcConfig) -> Self {
+        self.cfg.llc_compressed = Some(knobs);
+        self
+    }
+
+    /// Validate and return the finished config.
+    ///
+    /// # Panics
+    /// On an invalid composition, with the [`SimConfig::validate`] message.
+    pub fn build(self) -> SimConfig {
+        if let Err(e) = self.cfg.validate() {
+            panic!("invalid SimConfig: {e}");
+        }
+        self.cfg
     }
 }
 
@@ -624,6 +773,53 @@ mod tests {
             .with_design(design)
             .with_insts(1_200_000);
         simulate(&by_name(wl).unwrap(), &cfg)
+    }
+
+    #[test]
+    fn builder_defaults_match_default() {
+        // the builder starts from — and with no setters, reproduces —
+        // the paper-default SimConfig, field for field
+        let built = SimConfig::builder().build();
+        let def = SimConfig::default();
+        assert_eq!(format!("{built:?}"), format!("{def:?}"));
+        // and the historical with_insts contract carries over
+        let b = SimConfig::builder().insts(300_000).build();
+        let w = SimConfig::default().with_insts(300_000);
+        assert_eq!(format!("{b:?}"), format!("{w:?}"));
+    }
+
+    #[test]
+    fn builder_composes_the_link_codec_axis() {
+        use crate::controller::LinkCodec;
+        let cfg = SimConfig::builder()
+            .design(Design::tiered(true))
+            .link_codec(LinkCodec::Compressed)
+            .far_ratio(0.75)
+            .insts(100_000)
+            .build();
+        assert_eq!(cfg.design.name(), "tiered-cram+lc");
+        assert_eq!(cfg.tier.far_ratio, 0.75);
+        assert_eq!(cfg.warmup_insts, 100_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "far_ratio")]
+    fn builder_rejects_impossible_far_ratio() {
+        let _ = SimConfig::builder().far_ratio(1.5).build();
+    }
+
+    #[test]
+    fn validate_flags_bad_fields() {
+        assert!(SimConfig::default().validate().is_ok());
+        let mut c = SimConfig::default();
+        c.cores = 0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.insts_per_core = 0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.meta_cache_bytes = 8;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -323,6 +323,79 @@ impl TierTraffic {
     }
 }
 
+/// Link-bytes-vs-storage-bytes breakdown, split by traffic class —
+/// the [`crate::controller::LinkCodec`] exhibit (Figure L1).
+///
+/// For every payload crossing the link, `raw` counts the bytes the
+/// transfer represents at storage granularity (what [`LinkCodec::Raw`]
+/// serializes) and `wire` the bytes actually serialized after the
+/// TX-side size-only pass.  Under `LinkCodec::Raw` the two are equal in
+/// every class; under `Compressed`, `wire ≤ raw` class by class and
+/// `flits_saved` accumulates the flit cycles the codec removed.
+/// The five classes partition the totals exactly:
+/// `demand + meta + writeback + prefetch + migration == raw/wire bytes`.
+///
+/// [`LinkCodec::Raw`]: crate::controller::LinkCodec::Raw
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkTraffic {
+    /// Demand far reads: the command flit + the returned line/block.
+    pub demand_raw_bytes: u64,
+    pub demand_wire_bytes: u64,
+    /// Explicit-metadata crossings (the `tiered-explicit` compositions).
+    pub meta_raw_bytes: u64,
+    pub meta_wire_bytes: u64,
+    /// Writeback bursts host→device (dirty data, packed writes,
+    /// invalidate markers, victim writebacks).
+    pub writeback_raw_bytes: u64,
+    pub writeback_wire_bytes: u64,
+    /// Next-line prefetch reads on the far tier.
+    pub prefetch_raw_bytes: u64,
+    pub prefetch_wire_bytes: u64,
+    /// Page-migration transfers (promotion and demotion line moves).
+    pub migration_raw_bytes: u64,
+    pub migration_wire_bytes: u64,
+    /// Flit cycles the codec removed vs serializing every payload raw.
+    pub flits_saved: u64,
+}
+
+impl LinkTraffic {
+    /// Total storage-sized bytes offered to the link (sum of the class
+    /// splits — the conservation invariant the link tests pin).
+    pub fn raw_bytes(&self) -> u64 {
+        self.demand_raw_bytes
+            + self.meta_raw_bytes
+            + self.writeback_raw_bytes
+            + self.prefetch_raw_bytes
+            + self.migration_raw_bytes
+    }
+
+    /// Total bytes actually serialized over the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        self.demand_wire_bytes
+            + self.meta_wire_bytes
+            + self.writeback_wire_bytes
+            + self.prefetch_wire_bytes
+            + self.migration_wire_bytes
+    }
+
+    /// Field-wise difference (measurement-phase accounting).
+    pub fn since(&self, warm: &LinkTraffic) -> LinkTraffic {
+        LinkTraffic {
+            demand_raw_bytes: self.demand_raw_bytes - warm.demand_raw_bytes,
+            demand_wire_bytes: self.demand_wire_bytes - warm.demand_wire_bytes,
+            meta_raw_bytes: self.meta_raw_bytes - warm.meta_raw_bytes,
+            meta_wire_bytes: self.meta_wire_bytes - warm.meta_wire_bytes,
+            writeback_raw_bytes: self.writeback_raw_bytes - warm.writeback_raw_bytes,
+            writeback_wire_bytes: self.writeback_wire_bytes - warm.writeback_wire_bytes,
+            prefetch_raw_bytes: self.prefetch_raw_bytes - warm.prefetch_raw_bytes,
+            prefetch_wire_bytes: self.prefetch_wire_bytes - warm.prefetch_wire_bytes,
+            migration_raw_bytes: self.migration_raw_bytes - warm.migration_raw_bytes,
+            migration_wire_bytes: self.migration_wire_bytes - warm.migration_wire_bytes,
+            flits_saved: self.flits_saved - warm.flits_saved,
+        }
+    }
+}
+
 /// Full tiered-memory breakdown: per-tier traffic, migration policy
 /// activity, link utilization, and far-tier compression diagnostics.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -335,6 +408,9 @@ pub struct TierStats {
     /// Lines moved by migrations (both directions).
     pub migrated_lines: u64,
     pub link: LinkStats,
+    /// Link-bytes-vs-storage-bytes breakdown per traffic class (the
+    /// [`crate::controller::LinkCodec`] exhibit).
+    pub link_traffic: LinkTraffic,
     /// Lines installed for free from packed far blocks.
     pub far_prefetch_installs: u64,
     /// Far groups written / written packed (compressed far only).
@@ -368,6 +444,7 @@ impl TierStats {
             demotions: self.demotions - warm.demotions,
             migrated_lines: self.migrated_lines - warm.migrated_lines,
             link: self.link.since(&warm.link),
+            link_traffic: self.link_traffic.since(&warm.link_traffic),
             far_prefetch_installs: self.far_prefetch_installs
                 - warm.far_prefetch_installs,
             far_groups_written: self.far_groups_written - warm.far_groups_written,
@@ -656,5 +733,34 @@ mod tests {
         assert!((t.far_frac() - 14.0 / 24.0).abs() < 1e-12);
         // since() against itself zeroes every counter
         assert_eq!(t.since(&t), TierStats::default());
+    }
+
+    #[test]
+    fn link_traffic_splits_sum_to_totals() {
+        let lt = LinkTraffic {
+            demand_raw_bytes: 640,
+            demand_wire_bytes: 320,
+            meta_raw_bytes: 128,
+            meta_wire_bytes: 32,
+            writeback_raw_bytes: 256,
+            writeback_wire_bytes: 200,
+            prefetch_raw_bytes: 64,
+            prefetch_wire_bytes: 64,
+            migration_raw_bytes: 512,
+            migration_wire_bytes: 300,
+            flits_saved: 17,
+        };
+        assert_eq!(lt.raw_bytes(), 640 + 128 + 256 + 64 + 512);
+        assert_eq!(lt.wire_bytes(), 320 + 32 + 200 + 64 + 300);
+        assert!(lt.wire_bytes() <= lt.raw_bytes());
+        assert_eq!(lt.since(&lt), LinkTraffic::default());
+        let half = lt.since(&LinkTraffic {
+            demand_raw_bytes: 320,
+            demand_wire_bytes: 160,
+            ..Default::default()
+        });
+        assert_eq!(half.demand_raw_bytes, 320);
+        assert_eq!(half.demand_wire_bytes, 160);
+        assert_eq!(half.flits_saved, 17);
     }
 }

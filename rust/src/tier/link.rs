@@ -17,8 +17,21 @@
 //! * **port latency** — a fixed one-way controller + propagation delay on
 //!   top of serialization (retimers, CXL stack).
 //!
+//! Every transfer is tagged with a [`LinkClass`] and carries both its
+//! *raw* (storage-sized) and *wire* (post-[`LinkCodec`]) byte counts:
+//! serialization and busy cycles charge the wire bytes, while the
+//! [`LinkTraffic`] breakdown records raw vs wire per class — the data
+//! behind the link-bytes-vs-storage-bytes exhibit.  A payload that
+//! crossed compressed (`wire < raw`) pays [`CxlLinkConfig::decomp_latency`]
+//! at the receiving port on top of serialization; raw transfers are
+//! cycle-identical to the pre-codec model.
+//!
 //! All times are DRAM bus cycles (800 MHz, 1.25 ns) to match
 //! [`crate::dram::DramSim`].
+//!
+//! [`LinkCodec`]: crate::controller::LinkCodec
+
+use crate::stats::LinkTraffic;
 
 /// Link geometry and latency.
 #[derive(Clone, Copy, Debug)]
@@ -27,11 +40,15 @@ pub struct CxlLinkConfig {
     pub lanes: u64,
     /// One-way port/controller latency in bus cycles (~30 ns default).
     pub port_latency: u64,
+    /// Extra cycles the receiving port spends decompressing a payload
+    /// that crossed with `wire < raw` bytes (~5 ns default — a ZeroPoint
+    /// -class inline codec).  Raw transfers never pay it.
+    pub decomp_latency: u64,
 }
 
 impl Default for CxlLinkConfig {
     fn default() -> Self {
-        Self { lanes: 8, port_latency: 24 }
+        Self { lanes: 8, port_latency: 24, decomp_latency: 4 }
     }
 }
 
@@ -51,6 +68,23 @@ impl CxlLinkConfig {
     pub fn peak_bytes_per_cycle(&self) -> f64 {
         self.lanes as f64
     }
+}
+
+/// What a link transfer is for — the split axis of the [`LinkTraffic`]
+/// breakdown.  Command flits take the class of the transfer they
+/// initiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Demand far reads (command + returned line/block).
+    Demand,
+    /// Explicit-metadata region crossings.
+    Metadata,
+    /// Dirty/packed writebacks and invalidate markers host→device.
+    Writeback,
+    /// Next-line prefetch reads on the far tier.
+    Prefetch,
+    /// Page-migration line moves (both directions).
+    Migration,
 }
 
 /// Per-direction traffic counters.
@@ -89,6 +123,8 @@ pub struct CxlLink {
     /// RX direction occupied until this cycle.
     rx_free: u64,
     pub stats: LinkStats,
+    /// Raw-vs-wire byte accounting per [`LinkClass`].
+    pub traffic: LinkTraffic,
 }
 
 /// A read command / header flit on the wire (address + opcode).
@@ -98,7 +134,13 @@ pub const DATA_BYTES: u64 = 64;
 
 impl CxlLink {
     pub fn new(cfg: CxlLinkConfig) -> Self {
-        Self { cfg, tx_free: 0, rx_free: 0, stats: LinkStats::default() }
+        Self {
+            cfg,
+            tx_free: 0,
+            rx_free: 0,
+            stats: LinkStats::default(),
+            traffic: LinkTraffic::default(),
+        }
     }
 
     pub fn config(&self) -> &CxlLinkConfig {
@@ -115,25 +157,72 @@ impl CxlLink {
         (*free + cfg.port_latency, wait, cycles)
     }
 
+    /// Charge the raw-vs-wire breakdown for one transfer.
+    fn charge(traffic: &mut LinkTraffic, cfg: &CxlLinkConfig, class: LinkClass, raw: u64, wire: u64) {
+        let (raw_acc, wire_acc) = match class {
+            LinkClass::Demand => (&mut traffic.demand_raw_bytes, &mut traffic.demand_wire_bytes),
+            LinkClass::Metadata => (&mut traffic.meta_raw_bytes, &mut traffic.meta_wire_bytes),
+            LinkClass::Writeback => {
+                (&mut traffic.writeback_raw_bytes, &mut traffic.writeback_wire_bytes)
+            }
+            LinkClass::Prefetch => {
+                (&mut traffic.prefetch_raw_bytes, &mut traffic.prefetch_wire_bytes)
+            }
+            LinkClass::Migration => {
+                (&mut traffic.migration_raw_bytes, &mut traffic.migration_wire_bytes)
+            }
+        };
+        *raw_acc += raw;
+        *wire_acc += wire;
+        traffic.flits_saved += cfg.flit_cycles(raw) - cfg.flit_cycles(wire);
+    }
+
     /// Transfer `bytes` host→device starting no earlier than `now`.
     /// Returns the cycle the payload is available at the device (after
     /// serialization + port latency).  Occupies TX for the serialization.
-    pub fn send(&mut self, now: u64, bytes: u64) -> u64 {
-        let (arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.tx_free, now, bytes);
+    pub fn send(&mut self, now: u64, bytes: u64, class: LinkClass) -> u64 {
+        self.send_payload(now, bytes, bytes, class)
+    }
+
+    /// Transfer a payload of `raw` storage bytes host→device, serialized
+    /// as `wire ≤ raw` bytes after the TX-side size-only pass.  A
+    /// compressed payload (`wire < raw`) pays the device port's
+    /// decompression latency on top of serialization + port latency.
+    pub fn send_payload(&mut self, now: u64, raw: u64, wire: u64, class: LinkClass) -> u64 {
+        debug_assert!(wire <= raw, "link codec never expands a payload");
+        let (arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.tx_free, now, wire);
         self.stats.tx_flits += 1;
         self.stats.tx_busy_cycles += cycles;
         self.stats.tx_wait_cycles += wait;
-        arrival
+        Self::charge(&mut self.traffic, &self.cfg, class, raw, wire);
+        if wire < raw {
+            arrival + self.cfg.decomp_latency
+        } else {
+            arrival
+        }
     }
 
     /// Transfer `bytes` device→host starting no earlier than `now`.
     /// Returns the cycle the payload arrives at the host.
-    pub fn recv(&mut self, now: u64, bytes: u64) -> u64 {
-        let (arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.rx_free, now, bytes);
+    pub fn recv(&mut self, now: u64, bytes: u64, class: LinkClass) -> u64 {
+        self.recv_payload(now, bytes, bytes, class)
+    }
+
+    /// Transfer a payload of `raw` storage bytes device→host, serialized
+    /// as `wire ≤ raw` bytes; the host port pays the decompression
+    /// latency when the payload crossed compressed.
+    pub fn recv_payload(&mut self, now: u64, raw: u64, wire: u64, class: LinkClass) -> u64 {
+        debug_assert!(wire <= raw, "link codec never expands a payload");
+        let (arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.rx_free, now, wire);
         self.stats.rx_flits += 1;
         self.stats.rx_busy_cycles += cycles;
         self.stats.rx_wait_cycles += wait;
-        arrival
+        Self::charge(&mut self.traffic, &self.cfg, class, raw, wire);
+        if wire < raw {
+            arrival + self.cfg.decomp_latency
+        } else {
+            arrival
+        }
     }
 }
 
@@ -155,8 +244,8 @@ mod tests {
     #[test]
     fn directions_are_independent() {
         let mut l = CxlLink::new(CxlLinkConfig::default());
-        let a = l.send(0, DATA_BYTES);
-        let b = l.recv(0, DATA_BYTES);
+        let a = l.send(0, DATA_BYTES, LinkClass::Writeback);
+        let b = l.recv(0, DATA_BYTES, LinkClass::Demand);
         // both transfer concurrently: same completion, no cross-queuing
         assert_eq!(a, b);
         assert_eq!(l.stats.tx_wait_cycles + l.stats.rx_wait_cycles, 0);
@@ -165,8 +254,8 @@ mod tests {
     #[test]
     fn same_direction_queues() {
         let mut l = CxlLink::new(CxlLinkConfig::default());
-        let a = l.recv(0, DATA_BYTES); // 8 serialize + 24 port = 32
-        let b = l.recv(0, DATA_BYTES); // queued 8 cycles behind
+        let a = l.recv(0, DATA_BYTES, LinkClass::Demand); // 8 serialize + 24 port = 32
+        let b = l.recv(0, DATA_BYTES, LinkClass::Demand); // queued 8 cycles behind
         assert_eq!(a, 8 + 24);
         assert_eq!(b, 16 + 24);
         assert_eq!(l.stats.rx_wait_cycles, 8);
@@ -176,18 +265,65 @@ mod tests {
     #[test]
     fn idle_link_pays_only_latency_and_serialization() {
         let mut l = CxlLink::new(CxlLinkConfig::default());
-        let done = l.send(1000, CMD_BYTES);
+        let done = l.send(1000, CMD_BYTES, LinkClass::Demand);
         assert_eq!(done, 1000 + 1 + 24);
     }
 
     #[test]
     fn stats_since_subtracts() {
         let mut l = CxlLink::new(CxlLinkConfig::default());
-        l.send(0, DATA_BYTES);
+        l.send(0, DATA_BYTES, LinkClass::Writeback);
         let warm = l.stats;
-        l.send(0, DATA_BYTES);
+        l.send(0, DATA_BYTES, LinkClass::Writeback);
         let d = l.stats.since(&warm);
         assert_eq!(d.tx_flits, 1);
         assert_eq!(d.tx_busy_cycles, 8);
+    }
+
+    #[test]
+    fn raw_payload_is_cycle_identical_to_untyped_transfer() {
+        // send(bytes) == send_payload(raw == wire): no decompression
+        // penalty, same serialization — the LinkCodec::Raw guarantee
+        let mut a = CxlLink::new(CxlLinkConfig::default());
+        let mut b = CxlLink::new(CxlLinkConfig::default());
+        let ta = a.recv(0, DATA_BYTES, LinkClass::Demand);
+        let tb = b.recv_payload(0, DATA_BYTES, DATA_BYTES, LinkClass::Demand);
+        assert_eq!(ta, tb);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.traffic.flits_saved, 0);
+        assert_eq!(a.traffic.raw_bytes(), a.traffic.wire_bytes());
+    }
+
+    #[test]
+    fn compressed_payload_saves_serialization_but_pays_decomp() {
+        let cfg = CxlLinkConfig::default();
+        let mut l = CxlLink::new(cfg);
+        // a 64B line compressed to 16B: 2 serialize cycles instead of 8,
+        // plus the decompression latency at the port
+        let t = l.recv_payload(0, DATA_BYTES, 16, LinkClass::Demand);
+        assert_eq!(t, 2 + cfg.port_latency + cfg.decomp_latency);
+        assert_eq!(l.stats.rx_busy_cycles, 2);
+        assert_eq!(l.traffic.demand_raw_bytes, 64);
+        assert_eq!(l.traffic.demand_wire_bytes, 16);
+        assert_eq!(l.traffic.flits_saved, 8 - 2);
+    }
+
+    #[test]
+    fn traffic_classes_split_the_totals() {
+        let mut l = CxlLink::new(CxlLinkConfig::default());
+        l.recv_payload(0, DATA_BYTES, 32, LinkClass::Demand);
+        l.recv_payload(0, DATA_BYTES, 16, LinkClass::Metadata);
+        l.send_payload(0, DATA_BYTES, 48, LinkClass::Writeback);
+        l.recv_payload(0, DATA_BYTES, DATA_BYTES, LinkClass::Prefetch);
+        l.send_payload(0, DATA_BYTES, 24, LinkClass::Migration);
+        let t = &l.traffic;
+        assert_eq!(t.raw_bytes(), 5 * DATA_BYTES);
+        assert_eq!(t.wire_bytes(), 32 + 16 + 48 + 64 + 24);
+        assert!(t.wire_bytes() <= t.raw_bytes());
+        assert_eq!(t.demand_wire_bytes, 32);
+        assert_eq!(t.meta_wire_bytes, 16);
+        assert_eq!(t.writeback_wire_bytes, 48);
+        assert_eq!(t.prefetch_wire_bytes, 64);
+        assert_eq!(t.migration_wire_bytes, 24);
     }
 }

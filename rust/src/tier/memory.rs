@@ -54,14 +54,14 @@
 
 use std::collections::{HashMap, HashSet};
 
-use crate::controller::{CramEngine, Install, Installs, Policy, ReadOutcome, SlotOp};
+use crate::controller::{CramEngine, Install, Installs, LinkCodec, Policy, ReadOutcome, SlotOp};
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::group::Csi;
 use crate::cram::metadata::{MetaAccess, MetadataStore};
 use crate::dram::{DramConfig, DramSim, ReqKind};
 use crate::mem::{group_base, group_of, page_of_line};
 use crate::stats::{Bandwidth, TierStats};
-use crate::tier::link::{CxlLink, CxlLinkConfig, CMD_BYTES, DATA_BYTES};
+use crate::tier::link::{CxlLink, CxlLinkConfig, LinkClass, CMD_BYTES, DATA_BYTES};
 use crate::util::rng::splitmix64;
 use crate::workloads::SizeOracle;
 
@@ -151,14 +151,26 @@ pub struct TieredMemory {
 
 impl TieredMemory {
     /// Expander with the paper-default 32KB metadata cache (when the
-    /// policy needs one).
+    /// policy needs one) and a raw link.
     pub fn new(cfg: TierConfig, policy: Policy) -> Self {
         Self::with_meta_cache(cfg, policy, 32 * 1024)
     }
 
-    /// Full constructor: the metadata-cache size knob applies to the
-    /// `Explicit` far policy (`SimConfig::meta_cache_bytes`).
+    /// Raw-link constructor with the metadata-cache size knob (the
+    /// `Explicit` far policy; `SimConfig::meta_cache_bytes`).
     pub fn with_meta_cache(cfg: TierConfig, policy: Policy, meta_cache_bytes: usize) -> Self {
+        Self::with_codec(cfg, policy, meta_cache_bytes, LinkCodec::Raw)
+    }
+
+    /// Full constructor: the design's link codec rides in the expander's
+    /// [`CramEngine`], so every wire-size question on this tier's link
+    /// goes through the same plumbing the other executors use.
+    pub fn with_codec(
+        cfg: TierConfig,
+        policy: Policy,
+        meta_cache_bytes: usize,
+        link_codec: LinkCodec,
+    ) -> Self {
         let meta = match policy {
             Policy::Explicit { row_opt } => {
                 let mut m = MetadataStore::new(meta_cache_bytes, 8, FAR_META_BASE);
@@ -171,7 +183,7 @@ impl TieredMemory {
             far_cut: (cfg.far_ratio.clamp(0.0, 1.0) * 4096.0) as u64,
             link: CxlLink::new(cfg.link),
             far_dram: DramSim::new(cfg.far_dram),
-            engine: CramEngine::new(),
+            engine: CramEngine::with_link_codec(link_codec),
             meta,
             placement: HashMap::new(),
             heat: HashMap::new(),
@@ -224,6 +236,7 @@ impl TieredMemory {
     pub fn snapshot(&self) -> TierStats {
         let mut s = self.stats;
         s.link = self.link.stats;
+        s.link_traffic = self.link.traffic;
         s.far_groups_written = self.engine.groups_written;
         s.far_groups_packed = self.engine.groups_compressed;
         s
@@ -239,7 +252,7 @@ impl TieredMemory {
         oracle: &mut SizeOracle,
     ) -> ReadOutcome {
         let page = page_of_line(line);
-        self.touch(page, now, near, bw);
+        self.touch(page, now, near, bw, oracle);
         let out = if !self.is_far_page(page) {
             bw.demand_reads += 1;
             self.stats.near.demand_reads += 1;
@@ -262,7 +275,7 @@ impl TieredMemory {
             // next-line prefetch baseline: a full extra access, routed by
             // the prefetched line's own placement (heat untouched — the
             // migration policy is driven by demand accesses only)
-            return self.prefetch_next(line, now, near, bw, out);
+            return self.prefetch_next(line, now, near, bw, oracle, out);
         }
         out
     }
@@ -279,10 +292,13 @@ impl TieredMemory {
         let slot = (line - base) as u8;
         match self.policy {
             Policy::Uncompressed | Policy::NextLinePrefetch => {
-                // request flit out, device access, completion flit back
-                let at_device = self.link.send(now, CMD_BYTES);
+                // request flit out, device access, completion flit back —
+                // the uncompressed-far line is exactly where in-flight
+                // compression still pays once storage compression cannot
+                let wire = self.engine.line_wire_bytes(oracle, line);
+                let at_device = self.link.send(now, CMD_BYTES, LinkClass::Demand);
                 let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
-                let done = self.link.recv(far_done, DATA_BYTES);
+                let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
                 ReadOutcome {
                     done,
                     installs: Installs::of(&[Install {
@@ -298,9 +314,10 @@ impl TieredMemory {
                 // layout is recomputed from the oracle, never written
                 let csi = Csi::from_sizes(oracle.group_sizes(line));
                 let loc = csi.location(slot);
-                let at_device = self.link.send(now, CMD_BYTES);
+                let wire = self.engine.block_wire_bytes(oracle, base, csi, loc);
+                let at_device = self.link.send(now, CMD_BYTES, LinkClass::Demand);
                 let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
-                let done = self.link.recv(far_done, DATA_BYTES);
+                let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
                 self.far_installs(base, csi, loc, line, done)
             }
             Policy::Implicit | Policy::Dynamic => {
@@ -309,10 +326,11 @@ impl TieredMemory {
                 // every co-located line
                 let csi = self.engine.csi_of_group(group_of(base));
                 let loc = csi.location(slot);
-                let at_device = self.link.send(now, CMD_BYTES);
+                let wire = self.engine.block_wire_bytes(oracle, base, csi, loc);
+                let at_device = self.link.send(now, CMD_BYTES, LinkClass::Demand);
                 let far_done =
                     self.far_dram.access(base + loc as u64, ReqKind::Read, at_device, false);
-                let done = self.link.recv(far_done, DATA_BYTES);
+                let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
                 self.far_installs(base, csi, loc, line, done)
             }
             Policy::Explicit { row_opt } => {
@@ -327,16 +345,20 @@ impl TieredMemory {
                 if how == MetaAccess::Miss {
                     bw.meta_reads += 1;
                     self.stats.far.meta_accesses += 1;
-                    let at = self.link.send(t, CMD_BYTES);
+                    let meta_wire = self.engine.meta_wire_bytes();
+                    let at = self.link.send(t, CMD_BYTES, LinkClass::Metadata);
                     let meta_done =
                         self.far_dram.access(meta_addr, ReqKind::MetaRead, at, row_opt);
-                    t = self.link.recv(meta_done, DATA_BYTES);
+                    t = self
+                        .link
+                        .recv_payload(meta_done, DATA_BYTES, meta_wire, LinkClass::Metadata);
                 }
                 let loc = actual.location(slot);
-                let at = self.link.send(t, CMD_BYTES);
+                let wire = self.engine.block_wire_bytes(oracle, base, actual, loc);
+                let at = self.link.send(t, CMD_BYTES, LinkClass::Demand);
                 let far_done =
                     self.far_dram.access(base + loc as u64, ReqKind::Read, at, false);
-                let done = self.link.recv(far_done, DATA_BYTES);
+                let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
                 self.far_installs(base, actual, loc, line, done)
             }
         }
@@ -358,15 +380,17 @@ impl TieredMemory {
         now: u64,
         near: &mut DramSim,
         bw: &mut Bandwidth,
+        oracle: &mut SizeOracle,
         mut out: ReadOutcome,
     ) -> ReadOutcome {
         let pf = line + 1;
         bw.prefetch_reads += 1;
         if self.is_far_line(pf) {
             self.stats.far.prefetch_reads += 1;
-            let at = self.link.send(now, CMD_BYTES);
+            let wire = self.engine.line_wire_bytes(oracle, pf);
+            let at = self.link.send(now, CMD_BYTES, LinkClass::Prefetch);
             let far_done = self.far_dram.access(pf, ReqKind::Read, at, false);
-            self.link.recv(far_done, DATA_BYTES);
+            self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Prefetch);
         } else {
             self.stats.near.prefetch_reads += 1;
             near.access(pf, ReqKind::Read, now, false);
@@ -415,7 +439,7 @@ impl TieredMemory {
         if !self.far_packs() {
             // raw far tier (Uncompressed / NextLinePrefetch baselines and
             // Ideal's overhead-free writes): dirty lines cross the link raw
-            self.raw_far_dirty_writes(base, present, dirty, now, bw);
+            self.raw_far_dirty_writes(base, present, dirty, now, bw, oracle);
             return;
         }
 
@@ -433,7 +457,7 @@ impl TieredMemory {
         let old = self.engine.csi_of_line(base);
         if !compress && old == Csi::Uncompressed {
             // gate closed, group never packed: plain dirty far writes
-            self.raw_far_dirty_writes(base, present, dirty, now, bw);
+            self.raw_far_dirty_writes(base, present, dirty, now, bw, oracle);
             return;
         }
         let sizes = oracle.group_sizes(base);
@@ -460,7 +484,7 @@ impl TieredMemory {
                             d.on_cost(CramEngine::charged_core(gang, base, loc, owner_core));
                         }
                     }
-                    let at = self.link.send(now, CMD_BYTES);
+                    let at = self.link.send(now, CMD_BYTES, LinkClass::Writeback);
                     self.far_dram.access(addr, ReqKind::Invalidate, at, false);
                 }
                 SlotOp::WritePacked { dirty } | SlotOp::WriteSingle { dirty } => {
@@ -476,7 +500,8 @@ impl TieredMemory {
                             }
                         }
                     }
-                    let at = self.link.send(now, DATA_BYTES);
+                    let wire = self.engine.block_wire_bytes(oracle, base, new, loc);
+                    let at = self.link.send_payload(now, DATA_BYTES, wire, LinkClass::Writeback);
                     self.far_dram.access(addr, ReqKind::Write, at, false);
                 }
             }
@@ -498,15 +523,19 @@ impl TieredMemory {
                     // flit back (same crossing the read path pays)
                     bw.meta_reads += 1;
                     self.stats.far.meta_accesses += 1;
-                    let at = self.link.send(now, CMD_BYTES);
+                    let meta_wire = self.engine.meta_wire_bytes();
+                    let at = self.link.send(now, CMD_BYTES, LinkClass::Metadata);
                     let meta_done =
                         self.far_dram.access(meta_addr, ReqKind::MetaRead, at, row_opt);
-                    self.link.recv(meta_done, DATA_BYTES);
+                    self.link
+                        .recv_payload(meta_done, DATA_BYTES, meta_wire, LinkClass::Metadata);
                 }
                 if victim_wb {
                     bw.meta_writes += 1;
                     self.stats.far.meta_accesses += 1;
-                    let at = self.link.send(now, DATA_BYTES);
+                    let meta_wire = self.engine.meta_wire_bytes();
+                    let at =
+                        self.link.send_payload(now, DATA_BYTES, meta_wire, LinkClass::Metadata);
                     self.far_dram.access(meta_addr, ReqKind::MetaWrite, at, row_opt);
                 }
             }
@@ -523,12 +552,14 @@ impl TieredMemory {
         dirty: [bool; 4],
         now: u64,
         bw: &mut Bandwidth,
+        oracle: &mut SizeOracle,
     ) {
         for s in 0..4 {
             if present[s] && dirty[s] {
                 bw.demand_writes += 1;
                 self.stats.far.demand_writes += 1;
-                let at = self.link.send(now, DATA_BYTES);
+                let wire = self.engine.line_wire_bytes(oracle, base + s as u64);
+                let at = self.link.send_payload(now, DATA_BYTES, wire, LinkClass::Writeback);
                 self.far_dram.access(base + s as u64, ReqKind::Write, at, false);
             }
         }
@@ -550,7 +581,14 @@ impl TieredMemory {
     }
 
     /// Record a page access: heat bookkeeping, lazy decay, promotion.
-    fn touch(&mut self, page: u64, now: u64, near: &mut DramSim, bw: &mut Bandwidth) {
+    fn touch(
+        &mut self,
+        page: u64,
+        now: u64,
+        near: &mut DramSim,
+        bw: &mut Bandwidth,
+        oracle: &mut SizeOracle,
+    ) {
         self.accesses += 1;
         let cur = self.epoch();
         let h = {
@@ -563,7 +601,7 @@ impl TieredMemory {
         };
         if self.is_far_page(page) {
             if h >= self.cfg.promote_threshold {
-                self.promote(page, now, near, bw);
+                self.promote(page, now, near, bw, oracle);
             }
         } else if self.listed.insert(page) {
             self.near_pages.push(page);
@@ -571,7 +609,14 @@ impl TieredMemory {
     }
 
     /// Move a hot far page near; demote a cold near page in exchange.
-    fn promote(&mut self, page: u64, now: u64, near: &mut DramSim, bw: &mut Bandwidth) {
+    fn promote(
+        &mut self,
+        page: u64,
+        now: u64,
+        near: &mut DramSim,
+        bw: &mut Bandwidth,
+        oracle: &mut SizeOracle,
+    ) {
         self.stats.promotions += 1;
         let first = page * PAGE_LINES;
         for g in 0..PAGE_GROUPS {
@@ -589,9 +634,11 @@ impl TieredMemory {
                 }
                 bw.migration += 1;
                 self.stats.far.migr_accesses += 1;
+                let wire = self.engine.block_wire_bytes(oracle, gbase, csi, loc);
                 let far_done =
                     self.far_dram.access(gbase + loc as u64, ReqKind::Read, now, false);
-                arrived = arrived.max(self.link.recv(far_done, DATA_BYTES));
+                arrived = arrived
+                    .max(self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Migration));
             }
             // lands near unpacked: four raw line fills once the data is here
             for s in 0..4 {
@@ -606,7 +653,7 @@ impl TieredMemory {
             self.near_pages.push(page);
         }
         if let Some(victim) = self.pick_victim(page) {
-            self.demote(victim, now, near, bw);
+            self.demote(victim, now, near, bw, oracle);
         }
     }
 
@@ -642,7 +689,14 @@ impl TieredMemory {
 
     /// Move a cold near page to the expander (stored raw; the far tier
     /// re-packs lazily on later writebacks).
-    fn demote(&mut self, page: u64, now: u64, near: &mut DramSim, bw: &mut Bandwidth) {
+    fn demote(
+        &mut self,
+        page: u64,
+        now: u64,
+        near: &mut DramSim,
+        bw: &mut Bandwidth,
+        oracle: &mut SizeOracle,
+    ) {
         self.stats.demotions += 1;
         let first = page * PAGE_LINES;
         for l in 0..PAGE_LINES {
@@ -651,7 +705,9 @@ impl TieredMemory {
             bw.migration += 1;
             self.stats.near.migr_accesses += 1;
             let read_done = near.access(first + l, ReqKind::Read, now, false);
-            let at_device = self.link.send(read_done, DATA_BYTES);
+            let wire = self.engine.line_wire_bytes(oracle, first + l);
+            let at_device =
+                self.link.send_payload(read_done, DATA_BYTES, wire, LinkClass::Migration);
             bw.migration += 1;
             self.stats.far.migr_accesses += 1;
             self.far_dram.access(first + l, ReqKind::Write, at_device, false);
@@ -932,6 +988,98 @@ mod tests {
         let r = t.read(fl + 1, 1000, &mut near, &mut bw, &mut o);
         assert_eq!(r.installs.len(), 4);
         assert_eq!(t.snapshot().total_accesses(), bw.total());
+    }
+
+    /// Drive a mixed read/writeback sequence and return (tier, bw).
+    fn drive(mut t: TieredMemory) -> (TieredMemory, Bandwidth) {
+        let mut near = DramSim::new(DramConfig::default());
+        let mut o = packable_oracle();
+        let mut bw = Bandwidth::default();
+        for i in 0..300u64 {
+            let line = i * 37 % 4096;
+            t.read(line, i * 10, &mut near, &mut bw, &mut o);
+            if i % 3 == 0 {
+                t.writeback(
+                    &gang(group_base(line), [true, false, i % 2 == 0, false]),
+                    i * 10,
+                    &mut near,
+                    &mut o,
+                    &mut bw,
+                    false,
+                    &mut None,
+                );
+            }
+        }
+        (t, bw)
+    }
+
+    #[test]
+    fn raw_codec_moves_every_byte_at_full_width() {
+        // LinkCodec::Raw (the default): wire == raw for every class, no
+        // flits saved, no decompression stalls — the pre-codec link.
+        let (t, bw) = drive(TieredMemory::new(TierConfig::default(), Policy::Implicit));
+        let tr = t.snapshot().link_traffic;
+        assert!(tr.raw_bytes() > 0, "the drive sequence must cross the link");
+        assert_eq!(tr.raw_bytes(), tr.wire_bytes(), "raw codec never shrinks a payload");
+        assert_eq!(tr.flits_saved, 0);
+        assert_eq!(t.snapshot().total_accesses(), bw.total());
+    }
+
+    #[test]
+    fn compressed_codec_shrinks_wire_bytes_on_every_class() {
+        // all-SmallInt oracle: every demand / writeback / prefetch payload
+        // compresses, so the wire total drops strictly below the raw total
+        // while the storage-side accounting is untouched.
+        for policy in [Policy::Implicit, Policy::Uncompressed, Policy::Explicit { row_opt: false }] {
+            let raw = drive(TieredMemory::new(TierConfig::default(), policy));
+            let lc = drive(TieredMemory::with_codec(
+                TierConfig::default(),
+                policy,
+                32 * 1024,
+                LinkCodec::Compressed,
+            ));
+            let (tr_raw, tr_lc) = (raw.0.snapshot().link_traffic, lc.0.snapshot().link_traffic);
+            assert_eq!(
+                tr_raw.raw_bytes(),
+                tr_lc.raw_bytes(),
+                "{policy:?}: the codec changes wire bytes, never demand"
+            );
+            assert!(
+                tr_lc.wire_bytes() < tr_lc.raw_bytes(),
+                "{policy:?}: compressible payloads must shrink on the wire"
+            );
+            assert!(tr_lc.flits_saved > 0, "{policy:?}");
+            assert!(tr_lc.wire_bytes() <= tr_raw.wire_bytes(), "{policy:?}");
+            // identical demand stream either side: storage accounting equal
+            assert_eq!(raw.1.total(), lc.1.total(), "{policy:?}");
+            assert_eq!(lc.0.snapshot().total_accesses(), lc.1.total(), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn compressed_codec_wins_latency_on_a_packed_far_read() {
+        // a quad block (4×16B on the wire) serializes in 1 flit cycle
+        // instead of 8; the 4-cycle decompression stop does not eat the
+        // win, so the demand read completes strictly earlier
+        let (mut t_raw, mut near, mut o, mut bw) = setup(Policy::Implicit);
+        let mut t_lc = TieredMemory::with_codec(
+            TierConfig::default(),
+            Policy::Implicit,
+            32 * 1024,
+            LinkCodec::Compressed,
+        );
+        let fl = page_in(&t_raw, true);
+        t_raw.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut None);
+        t_lc.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut None);
+        let r_raw = t_raw.read(fl, 100_000, &mut near, &mut bw, &mut o);
+        let r_lc = t_lc.read(fl, 100_000, &mut near, &mut bw, &mut o);
+        assert!(
+            r_lc.done < r_raw.done,
+            "compressed flit must land earlier: {} vs {}",
+            r_lc.done,
+            r_raw.done
+        );
+        assert_eq!(r_lc.installs.len(), 4, "codec never changes what a flit carries");
     }
 
     #[test]

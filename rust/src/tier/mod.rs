@@ -31,5 +31,5 @@
 pub mod link;
 pub mod memory;
 
-pub use link::{CxlLink, CxlLinkConfig, LinkStats};
+pub use link::{CxlLink, CxlLinkConfig, LinkClass, LinkStats};
 pub use memory::{TierConfig, TieredMemory};
