@@ -71,6 +71,11 @@ pub struct CramEngine {
     /// host, expander, byte-accurate store) asks it for wire sizes
     /// instead of special-casing the codec per call site.
     link_codec: LinkCodec,
+    /// Error-storm watchdog override: while set, wire sizes fall back to
+    /// raw regardless of the design codec (degradation level ≥ 1 — a
+    /// compressed flit that fails CRC costs a decompression restart, so
+    /// the watchdog's first step is shipping payloads raw).
+    degraded_raw: bool,
 }
 
 impl Default for CramEngine {
@@ -92,13 +97,32 @@ impl CramEngine {
             groups_written: 0,
             groups_compressed: 0,
             link_codec,
+            degraded_raw: false,
         }
     }
 
-    /// The link codec this engine serves wire sizes for.
+    /// The link codec this engine serves wire sizes for (the design
+    /// axis; unaffected by a watchdog degradation in effect).
     #[inline]
     pub fn link_codec(&self) -> LinkCodec {
         self.link_codec
+    }
+
+    /// Engage or release the watchdog's raw-wire override.
+    #[inline]
+    pub fn set_degraded_raw(&mut self, on: bool) {
+        self.degraded_raw = on;
+    }
+
+    /// The codec wire sizes are currently served under: the design codec,
+    /// unless the watchdog degraded the link to raw.
+    #[inline]
+    fn effective_codec(&self) -> LinkCodec {
+        if self.degraded_raw {
+            LinkCodec::Raw
+        } else {
+            self.link_codec
+        }
     }
 
     /// Wire bytes one 64B line occupies on the link under this engine's
@@ -106,7 +130,7 @@ impl CramEngine {
     /// ([`SizeOracle::size`] — the PR 3 fast path) when compressed.
     #[inline]
     pub fn line_wire_bytes(&self, oracle: &mut SizeOracle, line: u64) -> u64 {
-        match self.link_codec {
+        match self.effective_codec() {
             LinkCodec::Raw => DATA_BYTES,
             LinkCodec::Compressed => u64::from(oracle.size(line)).min(DATA_BYTES),
         }
@@ -117,7 +141,7 @@ impl CramEngine {
     /// sizes (a packed block already stores them back-to-back), capped at
     /// one data flit — the block never exceeds 64B by construction.
     pub fn block_wire_bytes(&self, oracle: &mut SizeOracle, base: u64, csi: Csi, loc: u8) -> u64 {
-        match self.link_codec {
+        match self.effective_codec() {
             LinkCodec::Raw => DATA_BYTES,
             LinkCodec::Compressed => {
                 let members = csi.colocated(loc);
@@ -139,7 +163,7 @@ impl CramEngine {
     /// the full 64B metadata line.
     #[inline]
     pub fn meta_wire_bytes(&self) -> u64 {
-        match self.link_codec {
+        match self.effective_codec() {
             LinkCodec::Raw => DATA_BYTES,
             LinkCodec::Compressed => DATA_BYTES / 4,
         }
@@ -540,6 +564,22 @@ mod tests {
         // the store's unconditional record materializes defaults
         e.record(9, Csi::Uncompressed);
         assert!(e.groups().any(|(g, c)| g == 9 && c == Csi::Uncompressed));
+    }
+
+    #[test]
+    fn degraded_raw_overrides_wire_sizes() {
+        let mut e = CramEngine::with_link_codec(LinkCodec::Compressed);
+        assert_eq!(e.meta_wire_bytes(), DATA_BYTES / 4);
+        e.set_degraded_raw(true);
+        // wire sizes fall back to raw; the design axis is unchanged
+        assert_eq!(e.meta_wire_bytes(), DATA_BYTES);
+        assert_eq!(e.link_codec(), LinkCodec::Compressed);
+        e.set_degraded_raw(false);
+        assert_eq!(e.meta_wire_bytes(), DATA_BYTES / 4);
+        // a Raw engine is unaffected either way
+        let mut raw = CramEngine::new();
+        raw.set_degraded_raw(true);
+        assert_eq!(raw.meta_wire_bytes(), DATA_BYTES);
     }
 
     #[test]

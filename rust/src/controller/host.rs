@@ -130,6 +130,19 @@ impl MemoryController {
                         }
                     }
                     t = dram.access(base + p as u64, ReqKind::Read, t, false);
+                    // marker fault site: a corrupted tail on a
+                    // marker-bearing line is always a detectable downward
+                    // miscue (cram::marker pins the no-alias property), so
+                    // the controller cross-checks against the engine's
+                    // layout authority and cures with one serialized
+                    // verify re-read — never a silent misread.
+                    if actual != Csi::Uncompressed
+                        && self.marker_fault.as_mut().is_some_and(|i| i.fires())
+                    {
+                        self.note_flat_marker_error();
+                        self.bw.second_reads += 1;
+                        t = dram.access(base + p as u64, ReqKind::Read, t, false);
+                    }
                     done = t;
                     first = false;
                     if p == actual_loc {
@@ -180,10 +193,14 @@ impl MemoryController {
         // changing, nothing needs to touch memory (it's all clean drops) —
         // unless compression wants to newly pack clean lines.
         let owner_core = gang[0].core as usize;
-        let compress = match (self.design.policy, &self.dynamic) {
-            (Policy::Dynamic, Some(d)) => sampled || d.enabled(owner_core),
-            _ => true,
-        };
+        // the watchdog's deepest degradation level stops creating packed
+        // data outright, overriding the policy (packed groups decay
+        // lazily through decayed_layout, like a closed Dynamic gate)
+        let compress = !self.compress_off
+            && match (self.design.policy, &self.dynamic) {
+                (Policy::Dynamic, Some(d)) => sampled || d.enabled(owner_core),
+                _ => true,
+            };
 
         // Fast path: compression disabled and the group was never packed —
         // plain dirty writebacks, no compressibility analysis needed.

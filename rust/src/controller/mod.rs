@@ -48,8 +48,10 @@ pub use policy::{Design, LinkCodec, Placement, Policy};
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::llp::LineLocationPredictor;
 use crate::cram::metadata::MetadataStore;
+use crate::cram::store::CompressedStore;
 use crate::dram::DramSim;
-use crate::stats::{Bandwidth, LatencyHist};
+use crate::sim::fault::{FaultConfig, FaultInjector};
+use crate::stats::{Bandwidth, LatencyHist, ReliabilityStats};
 use crate::tier::{TierConfig, TieredMemory};
 use crate::util::small::InlineVec;
 use crate::workloads::SizeOracle;
@@ -138,6 +140,100 @@ impl TenantTracker {
     }
 }
 
+/// Error-storm degradation watchdog: the reliability analogue of the
+/// paper's Dynamic gate, keyed on the *measured* error/retry rate
+/// instead of cost/benefit counters.
+///
+/// The controller ticks it once per demand read with the run's
+/// cumulative error-event count (detected marker/media errors plus
+/// CRC-retried link flits).  Every [`Self::EPOCH_ACCESSES`] ticks it
+/// closes an epoch; an epoch with at least [`Self::HOT_ERRORS`] new
+/// events is *hot*.  [`Self::TRIP_EPOCHS`] consecutive hot epochs walk
+/// the degradation ladder down one level, [`Self::REARM_EPOCHS`]
+/// consecutive quiet epochs walk it back up one level — the asymmetric
+/// hysteresis keeps a marginal link from flapping.
+///
+/// Ladder: level 0 = full compression; level 1 = raw link flits (the
+/// engine's degraded-raw override: compressed flits re-expand so a CRC
+/// retry replays a predictable payload); level 2 = compression off (no
+/// new packed data anywhere; existing packed groups decay lazily, like
+/// a closed Dynamic gate).
+#[derive(Clone, Debug, Default)]
+pub struct ErrorWatchdog {
+    /// Accesses into the current epoch.
+    acc: u64,
+    /// Cumulative error events at the last epoch close.
+    last_errors: u64,
+    /// Current ladder position (0 = full compression).
+    level: u8,
+    hot_epochs: u32,
+    quiet_epochs: u32,
+    /// Level-increase events (telemetry).
+    pub degrades: u64,
+    /// Level-decrease events after quiet hysteresis (telemetry).
+    pub rearms: u64,
+    /// Epochs that closed at a degraded level (telemetry).
+    pub degraded_epochs: u64,
+}
+
+impl ErrorWatchdog {
+    /// Accesses per evaluation epoch.
+    pub const EPOCH_ACCESSES: u64 = 1024;
+    /// New error events per epoch that make it hot (~1.6% of accesses).
+    pub const HOT_ERRORS: u64 = 16;
+    /// Consecutive hot epochs before degrading one level.
+    pub const TRIP_EPOCHS: u32 = 2;
+    /// Consecutive quiet epochs before re-arming one level.
+    pub const REARM_EPOCHS: u32 = 4;
+    /// Ladder bottom: compression fully off.
+    pub const MAX_LEVEL: u8 = 2;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current ladder position (0 = full compression).
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Tick one access with the run's cumulative error-event count.
+    /// Returns the new level when this tick closes an epoch that moves
+    /// the ladder.
+    pub fn tick(&mut self, errors: u64) -> Option<u8> {
+        self.acc += 1;
+        if self.acc < Self::EPOCH_ACCESSES {
+            return None;
+        }
+        self.acc = 0;
+        let delta = errors.saturating_sub(self.last_errors);
+        self.last_errors = errors;
+        if self.level > 0 {
+            self.degraded_epochs += 1;
+        }
+        if delta >= Self::HOT_ERRORS {
+            self.quiet_epochs = 0;
+            self.hot_epochs += 1;
+            if self.hot_epochs >= Self::TRIP_EPOCHS && self.level < Self::MAX_LEVEL {
+                self.hot_epochs = 0;
+                self.level += 1;
+                self.degrades += 1;
+                return Some(self.level);
+            }
+        } else {
+            self.hot_epochs = 0;
+            self.quiet_epochs += 1;
+            if self.quiet_epochs >= Self::REARM_EPOCHS && self.level > 0 {
+                self.quiet_epochs = 0;
+                self.level -= 1;
+                self.rearms += 1;
+                return Some(self.level);
+            }
+        }
+        None
+    }
+}
+
 /// The memory controller: composes the host-path policy with the
 /// placement and front-ends every design behind one read/writeback
 /// contract.
@@ -165,6 +261,18 @@ pub struct MemoryController {
     pub tenants: Option<TenantTracker>,
     pub prefetch_installed: u64,
     pub prefetch_used: u64,
+    /// Marker fault site on the flat Implicit/Dynamic probe path
+    /// (None = injection off; tiered sites live inside the tier).
+    marker_fault: Option<FaultInjector>,
+    /// Host-side reliability counters (flat marker site; the tier's
+    /// counters are folded in by [`Self::rel_snapshot`]).
+    rel: ReliabilityStats,
+    /// Detections since the host last re-keyed its markers.
+    marker_errors_since_rekey: u32,
+    /// Error-storm watchdog (Some only once armed by [`Self::set_fault`]).
+    watchdog: Option<ErrorWatchdog>,
+    /// Watchdog level 2: stop creating packed data on the flat path.
+    compress_off: bool,
 }
 
 impl MemoryController {
@@ -238,6 +346,105 @@ impl MemoryController {
             tenants: None,
             prefetch_installed: 0,
             prefetch_used: 0,
+            marker_fault: None,
+            rel: ReliabilityStats::default(),
+            marker_errors_since_rekey: 0,
+            watchdog: None,
+            compress_off: false,
+        }
+    }
+
+    /// Arm fault injection (and the error-storm watchdog) for this run.
+    /// With every rate at zero nothing is installed and the controller
+    /// stays bit-identical to an un-faulted run; the watchdog only arms
+    /// alongside an enabled fault config.
+    pub fn set_fault(&mut self, cfg: &FaultConfig, seed: u64) {
+        if !cfg.enabled() {
+            return;
+        }
+        match self.design.placement {
+            Placement::Tiered => {
+                self.tier
+                    .as_mut()
+                    .expect("tiered design has a tier")
+                    .set_fault(cfg, seed);
+            }
+            Placement::Flat => {
+                // only marker-interpreting flat designs have a fault
+                // site: flat placements cross no link and model no far
+                // media, and explicit metadata carries no markers
+                if cfg.marker_ber > 0.0
+                    && matches!(self.design.policy, Policy::Implicit | Policy::Dynamic)
+                {
+                    self.marker_fault = Some(FaultInjector::marker(cfg.marker_ber, seed));
+                }
+            }
+        }
+        if cfg.watchdog {
+            self.watchdog = Some(ErrorWatchdog::new());
+        }
+    }
+
+    /// Current watchdog ladder level (0 when the watchdog is unarmed).
+    pub fn watchdog_level(&self) -> u8 {
+        self.watchdog.as_ref().map_or(0, |w| w.level())
+    }
+
+    /// Assemble the run's [`ReliabilityStats`]: host-side counters plus
+    /// the tier's media/marker counters, the link's retry telemetry and
+    /// the watchdog's ladder activity.
+    pub fn rel_snapshot(&self) -> ReliabilityStats {
+        let mut r = self.rel;
+        if let Some(t) = self.tier.as_ref() {
+            r.accumulate(&t.rel());
+            r.flits_retried = t.link.traffic.retried_flits;
+            r.retry_beats = t.link.traffic.retry_beats;
+        }
+        if let Some(w) = self.watchdog.as_ref() {
+            r.watchdog_degrades = w.degrades;
+            r.watchdog_rearms = w.rearms;
+            r.degraded_epochs = w.degraded_epochs;
+        }
+        r
+    }
+
+    /// Cumulative error events feeding the watchdog: detected marker /
+    /// media errors plus CRC-retried link flits.
+    fn error_events(&self) -> u64 {
+        let mut e = self.rel.marker_errors + self.rel.media_errors;
+        if let Some(t) = self.tier.as_ref() {
+            let tr = t.rel();
+            e += tr.marker_errors + tr.media_errors + t.link.traffic.retried_flits;
+        }
+        e
+    }
+
+    /// Close this access out for the watchdog and apply ladder moves to
+    /// every executor (host engine, flat write path, tier).
+    fn tick_watchdog(&mut self) {
+        let errors = self.error_events();
+        let Some(w) = self.watchdog.as_mut() else { return };
+        if let Some(level) = w.tick(errors) {
+            let raw = level >= 1;
+            let off = level >= ErrorWatchdog::MAX_LEVEL;
+            self.engine.set_degraded_raw(raw);
+            self.compress_off = off;
+            if let Some(t) = self.tier.as_mut() {
+                t.set_degraded(raw, off);
+            }
+        }
+    }
+
+    /// Count a detected flat-path marker corruption; threshold
+    /// detections re-key the host markers (the sweep runs off the
+    /// demand path; counted only).
+    fn note_flat_marker_error(&mut self) {
+        self.rel.marker_errors += 1;
+        self.rel.marker_detected += 1;
+        self.marker_errors_since_rekey += 1;
+        if self.marker_errors_since_rekey >= CompressedStore::REKEY_ERROR_THRESHOLD {
+            self.marker_errors_since_rekey = 0;
+            self.rel.rekeys += 1;
         }
     }
 
@@ -287,6 +494,9 @@ impl MemoryController {
         let delta = self.bw.since(&bw_before);
         if let Some(tt) = self.tenants.as_mut() {
             tt.charge_read(core, &delta, lat);
+        }
+        if self.watchdog.is_some() {
+            self.tick_watchdog();
         }
         out
     }
@@ -854,5 +1064,136 @@ mod tests {
         }];
         mc.writeback(&a, 10, &mut dram, &mut oracle, false);
         assert_eq!(mc.csi_of(0), Csi::PairCd);
+    }
+
+    #[test]
+    fn watchdog_ladder_trips_and_rearms_with_hysteresis() {
+        let mut w = ErrorWatchdog::new();
+        let mut errors = 0u64;
+        // run one full epoch, optionally injecting a hot error burst
+        let mut epoch = |w: &mut ErrorWatchdog, errors: &mut u64, hot: bool| {
+            if hot {
+                *errors += ErrorWatchdog::HOT_ERRORS;
+            }
+            let mut moved = None;
+            for _ in 0..ErrorWatchdog::EPOCH_ACCESSES {
+                if let Some(l) = w.tick(*errors) {
+                    moved = Some(l);
+                }
+            }
+            moved
+        };
+        // one hot epoch is not enough (hysteresis)
+        assert_eq!(epoch(&mut w, &mut errors, true), None);
+        assert_eq!(w.level(), 0);
+        // the second consecutive hot epoch degrades to raw-link
+        assert_eq!(epoch(&mut w, &mut errors, true), Some(1));
+        // two more reach the ladder bottom: compression off
+        epoch(&mut w, &mut errors, true);
+        assert_eq!(epoch(&mut w, &mut errors, true), Some(2));
+        assert_eq!(w.level(), ErrorWatchdog::MAX_LEVEL);
+        // further storms cannot go past the bottom
+        epoch(&mut w, &mut errors, true);
+        assert_eq!(w.level(), ErrorWatchdog::MAX_LEVEL);
+        assert_eq!(w.degrades, 2);
+        // quiet epochs re-arm one level per hysteresis window
+        for _ in 0..ErrorWatchdog::REARM_EPOCHS - 1 {
+            assert_eq!(epoch(&mut w, &mut errors, false), None);
+        }
+        assert_eq!(epoch(&mut w, &mut errors, false), Some(1));
+        for _ in 0..ErrorWatchdog::REARM_EPOCHS {
+            epoch(&mut w, &mut errors, false);
+        }
+        assert_eq!(w.level(), 0);
+        assert_eq!(w.rearms, 2);
+        assert!(w.degraded_epochs > 0);
+    }
+
+    #[test]
+    fn disarmed_fault_leaves_controller_untouched() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.set_fault(&FaultConfig::default(), 5);
+        assert!(mc.watchdog.is_none(), "watchdog arms only with injection");
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        mc.read(2, 0, 100, &mut dram, &mut oracle, false);
+        assert!(mc.rel_snapshot().is_zero());
+        assert_eq!(mc.bw.second_reads, 0);
+        assert_eq!(mc.watchdog_level(), 0);
+    }
+
+    #[test]
+    fn flat_marker_errors_detected_and_cured() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.set_fault(&FaultConfig { marker_ber: 1.0, ..FaultConfig::default() }, 5);
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        // trained LLP, certain corruption: the single probe detects the
+        // bad tail against the engine's layout and pays one verify re-read
+        let r = mc.read(2, 0, 100, &mut dram, &mut oracle, false);
+        assert_eq!(r.installs.len(), 4, "the cured read still returns the group");
+        let rel = mc.rel_snapshot();
+        assert_eq!(rel.marker_errors, 1);
+        assert_eq!(rel.marker_detected, 1, "nothing silently misread");
+        assert_eq!(rel.silent_misreads, 0);
+        assert_eq!(mc.bw.second_reads, 1, "cure charged as a verify re-read");
+        // threshold detections re-key
+        for i in 0..15u64 {
+            mc.read(2, 0, 1_000 + i * 100, &mut dram, &mut oracle, false);
+        }
+        assert_eq!(mc.rel_snapshot().marker_errors, 16);
+        assert_eq!(mc.rel_snapshot().rekeys, 1);
+    }
+
+    #[test]
+    fn error_storm_degrades_flat_compression_then_rearms() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::Implicit);
+        mc.set_fault(&FaultConfig { marker_ber: 1.0, ..FaultConfig::default() }, 13);
+        mc.writeback(&gang(0, [true; 4]), 0, &mut dram, &mut oracle, false);
+        // storm: every packed read is a detected marker error, so epochs
+        // run hot and the ladder walks down to compression-off
+        let mut now = 100u64;
+        while mc.rel_snapshot().watchdog_degrades < 2 && now < 1_000_000_000 {
+            mc.read(2, 0, now, &mut dram, &mut oracle, false);
+            now += 100;
+        }
+        assert_eq!(mc.rel_snapshot().watchdog_degrades, 2);
+        assert_eq!(mc.watchdog_level(), ErrorWatchdog::MAX_LEVEL);
+        // degraded: a new gang must stop packing
+        mc.writeback(&gang(64, [true; 4]), now, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(64), Csi::Uncompressed, "compression forced off");
+        // quiet traffic (uncompressed lines interpret no markers): the
+        // ladder re-arms and packing resumes
+        let mut q = 0u64;
+        while mc.rel_snapshot().watchdog_rearms < 2 && q < 20_000 {
+            mc.read(1_000_000 + q, 0, now + q * 100, &mut dram, &mut oracle, false);
+            q += 1;
+        }
+        assert_eq!(mc.rel_snapshot().watchdog_rearms, 2, "quiet epochs re-arm");
+        assert_eq!(mc.watchdog_level(), 0);
+        assert!(mc.rel_snapshot().degraded_epochs > 0);
+        mc.writeback(&gang(128, [true; 4]), now + q * 100, &mut dram, &mut oracle, false);
+        assert_eq!(mc.csi_of(128), Csi::Quad, "re-armed controller packs again");
+    }
+
+    #[test]
+    fn tiered_fault_counters_fold_into_the_controller_snapshot() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::tiered(true));
+        mc.set_fault(&FaultConfig::uniform(1.0), 21);
+        let far_line = {
+            let tier = mc.tier.as_ref().unwrap();
+            (0..100_000u64).find(|&l| tier.is_far_line(l)).unwrap()
+        };
+        let base = group_base(far_line);
+        mc.writeback(&gang(base, [true; 4]), 0, &mut dram, &mut oracle, false);
+        mc.read(base + 1, 0, 100_000, &mut dram, &mut oracle, false);
+        let rel = mc.rel_snapshot();
+        assert!(rel.flits_retried > 0, "link site fired");
+        assert!(rel.retry_beats > 0);
+        assert!(rel.media_errors >= 1, "media site fired on the far read");
+        assert_eq!(rel.marker_errors, 1, "packed far read hit the marker site");
+        assert_eq!(rel.marker_detected, rel.marker_errors);
+        assert_eq!(rel.silent_misreads, 0);
+        // the accounting invariant survives injection
+        let stats = mc.tier.as_ref().unwrap().snapshot();
+        assert_eq!(stats.total_accesses(), mc.bw.total());
     }
 }

@@ -270,6 +270,9 @@ mod tests {
         assert_eq!(Design::parse("no-such-design"), None);
         assert_eq!(Design::parse("no-such-design+lc"), None);
         assert_eq!(Design::parse("+lc"), None);
+        assert_eq!(Design::parse(""), None);
+        assert_eq!(Design::parse("cram-static+lc+lc"), None);
+        assert_eq!(Design::parse("CRAM-STATIC"), None, "names are case-sensitive");
     }
 
     #[test]

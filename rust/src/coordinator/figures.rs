@@ -2,7 +2,8 @@
 
 use crate::controller::{Design, MemoryController};
 use crate::coordinator::runner::{
-    run_m1, ResultsDb, C1_DESIGNS, L1_DESIGNS, Q1_DESIGNS, T1_FAR_RATIO, X1_DESIGNS,
+    run_m1, run_r1, ResultsDb, C1_DESIGNS, L1_DESIGNS, Q1_DESIGNS, R1_DESIGN, R1_WORKLOAD,
+    T1_FAR_RATIO, X1_DESIGNS,
 };
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::lit::LineInversionTable;
@@ -896,6 +897,109 @@ fn m1_report(body: String) -> Report {
     }
 }
 
+/// Figure R1: the reliability exhibit — the CRAM far tier under a
+/// uniform bit-error-rate sweep across every injection site (link
+/// flits, far-media reads, marker tails), with the error-storm watchdog
+/// disarmed and armed.  Each point reports the weighted speedup vs the
+/// clean (BER 0) run, the fault/cure telemetry, detection coverage
+/// (always total: the marker no-alias property makes silent misreads
+/// structurally impossible), and the watchdog's degradation history.
+///
+/// Like Figure M1 this simulates on demand (injector state is not part
+/// of the [`ResultsDb`] key space), sized by the db's
+/// [`crate::coordinator::runner::RunPlan`].
+pub fn figure_r1(db: &ResultsDb, format: OutputFormat) -> Report {
+    let runs = run_r1(&db.plan, false);
+    let clean = |dog: bool| runs.iter().find(|r| r.ber == 0.0 && r.watchdog == dog);
+    if format != OutputFormat::Table {
+        let mut sink = Sink::new(&[
+            "ber",
+            "watchdog",
+            "vs_clean",
+            "flits_retried",
+            "retry_beats",
+            "media_errors",
+            "marker_errors",
+            "marker_detected",
+            "silent_misreads",
+            "rekeys",
+            "degrades",
+            "rearms",
+            "degraded_epochs",
+        ]);
+        for r in &runs {
+            let vs = clean(r.watchdog)
+                .map(|c| format!("{:.3}", r.result.weighted_speedup(&c.result)))
+                .unwrap_or_else(|| "null".into());
+            let rel = &r.result.rel;
+            sink.push(vec![
+                Cell::n(r.ber),
+                Cell::n(r.watchdog),
+                Cell::n(vs),
+                Cell::n(rel.flits_retried),
+                Cell::n(rel.retry_beats),
+                Cell::n(rel.media_errors),
+                Cell::n(rel.marker_errors),
+                Cell::n(rel.marker_detected),
+                Cell::n(rel.silent_misreads),
+                Cell::n(rel.rekeys),
+                Cell::n(rel.watchdog_degrades),
+                Cell::n(rel.watchdog_rearms),
+                Cell::n(rel.degraded_epochs),
+            ]);
+        }
+        return r1_report(sink.render(format));
+    }
+    let mut body = String::new();
+    for dog in [false, true] {
+        body.push_str(&format!(
+            "-- watchdog {} --\n",
+            if dog { "armed" } else { "disarmed" }
+        ));
+        body.push_str(&format!(
+            "{:<8} {:>9} {:>10} {:>10} {:>10} {:>10} {:>7} {:>16}\n",
+            "ber", "vs-clean", "flit-retry", "media-err", "marker-err", "detected",
+            "rekeys", "degr/rearm/epochs"
+        ));
+        for r in runs.iter().filter(|r| r.watchdog == dog) {
+            let vs = clean(dog)
+                .map(|c| pct(r.result.weighted_speedup(&c.result)))
+                .unwrap_or_else(|| "-".into());
+            let rel = &r.result.rel;
+            body.push_str(&format!(
+                "{:<8} {:>9} {:>10} {:>10} {:>10} {:>10} {:>7} {:>16}\n",
+                r.ber,
+                vs,
+                rel.flits_retried,
+                rel.media_errors,
+                rel.marker_errors,
+                rel.marker_detected,
+                rel.rekeys,
+                format!(
+                    "{}/{}/{}",
+                    rel.watchdog_degrades, rel.watchdog_rearms, rel.degraded_epochs
+                ),
+            ));
+        }
+    }
+    body.push_str(&format!(
+        "({} under {} at the T1 split; vs-clean = weighted speedup over the \
+         BER-0 run, negative under faults; detection is total at every \
+         point — zero silent misreads by the marker no-alias property)\n",
+        R1_WORKLOAD,
+        R1_DESIGN.name()
+    ));
+    r1_report(body)
+}
+
+fn r1_report(body: String) -> Report {
+    Report {
+        id: "figr1".into(),
+        title: "Reliability: BER sweep, detection coverage, watchdog degradation".into(),
+        body,
+    }
+}
+
 /// Figure L1: the link-codec exhibit — each tiered composition from
 /// [`L1_DESIGNS`] with and without flit compression over the CXL link,
 /// on the far-memory-pressure workloads at the T1 capacity split.
@@ -1224,13 +1328,13 @@ pub fn figure_x1_sweep(db: &ResultsDb, ratios: &[f64], format: OutputFormat) -> 
 }
 
 /// All figure/table ids, in paper order (figt1, figq1, figc1, figx1,
-/// figl1 and figm1 are this repo's tiered-memory, tail-latency,
-/// compressed-LLC, composed-design, link-codec and multi-tenant
-/// extensions, not paper exhibits).
-pub const ALL_IDS: [&str; 20] = [
+/// figl1, figm1 and figr1 are this repo's tiered-memory, tail-latency,
+/// compressed-LLC, composed-design, link-codec, multi-tenant and
+/// reliability extensions, not paper exhibits).
+pub const ALL_IDS: [&str; 21] = [
     "fig3", "fig4", "fig7", "fig8", "fig12", "fig14", "fig15", "fig16", "fig18",
     "fig19", "fig20", "figt1", "figq1", "figc1", "figx1", "figl1", "figm1",
-    "table2", "table3", "table4",
+    "figr1", "table2", "table3", "table4",
 ];
 
 /// Produce one report by id (None for an unknown id).
@@ -1251,6 +1355,7 @@ pub fn report_fmt(db: &ResultsDb, id: &str, format: OutputFormat) -> Option<Repo
         "figx1" => figure_x1(db),
         "figl1" => figure_l1(db, format),
         "figm1" => figure_m1(db, format),
+        "figr1" => figure_r1(db, format),
         "fig4" => figure4(),
         "fig7" => figure7(db),
         "fig8" => figure8(db),
@@ -1392,6 +1497,30 @@ mod tests {
         assert!(r.body.contains("fairness (Jain over 1/slowdown)"));
         assert!(r.body.contains("[qos]"), "{}", r.body);
         assert!(r.body.contains("QoS contrast"), "{}", r.body);
+    }
+
+    #[test]
+    fn figure_r1_reports_both_watchdog_arms_across_the_sweep() {
+        let db = ResultsDb::new(RunPlan {
+            insts_per_core: 8_000,
+            seed: 19,
+            threads: 4,
+        });
+        let r = report(&db, "figr1").expect("figr1 is a known id");
+        assert!(r.body.contains("-- watchdog disarmed --"), "{}", r.body);
+        assert!(r.body.contains("-- watchdog armed --"), "{}", r.body);
+        assert!(r.body.contains("0.01"), "{}", r.body);
+        assert!(r.body.contains("zero silent misreads"), "{}", r.body);
+        let c = report_fmt(&db, "figr1", OutputFormat::Csv).unwrap();
+        assert!(
+            c.body.starts_with("ber,watchdog,vs_clean,flits_retried,"),
+            "{}",
+            c.body
+        );
+        let j = report_fmt(&db, "figr1", OutputFormat::Json).unwrap();
+        assert!(j.body.trim_start().starts_with('['), "{}", j.body);
+        assert!(j.body.contains("\"silent_misreads\":"), "{}", j.body);
+        assert!(j.body.trim_end().ends_with(']'), "{}", j.body);
     }
 
     #[test]

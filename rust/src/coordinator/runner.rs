@@ -5,7 +5,7 @@ use std::sync::Mutex;
 
 use crate::controller::{Design, LinkCodec, Placement, Policy};
 use crate::dram::SchedConfig;
-use crate::sim::{simulate, simulate_tenants, SimConfig};
+use crate::sim::{simulate, simulate_tenants, FaultConfig, SimConfig};
 use crate::stats::SimResult;
 use crate::workloads::profiles::{
     all27, all64, cache_pressure, far_pressure, latency_sensitive, WorkloadProfile,
@@ -270,6 +270,86 @@ pub fn run_m1(plan: &RunPlan, progress: bool) -> (Vec<M1Run>, Option<M1Qos>) {
         })
     });
     (runs, qos)
+}
+
+/// The Figure R1 BER sweep points: clean baseline plus three decades of
+/// uniform bit-error rate across every injection site.
+pub const R1_BERS: [f64; 4] = [0.0, 1e-4, 1e-3, 1e-2];
+
+/// The design the Figure R1 exhibit stresses: the CRAM-compressed far
+/// tier, whose link flits, far-media reads and marker tails are all
+/// exposed to injection at once.
+pub const R1_DESIGN: Design = Design::tiered(true);
+
+/// The far-pressure workload Figure R1 sweeps (the Figure T1 anchor).
+pub const R1_WORKLOAD: &str = "cap_stream";
+
+/// One point of the Figure R1 reliability sweep.
+pub struct R1Run {
+    pub ber: f64,
+    pub watchdog: bool,
+    pub result: SimResult,
+}
+
+/// Run the Figure R1 matrix: [`R1_WORKLOAD`] under [`R1_DESIGN`] at each
+/// BER in [`R1_BERS`], with the error-storm watchdog disarmed and armed.
+/// Fault runs carry injector state the [`RunKey`] cache does not key on,
+/// so — like [`run_m1`] — this returns results directly instead of
+/// populating a [`ResultsDb`].
+pub fn run_r1(plan: &RunPlan, progress: bool) -> Vec<R1Run> {
+    #[derive(Clone, Copy)]
+    struct R1Job {
+        ber: f64,
+        watchdog: bool,
+    }
+    let mut jobs: Vec<R1Job> = Vec::new();
+    for &ber in &R1_BERS {
+        for watchdog in [false, true] {
+            jobs.push(R1Job { ber, watchdog });
+        }
+    }
+    let profile =
+        crate::workloads::profiles::by_name(R1_WORKLOAD).expect("r1 workload exists");
+
+    let descs = jobs.clone();
+    let total = jobs.len();
+    let queue = Mutex::new(jobs.into_iter().enumerate().collect::<VecDeque<_>>());
+    let out: Mutex<Vec<(usize, SimResult)>> = Mutex::new(Vec::with_capacity(total));
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..plan.threads.min(total) {
+            scope.spawn(|| loop {
+                let job = { queue.lock().unwrap().pop_front() };
+                let Some((idx, job)) = job else { break };
+                let mut fault = FaultConfig::uniform(job.ber);
+                fault.watchdog = job.watchdog;
+                let cfg = SimConfig::builder()
+                    .design(R1_DESIGN)
+                    .far_ratio(T1_FAR_RATIO)
+                    .seed(plan.seed)
+                    .insts(plan.insts_per_core)
+                    .warmup(plan.insts_per_core * 2)
+                    .fault(fault)
+                    .build();
+                let r = simulate(&profile, &cfg);
+                out.lock().unwrap().push((idx, r));
+                let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+                if progress {
+                    eprintln!("  [{d}/{total}] BER points done");
+                }
+            });
+        }
+    });
+
+    let mut results = out.into_inner().unwrap();
+    results.sort_by_key(|(idx, _)| *idx);
+    results
+        .into_iter()
+        .map(|(idx, r)| {
+            let j = descs[idx];
+            R1Run { ber: j.ber, watchdog: j.watchdog, result: r }
+        })
+        .collect()
 }
 
 /// Results cache for the full evaluation.
@@ -793,6 +873,35 @@ mod tests {
         assert_eq!(q.reserved, M1_QOS_RESERVED);
         assert!(q.base.tenants.iter().any(|t| t.protected));
         assert!(q.qos.tenants.iter().any(|t| t.protected));
+    }
+
+    #[test]
+    fn r1_sweep_covers_every_ber_and_watchdog_point() {
+        let plan = RunPlan { insts_per_core: 8_000, seed: 3, threads: 4 };
+        let runs = run_r1(&plan, false);
+        assert_eq!(runs.len(), R1_BERS.len() * 2);
+        for r in &runs {
+            assert!(r.result.cycles > 0, "ber {} dog {}", r.ber, r.watchdog);
+            // detection is total at every point: nothing slips through
+            assert_eq!(r.result.rel.silent_misreads, 0);
+            assert_eq!(r.result.rel.marker_detected, r.result.rel.marker_errors);
+            if r.ber == 0.0 {
+                assert!(r.result.rel.is_zero(), "clean point: {:?}", r.result.rel);
+            }
+            if !r.watchdog {
+                assert_eq!(r.result.rel.watchdog_degrades, 0);
+                assert_eq!(r.result.rel.degraded_epochs, 0);
+            }
+        }
+        // the clean points bracket the sweep: injection off is the same
+        // run with and without the watchdog armed (bit-identity)
+        let clean: Vec<_> = runs.iter().filter(|r| r.ber == 0.0).collect();
+        assert_eq!(clean[0].result.cycles, clean[1].result.cycles);
+        // somewhere in the swept decades the injectors must actually fire
+        assert!(
+            runs.iter().any(|r| r.result.rel.flits_retried > 0),
+            "1e-2 over a far-pressure run must retry flits"
+        );
     }
 
     #[test]

@@ -65,6 +65,9 @@ pub struct CompressedStore {
     /// Memo diagnostics (hits = compressor passes avoided).
     pub memo_hits: u64,
     pub memo_misses: u64,
+    /// Detected marker-tail corruptions since the last re-key (the error
+    /// signal feeding [`CompressedStore::note_marker_error`]'s cure).
+    marker_errors_since_rekey: u32,
 }
 
 impl CompressedStore {
@@ -84,7 +87,57 @@ impl CompressedStore {
             memo: PagedArena::new((0, 0)),
             memo_hits: 0,
             memo_misses: 0,
+            marker_errors_since_rekey: 0,
         }
+    }
+
+    /// Detected marker corruptions that trigger the re-key cure.  Low
+    /// enough that a persistently noisy medium rotates keys promptly,
+    /// high enough that an isolated upset doesn't pay the re-encode sweep.
+    pub const REKEY_ERROR_THRESHOLD: u32 = 16;
+
+    /// Feed the marker-error signal: a corrupted marker tail was detected
+    /// (classification disagreed with the layout authority).  Every
+    /// [`Self::REKEY_ERROR_THRESHOLD`] detections the keys are
+    /// regenerated and the memory re-encoded — the paper's Option-2 cure
+    /// wired to an actual error signal instead of only LIT overflow.
+    /// Returns whether this detection tripped a re-key.
+    pub fn note_marker_error(&mut self) -> bool {
+        self.marker_errors_since_rekey += 1;
+        if self.marker_errors_since_rekey >= Self::REKEY_ERROR_THRESHOLD {
+            self.marker_errors_since_rekey = 0;
+            self.rekey_and_reencode();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Cross-check the marker classification of physical location `loc`
+    /// against the ground-truth layout — the detection predicate of the
+    /// reliability subsystem.  `false` means the stored tail no longer
+    /// says what the layout authority knows is there: a detectable
+    /// marker corruption.
+    pub fn classification_matches_layout(&self, loc: u64) -> bool {
+        let phys = self.read_phys(loc);
+        let kind = self.markers.classify(loc, &phys);
+        let base = group_base(loc);
+        let slot = (loc - base) as u8;
+        let csi = self.csi_of(base);
+        match kind {
+            LineKind::Compressed2 => csi.colocated(slot).len() == 2,
+            LineKind::Compressed4 => csi.colocated(slot).len() == 4,
+            LineKind::Invalid => csi.is_stale(slot),
+            LineKind::NeedsLitCheck | LineKind::Uncompressed => csi.colocated(slot).len() == 1,
+        }
+    }
+
+    /// Fault-injection hook for byte-accurate corruption tests: flip one
+    /// bit of the stored tail word at `loc` (where the markers live).
+    pub fn corrupt_tail_bit(&mut self, loc: u64, bit: u32) {
+        let mut line = self.read_phys(loc);
+        line.set_tail_u32(line.tail_u32() ^ (1 << (bit % 32)));
+        self.phys.insert(loc, line);
     }
 
     /// Bytes a transfer of physical location `loc` puts on the link under
@@ -535,6 +588,41 @@ mod tests {
         let group2 = [benign, group[1], group[2], group[3]];
         store.write_group_auto(100, &group2);
         assert!(!store.lit.contains(loc));
+    }
+
+    #[test]
+    fn corrupted_marker_is_detected_and_rekey_cures_it() {
+        let mut store = CompressedStore::new(47);
+        let lines: [CacheLine; 4] = core::array::from_fn(|i| compressible_line(i as u32));
+        store.write_group_auto(0, &lines);
+        assert_eq!(store.csi_of(0), Csi::Quad);
+        assert!(store.classification_matches_layout(0));
+
+        // flip a bit in the stored 4:1 marker tail: the packed block no
+        // longer classifies compressed, but the layout authority still
+        // knows four lines live there — the mismatch is the detection
+        store.corrupt_tail_bit(0, 13);
+        assert_ne!(store.read_interpret(0).kind, LineKind::Compressed4);
+        assert!(!store.classification_matches_layout(0));
+
+        // feed the error signal to threshold: the re-key cure fires,
+        // re-stamping every packed tail under fresh keys
+        let mut rekeyed = false;
+        for _ in 0..CompressedStore::REKEY_ERROR_THRESHOLD {
+            rekeyed = store.note_marker_error();
+        }
+        assert!(rekeyed, "threshold-th detection trips the cure");
+        assert_eq!(store.markers.rekey_count, 1);
+        assert!(store.classification_matches_layout(0), "fresh tail restored");
+        let interp = store.read_interpret(0);
+        assert_eq!(interp.kind, LineKind::Compressed4);
+        for (i, (addr, data)) in interp.lines.iter().enumerate() {
+            assert_eq!(*addr, i as u64);
+            assert_eq!(*data, lines[i], "payload survived corruption + cure");
+        }
+        // below threshold the counter just accumulates
+        assert!(!store.note_marker_error());
+        assert_eq!(store.markers.rekey_count, 1);
     }
 
     #[test]

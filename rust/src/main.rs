@@ -2,13 +2,13 @@
 //!
 //! ```text
 //! repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]
-//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1> [--insts N]
-//! repro figure <q1|c1|l1|m1> --format table|csv|json
+//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1|r1> [--insts N]
+//! repro figure <q1|c1|l1|m1|r1> --format table|csv|json
 //! repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]
 //! repro table <2|3|4|5> [--insts N]
 //! repro sim --workload W --design D [--insts N] [--channels C]
 //!           [--far-ratio R] [--link-codec raw|compressed] [--trace FILE]
-//!           [--llc-compressed]
+//!           [--llc-compressed] [--fault-ber B] [--fault-watchdog on|off]
 //! repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N]
 //! repro analyze [--artifact PATH] [--workload W] [--groups N]
 //! repro list
@@ -53,6 +53,14 @@
 //! interference beats and a Jain fairness index, plus a QoS contrast
 //! with read slots reserved for the `:qos`-marked tenant.  `repro sim
 //! --tenants` runs one such co-location directly.
+//!
+//! `figure r1` is the reliability exhibit: the CRAM far tier under a
+//! uniform bit-error-rate sweep across every injection site (link
+//! flits, far-media reads, marker tails), with the error-storm
+//! watchdog disarmed and armed.  `repro sim --fault-ber B` injects the
+//! same faults into any single run (`--fault-watchdog off` disarms the
+//! degradation ladder); injection is off by default and the disabled
+//! path is bit-identical to a fault-free build.
 //!
 //! (clap is unavailable in this offline environment; argument parsing is
 //! hand-rolled — see DESIGN.md §Substitutions.)
@@ -160,7 +168,7 @@ fn main() {
             }
             // run only the designs the exhibit needs
             match id.as_str() {
-                "fig4" | "table3" | "figm1" => {}
+                "fig4" | "table3" | "figm1" | "figr1" => {}
                 "figt1" => db.run_tiered_t1(true),
                 "figx1" => db.run_x1(true),
                 "figq1" => db.run_q1(human),
@@ -259,7 +267,20 @@ fn main() {
             if flags.contains_key("llc-compressed") {
                 b = b.compressed_llc();
             }
-            let cfg = b.build();
+            if let Some(ber) = flags.get("fault-ber") {
+                b = b.fault_ber(ber.parse().expect("--fault-ber must be a number"));
+            }
+            if let Some(w) = flags.get("fault-watchdog") {
+                b = b.fault_watchdog(match w.as_str() {
+                    "on" | "true" => true,
+                    "off" | "false" => false,
+                    other => usage(&format!("unknown --fault-watchdog {other}")),
+                });
+            }
+            let cfg = match b.try_build() {
+                Ok(c) => c,
+                Err(e) => usage(&format!("invalid config: {e}")),
+            };
             let design = cfg.design;
             let d = design.name();
             let base_cfg = SimConfig { design: Design::Uncompressed, ..cfg.clone() };
@@ -295,6 +316,26 @@ fn main() {
             println!("  prefetch used/inst {} / {}", r.prefetch_used, r.prefetch_installed);
             println!("  groups compressed  {:.1}%", 100.0 * r.compression_enabled_frac);
             println!("  dyn cost/benefit   {} / {}", r.dyn_costs, r.dyn_benefits);
+            if cfg.fault.enabled() {
+                let rel = &r.rel;
+                println!(
+                    "  fault: link        {} flits retried, {} retry beats",
+                    rel.flits_retried, rel.retry_beats
+                );
+                println!(
+                    "  fault: media/marker {} media errs, {} marker errs \
+                     ({} detected, {} silent), {} re-keys",
+                    rel.media_errors,
+                    rel.marker_errors,
+                    rel.marker_detected,
+                    rel.silent_misreads,
+                    rel.rekeys
+                );
+                println!(
+                    "  fault: watchdog    {} degrades, {} re-arms, {} degraded epochs",
+                    rel.watchdog_degrades, rel.watchdog_rearms, rel.degraded_epochs
+                );
+            }
             if !r.dyn_counters.is_empty() {
                 println!("  dyn counters(end)  {:?}", r.dyn_counters);
             }
@@ -551,7 +592,10 @@ fn sim_tenants(spec: &str, flags: &HashMap<String, String>) {
             ..Default::default()
         });
     }
-    let cfg = b.build();
+    let cfg = match b.try_build() {
+        Ok(c) => c,
+        Err(e) => usage(&format!("invalid config: {e}")),
+    };
     let specs = match cram::workloads::parse_tenants(spec, cfg.cores) {
         Ok(s) => s,
         Err(e) => usage(&format!("bad --tenants spec: {e}")),
@@ -614,7 +658,7 @@ fn usage(msg: &str) -> ! {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1> [--insts N]\n  repro figure <q1|c1|l1|m1> --format table|csv|json\n  repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--link-codec raw|compressed] [--trace FILE] [--llc-compressed]\n  repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N] [--insts N]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement x link-codec compositions (repro list\nprints all 28): tiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/\ntiered-explicit (figure x1) — near DDR + far CXL expander; --far-ratio R\nputs fraction R of capacity behind the link; a +lc suffix (or --link-codec\ncompressed on repro sim) compresses flits over that link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product; with --far-ratio R1,R2,... it\nsweeps the capacity split to each tiered composition's break-even\nfigure l1: raw vs compressed link x {static, dynamic, explicit} tiered\ndesigns over the far-pressure suite — speedup vs the raw-link twin plus\nthe wire-vs-storage byte breakdown per traffic class\nfigure m1: multi-tenant co-location mixes x {uncompressed, cram-dynamic,\ntiered-cram-dyn} — per-tenant p99, slowdown-vs-alone, interference beats,\nJain fairness, and a QoS read-slot-reservation contrast\n--format csv|json on figures q1/c1/l1/m1 and the x1 sweep emits the bare\nmachine-readable rows for plotting scripts\nsim --tenants: one co-location (workload[:cores][:qos], comma-separated;\n:qos marks the protected tenant, --qos-slots N reserves N of 32 read slots)\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1|r1> [--insts N]\n  repro figure <q1|c1|l1|m1|r1> --format table|csv|json\n  repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--link-codec raw|compressed] [--trace FILE] [--llc-compressed] [--fault-ber B] [--fault-watchdog on|off]\n  repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N] [--insts N]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement x link-codec compositions (repro list\nprints all 28): tiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/\ntiered-explicit (figure x1) — near DDR + far CXL expander; --far-ratio R\nputs fraction R of capacity behind the link; a +lc suffix (or --link-codec\ncompressed on repro sim) compresses flits over that link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product; with --far-ratio R1,R2,... it\nsweeps the capacity split to each tiered composition's break-even\nfigure l1: raw vs compressed link x {static, dynamic, explicit} tiered\ndesigns over the far-pressure suite — speedup vs the raw-link twin plus\nthe wire-vs-storage byte breakdown per traffic class\nfigure m1: multi-tenant co-location mixes x {uncompressed, cram-dynamic,\ntiered-cram-dyn} — per-tenant p99, slowdown-vs-alone, interference beats,\nJain fairness, and a QoS read-slot-reservation contrast\nfigure r1: reliability — tiered-cram under a uniform BER sweep (link CRC\nretries, far-media errors, marker corruption) with the error-storm\nwatchdog disarmed vs armed; --fault-ber B on repro sim injects the same\nfaults into any run (--fault-watchdog off disarms the degradation ladder;\ninjection defaults off and is then bit-identical to a fault-free build)\n--format csv|json on figures q1/c1/l1/m1/r1 and the x1 sweep emits the bare\nmachine-readable rows for plotting scripts\nsim --tenants: one co-location (workload[:cores][:qos], comma-separated;\n:qos marks the protected tenant, --qos-slots N reserves N of 32 read slots)\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
     );
     std::process::exit(2);
 }

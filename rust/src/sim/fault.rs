@@ -1,0 +1,219 @@
+//! Deterministic fault injection for the reliability subsystem.
+//!
+//! Real deployments of the far tier sit behind an imperfect medium: CXL
+//! flits are protected by per-flit CRC with link-level retry, far media
+//! (NVM, far DRAM) has a raw bit-error rate the controller must tolerate,
+//! and CRAM's implicit-metadata markers (paper §V-A) are only safe if a
+//! corrupted marker tail is *detected* rather than silently reinterpreted
+//! as ordinary data.  This module provides the seeded error source every
+//! injection site draws from:
+//!
+//! * **link site** — fires per flit transfer; a hit models a CRC-detected
+//!   flit and forces a retry with bounded backoff ([`crate::tier::CxlLink`]);
+//! * **media site** — fires per far-media line read; a hit models an
+//!   ECC-corrected-late / retried media access (extra beats, counted);
+//! * **marker site** — fires per marker-tail interpretation; a hit flips
+//!   the classification of a compressed/IL line, exercising the
+//!   detection-and-cure paths in the executors.
+//!
+//! Determinism contract: every injector is seeded from the run seed plus a
+//! per-site salt, so the same `(seed, BER)` pair replays the exact same
+//! error sequence.  **Off means off**: with probability ≤ 0 an injector
+//! never touches its RNG, so disabled runs are bit-identical to builds
+//! that predate fault injection — pinned by
+//! `injection_off_is_bit_identical` here and by the all-zero
+//! [`crate::stats::ReliabilityStats`] test at the system level.
+
+use crate::util::rng::Rng;
+
+/// Per-site salts: distinct streams per injection site so changing one
+/// BER never perturbs another site's error sequence.
+const LINK_SALT: u64 = 0x4C49_4E4B_4652_4C54; // "LINKFLT"
+const MEDIA_SALT: u64 = 0x4D45_4449_4146_4C54; // "MEDIAFLT"
+const MARKER_SALT: u64 = 0x4D41_524B_4652_4C54; // "MARKFLT"
+
+/// Bit-error-rate knobs for the three injection sites plus the watchdog
+/// arm.  Default is everything off — the injectors are never consulted
+/// and the simulation is bit-identical to a fault-free build.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Probability a link flit transfer is CRC-rejected and retried.
+    pub link_ber: f64,
+    /// Probability a far-media line read needs a media-level retry.
+    pub media_ber: f64,
+    /// Probability a marker-tail interpretation sees a corrupted tail.
+    pub marker_ber: f64,
+    /// Arm the controller's error-storm degradation watchdog.
+    pub watchdog: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self { link_ber: 0.0, media_ber: 0.0, marker_ber: 0.0, watchdog: true }
+    }
+}
+
+impl FaultConfig {
+    /// Uniform BER across all three sites (the `--fault-ber` CLI knob).
+    pub fn uniform(ber: f64) -> Self {
+        Self { link_ber: ber, media_ber: ber, marker_ber: ber, watchdog: true }
+    }
+
+    /// Any site armed?  Gates all per-access reliability work.
+    pub fn enabled(&self) -> bool {
+        self.link_ber > 0.0 || self.media_ber > 0.0 || self.marker_ber > 0.0
+    }
+
+    /// Every rate must be a probability.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("link_ber", self.link_ber),
+            ("media_ber", self.media_ber),
+            ("marker_ber", self.marker_ber),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!("{name} must be in [0, 1], got {p}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One seeded Bernoulli error source for one injection site.
+///
+/// Replayable: construction from the same `(seed, site salt, p)` yields
+/// the same fire sequence.  With `p <= 0` the RNG is **never advanced**,
+/// which is what makes disabled injection bit-identical rather than
+/// merely statistically equivalent.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    p: f64,
+    rng: Rng,
+    /// Errors injected so far (monotone; telemetry cross-check).
+    pub injected: u64,
+}
+
+impl FaultInjector {
+    fn with_salt(p: f64, seed: u64, salt: u64) -> Self {
+        Self { p, rng: Rng::new(seed ^ salt), injected: 0 }
+    }
+
+    /// Link-flit site injector.
+    pub fn link(p: f64, seed: u64) -> Self {
+        Self::with_salt(p, seed, LINK_SALT)
+    }
+
+    /// Far-media read site injector.
+    pub fn media(p: f64, seed: u64) -> Self {
+        Self::with_salt(p, seed, MEDIA_SALT)
+    }
+
+    /// Marker-tail site injector.
+    pub fn marker(p: f64, seed: u64) -> Self {
+        Self::with_salt(p, seed, MARKER_SALT)
+    }
+
+    /// Is this site armed at all?
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.p > 0.0
+    }
+
+    /// One Bernoulli trial: does an error strike this event?
+    /// Never touches the RNG when the site is disarmed.
+    #[inline]
+    pub fn fires(&mut self) -> bool {
+        if self.p <= 0.0 {
+            return false;
+        }
+        if self.rng.chance(self.p) {
+            self.injected += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_off_and_valid() {
+        let f = FaultConfig::default();
+        assert!(!f.enabled());
+        assert!(f.validate().is_ok());
+        assert!(f.watchdog);
+    }
+
+    #[test]
+    fn uniform_arms_all_sites() {
+        let f = FaultConfig::uniform(1e-3);
+        assert!(f.enabled());
+        assert_eq!(f.link_ber, 1e-3);
+        assert_eq!(f.media_ber, 1e-3);
+        assert_eq!(f.marker_ber, 1e-3);
+        assert!(f.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_rates() {
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            let mut f = FaultConfig::default();
+            f.link_ber = bad;
+            assert!(f.validate().is_err(), "link_ber {bad} accepted");
+            let mut f = FaultConfig::default();
+            f.media_ber = bad;
+            assert!(f.validate().is_err(), "media_ber {bad} accepted");
+            let mut f = FaultConfig::default();
+            f.marker_ber = bad;
+            assert!(f.validate().is_err(), "marker_ber {bad} accepted");
+        }
+    }
+
+    #[test]
+    fn injection_off_is_bit_identical() {
+        // a disarmed injector must never advance its RNG: after a million
+        // trials its stream equals a freshly constructed one
+        let mut off = FaultInjector::link(0.0, 42);
+        for _ in 0..1_000_000 {
+            assert!(!off.fires());
+        }
+        assert_eq!(off.injected, 0);
+        let mut fresh = FaultInjector::link(0.0, 42);
+        // same next values from both underlying streams
+        assert_eq!(off.rng.next_u64(), fresh.rng.next_u64());
+    }
+
+    #[test]
+    fn replayable_fire_sequence() {
+        let mut a = FaultInjector::media(0.05, 7);
+        let mut b = FaultInjector::media(0.05, 7);
+        let sa: Vec<bool> = (0..10_000).map(|_| a.fires()).collect();
+        let sb: Vec<bool> = (0..10_000).map(|_| b.fires()).collect();
+        assert_eq!(sa, sb);
+        assert_eq!(a.injected, b.injected);
+        assert!(a.injected > 0, "5% over 10k trials should fire");
+    }
+
+    #[test]
+    fn sites_draw_independent_streams() {
+        let mut link = FaultInjector::link(0.5, 9);
+        let mut media = FaultInjector::media(0.5, 9);
+        let sl: Vec<bool> = (0..256).map(|_| link.fires()).collect();
+        let sm: Vec<bool> = (0..256).map(|_| media.fires()).collect();
+        assert_ne!(sl, sm, "per-site salts must decorrelate the streams");
+    }
+
+    #[test]
+    fn fire_rate_tracks_probability() {
+        let mut inj = FaultInjector::marker(0.01, 3);
+        let n = 200_000;
+        for _ in 0..n {
+            inj.fires();
+        }
+        let rate = inj.injected as f64 / n as f64;
+        assert!((rate - 0.01).abs() < 0.002, "rate={rate}");
+    }
+}

@@ -7,10 +7,12 @@
 //! model complete the system.  See DESIGN.md §Substitutions for the
 //! fidelity argument.
 
+pub mod fault;
 pub mod system;
 pub mod tenant;
 pub mod vm;
 
+pub use fault::{FaultConfig, FaultInjector};
 pub use system::{simulate, SimConfig};
 pub use tenant::{simulate_tenants, simulate_tenants_shared};
 pub use vm::VirtualMemory;

@@ -73,6 +73,11 @@ pub struct SimConfig {
     /// uncompressed LLC; every existing design is bit-identical with the
     /// knob off.
     pub llc_compressed: Option<CompressedLlcConfig>,
+    /// Fault injection (link CRC retries, far-media errors, marker
+    /// corruption) plus the error-storm watchdog.  Default: every rate
+    /// zero — no injector is installed and the run is bit-identical to a
+    /// fault-free build (`fault_injection_off_is_bit_identical`).
+    pub fault: crate::sim::fault::FaultConfig,
 }
 
 impl Default for SimConfig {
@@ -92,6 +97,7 @@ impl Default for SimConfig {
             trace: None,
             tier: crate::tier::TierConfig::default(),
             llc_compressed: None,
+            fault: crate::sim::fault::FaultConfig::default(),
         }
     }
 }
@@ -130,6 +136,7 @@ impl SimConfig {
         if self.dram.channels == 0 {
             return Err("dram channels must be >= 1".into());
         }
+        self.fault.validate()?;
         Ok(())
     }
 
@@ -173,6 +180,12 @@ impl SimConfig {
     /// Compressed LLC with explicit knobs (the `repro ablate llc` sweep).
     pub fn with_llc_knobs(mut self, knobs: CompressedLlcConfig) -> Self {
         self.llc_compressed = Some(knobs);
+        self
+    }
+
+    /// Fault-injection knobs (BERs + watchdog) — see [`crate::sim::fault`].
+    pub fn with_fault(mut self, f: crate::sim::fault::FaultConfig) -> Self {
+        self.fault = f;
         self
     }
 }
@@ -278,15 +291,45 @@ impl SimConfigBuilder {
         self
     }
 
+    /// Full fault-injection config (per-site BERs + watchdog flag).
+    pub fn fault(mut self, f: crate::sim::fault::FaultConfig) -> Self {
+        self.cfg.fault = f;
+        self
+    }
+
+    /// Uniform BER across every injection site (link flits, far-media
+    /// reads, marker tails), keeping the current watchdog setting.
+    pub fn fault_ber(mut self, ber: f64) -> Self {
+        let watchdog = self.cfg.fault.watchdog;
+        self.cfg.fault = crate::sim::fault::FaultConfig::uniform(ber);
+        self.cfg.fault.watchdog = watchdog;
+        self
+    }
+
+    /// Arm or disarm the error-storm watchdog (default: armed; it only
+    /// ever acts when an injector actually fires).
+    pub fn fault_watchdog(mut self, on: bool) -> Self {
+        self.cfg.fault.watchdog = on;
+        self
+    }
+
+    /// Validate and return the finished config, or the validation message
+    /// on an impossible composition — the non-panicking path for callers
+    /// that assemble configs from untrusted input (the CLI).
+    pub fn try_build(self) -> Result<SimConfig, String> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+
     /// Validate and return the finished config.
     ///
     /// # Panics
     /// On an invalid composition, with the [`SimConfig::validate`] message.
     pub fn build(self) -> SimConfig {
-        if let Err(e) = self.cfg.validate() {
-            panic!("invalid SimConfig: {e}");
+        match self.try_build() {
+            Ok(cfg) => cfg,
+            Err(e) => panic!("invalid SimConfig: {e}"),
         }
-        self.cfg
     }
 }
 
@@ -432,6 +475,10 @@ pub(crate) fn simulate_multi(
         cfg.tier,
     );
     mc.llc_compressed = cfg.llc_compressed.is_some();
+    // Fault injection: a no-op (no injector installed, RNG never built)
+    // when every rate is zero — the disabled path is bit-identical by
+    // construction, not by sweeping counters under the rug.
+    mc.set_fault(&cfg.fault, cfg.seed);
     if let Some(ts) = &tenants {
         assert_eq!(ts.core_counts.iter().sum::<usize>(), cfg.cores);
         mc.tenants = Some(crate::controller::TenantTracker::new(
@@ -633,6 +680,7 @@ pub(crate) fn simulate_multi(
     let warm_pref = (mc.prefetch_installed, mc.prefetch_used);
     let warm_dram = dram.stats;
     let warm_tier = mc.tier.as_ref().map(|t| t.snapshot()).unwrap_or_default();
+    let warm_rel = mc.rel_snapshot();
     let warm_tenants = mc.tenants.clone();
 
     // Phase 2: measurement.
@@ -708,6 +756,7 @@ pub(crate) fn simulate_multi(
             .map(|d| (0..cfg.cores).map(|c| d.counter(c)).collect())
             .unwrap_or_default(),
         tier: mc.tier.as_ref().map(|t| t.snapshot().since(&warm_tier)),
+        rel: mc.rel_snapshot().since(&warm_rel),
         tenants: tenant_stats,
     }
 }
@@ -1136,5 +1185,131 @@ mod tests {
         if t.promotions > 0 {
             assert!(t.migrated_lines >= 64 * t.promotions);
         }
+    }
+
+    #[test]
+    fn try_build_rejects_without_panicking() {
+        // satellite: every malformed composition comes back as Err from
+        // the non-panicking path, with the same message build() panics with
+        assert!(SimConfig::builder().try_build().is_ok());
+        let e = SimConfig::builder().far_ratio(1.5).try_build().unwrap_err();
+        assert!(e.contains("far_ratio"), "{e}");
+        let e = SimConfig::builder().cores(0).try_build().unwrap_err();
+        assert!(e.contains("cores"), "{e}");
+        let e = SimConfig::builder().fault_ber(1.5).try_build().unwrap_err();
+        assert!(e.contains("ber"), "{e}");
+        let e = SimConfig::builder().fault_ber(-0.1).try_build().unwrap_err();
+        assert!(e.contains("ber"), "{e}");
+    }
+
+    #[test]
+    fn fault_injection_off_is_bit_identical() {
+        // the acceptance bar for the whole subsystem: with every rate at
+        // zero no injector is installed, the watchdog flag is moot, and
+        // the run matches a fault-free one beat for beat — for a flat and
+        // a tiered design alike
+        use crate::sim::fault::FaultConfig;
+        for design in [Design::Implicit, Design::tiered(true)] {
+            let p = by_name("cap_stream").unwrap();
+            let mk = |fault: FaultConfig| {
+                let cfg = SimConfig::default()
+                    .with_design(design)
+                    .with_insts(200_000)
+                    .with_far_ratio(0.75)
+                    .with_fault(fault);
+                simulate(&p, &cfg)
+            };
+            let default = mk(FaultConfig::default());
+            let no_dog = mk(FaultConfig { watchdog: false, ..Default::default() });
+            assert_eq!(default.cycles, no_dog.cycles, "{}", default.design);
+            assert_eq!(default.bw, no_dog.bw, "{}", default.design);
+            assert!(default.rel.is_zero(), "{}: {:?}", default.design, default.rel);
+            assert!(no_dog.rel.is_zero());
+        }
+    }
+
+    #[test]
+    fn raw_designs_report_zero_retries_by_default() {
+        // satellite: the retry telemetry must stay flat-zero on every
+        // design when injection is off — no phantom reliability traffic
+        for design in [Design::Uncompressed, Design::tiered(false)] {
+            let r = quick(design, "cap_stream");
+            assert!(r.rel.is_zero(), "{}: {:?}", r.design, r.rel);
+            if let Some(t) = r.tier {
+                assert_eq!(t.link.traffic.retried_flits, 0, "{}", r.design);
+                assert_eq!(t.link.traffic.retry_beats, 0, "{}", r.design);
+                assert_eq!(t.far.second_reads, 0, "{}", r.design);
+            }
+        }
+    }
+
+    #[test]
+    fn reliability_stats_are_seed_deterministic() {
+        // satellite: same seed + same BER => identical fault history,
+        // counter for counter (the injector RNG is part of the replayable
+        // state, not an entropy source)
+        use crate::sim::fault::FaultConfig;
+        let p = by_name("cap_stream").unwrap();
+        let mk = |seed: u64| {
+            let cfg = SimConfig::builder()
+                .design(Design::tiered(true))
+                .insts(200_000)
+                .far_ratio(0.75)
+                .seed(seed)
+                .fault(FaultConfig::uniform(1e-3))
+                .build();
+            simulate(&p, &cfg)
+        };
+        let a = mk(7);
+        let b = mk(7);
+        assert_eq!(a.rel, b.rel);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.bw, b.bw);
+        assert!(
+            a.rel.flits_retried > 0 || a.rel.media_errors > 0 || a.rel.marker_errors > 0,
+            "1e-3 over a far-pressure run must fire at least once: {:?}",
+            a.rel
+        );
+    }
+
+    #[test]
+    fn no_read_is_silently_corrupted_and_watchdog_bounds_the_storm() {
+        // acceptance: under a marker-error storm every corruption is
+        // detected (the no-alias property makes silent misreads
+        // structurally impossible) and the armed watchdog degrades to
+        // stop the cure-traffic bleed, so it can never lose badly to the
+        // unprotected run
+        use crate::sim::fault::FaultConfig;
+        let p = by_name("cap_stream").unwrap();
+        let mk = |watchdog: bool| {
+            let cfg = SimConfig::builder()
+                .design(Design::tiered(true))
+                .insts(400_000)
+                .far_ratio(0.75)
+                .fault(FaultConfig { marker_ber: 0.5, watchdog, ..Default::default() })
+                .build();
+            simulate(&p, &cfg)
+        };
+        let off = mk(false);
+        assert!(off.rel.marker_errors > 0, "storm must fire: {:?}", off.rel);
+        assert_eq!(off.rel.silent_misreads, 0);
+        assert_eq!(off.rel.marker_detected, off.rel.marker_errors);
+        assert_eq!(off.rel.detection_coverage(), Some(1.0));
+        assert!(off.rel.rekeys > 0, "storm must cross the re-key threshold");
+        assert_eq!(off.rel.watchdog_degrades, 0, "disarmed watchdog never acts");
+
+        let on = mk(true);
+        assert_eq!(on.rel.silent_misreads, 0);
+        assert!(
+            on.rel.degraded_epochs > 0,
+            "the storm must trip the watchdog: {:?}",
+            on.rel
+        );
+        assert!(
+            on.cycles as f64 <= off.cycles as f64 * 1.02,
+            "degrading must bound the slowdown: watchdog-on {} vs off {}",
+            on.cycles,
+            off.cycles
+        );
     }
 }

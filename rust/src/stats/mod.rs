@@ -105,7 +105,7 @@ impl LatencyHist {
 /// Memory-traffic breakdown by cause, in 64-byte accesses.
 /// `demand_*` exists in an uncompressed baseline too; everything else is
 /// compression overhead (or metadata overhead for explicit designs).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Bandwidth {
     /// Demand line reads (first access per LLC read miss).
     pub demand_reads: u64,
@@ -297,6 +297,9 @@ pub struct TierTraffic {
     /// Accesses caused by page migration (both directions count the
     /// accesses they issue on *this* tier).
     pub migr_accesses: u64,
+    /// Verify re-reads cured by the reliability machinery (detected
+    /// media / marker errors under fault injection; zero otherwise).
+    pub second_reads: u64,
 }
 
 impl TierTraffic {
@@ -308,6 +311,7 @@ impl TierTraffic {
             + self.meta_accesses
             + self.prefetch_reads
             + self.migr_accesses
+            + self.second_reads
     }
 
     fn since(&self, warm: &TierTraffic) -> TierTraffic {
@@ -319,6 +323,7 @@ impl TierTraffic {
             meta_accesses: self.meta_accesses - warm.meta_accesses,
             prefetch_reads: self.prefetch_reads - warm.prefetch_reads,
             migr_accesses: self.migr_accesses - warm.migr_accesses,
+            second_reads: self.second_reads - warm.second_reads,
         }
     }
 }
@@ -356,6 +361,11 @@ pub struct LinkTraffic {
     pub migration_wire_bytes: u64,
     /// Flit cycles the codec removed vs serializing every payload raw.
     pub flits_saved: u64,
+    /// Transfers that failed per-flit CRC at least once and were replayed
+    /// (fault injection only; always ≤ total flits sent).
+    pub retried_flits: u64,
+    /// Extra serialization + backoff cycles the replays cost.
+    pub retry_beats: u64,
 }
 
 impl LinkTraffic {
@@ -392,6 +402,91 @@ impl LinkTraffic {
             migration_raw_bytes: self.migration_raw_bytes - warm.migration_raw_bytes,
             migration_wire_bytes: self.migration_wire_bytes - warm.migration_wire_bytes,
             flits_saved: self.flits_saved - warm.flits_saved,
+            retried_flits: self.retried_flits - warm.retried_flits,
+            retry_beats: self.retry_beats - warm.retry_beats,
+        }
+    }
+}
+
+/// Reliability telemetry for a run: what the fault injectors did, what
+/// the detection machinery caught, and how the error-storm watchdog
+/// reacted.  All-zero (the `Default`) whenever injection is off — the
+/// bit-identity acceptance test pins exactly that.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReliabilityStats {
+    /// Link transfers CRC-rejected at least once and replayed.
+    pub flits_retried: u64,
+    /// Extra link cycles (re-serialization + bounded backoff) the
+    /// replays cost.
+    pub retry_beats: u64,
+    /// Far-media reads that needed a media-level retry.
+    pub media_errors: u64,
+    /// Marker-tail interpretations struck by injected corruption.
+    pub marker_errors: u64,
+    /// Corrupted markers *detected* (cross-checked against the layout
+    /// authority and cured with a verified re-read).
+    pub marker_detected: u64,
+    /// Corrupted markers that would have been consumed as wrong data
+    /// without being flagged.  The no-silent-corruption acceptance
+    /// criterion asserts this stays zero.
+    pub silent_misreads: u64,
+    /// Key regenerations triggered by the marker-error signal (the
+    /// paper's re-key cure, wired to detected corruption instead of
+    /// only LIT overflow).
+    pub rekeys: u64,
+    /// Watchdog degradation steps taken (compressed→raw link codec,
+    /// then compression off).
+    pub watchdog_degrades: u64,
+    /// Watchdog re-arms after sustained quiet epochs.
+    pub watchdog_rearms: u64,
+    /// Epochs spent at a degraded level (> 0).
+    pub degraded_epochs: u64,
+}
+
+impl ReliabilityStats {
+    /// Field-wise difference vs a warmup snapshot.
+    pub fn since(&self, warm: &ReliabilityStats) -> ReliabilityStats {
+        ReliabilityStats {
+            flits_retried: self.flits_retried - warm.flits_retried,
+            retry_beats: self.retry_beats - warm.retry_beats,
+            media_errors: self.media_errors - warm.media_errors,
+            marker_errors: self.marker_errors - warm.marker_errors,
+            marker_detected: self.marker_detected - warm.marker_detected,
+            silent_misreads: self.silent_misreads - warm.silent_misreads,
+            rekeys: self.rekeys - warm.rekeys,
+            watchdog_degrades: self.watchdog_degrades - warm.watchdog_degrades,
+            watchdog_rearms: self.watchdog_rearms - warm.watchdog_rearms,
+            degraded_epochs: self.degraded_epochs - warm.degraded_epochs,
+        }
+    }
+
+    /// Field-wise accumulation (folding executor-local counters into the
+    /// run total).
+    pub fn accumulate(&mut self, d: &ReliabilityStats) {
+        self.flits_retried += d.flits_retried;
+        self.retry_beats += d.retry_beats;
+        self.media_errors += d.media_errors;
+        self.marker_errors += d.marker_errors;
+        self.marker_detected += d.marker_detected;
+        self.silent_misreads += d.silent_misreads;
+        self.rekeys += d.rekeys;
+        self.watchdog_degrades += d.watchdog_degrades;
+        self.watchdog_rearms += d.watchdog_rearms;
+        self.degraded_epochs += d.degraded_epochs;
+    }
+
+    /// No reliability event of any kind — the disabled-injection state.
+    pub fn is_zero(&self) -> bool {
+        *self == ReliabilityStats::default()
+    }
+
+    /// Fraction of injected marker errors that were detected (None when
+    /// no marker error ever struck).
+    pub fn detection_coverage(&self) -> Option<f64> {
+        if self.marker_errors == 0 {
+            None
+        } else {
+            Some(self.marker_detected as f64 / self.marker_errors as f64)
         }
     }
 }
@@ -497,6 +592,8 @@ pub struct SimResult {
     /// Per-tenant breakdown (empty for single-tenant runs).  Tenant
     /// `bw` sums and `read_lat` counts partition the totals above.
     pub tenants: Vec<TenantStats>,
+    /// Reliability telemetry; all-zero whenever fault injection is off.
+    pub rel: ReliabilityStats,
 }
 
 impl SimResult {
@@ -558,6 +655,7 @@ mod tests {
             dyn_counters: vec![],
             tier: None,
             tenants: vec![],
+            rel: ReliabilityStats::default(),
         }
     }
 
@@ -749,6 +847,8 @@ mod tests {
             migration_raw_bytes: 512,
             migration_wire_bytes: 300,
             flits_saved: 17,
+            retried_flits: 2,
+            retry_beats: 40,
         };
         assert_eq!(lt.raw_bytes(), 640 + 128 + 256 + 64 + 512);
         assert_eq!(lt.wire_bytes(), 320 + 32 + 200 + 64 + 300);
@@ -757,10 +857,44 @@ mod tests {
         let half = lt.since(&LinkTraffic {
             demand_raw_bytes: 320,
             demand_wire_bytes: 160,
+            retried_flits: 1,
             ..Default::default()
         });
         assert_eq!(half.demand_raw_bytes, 320);
         assert_eq!(half.demand_wire_bytes, 160);
         assert_eq!(half.flits_saved, 17);
+        assert_eq!(half.retried_flits, 1);
+        assert_eq!(half.retry_beats, 40);
+    }
+
+    #[test]
+    fn reliability_stats_since_accumulate_and_coverage() {
+        let zero = ReliabilityStats::default();
+        assert!(zero.is_zero());
+        assert_eq!(zero.detection_coverage(), None);
+        let full = ReliabilityStats {
+            flits_retried: 9,
+            retry_beats: 120,
+            media_errors: 4,
+            marker_errors: 10,
+            marker_detected: 10,
+            silent_misreads: 0,
+            rekeys: 1,
+            watchdog_degrades: 2,
+            watchdog_rearms: 1,
+            degraded_epochs: 6,
+        };
+        assert!(!full.is_zero());
+        assert!((full.detection_coverage().unwrap() - 1.0).abs() < 1e-12);
+        // since() against itself zeroes; warm-subtraction keeps the tail
+        assert!(full.since(&full).is_zero());
+        let warm = ReliabilityStats { flits_retried: 4, marker_errors: 3, ..Default::default() };
+        let d = full.since(&warm);
+        assert_eq!(d.flits_retried, 5);
+        assert_eq!(d.marker_errors, 7);
+        // accumulate() inverts since()
+        let mut acc = warm;
+        acc.accumulate(&d);
+        assert_eq!(acc, full);
     }
 }

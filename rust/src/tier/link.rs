@@ -31,6 +31,7 @@
 //!
 //! [`LinkCodec`]: crate::controller::LinkCodec
 
+use crate::sim::fault::FaultInjector;
 use crate::stats::LinkTraffic;
 
 /// Link geometry and latency.
@@ -125,7 +126,20 @@ pub struct CxlLink {
     pub stats: LinkStats,
     /// Raw-vs-wire byte accounting per [`LinkClass`].
     pub traffic: LinkTraffic,
+    /// Per-flit CRC error source (None = fault injection off; the
+    /// transfer paths are then cycle- and state-identical to the
+    /// pre-reliability model).
+    fault: Option<FaultInjector>,
 }
+
+/// A CRC-rejected transfer is replayed at most this many times before
+/// the link gives up and delivers (the containing protocol would reset;
+/// the bound keeps worst-case timing finite under `--fault-ber 1`).
+const MAX_REPLAYS: u32 = 8;
+/// First-replay backoff in bus cycles; doubles per attempt up to
+/// [`BACKOFF_CAP`].
+const BACKOFF_BASE: u64 = 2;
+const BACKOFF_CAP: u64 = 64;
 
 /// A read command / header flit on the wire (address + opcode).
 pub const CMD_BYTES: u64 = 8;
@@ -140,11 +154,49 @@ impl CxlLink {
             rx_free: 0,
             stats: LinkStats::default(),
             traffic: LinkTraffic::default(),
+            fault: None,
         }
     }
 
     pub fn config(&self) -> &CxlLinkConfig {
         &self.cfg
+    }
+
+    /// Arm (or disarm, with `ber <= 0`) the per-flit CRC error source.
+    /// Seeded: the same `(ber, seed)` replays the same error sequence.
+    pub fn set_fault(&mut self, ber: f64, seed: u64) {
+        self.fault = if ber > 0.0 { Some(FaultInjector::link(ber, seed)) } else { None };
+    }
+
+    /// Replay a CRC-rejected transfer: each rejected attempt re-occupies
+    /// the direction for the transfer's serialization plus a bounded
+    /// exponential backoff (doubling from [`BACKOFF_BASE`], capped at
+    /// [`BACKOFF_CAP`], at most [`MAX_REPLAYS`] attempts).  Returns the
+    /// extra cycles added to the arrival; counts one retried flit per
+    /// affected transfer plus every replay beat into [`LinkTraffic`].
+    fn replay(
+        fault: &mut Option<FaultInjector>,
+        free: &mut u64,
+        busy: &mut u64,
+        traffic: &mut LinkTraffic,
+        cycles: u64,
+    ) -> u64 {
+        let Some(inj) = fault.as_mut() else { return 0 };
+        let mut extra = 0u64;
+        let mut attempt = 0u32;
+        while attempt < MAX_REPLAYS && inj.fires() {
+            let backoff = (BACKOFF_BASE << attempt).min(BACKOFF_CAP);
+            let beats = backoff + cycles;
+            *free += beats;
+            *busy += cycles;
+            extra += beats;
+            if attempt == 0 {
+                traffic.retried_flits += 1;
+            }
+            traffic.retry_beats += beats;
+            attempt += 1;
+        }
+        extra
     }
 
     /// Occupy one direction for `bytes` starting no earlier than `now`.
@@ -190,10 +242,17 @@ impl CxlLink {
     /// decompression latency on top of serialization + port latency.
     pub fn send_payload(&mut self, now: u64, raw: u64, wire: u64, class: LinkClass) -> u64 {
         debug_assert!(wire <= raw, "link codec never expands a payload");
-        let (arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.tx_free, now, wire);
+        let (mut arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.tx_free, now, wire);
         self.stats.tx_flits += 1;
         self.stats.tx_busy_cycles += cycles;
         self.stats.tx_wait_cycles += wait;
+        arrival += Self::replay(
+            &mut self.fault,
+            &mut self.tx_free,
+            &mut self.stats.tx_busy_cycles,
+            &mut self.traffic,
+            cycles,
+        );
         Self::charge(&mut self.traffic, &self.cfg, class, raw, wire);
         if wire < raw {
             arrival + self.cfg.decomp_latency
@@ -213,10 +272,17 @@ impl CxlLink {
     /// latency when the payload crossed compressed.
     pub fn recv_payload(&mut self, now: u64, raw: u64, wire: u64, class: LinkClass) -> u64 {
         debug_assert!(wire <= raw, "link codec never expands a payload");
-        let (arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.rx_free, now, wire);
+        let (mut arrival, wait, cycles) = Self::occupy(&self.cfg, &mut self.rx_free, now, wire);
         self.stats.rx_flits += 1;
         self.stats.rx_busy_cycles += cycles;
         self.stats.rx_wait_cycles += wait;
+        arrival += Self::replay(
+            &mut self.fault,
+            &mut self.rx_free,
+            &mut self.stats.rx_busy_cycles,
+            &mut self.traffic,
+            cycles,
+        );
         Self::charge(&mut self.traffic, &self.cfg, class, raw, wire);
         if wire < raw {
             arrival + self.cfg.decomp_latency
@@ -325,5 +391,77 @@ mod tests {
         assert_eq!(t.writeback_wire_bytes, 48);
         assert_eq!(t.prefetch_wire_bytes, 64);
         assert_eq!(t.migration_wire_bytes, 24);
+    }
+
+    #[test]
+    fn disarmed_fault_is_bit_identical() {
+        let mut plain = CxlLink::new(CxlLinkConfig::default());
+        let mut armed_off = CxlLink::new(CxlLinkConfig::default());
+        armed_off.set_fault(0.0, 42); // ber 0 ⇒ stays None
+        for i in 0..50 {
+            let a = plain.recv_payload(i * 3, DATA_BYTES, 32, LinkClass::Demand);
+            let b = armed_off.recv_payload(i * 3, DATA_BYTES, 32, LinkClass::Demand);
+            assert_eq!(a, b);
+        }
+        assert_eq!(plain.stats, armed_off.stats);
+        assert_eq!(plain.traffic, armed_off.traffic);
+        assert_eq!(plain.traffic.retried_flits, 0);
+        assert_eq!(plain.traffic.retry_beats, 0);
+    }
+
+    #[test]
+    fn certain_error_replays_bounded_with_backoff() {
+        // ber = 1.0 rejects every attempt: exactly MAX_REPLAYS replays,
+        // each costing the 8-cycle re-serialization plus the doubling,
+        // capped backoff 2,4,8,16,32,64,64,64.
+        let mut l = CxlLink::new(CxlLinkConfig::default());
+        l.set_fault(1.0, 7);
+        let t = l.recv(0, DATA_BYTES, LinkClass::Demand);
+        let backoff: u64 = 2 + 4 + 8 + 16 + 32 + 64 + 64 + 64;
+        let beats = backoff + 8 * 8;
+        assert_eq!(l.traffic.retried_flits, 1);
+        assert_eq!(l.traffic.retry_beats, beats);
+        assert_eq!(t, 8 + beats + 24);
+        assert_eq!(l.stats.rx_busy_cycles, 8 + 8 * 8);
+        // the direction stays serialized: a second transfer queues behind
+        // the replays
+        let t2 = l.recv(0, DATA_BYTES, LinkClass::Demand);
+        assert!(t2 > t);
+    }
+
+    #[test]
+    fn retry_telemetry_conserves() {
+        let mut l = CxlLink::new(CxlLinkConfig::default());
+        l.set_fault(0.3, 11);
+        let mut last_wire = 0;
+        for i in 0..200 {
+            l.send_payload(i, DATA_BYTES, 48, LinkClass::Writeback);
+            l.recv_payload(i, DATA_BYTES, 32, LinkClass::Demand);
+            // wire bytes are monotone and unaffected by replays
+            let w = l.traffic.wire_bytes();
+            assert!(w >= last_wire);
+            last_wire = w;
+        }
+        let sent = l.stats.tx_flits + l.stats.rx_flits;
+        assert!(l.traffic.retried_flits <= sent, "retried ≤ sent");
+        assert!(l.traffic.retried_flits > 0, "30% BER over 400 transfers");
+        assert!(l.traffic.retry_beats >= l.traffic.retried_flits);
+        // raw/wire accounting is untouched by the replays
+        assert_eq!(l.traffic.raw_bytes(), 400 * DATA_BYTES);
+        assert_eq!(l.traffic.wire_bytes(), 200 * 48 + 200 * 32);
+    }
+
+    #[test]
+    fn fault_sequence_is_seed_replayable() {
+        let run = |seed: u64| {
+            let mut l = CxlLink::new(CxlLinkConfig::default());
+            l.set_fault(0.1, seed);
+            for i in 0..500 {
+                l.recv(i, DATA_BYTES, LinkClass::Demand);
+            }
+            (l.stats, l.traffic)
+        };
+        // same seed ⇒ identical timing and telemetry, field for field
+        assert_eq!(run(3), run(3));
     }
 }

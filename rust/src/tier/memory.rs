@@ -59,8 +59,10 @@ use crate::cram::dynamic::DynamicCram;
 use crate::cram::group::Csi;
 use crate::cram::metadata::{MetaAccess, MetadataStore};
 use crate::dram::{DramConfig, DramSim, ReqKind};
+use crate::cram::store::CompressedStore;
 use crate::mem::{group_base, group_of, page_of_line};
-use crate::stats::{Bandwidth, TierStats};
+use crate::sim::fault::{FaultConfig, FaultInjector};
+use crate::stats::{Bandwidth, ReliabilityStats, TierStats};
 use crate::tier::link::{CxlLink, CxlLinkConfig, LinkClass, CMD_BYTES, DATA_BYTES};
 use crate::util::rng::splitmix64;
 use crate::workloads::SizeOracle;
@@ -147,6 +149,18 @@ pub struct TieredMemory {
     victim_cursor: usize,
     accesses: u64,
     stats: TierStats,
+    /// Far-media read fault site (None = injection off).
+    media_fault: Option<FaultInjector>,
+    /// Marker-tail fault site on packed far reads (None = injection off).
+    marker_fault: Option<FaultInjector>,
+    /// Expander-side reliability counters (media/marker sites; the link
+    /// site's retry telemetry rides in [`CxlLink::traffic`]).
+    rel: ReliabilityStats,
+    /// Detections since the device last re-keyed its markers.
+    marker_errors_since_rekey: u32,
+    /// Watchdog level 2: stop creating packed far data (existing packed
+    /// groups decay lazily, exactly like a closed Dynamic gate).
+    compress_off: bool,
 }
 
 impl TieredMemory {
@@ -192,9 +206,80 @@ impl TieredMemory {
             victim_cursor: 0,
             accesses: 0,
             stats: TierStats::default(),
+            media_fault: None,
+            marker_fault: None,
+            rel: ReliabilityStats::default(),
+            marker_errors_since_rekey: 0,
+            compress_off: false,
             cfg,
             policy,
         }
+    }
+
+    /// Arm the expander's fault-injection sites (link flits, far-media
+    /// reads, marker tails).  Sites with a zero rate stay uninstalled, so
+    /// the default [`FaultConfig`] leaves the tier bit-identical to an
+    /// un-faulted run.
+    pub fn set_fault(&mut self, cfg: &FaultConfig, seed: u64) {
+        self.link.set_fault(cfg.link_ber, seed);
+        if cfg.media_ber > 0.0 {
+            self.media_fault = Some(FaultInjector::media(cfg.media_ber, seed));
+        }
+        if cfg.marker_ber > 0.0 {
+            self.marker_fault = Some(FaultInjector::marker(cfg.marker_ber, seed));
+        }
+    }
+
+    /// Watchdog degradation ladder: `raw` forces raw flits on this tier's
+    /// link (via the shared engine's wire-size override), `compress_off`
+    /// stops creating packed far data.
+    pub fn set_degraded(&mut self, raw: bool, compress_off: bool) {
+        self.engine.set_degraded_raw(raw);
+        self.compress_off = compress_off;
+    }
+
+    /// Expander-side reliability counters.  Link retry telemetry is in
+    /// `snapshot().link_traffic`; the controller folds both together.
+    pub fn rel(&self) -> ReliabilityStats {
+        self.rel
+    }
+
+    /// Far-media fault site: the device's internal ECC flags a corrupted
+    /// read, cured by one serialized verify re-read before the completion
+    /// flit leaves the expander.  No-op unless injection is armed.
+    fn media_site(&mut self, addr: u64, done: u64, bw: &mut Bandwidth) -> u64 {
+        let Some(inj) = self.media_fault.as_mut() else { return done };
+        if !inj.fires() {
+            return done;
+        }
+        self.rel.media_errors += 1;
+        bw.second_reads += 1;
+        self.stats.far.second_reads += 1;
+        self.far_dram.access(addr, ReqKind::Read, done, false)
+    }
+
+    /// Marker fault site on a packed far read: a corrupted tail is always
+    /// a detectable downward miscue (`cram::marker` pins the no-alias
+    /// property), so the expander cross-checks the tail it read against
+    /// its device-held layout, detects the mismatch, and cures it with a
+    /// serialized verify re-read.  Every
+    /// [`CompressedStore::REKEY_ERROR_THRESHOLD`] detections the device
+    /// re-keys its markers (the sweep runs off the demand path; counted).
+    fn marker_site(&mut self, addr: u64, done: u64, bw: &mut Bandwidth) -> u64 {
+        let Some(inj) = self.marker_fault.as_mut() else { return done };
+        if !inj.fires() {
+            return done;
+        }
+        self.rel.marker_errors += 1;
+        self.rel.marker_detected += 1;
+        self.marker_errors_since_rekey += 1;
+        if self.marker_errors_since_rekey >= CompressedStore::REKEY_ERROR_THRESHOLD {
+            self.marker_errors_since_rekey = 0;
+            self.rel.rekeys += 1;
+        }
+        bw.second_reads += 1;
+        self.stats.far.second_reads += 1;
+        self.far_dram.access(addr, ReqKind::Read, done, false)
     }
 
     pub fn config(&self) -> &TierConfig {
@@ -298,6 +383,7 @@ impl TieredMemory {
                 let wire = self.engine.line_wire_bytes(oracle, line);
                 let at_device = self.link.send(now, CMD_BYTES, LinkClass::Demand);
                 let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
+                let far_done = self.media_site(line, far_done, bw);
                 let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
                 ReadOutcome {
                     done,
@@ -317,6 +403,7 @@ impl TieredMemory {
                 let wire = self.engine.block_wire_bytes(oracle, base, csi, loc);
                 let at_device = self.link.send(now, CMD_BYTES, LinkClass::Demand);
                 let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
+                let far_done = self.media_site(line, far_done, bw);
                 let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
                 self.far_installs(base, csi, loc, line, done)
             }
@@ -330,6 +417,13 @@ impl TieredMemory {
                 let at_device = self.link.send(now, CMD_BYTES, LinkClass::Demand);
                 let far_done =
                     self.far_dram.access(base + loc as u64, ReqKind::Read, at_device, false);
+                let far_done = self.media_site(base + loc as u64, far_done, bw);
+                // only marker-bearing lines interpret a tail on this read
+                let far_done = if csi != Csi::Uncompressed {
+                    self.marker_site(base + loc as u64, far_done, bw)
+                } else {
+                    far_done
+                };
                 let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
                 self.far_installs(base, csi, loc, line, done)
             }
@@ -358,6 +452,8 @@ impl TieredMemory {
                 let at = self.link.send(t, CMD_BYTES, LinkClass::Demand);
                 let far_done =
                     self.far_dram.access(base + loc as u64, ReqKind::Read, at, false);
+                // explicit metadata carries no markers: media site only
+                let far_done = self.media_site(base + loc as u64, far_done, bw);
                 let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
                 self.far_installs(base, actual, loc, line, done)
             }
@@ -450,10 +546,11 @@ impl TieredMemory {
         // flat controller: sampled groups always compress and train the
         // counters; the rest follow the owner core's gate.
         let owner_core = gang[0].core as usize;
-        let compress = match (self.policy, gate.as_ref()) {
-            (Policy::Dynamic, Some(d)) => sampled || d.enabled(owner_core),
-            _ => true,
-        };
+        let compress = !self.compress_off
+            && match (self.policy, gate.as_ref()) {
+                (Policy::Dynamic, Some(d)) => sampled || d.enabled(owner_core),
+                _ => true,
+            };
         let old = self.engine.csi_of_line(base);
         if !compress && old == Csi::Uncompressed {
             // gate closed, group never packed: plain dirty far writes
@@ -1080,6 +1177,91 @@ mod tests {
             r_raw.done
         );
         assert_eq!(r_lc.installs.len(), 4, "codec never changes what a flit carries");
+    }
+
+    #[test]
+    fn disarmed_fault_leaves_tier_bit_identical() {
+        // the default FaultConfig has every rate at zero: set_fault must
+        // install nothing and the run must be bit-identical, not merely
+        // statistically equivalent
+        let (plain, bw_plain) = drive(TieredMemory::new(TierConfig::default(), Policy::Implicit));
+        let mut armed = TieredMemory::new(TierConfig::default(), Policy::Implicit);
+        armed.set_fault(&FaultConfig::default(), 42);
+        let (armed, bw_armed) = drive(armed);
+        assert_eq!(plain.snapshot(), armed.snapshot());
+        assert_eq!(bw_plain, bw_armed);
+        assert!(armed.rel().is_zero());
+    }
+
+    #[test]
+    fn packed_far_read_marker_errors_detected_and_cured() {
+        let mut t = TieredMemory::new(TierConfig::default(), Policy::Implicit);
+        t.set_fault(&FaultConfig { marker_ber: 1.0, ..FaultConfig::default() }, 9);
+        let mut near = DramSim::new(DramConfig::default());
+        let mut o = packable_oracle();
+        let mut bw = Bandwidth::default();
+        let fl = page_in(&t, true);
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut None);
+        // certain corruption: the packed read detects the bad tail against
+        // the device-held layout and cures it with one serialized re-read
+        let clean_done = {
+            let mut c = TieredMemory::new(TierConfig::default(), Policy::Implicit);
+            let mut cb = Bandwidth::default();
+            c.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut cb, false, &mut None);
+            c.read(fl, 100_000, &mut near, &mut cb, &mut o).done
+        };
+        let r = t.read(fl, 100_000, &mut near, &mut bw, &mut o);
+        assert!(r.done > clean_done, "the cure re-read must cost time");
+        assert_eq!(r.installs.len(), 4, "the cured read still returns the block");
+        let rel = t.rel();
+        assert_eq!(rel.marker_errors, 1);
+        assert_eq!(rel.marker_detected, 1, "no corruption goes unflagged");
+        assert_eq!(rel.silent_misreads, 0);
+        assert_eq!(bw.second_reads, 1);
+        assert_eq!(t.snapshot().far.second_reads, 1);
+        // threshold detections re-key the device markers
+        for i in 0..15u64 {
+            t.read(fl, 200_000 + i * 1_000, &mut near, &mut bw, &mut o);
+        }
+        assert_eq!(t.rel().marker_errors, 16);
+        assert_eq!(t.rel().rekeys, 1);
+        assert_eq!(t.rel().detection_coverage(), Some(1.0));
+        assert_eq!(t.snapshot().total_accesses(), bw.total(), "invariant under injection");
+    }
+
+    #[test]
+    fn far_media_errors_cost_one_verify_reread() {
+        let mut t = TieredMemory::new(TierConfig::default(), Policy::Uncompressed);
+        t.set_fault(&FaultConfig { media_ber: 1.0, ..FaultConfig::default() }, 11);
+        let mut near = DramSim::new(DramConfig::default());
+        let mut o = packable_oracle();
+        let mut bw = Bandwidth::default();
+        let fl = page_in(&t, true);
+        let r = t.read(fl, 0, &mut near, &mut bw, &mut o);
+        let mut clean = TieredMemory::new(TierConfig::default(), Policy::Uncompressed);
+        let mut cb = Bandwidth::default();
+        let rc = clean.read(fl, 0, &mut near, &mut cb, &mut o);
+        assert!(r.done > rc.done, "media retry serializes: {} vs {}", r.done, rc.done);
+        assert_eq!(t.rel().media_errors, 1);
+        assert_eq!(bw.second_reads, 1);
+        assert_eq!(t.snapshot().far.second_reads, 1);
+        assert_eq!(t.snapshot().total_accesses(), bw.total());
+    }
+
+    #[test]
+    fn compress_off_degradation_stops_new_packing() {
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Implicit);
+        t.set_degraded(true, true);
+        let fl = page_in(&t, true);
+        let writes_before = bw.demand_writes;
+        t.writeback(&gang(fl, [true; 4]), 0, &mut near, &mut o, &mut bw, false, &mut None);
+        assert_eq!(t.far_csi_of(fl), Csi::Uncompressed, "degraded tier must not pack");
+        assert_eq!(bw.demand_writes, writes_before + 4, "four raw dirty writes");
+        assert_eq!(bw.invalidates + bw.clean_writes, 0);
+        // re-arming restores packing for later writebacks
+        t.set_degraded(false, false);
+        t.writeback(&gang(fl, [true; 4]), 1_000, &mut near, &mut o, &mut bw, false, &mut None);
+        assert_eq!(t.far_csi_of(fl), Csi::Quad);
     }
 
     #[test]

@@ -172,6 +172,19 @@ mod tests {
         assert!(parse_tenants("libq:4:qos,mcf17:4:qos", 8).is_err(), "two qos marks");
         assert!(parse_tenants("libq:bogus", 8).is_err());
         assert!(parse_tenants("mix1:8", 8).is_err(), "MIX profiles rejected");
+        // malformed input must come back as Err, never a panic
+        assert!(parse_tenants(",,,", 8).is_err(), "comma soup is an empty list");
+        assert!(parse_tenants(":4", 8).is_err(), "empty workload name");
+        assert!(parse_tenants("libq:0", 8).is_err(), "zero-core tenant");
+        assert!(parse_tenants("libq:-2", 8).is_err(), "negative core count");
+        assert!(
+            parse_tenants("libq:99999999999999999999", 8).is_err(),
+            "overflowing core count"
+        );
+        assert!(
+            parse_tenants("libq,mcf17,milc,xz,bwaves,lbm,gcc,omnetpp,roms", 8).is_err(),
+            "more tenants than cores"
+        );
     }
 
     #[test]
