@@ -169,6 +169,21 @@ impl CramEngine {
         }
     }
 
+    /// Wire bytes of one command/header flit.  Headers are address +
+    /// opcode — highly redundant across a request stream — so the
+    /// size-only pass halves them (address deltas + opcode packing);
+    /// raw designs ship the full [`CMD_BYTES`] header.  Honors the
+    /// watchdog's raw override like every other wire-size authority.
+    ///
+    /// [`CMD_BYTES`]: crate::tier::link::CMD_BYTES
+    #[inline]
+    pub fn cmd_wire_bytes(&self) -> u64 {
+        match self.effective_codec() {
+            LinkCodec::Raw => crate::tier::link::CMD_BYTES,
+            LinkCodec::Compressed => crate::tier::link::CMD_BYTES / 2,
+        }
+    }
+
     /// Current layout of group `group` (unwritten groups read
     /// uncompressed).
     #[inline]
@@ -580,6 +595,18 @@ mod tests {
         let mut raw = CramEngine::new();
         raw.set_degraded_raw(true);
         assert_eq!(raw.meta_wire_bytes(), DATA_BYTES);
+    }
+
+    #[test]
+    fn cmd_wire_bytes_honors_codec_and_degradation() {
+        use crate::tier::link::CMD_BYTES;
+        let mut e = CramEngine::with_link_codec(LinkCodec::Compressed);
+        assert_eq!(e.cmd_wire_bytes(), CMD_BYTES / 2);
+        e.set_degraded_raw(true);
+        assert_eq!(e.cmd_wire_bytes(), CMD_BYTES);
+        e.set_degraded_raw(false);
+        assert_eq!(e.cmd_wire_bytes(), CMD_BYTES / 2);
+        assert_eq!(CramEngine::new().cmd_wire_bytes(), CMD_BYTES);
     }
 
     #[test]

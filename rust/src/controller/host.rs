@@ -2,7 +2,9 @@
 //! the design's placement is [`Placement::Flat`](super::Placement).
 //!
 //! Every decision (layout transitions, slot plans, probe order, install
-//! recovery) comes from the shared [`CramEngine`]; this module owns only
+//! recovery for the group family; descriptors, fixed offsets and
+//! recompaction for the page family) comes from the shared
+//! [`LayoutEngine`](super::LayoutEngine); this module owns only
 //! the *issue* side — charging [`crate::stats::Bandwidth`] categories,
 //! serializing metadata lookups and mispredicted probes in front of the
 //! demand access, training the LLP and the Dynamic-CRAM counters — which
@@ -22,6 +24,7 @@ use crate::mem::{group_base, group_of, page_of_line};
 use crate::workloads::SizeOracle;
 
 use super::engine::{CramEngine, SlotOp};
+use super::lcp::{LcpLayout, LcpWriteOutcome, PAGE_LINES};
 use super::policy::Policy;
 use super::{Install, Installs, MemoryController, ReadOutcome};
 use crate::cram::group::Csi;
@@ -102,6 +105,47 @@ impl MemoryController {
                 let installs = self.count_installs(base, actual, actual.location(slot), line);
                 ReadOutcome { done, installs }
             }
+            Policy::Lcp => {
+                // 1) page descriptor: one 8B page-table-resident entry,
+                //    reached through the explicit host-side descriptor
+                //    cache (misses serialize in front of the data access,
+                //    exactly like the Explicit metadata lookup above)
+                let page = page_of_line(line);
+                let slot = (line % PAGE_LINES) as u8;
+                let d = self
+                    .engine
+                    .as_lcp_mut()
+                    .expect("lcp policy runs the page family")
+                    .ensure_desc(page, oracle);
+                let meta = self.meta.as_mut().expect("lcp has a descriptor cache");
+                let desc_line = LcpLayout::desc_line_of_page(page);
+                let meta_addr = meta.region_base_line + desc_line;
+                let mut t = now;
+                if meta.access(desc_line, false) == MetaAccess::Miss {
+                    self.bw.meta_reads += 1;
+                    t = dram.access(meta_addr, ReqKind::MetaRead, t, false);
+                }
+                // 2) data access at the fixed offset — one shift from the
+                //    descriptor, never a probe, never a predictor (the LLP
+                //    is not consulted, so its telemetry honestly reads n/a)
+                let page_base = page * PAGE_LINES;
+                let phys = d.physical_line(page_base, slot);
+                self.bw.demand_reads += 1;
+                let done = dram.access(phys, ReqKind::Read, t, false);
+                // logical co-residents of the physical line arrive free
+                let mut installs = Installs::new();
+                for &s in d.coresidents(slot).iter() {
+                    installs.push(Install {
+                        line_addr: page_base + s as u64,
+                        level: 0,
+                        prefetch: s != slot,
+                        size: 0,
+                    });
+                }
+                self.prefetch_installed +=
+                    installs.iter().filter(|i| i.prefetch).count() as u64;
+                ReadOutcome { done, installs }
+            }
             Policy::Implicit | Policy::Dynamic => {
                 let base = group_base(line);
                 let slot = (line - base) as u8;
@@ -173,6 +217,13 @@ impl MemoryController {
         oracle: &mut SizeOracle,
         sampled: bool,
     ) {
+        if self.design.policy == Policy::Lcp {
+            // the page family has its own write discipline (fixed
+            // offsets, exception region, recompaction) — no gang
+            // analysis, no CSI transitions
+            self.writeback_flat_lcp(gang, now, dram, oracle);
+            return;
+        }
         let (base, present, dirty) = CramEngine::gang_masks(gang);
         let old = self.engine.csi_of_line(base);
 
@@ -287,6 +338,65 @@ impl MemoryController {
         // Keep the LLP trained on write-side layout changes too.
         if matches!(self.design.policy, Policy::Implicit | Policy::Dynamic) {
             self.llp.update(page_of_line(base), new);
+        }
+    }
+
+    /// Ganged writeback under flat LCP.  Clean evictions drop free (a
+    /// clean line re-reads from its fixed offset; there is no CSI state
+    /// to repack, unlike CRAM's clean-gang packing); every dirty line is
+    /// re-checked against its page's target and may move through the
+    /// exception region or — on overflow — recompact the whole page.
+    fn writeback_flat_lcp(
+        &mut self,
+        gang: &[crate::cache::Evicted],
+        now: u64,
+        dram: &mut DramSim,
+        oracle: &mut SizeOracle,
+    ) {
+        for e in gang.iter().filter(|e| e.dirty) {
+            let line = e.line_addr;
+            let page = page_of_line(line);
+            let slot = (line % PAGE_LINES) as u8;
+            let page_base = page * PAGE_LINES;
+            oracle.dirty_update(line);
+            let lcp = self.engine.as_lcp_mut().expect("lcp policy runs the page family");
+            let before = lcp.desc_of(page);
+            let outcome = lcp.note_dirty_write(page, slot, oracle);
+            let d = lcp.desc_of(page).expect("descriptor materialized by the write");
+            // the dirty data itself: one write, at the post-layout offset
+            self.bw.demand_writes += 1;
+            dram.access(d.physical_line(page_base, slot), ReqKind::Write, now, false);
+            if let LcpWriteOutcome::Recompacted { old_lines, new_lines } = outcome {
+                // page-granular re-encode: read the old footprint, write
+                // the new one — migration-class overhead the baseline
+                // never pays
+                for i in 0..old_lines {
+                    self.bw.migration += 1;
+                    dram.access(page_base + i, ReqKind::Read, now, false);
+                }
+                for i in 0..new_lines {
+                    self.bw.migration += 1;
+                    dram.access(page_base + i, ReqKind::Write, now, false);
+                }
+            }
+            // persist the descriptor when the layout changed (target or
+            // exception mask): dirty-allocate in the descriptor cache,
+            // paying for misses and dirty victims like Explicit metadata
+            if before != Some(d) {
+                let meta = self.meta.as_mut().expect("lcp has a descriptor cache");
+                let desc_line = LcpLayout::desc_line_of_page(page);
+                let meta_addr = meta.region_base_line + desc_line;
+                let before_wb = meta.writebacks;
+                let how = meta.access(desc_line, true);
+                if how == MetaAccess::Miss {
+                    self.bw.meta_reads += 1;
+                    dram.access(meta_addr, ReqKind::MetaRead, now, false);
+                }
+                if meta.writebacks > before_wb {
+                    self.bw.meta_writes += 1;
+                    dram.access(meta_addr, ReqKind::MetaWrite, now, false);
+                }
+            }
         }
     }
 }

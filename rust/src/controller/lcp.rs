@@ -1,0 +1,563 @@
+//! The LCP layout family: page-granular compression with predictable
+//! offsets (Pekhimenko et al., "Linearly Compressed Pages", MICRO'13).
+//!
+//! Where CRAM packs at 4-line-group granularity and hides metadata in
+//! marker words, LCP compresses a whole OS page to one fixed *target*
+//! size `T ∈ {16, 32, 64}` bytes per line:
+//!
+//! * the physical line holding logical slot `s` is always
+//!   `page_base + (s × T) / 64` — one shift-and-add from the
+//!   page-table-resident descriptor, so a read needs **no** line-location
+//!   predictor and never probes (the telemetry honestly reports LLP
+//!   accuracy as n/a);
+//! * lines that do not fit in `T` bytes are *exceptions*: stored raw in
+//!   an exception region directly after the page's data region, indexed
+//!   by their rank in the descriptor's exception bitmask;
+//! * a dirty write that overflows the exception region ([`EXC_CAP`])
+//!   triggers *recompaction*: the page is re-encoded at the next larger
+//!   target, an explicit page-granular data move the caller charges to
+//!   the migration bandwidth category (conservation holds:
+//!   `total == bw.total()`);
+//! * the descriptor (8 bytes: target + exception bitmask) is
+//!   page-table-resident.  The simulator models its reach through the
+//!   same explicit host-side metadata cache `tiered-explicit` uses
+//!   ([`crate::cram::metadata::MetadataStore`] in pure-cache mode via
+//!   [`MetadataStore::access`](crate::cram::metadata::MetadataStore::access)),
+//!   with [`DESCS_PER_LINE`] descriptors per 64B metadata line.
+//!
+//! LCP is the first policy where *effective capacity* grows, not just
+//! bandwidth: a `T = 16` page stores 64 logical lines in 16 + exceptions
+//! physical lines.  [`LcpLayout::capacity_snapshot`] exports that ledger
+//! as [`CapacityStats`].
+//!
+//! This module is the layout authority only — like
+//! [`CramEngine`](super::engine::CramEngine) it decides *where lines
+//! live* and *what a writeback must touch*; issuing the DRAM/link
+//! traffic stays with the executors ([`crate::controller::host`] and
+//! [`crate::tier::memory`]), which preserves the tier-owns-no-packing
+//! invariant for the second family.
+
+use std::collections::HashMap;
+
+use crate::mem::{LINE_SHIFT, PAGE_BYTES};
+use crate::stats::CapacityStats;
+use crate::tier::link::{CMD_BYTES, DATA_BYTES};
+use crate::util::small::InlineVec;
+use crate::workloads::SizeOracle;
+
+use super::policy::LinkCodec;
+
+/// Logical lines per OS page (64 with 4 KiB pages and 64B lines).
+pub const PAGE_LINES: u64 = PAGE_BYTES >> LINE_SHIFT;
+
+/// The target sizes a page can compress to, smallest first.  `64` means
+/// the page stores raw (every line fits trivially; no exceptions).
+pub const TARGETS: [u8; 3] = [16, 32, 64];
+
+/// Exception-region capacity in lines.  The 9th exception overflows the
+/// page and forces recompaction at the next larger target.
+pub const EXC_CAP: u32 = 8;
+
+/// Page descriptors per 64B metadata-cache line (8B descriptor: 1B
+/// target + ~7B exception bitmask/valid bits).
+pub const DESCS_PER_LINE: u64 = 8;
+
+/// The page-table-resident LCP descriptor: everything a read needs to
+/// compute its one physical address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageDesc {
+    /// Target compressed bytes per line (16, 32, or 64 = raw).
+    pub target: u8,
+    /// Bitmask over the page's 64 slots: set = stored raw in the
+    /// exception region (always 0 for `target == 64`).
+    pub exceptions: u64,
+}
+
+impl PageDesc {
+    /// Physical lines the data region occupies: 64 slots × `target`
+    /// bytes back-to-back = exactly `target` 64B lines.
+    #[inline]
+    pub fn data_lines(&self) -> u64 {
+        self.target as u64
+    }
+
+    /// Total physical lines the page occupies (data + exceptions) — the
+    /// capacity story.
+    #[inline]
+    pub fn physical_lines(&self) -> u64 {
+        self.data_lines() + u64::from(self.exceptions.count_ones())
+    }
+
+    #[inline]
+    pub fn is_exception(&self, slot: u8) -> bool {
+        self.exceptions & (1u64 << slot) != 0
+    }
+
+    /// Rank of an exception slot within the exception region (count of
+    /// set bits below it) — its index past the data region.
+    #[inline]
+    pub fn exc_rank(&self, slot: u8) -> u64 {
+        u64::from((self.exceptions & ((1u64 << slot) - 1)).count_ones())
+    }
+
+    /// Physical line of logical `slot` within the page starting at
+    /// physical line `page_base`: the fixed LCP offset for fitting
+    /// lines, or the exception region for the rest.
+    #[inline]
+    pub fn physical_line(&self, page_base: u64, slot: u8) -> u64 {
+        if self.is_exception(slot) {
+            page_base + self.data_lines() + self.exc_rank(slot)
+        } else {
+            page_base + ((slot as u64 * self.target as u64) >> LINE_SHIFT)
+        }
+    }
+
+    /// Logical slots co-resident on the same physical data line as
+    /// `slot` (the free co-fetch set — up to 64/T members, exceptions
+    /// excluded).  An exception slot is alone on its line.
+    pub fn coresidents(&self, slot: u8) -> InlineVec<u8, 4> {
+        let mut out = InlineVec::new();
+        if self.is_exception(slot) || self.target as u64 >= PAGE_LINES.min(64) {
+            out.push(slot);
+            return out;
+        }
+        let per_line = (DATA_BYTES / self.target as u64) as u8; // 4 or 2
+        let first = (slot / per_line) * per_line;
+        for s in first..first + per_line {
+            if !self.is_exception(s) {
+                out.push(s);
+            }
+        }
+        out
+    }
+}
+
+/// What an LCP dirty writeback did to the page layout — the executor
+/// charges bandwidth accordingly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LcpWriteOutcome {
+    /// The line fits its fixed offset (possibly reclaiming a prior
+    /// exception slot): one data write.
+    Fit,
+    /// The line is (now) an exception: one write into the exception
+    /// region.
+    Exception,
+    /// The write overflowed the exception region; the page was
+    /// recompacted at a larger target.  `old_lines`/`new_lines` are the
+    /// physical footprints before/after — the executor charges the
+    /// page-granular move (read old, write new) as migration traffic.
+    Recompacted { old_lines: u64, new_lines: u64 },
+}
+
+/// The LCP layout authority: per-page descriptors plus the same
+/// wire-size surface [`CramEngine`](super::engine::CramEngine) serves.
+pub struct LcpLayout {
+    pages: HashMap<u64, PageDesc>,
+    link_codec: LinkCodec,
+    degraded_raw: bool,
+    /// Pages re-encoded at a larger target after exception overflow.
+    pub recompactions: u64,
+    /// Dirty line writes the layout has absorbed (compression_frac's
+    /// denominator analog).
+    pub lines_written: u64,
+}
+
+impl LcpLayout {
+    pub fn new() -> Self {
+        Self::with_link_codec(LinkCodec::Raw)
+    }
+
+    pub fn with_link_codec(link_codec: LinkCodec) -> Self {
+        Self {
+            pages: HashMap::new(),
+            link_codec,
+            degraded_raw: false,
+            recompactions: 0,
+            lines_written: 0,
+        }
+    }
+
+    #[inline]
+    pub fn link_codec(&self) -> LinkCodec {
+        self.link_codec
+    }
+
+    #[inline]
+    pub fn set_degraded_raw(&mut self, on: bool) {
+        self.degraded_raw = on;
+    }
+
+    #[inline]
+    fn effective_codec(&self) -> LinkCodec {
+        if self.degraded_raw {
+            LinkCodec::Raw
+        } else {
+            self.link_codec
+        }
+    }
+
+    /// Metadata-cache line index of `page`'s descriptor (relative to
+    /// the descriptor region base).
+    #[inline]
+    pub fn desc_line_of_page(page: u64) -> u64 {
+        page / DESCS_PER_LINE
+    }
+
+    /// The page's descriptor, materialized on first touch: the smallest
+    /// target whose exception count fits [`EXC_CAP`] (the OS would pick
+    /// it at allocation; the oracle's sizes stand in for the page's
+    /// initial contents).
+    pub fn ensure_desc(&mut self, page: u64, oracle: &mut SizeOracle) -> PageDesc {
+        if let Some(d) = self.pages.get(&page) {
+            return *d;
+        }
+        let d = Self::choose_desc(page, oracle, 0);
+        self.pages.insert(page, d);
+        d
+    }
+
+    /// Descriptor already materialized for `page`, if any.
+    #[inline]
+    pub fn desc_of(&self, page: u64) -> Option<PageDesc> {
+        self.pages.get(&page).copied()
+    }
+
+    /// Install a descriptor decided outside the oracle path — the
+    /// byte-accurate store chooses targets from *actual* hybrid
+    /// compressed sizes and registers the result here so the layout
+    /// authority stays the single source of truth.
+    #[inline]
+    pub fn install_desc(&mut self, page: u64, d: PageDesc) {
+        self.pages.insert(page, d);
+    }
+
+    /// Drop a page's descriptor (page migrated away / freed).  Returns
+    /// the old descriptor like [`CramEngine::remove`] returns the CSI.
+    ///
+    /// [`CramEngine::remove`]: super::engine::CramEngine::remove
+    pub fn remove_page(&mut self, page: u64) -> Option<PageDesc> {
+        self.pages.remove(&page)
+    }
+
+    /// Smallest viable target at or above `min_target`, with its
+    /// exception mask, from the oracle's current line sizes.
+    fn choose_desc(page: u64, oracle: &mut SizeOracle, min_target: u8) -> PageDesc {
+        let base = page * PAGE_LINES;
+        for &t in TARGETS.iter().filter(|&&t| t > min_target) {
+            if t as u64 >= DATA_BYTES {
+                break; // raw: every line fits, no exceptions
+            }
+            let mut exc = 0u64;
+            for s in 0..PAGE_LINES {
+                if oracle.size(base + s) > u32::from(t) {
+                    exc |= 1u64 << s;
+                }
+            }
+            if exc.count_ones() <= EXC_CAP {
+                return PageDesc { target: t, exceptions: exc };
+            }
+        }
+        PageDesc { target: DATA_BYTES as u8, exceptions: 0 }
+    }
+
+    /// Absorb one dirty line write: re-checks the line against the
+    /// page's target, moving it in or out of the exception region, and
+    /// recompacts the page when the region overflows.  The caller has
+    /// already applied `oracle.dirty_update` for the line.
+    pub fn note_dirty_write(
+        &mut self,
+        page: u64,
+        slot: u8,
+        oracle: &mut SizeOracle,
+    ) -> LcpWriteOutcome {
+        let mut d = self.ensure_desc(page, oracle);
+        self.lines_written += 1;
+        let size = oracle.size(page * PAGE_LINES + slot as u64);
+        let outcome = if size <= u32::from(d.target) {
+            // fits at the fixed offset; a prior exception slot is
+            // reclaimed (descriptor-only change, rank-indexed region
+            // compacts logically — no data move modeled)
+            d.exceptions &= !(1u64 << slot);
+            LcpWriteOutcome::Fit
+        } else if d.is_exception(slot) {
+            LcpWriteOutcome::Exception // rewrite in place
+        } else {
+            d.exceptions |= 1u64 << slot;
+            if d.exceptions.count_ones() > EXC_CAP {
+                let old_lines = {
+                    // footprint before the overflowing line joined
+                    let before =
+                        PageDesc { target: d.target, exceptions: d.exceptions & !(1u64 << slot) };
+                    before.physical_lines()
+                };
+                d = Self::choose_desc(page, oracle, d.target);
+                self.recompactions += 1;
+                self.pages.insert(page, d);
+                return LcpWriteOutcome::Recompacted { old_lines, new_lines: d.physical_lines() };
+            }
+            LcpWriteOutcome::Exception
+        };
+        self.pages.insert(page, d);
+        outcome
+    }
+
+    /// Wire bytes of the physical data line holding `slot`: the
+    /// co-residents' true compressed sizes back-to-back (the TX
+    /// size-only pass strips LCP's padding-to-target), capped at one
+    /// flit; an exception or raw-page line ships at its single
+    /// compressed size.  Raw codec / watchdog degradation: full flit.
+    pub fn block_wire_bytes(&self, oracle: &mut SizeOracle, page: u64, slot: u8) -> u64 {
+        match self.effective_codec() {
+            LinkCodec::Raw => DATA_BYTES,
+            LinkCodec::Compressed => {
+                let Some(d) = self.desc_of(page) else { return DATA_BYTES };
+                let sum: u64 = d
+                    .coresidents(slot)
+                    .iter()
+                    .map(|&s| u64::from(oracle.size(page * PAGE_LINES + s as u64)))
+                    .sum();
+                sum.min(DATA_BYTES)
+            }
+        }
+    }
+
+    /// Wire bytes of one line shipped alone (writebacks, migration).
+    #[inline]
+    pub fn line_wire_bytes(&self, oracle: &mut SizeOracle, line: u64) -> u64 {
+        match self.effective_codec() {
+            LinkCodec::Raw => DATA_BYTES,
+            LinkCodec::Compressed => u64::from(oracle.size(line)).min(DATA_BYTES),
+        }
+    }
+
+    /// Wire bytes of one descriptor-region crossing — dense small-field
+    /// data, same 4:1 as the CSI metadata authority.
+    #[inline]
+    pub fn meta_wire_bytes(&self) -> u64 {
+        match self.effective_codec() {
+            LinkCodec::Raw => DATA_BYTES,
+            LinkCodec::Compressed => DATA_BYTES / 4,
+        }
+    }
+
+    /// Wire bytes of one command/header flit — mirrors
+    /// [`CramEngine::cmd_wire_bytes`](super::engine::CramEngine::cmd_wire_bytes).
+    #[inline]
+    pub fn cmd_wire_bytes(&self) -> u64 {
+        match self.effective_codec() {
+            LinkCodec::Raw => CMD_BYTES,
+            LinkCodec::Compressed => CMD_BYTES / 2,
+        }
+    }
+
+    /// Fraction of touched pages holding a compressed target — the
+    /// page-granular analog of the group compression fraction.
+    pub fn compression_frac(&self) -> f64 {
+        if self.pages.is_empty() {
+            return 0.0;
+        }
+        let packed = self.pages.values().filter(|d| u64::from(d.target) < DATA_BYTES).count();
+        packed as f64 / self.pages.len() as f64
+    }
+
+    /// The effective-capacity ledger over every touched page.
+    /// `recompactions` is a run-total counter; the line counts are an
+    /// end-of-run state snapshot (capacity is a state, not a flow, so
+    /// there is nothing to warmup-subtract).
+    pub fn capacity_snapshot(&self) -> CapacityStats {
+        let mut c = CapacityStats { recompactions: self.recompactions, ..Default::default() };
+        for d in self.pages.values() {
+            c.pages += 1;
+            c.logical_lines += PAGE_LINES;
+            c.physical_lines += d.physical_lines();
+            c.exception_lines += u64::from(d.exceptions.count_ones());
+        }
+        c
+    }
+}
+
+impl Default for LcpLayout {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::ValueModel;
+
+    // single-class value models give predictable size bands (the table
+    // in workloads::values): SmallInt ≤14B → T=16, Pointer ~17-25B →
+    // T=32, Random 64B → T=64
+    fn small_ints() -> SizeOracle {
+        SizeOracle::new(ValueModel::new([0.0, 1.0, 0.0, 0.0, 0.0], 7))
+    }
+
+    fn pointers() -> SizeOracle {
+        SizeOracle::new(ValueModel::new([0.0, 0.0, 1.0, 0.0, 0.0], 7))
+    }
+
+    fn randoms() -> SizeOracle {
+        SizeOracle::new(ValueModel::new([0.0, 0.0, 0.0, 0.0, 1.0], 7))
+    }
+
+    #[test]
+    fn offsets_are_predictable_and_in_page() {
+        let d = PageDesc { target: 16, exceptions: 0 };
+        // slot s lives at (s*16)/64 — 4 slots per physical line
+        assert_eq!(d.physical_line(0, 0), 0);
+        assert_eq!(d.physical_line(0, 3), 0);
+        assert_eq!(d.physical_line(0, 4), 1);
+        assert_eq!(d.physical_line(0, 63), 15);
+        assert_eq!(d.data_lines(), 16);
+        let d32 = PageDesc { target: 32, exceptions: 0 };
+        assert_eq!(d32.physical_line(64, 0), 64);
+        assert_eq!(d32.physical_line(64, 1), 64);
+        assert_eq!(d32.physical_line(64, 2), 65);
+        assert_eq!(d32.physical_line(64, 63), 64 + 31);
+        let raw = PageDesc { target: 64, exceptions: 0 };
+        assert_eq!(raw.physical_line(0, 17), 17, "raw pages are identity-mapped");
+        // every mapped line stays inside the 64-line page frame
+        for slot in 0..PAGE_LINES as u8 {
+            assert!(d.physical_line(0, slot) < PAGE_LINES);
+            assert!(d32.physical_line(0, slot) < PAGE_LINES);
+        }
+    }
+
+    #[test]
+    fn exceptions_map_past_the_data_region_by_rank() {
+        let d = PageDesc { target: 16, exceptions: (1 << 5) | (1 << 40) };
+        assert!(d.is_exception(5));
+        assert!(!d.is_exception(6));
+        assert_eq!(d.exc_rank(5), 0);
+        assert_eq!(d.exc_rank(40), 1);
+        assert_eq!(d.physical_line(0, 5), 16);
+        assert_eq!(d.physical_line(0, 40), 17);
+        assert_eq!(d.physical_lines(), 18);
+        // exception slots never collide with fitting slots
+        let fit: Vec<u64> = (0..64u8)
+            .filter(|&s| !d.is_exception(s))
+            .map(|s| d.physical_line(0, s))
+            .collect();
+        assert!(fit.iter().all(|&p| p < 16));
+    }
+
+    #[test]
+    fn coresidents_share_one_physical_line() {
+        let d = PageDesc { target: 16, exceptions: 1 << 2 };
+        // slots 0..4 share line 0; slot 2 is an exception and drops out
+        assert_eq!(d.coresidents(0).as_slice(), &[0, 1, 3]);
+        assert_eq!(d.coresidents(2).as_slice(), &[2], "exception rides alone");
+        let d32 = PageDesc { target: 32, exceptions: 0 };
+        assert_eq!(d32.coresidents(5).as_slice(), &[4, 5]);
+        let raw = PageDesc { target: 64, exceptions: 0 };
+        assert_eq!(raw.coresidents(9).as_slice(), &[9], "raw lines ride alone");
+    }
+
+    #[test]
+    fn first_touch_picks_smallest_viable_target() {
+        let mut l = LcpLayout::new();
+        let d = l.ensure_desc(3, &mut small_ints());
+        assert_eq!(d.target, 16, "SmallInt lines (≤14B) fit the smallest target");
+        assert_eq!(d.exceptions, 0);
+        let d = l.ensure_desc(4, &mut pointers());
+        assert_eq!(d.target, 32, "Pointer lines (~17-25B) need the middle target");
+        let d = l.ensure_desc(5, &mut randoms());
+        assert_eq!(d, PageDesc { target: 64, exceptions: 0 }, "Random pages store raw");
+        // the choice is sticky: re-touching returns the stored descriptor
+        assert_eq!(l.ensure_desc(3, &mut randoms()).target, 16);
+        assert_eq!(l.desc_of(6), None, "untouched page has no descriptor");
+    }
+
+    #[test]
+    fn dirty_writes_move_lines_through_the_exception_region() {
+        let mut small = small_ints();
+        let mut l = LcpLayout::new();
+        assert_eq!(l.ensure_desc(0, &mut small).target, 16);
+        // a store bloats slot 5 past the target: it becomes an exception
+        let mut big = pointers();
+        assert!(big.size(5) > 16, "premise: pointer lines exceed the 16B target");
+        assert_eq!(l.note_dirty_write(0, 5, &mut big), LcpWriteOutcome::Exception);
+        let d = l.desc_of(0).unwrap();
+        assert!(d.is_exception(5));
+        assert_eq!(d.physical_line(0, 5), 16, "first exception sits after the data region");
+        // rewriting an exception in place stays an exception
+        assert_eq!(l.note_dirty_write(0, 5, &mut big), LcpWriteOutcome::Exception);
+        assert_eq!(l.desc_of(0).unwrap().exceptions.count_ones(), 1);
+        // a store that shrinks it back reclaims the slot
+        assert_eq!(l.note_dirty_write(0, 5, &mut small), LcpWriteOutcome::Fit);
+        assert!(!l.desc_of(0).unwrap().is_exception(5));
+        assert_eq!(l.lines_written, 3);
+        assert_eq!(l.recompactions, 0);
+    }
+
+    #[test]
+    fn overflow_recompacts_at_the_next_target() {
+        // force a tight target with a full exception region, then land
+        // the 9th exception: the page must re-encode at a larger target
+        let mut l = LcpLayout::new();
+        l.pages.insert(0, PageDesc { target: 16, exceptions: (1u64 << EXC_CAP) - 1 });
+        let mut big = pointers();
+        assert!(big.size(60) > 16, "premise: the write exceeds the old target");
+        let out = l.note_dirty_write(0, 60, &mut big);
+        let d = l.desc_of(0).unwrap();
+        match out {
+            LcpWriteOutcome::Recompacted { old_lines, new_lines } => {
+                assert_eq!(old_lines, 16 + 8, "old data region + full exception region");
+                assert_eq!(new_lines, d.physical_lines());
+            }
+            other => panic!("expected recompaction, got {other:?}"),
+        }
+        assert!(d.target > 16, "target escalated");
+        assert!(d.exceptions.count_ones() <= EXC_CAP, "the new layout is viable");
+        assert_eq!(l.recompactions, 1);
+        assert_eq!(l.capacity_snapshot().recompactions, 1);
+    }
+
+    #[test]
+    fn capacity_snapshot_sums_touched_pages() {
+        let mut l = LcpLayout::new();
+        l.ensure_desc(0, &mut small_ints()); // T=16
+        l.ensure_desc(1, &mut pointers()); // T=32
+        l.ensure_desc(2, &mut randoms()); // T=64
+        let c = l.capacity_snapshot();
+        assert_eq!(c.pages, 3);
+        assert_eq!(c.logical_lines, 3 * PAGE_LINES);
+        let by_desc: u64 = (0..3).map(|p| l.desc_of(p).unwrap().physical_lines()).sum();
+        assert_eq!(c.physical_lines, by_desc);
+        assert!(c.physical_lines < c.logical_lines, "two of three pages compressed");
+        assert!(c.expansion() > 1.0, "compressed pages grow capacity");
+        assert!((l.compression_frac() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(LcpLayout::new().capacity_snapshot().expansion(), 1.0, "no pages = no gain");
+    }
+
+    #[test]
+    fn wire_sizes_honor_codec_and_degradation() {
+        let mut o = small_ints();
+        let mut l = LcpLayout::with_link_codec(LinkCodec::Compressed);
+        assert_eq!(l.ensure_desc(0, &mut o).target, 16);
+        // a T=16 data line ships its 4 co-residents' true sizes
+        let expect: u64 = (0..4u64).map(|s| u64::from(o.size(s))).sum::<u64>().min(DATA_BYTES);
+        assert_eq!(l.block_wire_bytes(&mut o, 0, 0), expect);
+        assert_eq!(l.line_wire_bytes(&mut o, 0), u64::from(o.size(0)));
+        assert_eq!(l.meta_wire_bytes(), DATA_BYTES / 4);
+        assert_eq!(l.cmd_wire_bytes(), CMD_BYTES / 2);
+        l.set_degraded_raw(true);
+        assert_eq!(l.block_wire_bytes(&mut o, 0, 0), DATA_BYTES);
+        assert_eq!(l.line_wire_bytes(&mut o, 0), DATA_BYTES);
+        assert_eq!(l.meta_wire_bytes(), DATA_BYTES);
+        assert_eq!(l.cmd_wire_bytes(), CMD_BYTES);
+        assert_eq!(l.link_codec(), LinkCodec::Compressed, "design axis unchanged");
+        let raw = LcpLayout::new();
+        assert_eq!(raw.meta_wire_bytes(), DATA_BYTES);
+    }
+
+    #[test]
+    fn descriptor_addressing_packs_eight_per_line() {
+        assert_eq!(LcpLayout::desc_line_of_page(0), 0);
+        assert_eq!(LcpLayout::desc_line_of_page(7), 0);
+        assert_eq!(LcpLayout::desc_line_of_page(8), 1);
+        assert_eq!(LcpLayout::desc_line_of_page(805), 100);
+    }
+}

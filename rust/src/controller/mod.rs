@@ -6,10 +6,16 @@
 //!
 //! * [`policy`] — the design space: `Policy` × `Placement`, the
 //!   [`Design`] compatibility facade, name round-trips;
-//! * [`engine`] — the shared [`CramEngine`]: group-layout state,
-//!   packing/unpacking decisions, slot-level write plans, install
-//!   recovery and probe order — one implementation consumed by the flat
-//!   host path, the far-tier expander, and the byte-accurate store;
+//! * [`layout`] — the [`LayoutEngine`] seam: enum dispatch over the two
+//!   layout families so every executor talks to one layout authority;
+//! * [`engine`] — the group family, the shared [`CramEngine`]:
+//!   group-layout state, packing/unpacking decisions, slot-level write
+//!   plans, install recovery and probe order — one implementation
+//!   consumed by the flat host path, the far-tier expander, and the
+//!   byte-accurate store;
+//! * [`lcp`] — the page family, [`LcpLayout`]: per-page compression
+//!   targets, predictable slot offsets, exception regions and
+//!   page-overflow recompaction, with page-table-resident descriptors;
 //! * [`host`] — the flat host path: per-policy read/writeback issue and
 //!   accounting over the host DDR channels;
 //! * [`crate::tier::memory`] — the tiered executor: the same engine
@@ -31,18 +37,23 @@
 //! | `tiered-uncomp` / `tiered-cram` | `None`/`Implicit` `× Tiered` | Figure T1 |
 //! | `tiered-cram-dyn` | `Dynamic × Tiered` | Figure X1 (IBEX-style gated expander) |
 //! | `tiered-explicit` | `Explicit × Tiered` | Figure X1 (explicit metadata on far memory) |
+//! | `lcp` / `tiered-lcp` | `Lcp × Flat`/`Tiered` | Figure P1 (page-granular LCP layout family) |
 //! | `<any>+lc` | `… × … × LinkCodec::Compressed` | Figure L1 (flit compression on the CXL link) |
 //!
 //! The third axis, [`LinkCodec`], rides in the design and reaches the
-//! executors through the shared [`CramEngine`] — the controller threads
-//! it into both the host-side engine and the tier's expander engine at
-//! construction, so no executor special-cases the link codec.
+//! executors through the shared [`LayoutEngine`] — the controller
+//! threads it into both the host-side engine and the tier's expander
+//! engine at construction, so no executor special-cases the link codec.
 
 pub mod engine;
 pub mod host;
+pub mod layout;
+pub mod lcp;
 pub mod policy;
 
 pub use engine::{CramEngine, SlotOp, WritePlan};
+pub use layout::LayoutEngine;
+pub use lcp::{LcpLayout, LcpWriteOutcome, PageDesc};
 pub use policy::{Design, LinkCodec, Placement, Policy};
 
 use crate::cram::dynamic::DynamicCram;
@@ -51,7 +62,7 @@ use crate::cram::metadata::MetadataStore;
 use crate::cram::store::CompressedStore;
 use crate::dram::DramSim;
 use crate::sim::fault::{FaultConfig, FaultInjector};
-use crate::stats::{Bandwidth, LatencyHist, ReliabilityStats};
+use crate::stats::{Bandwidth, CapacityStats, LatencyHist, ReliabilityStats};
 use crate::tier::{TierConfig, TieredMemory};
 use crate::util::small::InlineVec;
 use crate::workloads::SizeOracle;
@@ -239,9 +250,10 @@ impl ErrorWatchdog {
 /// contract.
 pub struct MemoryController {
     pub design: Design,
-    /// The host-side CRAM engine (flat placements): group layouts in
-    /// DRAM plus the packing machinery shared with the far tier.
-    pub engine: CramEngine,
+    /// The host-side layout authority (flat placements): the group
+    /// family's layouts-in-DRAM plus packing machinery, or the page
+    /// family's descriptor ledger — one seam shared with the far tier.
+    pub engine: LayoutEngine,
     pub llp: LineLocationPredictor,
     pub meta: Option<MetadataStore>,
     pub dynamic: Option<DynamicCram>,
@@ -311,11 +323,16 @@ impl MemoryController {
         // Flat explicit designs hold the metadata store at the host
         // controller; tiered explicit designs hold it inside the tier
         // (the expander's metadata region lives in device memory).
+        // Flat LCP reuses the same store as its page-descriptor cache
+        // (page-table-resident descriptors, explicitly cached on chip).
         let meta = match (design.placement, design.policy) {
             (Placement::Flat, Policy::Explicit { row_opt }) => {
                 let mut m = MetadataStore::new(meta_cache_bytes, 8, meta_region_base);
                 m.row_optimized = row_opt;
                 Some(m)
+            }
+            (Placement::Flat, Policy::Lcp) => {
+                Some(MetadataStore::new(meta_cache_bytes, 8, meta_region_base))
             }
             _ => None,
         };
@@ -337,7 +354,7 @@ impl MemoryController {
             design,
             tier,
             llc_compressed: false,
-            engine: CramEngine::with_link_codec(design.link_codec),
+            engine: LayoutEngine::for_policy(design.policy, design.link_codec),
             llp: LineLocationPredictor::new(llp_entries, 0xD1CE),
             meta,
             dynamic,
@@ -570,6 +587,18 @@ impl MemoryController {
     /// Fraction of written groups that ended up compressed (host engine).
     pub fn compression_frac(&self) -> f64 {
         self.engine.compression_frac()
+    }
+
+    /// The effective-capacity ledger, wherever the page family runs
+    /// (host engine for flat LCP, the far expander for tiered LCP).
+    /// `None` for every group-family design: CRAM trades capacity for
+    /// bandwidth by construction, and reporting 1.0× as if measured
+    /// would be dishonest telemetry.
+    pub fn capacity_snapshot(&self) -> Option<CapacityStats> {
+        match self.design.placement {
+            Placement::Flat => self.engine.capacity_snapshot(),
+            Placement::Tiered => self.tier.as_ref().and_then(|t| t.capacity_snapshot()),
+        }
     }
 
     /// Probability that a pair / quad of adjacent lines fits the packing
@@ -995,6 +1024,50 @@ mod tests {
         let (mut mc2, mut dram2, mut oracle2) = setup(Design::Implicit);
         let r2 = mc2.read(2, 0, 0, &mut dram2, &mut oracle2, false);
         assert!(r2.installs.iter().all(|i| i.size == 0));
+    }
+
+    #[test]
+    fn lcp_reads_need_no_probe_and_cofetch_coresidents() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::flat(Policy::Lcp));
+        // cold descriptor cache: one metadata read serialized in front of
+        // the data access; the data access itself never probes
+        let r = mc.read(5, 0, 0, &mut dram, &mut oracle, false);
+        assert_eq!(mc.bw.meta_reads, 1, "descriptor miss pays a metadata read");
+        assert_eq!(mc.bw.demand_reads, 1);
+        assert_eq!(mc.bw.second_reads, 0, "fixed offsets: no probe, ever");
+        // all-SmallInt page -> T=16 -> slot 5 shares its physical line
+        // with slots 4..8 (the free co-fetch)
+        assert_eq!(r.installs.len(), 4);
+        assert_eq!(r.installs.iter().filter(|i| i.prefetch).count(), 3);
+        // a neighboring slot hits the cached descriptor
+        mc.read(6, 0, r.done, &mut dram, &mut oracle, false);
+        assert_eq!(mc.bw.meta_reads, 1, "descriptor cached after first touch");
+        assert!(mc.llp.stats.accuracy().is_none(), "LLP telemetry honestly n/a");
+        assert!(mc.capacity_snapshot().is_some(), "the page family reports capacity");
+    }
+
+    #[test]
+    fn lcp_dirty_write_routes_through_the_exception_region() {
+        let (mut mc, mut dram, mut oracle) = setup(Design::flat(Policy::Lcp));
+        // materialize the page's descriptor at T=16 via a read
+        mc.read(0, 0, 0, &mut dram, &mut oracle, false);
+        let writes_before = mc.bw.demand_writes;
+        // a dirty store re-rolled against an incompressible model bloats
+        // slot 0 past the target: it moves to the exception region
+        let mut big = incompressible_oracle();
+        mc.writeback(&gang(0, [true, false, false, false]), 100, &mut dram, &mut big, false);
+        assert_eq!(mc.bw.demand_writes, writes_before + 1, "one data write");
+        let d = mc.engine.as_lcp().unwrap().desc_of(0).unwrap();
+        assert_eq!(d.target, 16, "target unchanged below the overflow cap");
+        assert!(d.is_exception(0));
+        assert_eq!(mc.meta.as_ref().unwrap().updates, 1, "descriptor persisted");
+        let cap = mc.capacity_snapshot().unwrap();
+        assert_eq!(cap.exception_lines, 1);
+        assert!(cap.expansion() > 1.0, "a T=16 page grows effective capacity");
+        // clean evictions drop free: no CSI state to repack
+        let t = dram.stats.total_accesses();
+        mc.writeback(&gang(4, [false; 4]), 200, &mut dram, &mut oracle, false);
+        assert_eq!(dram.stats.total_accesses(), t, "clean LCP gang costs nothing");
     }
 
     #[test]

@@ -54,6 +54,15 @@ pub enum Policy {
     /// Next-line prefetch baseline (Table V): the bandwidth cost CRAM's
     /// free co-fetches avoid.
     NextLinePrefetch,
+    /// LCP-style page-granular compression (Pekhimenko, MICRO'13): one
+    /// *target* compressed size per page, fixed line offset = slot ×
+    /// target, an exception region for incompressible lines, and a
+    /// page-table-resident descriptor (modeled as an explicit host-side
+    /// metadata cache).  The predictable offset needs no line-location
+    /// predictor, and LCP is the first policy where *effective capacity*
+    /// grows, not just bandwidth — see
+    /// [`crate::stats::CapacityStats`].
+    Lcp,
 }
 
 /// Where the (potentially compressed) memory lives.
@@ -74,8 +83,11 @@ pub enum Placement {
 /// pass is nearly free) on every data payload crossing
 /// [`crate::tier::CxlLink`], serializing only the compressed bytes and
 /// paying a fixed decompression latency at the receiving port.  Command
-/// flits are never compressed.  On [`Placement::Flat`] designs there is
-/// no link, so the codec composes validly but changes nothing.
+/// and metadata flits shrink too (header compression — address deltas
+/// and opcode packing halve the 8B command flit), but header decode is
+/// pipelined in the port, so only *data* payloads pay the decompression
+/// latency.  On [`Placement::Flat`] designs there is no link, so the
+/// codec composes validly but changes nothing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LinkCodec {
     /// Every payload crosses the link at its storage size (default).
@@ -151,7 +163,7 @@ impl Design {
 
     /// Every policy × placement pair, flat designs first (paper order),
     /// then the tiered cross-product — all under [`LinkCodec::Raw`].
-    const BASE: [Design; 14] = [
+    const BASE: [Design; 16] = [
         Design::Uncompressed,
         Design::Ideal,
         Design::explicit(false),
@@ -166,16 +178,19 @@ impl Design {
         Design::new(Policy::Explicit { row_opt: true }, Placement::Tiered),
         Design::new(Policy::Ideal, Placement::Tiered),
         Design::new(Policy::NextLinePrefetch, Placement::Tiered),
+        Design::flat(Policy::Lcp),
+        Design::new(Policy::Lcp, Placement::Tiered),
     ];
 
-    /// Every valid composition: the 14 raw-link pairs in their
-    /// historical order, then the same 14 over the compressed link.
-    pub fn all() -> [Design; 28] {
-        let mut out = [Design::Uncompressed; 28];
+    /// Every valid composition: the 16 raw-link pairs in their
+    /// historical order (LCP appended after the original 14), then the
+    /// same 16 over the compressed link.
+    pub fn all() -> [Design; 32] {
+        let mut out = [Design::Uncompressed; 32];
         let mut i = 0;
-        while i < 14 {
+        while i < 16 {
             out[i] = Self::BASE[i];
-            out[i + 14] = Self::BASE[i].with_link_codec(LinkCodec::Compressed);
+            out[i + 16] = Self::BASE[i].with_link_codec(LinkCodec::Compressed);
             i += 1;
         }
         out
@@ -191,6 +206,7 @@ impl Design {
             (Placement::Flat, Policy::Implicit) => "cram-static",
             (Placement::Flat, Policy::Dynamic) => "cram-dynamic",
             (Placement::Flat, Policy::NextLinePrefetch) => "nextline-prefetch",
+            (Placement::Flat, Policy::Lcp) => "lcp",
             (Placement::Tiered, Policy::Uncompressed) => "tiered-uncomp",
             (Placement::Tiered, Policy::Implicit) => "tiered-cram",
             (Placement::Tiered, Policy::Dynamic) => "tiered-cram-dyn",
@@ -200,6 +216,7 @@ impl Design {
             }
             (Placement::Tiered, Policy::Ideal) => "tiered-ideal",
             (Placement::Tiered, Policy::NextLinePrefetch) => "tiered-nextline",
+            (Placement::Tiered, Policy::Lcp) => "tiered-lcp",
         }
     }
 
@@ -226,6 +243,8 @@ impl Design {
                 "tiered-explicit" => "tiered-explicit+lc",
                 "tiered-explicit-rowopt" => "tiered-explicit-rowopt+lc",
                 "tiered-ideal" => "tiered-ideal+lc",
+                "lcp" => "lcp+lc",
+                "tiered-lcp" => "tiered-lcp+lc",
                 _ => "tiered-nextline+lc",
             },
         }
@@ -309,7 +328,7 @@ mod tests {
             Design::new(Policy::Dynamic, Placement::Tiered).link_codec,
             LinkCodec::Raw
         );
-        for d in Design::all().into_iter().take(14) {
+        for d in Design::all().into_iter().take(16) {
             assert!(!d.link_compressed(), "{}", d.name());
             assert!(!d.name().ends_with("+lc"));
         }
@@ -327,10 +346,10 @@ mod tests {
             Design::tiered(true),
             "stripping the codec recovers the base composition"
         );
-        // all 28 compositions exist and split 14/14 by codec
+        // all 32 compositions exist and split 16/16 by codec
         let all = Design::all();
-        assert_eq!(all.len(), 28);
-        assert_eq!(all.iter().filter(|d| d.link_compressed()).count(), 14);
+        assert_eq!(all.len(), 32);
+        assert_eq!(all.iter().filter(|d| d.link_compressed()).count(), 16);
     }
 
     #[test]
@@ -344,6 +363,19 @@ mod tests {
         let expl_lc = Design::parse("tiered-explicit+lc").unwrap();
         assert_eq!(expl_lc.policy, Policy::Explicit { row_opt: false });
         assert!(expl_lc.link_compressed());
+        // the LCP family round-trips through the same grammar
+        let lcp = Design::parse("lcp").unwrap();
+        assert_eq!((lcp.policy, lcp.placement), (Policy::Lcp, Placement::Flat));
+        assert_eq!(lcp.name(), "lcp");
+        let far_lcp = Design::parse("tiered-lcp").unwrap();
+        assert_eq!(far_lcp.policy, Policy::Lcp);
+        assert!(far_lcp.is_tiered());
+        assert_eq!(far_lcp.name(), "tiered-lcp");
+        let lcp_lc = Design::parse("tiered-lcp+lc").unwrap();
+        assert_eq!(lcp_lc.policy, Policy::Lcp);
+        assert!(lcp_lc.link_compressed());
+        assert_eq!(lcp_lc.name(), "tiered-lcp+lc");
+        assert_eq!(Design::parse("lcp+lc").unwrap().name(), "lcp+lc");
     }
 
     #[test]
@@ -354,6 +386,7 @@ mod tests {
         assert!(Design::Dynamic.compresses());
         assert!(Design::explicit(false).compresses());
         assert!(Design::Ideal.compresses());
+        assert!(Design::flat(Policy::Lcp).compresses());
         // tiered: the expander packs, the host does not
         for d in Design::all().into_iter().filter(Design::is_tiered) {
             assert!(!d.compresses(), "{}", d.name());

@@ -2,15 +2,15 @@
 
 use crate::controller::{Design, MemoryController};
 use crate::coordinator::runner::{
-    run_m1, run_r1, ResultsDb, C1_DESIGNS, L1_DESIGNS, Q1_DESIGNS, R1_DESIGN, R1_WORKLOAD,
-    T1_FAR_RATIO, X1_DESIGNS,
+    run_m1, run_r1, ResultsDb, C1_DESIGNS, L1_DESIGNS, P1_DESIGNS, Q1_DESIGNS, R1_DESIGN,
+    R1_WORKLOAD, T1_FAR_RATIO, X1_DESIGNS,
 };
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::lit::LineInversionTable;
 use crate::cram::llp::LineLocationPredictor;
 use crate::cram::marker::MarkerEngine;
 use crate::energy::{energy_of, EnergyConfig};
-use crate::stats::{geomean_speedup, jain_index, NS_PER_BUS_CYCLE};
+use crate::stats::{geomean_speedup, jain_index, SimResult, NS_PER_BUS_CYCLE};
 use crate::util::pct;
 use crate::workloads::profiles::{
     all27, all64, cache_pressure, far_pressure, latency_sensitive, Suite,
@@ -1009,8 +1009,10 @@ fn r1_report(body: String) -> Report {
 /// transfers moved vs the bytes that actually crossed the wire, the
 /// link flit-cycles the payload-aware serializer avoided, and the
 /// wire/raw ratio split by traffic class — demand fills, metadata,
-/// writebacks, prefetch and migration.  Command flits never compress,
-/// so a ratio of 1.00 on incompressible traffic is correct, not a bug.
+/// writebacks, prefetch and migration.  Command headers and metadata
+/// lines compress at fixed ratios (address/opcode packing, dense CSI
+/// fields); data payloads track the size oracle, so a ratio of 1.00 on
+/// incompressible data traffic is correct, not a bug.
 pub fn figure_l1(db: &ResultsDb, format: OutputFormat) -> Report {
     let pairs: Vec<(Design, Design)> =
         (0..3).map(|i| (L1_DESIGNS[i], L1_DESIGNS[i + 3])).collect();
@@ -1125,6 +1127,160 @@ fn l1_report(body: String) -> Report {
     Report {
         id: "figl1".into(),
         title: "Link codec: flit compression over the CXL link (wire vs storage bytes)".into(),
+        body,
+    }
+}
+
+/// Figure P1: the layout-family exhibit — the line-granular CRAM
+/// layouts (implicit, gated, explicit metadata) next to the LCP
+/// page-granular layout, flat and on the far expander, over the
+/// 27-workload suite plus the far-pressure set ([`P1_DESIGNS`]).
+///
+/// Every column answers the same three questions from a different
+/// layout family: what the layout buys in weighted speedup over flat
+/// uncompressed DDR, what its metadata authority costs as a fraction
+/// of total traffic, and what it returns in effective capacity.
+/// CRAM's capacity column is honestly `-`, not 1.00: a packed group
+/// still owns its four physical slots (CRAM trades capacity for
+/// bandwidth), while LCP's fixed-offset pages are the first layout in
+/// the repo where main memory actually grows.
+pub fn figure_p1(db: &ResultsDb, format: OutputFormat) -> Report {
+    let designs: Vec<(Design, &str)> = P1_DESIGNS
+        .into_iter()
+        .filter(|d| *d != Design::Uncompressed)
+        .map(|d| {
+            let label = match d.name() {
+                "cram-static" => "cram",
+                "cram-dynamic" => "cram-dyn",
+                "cram-explicit" => "explicit",
+                "lcp" => "lcp",
+                "tiered-uncomp" => "t-uncomp",
+                "tiered-cram" => "t-cram",
+                "tiered-explicit" => "t-expl",
+                _ => "t-lcp",
+            };
+            (d, label)
+        })
+        .collect();
+    let workloads: Vec<_> = all27().into_iter().chain(far_pressure()).collect();
+    let meta_frac = |r: &SimResult| {
+        (r.bw.meta_reads + r.bw.meta_writes) as f64 / r.bw.total().max(1) as f64
+    };
+    if format != OutputFormat::Table {
+        let mut sink = Sink::new(&[
+            "workload",
+            "design",
+            "speedup",
+            "meta_frac",
+            "eff_capacity",
+            "exception_lines",
+            "recompactions",
+        ]);
+        for w in &workloads {
+            for (d, _) in &designs {
+                let (Some(base), Some(r)) =
+                    (db.get(w.name, Design::Uncompressed), db.get(w.name, *d))
+                else {
+                    continue;
+                };
+                let (cap, exc, rec) = match r.capacity {
+                    Some(c) => (
+                        Cell::n(format!("{:.4}", c.expansion())),
+                        Cell::n(c.exception_lines),
+                        Cell::n(c.recompactions),
+                    ),
+                    None => (Cell::s("n/a"), Cell::s("n/a"), Cell::s("n/a")),
+                };
+                sink.push(vec![
+                    Cell::s(w.name),
+                    Cell::s(d.name()),
+                    Cell::n(format!("{:.4}", r.weighted_speedup(base))),
+                    Cell::n(format!("{:.4}", meta_frac(r))),
+                    cap,
+                    exc,
+                    rec,
+                ]);
+            }
+        }
+        return p1_report(sink.render(format));
+    }
+    // section 1: per-workload speedups, one column per layout family
+    let mut body = format!("{:<12}", "workload");
+    for (_, l) in &designs {
+        body.push_str(&format!(" {l:>9}"));
+    }
+    body.push('\n');
+    let n = designs.len();
+    let mut speedups: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut metas: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut caps: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let (mut excs, mut recs) = (vec![0u64; n], vec![0u64; n]);
+    for w in &workloads {
+        body.push_str(&format!("{:<12}", w.name));
+        for (i, (d, _)) in designs.iter().enumerate() {
+            let (Some(base), Some(r)) =
+                (db.get(w.name, Design::Uncompressed), db.get(w.name, *d))
+            else {
+                body.push_str(&format!(" {:>9}", "-"));
+                continue;
+            };
+            let s = r.weighted_speedup(base);
+            speedups[i].push(s);
+            metas[i].push(meta_frac(r));
+            if let Some(c) = r.capacity {
+                caps[i].push(c.expansion());
+                excs[i] += c.exception_lines;
+                recs[i] += c.recompactions;
+            }
+            body.push_str(&format!(" {:>9}", pct(s)));
+        }
+        body.push('\n');
+    }
+    body.push_str(&format!("{:<12}", "GEOMEAN"));
+    for col in &speedups {
+        body.push_str(&format!(" {:>9}", pct(geomean_speedup(col))));
+    }
+    body.push('\n');
+    // section 2: what each layout authority costs and returns
+    body.push_str(&format!(
+        "\n{:<10} {:>9} {:>10} {:>8} {:>10} {:>11}\n",
+        "design", "geomean", "meta-frac", "eff-cap", "exc-lines", "recompacts"
+    ));
+    for (i, (_, l)) in designs.iter().enumerate() {
+        let cap = if caps[i].is_empty() {
+            (format!("{:>8}", "-"), format!("{:>10}", "-"), format!("{:>11}", "-"))
+        } else {
+            (
+                format!("{:>8.3}", geomean_speedup(&caps[i])),
+                format!("{:>10}", excs[i]),
+                format!("{:>11}", recs[i]),
+            )
+        };
+        body.push_str(&format!(
+            "{:<10} {:>9} {:>9.1}% {} {} {}\n",
+            l,
+            pct(geomean_speedup(&speedups[i])),
+            crate::util::mean(&metas[i]) * 100.0,
+            cap.0,
+            cap.1,
+            cap.2,
+        ));
+    }
+    body.push_str(
+        "(speedups: weighted vs flat uncompressed DDR, tiered columns at the T1 \
+         capacity split; meta-frac: metadata reads+writes as a share of total \
+         accesses; eff-cap: geomean capacity expansion of the page ledger — `-` \
+         for line-granular families, whose packed groups still own their slots; \
+         exc-lines/recompacts: LCP exception-region footprint and page \
+         re-encodes after exception overflow)\n",
+    );
+    p1_report(body)
+}
+
+fn p1_report(body: String) -> Report {
+    Report {
+        id: "figp1".into(),
+        title: "Layout families: CRAM line-granular vs LCP page-granular".into(),
         body,
     }
 }
@@ -1328,13 +1484,14 @@ pub fn figure_x1_sweep(db: &ResultsDb, ratios: &[f64], format: OutputFormat) -> 
 }
 
 /// All figure/table ids, in paper order (figt1, figq1, figc1, figx1,
-/// figl1, figm1 and figr1 are this repo's tiered-memory, tail-latency,
-/// compressed-LLC, composed-design, link-codec, multi-tenant and
-/// reliability extensions, not paper exhibits).
-pub const ALL_IDS: [&str; 21] = [
+/// figl1, figm1, figr1 and figp1 are this repo's tiered-memory,
+/// tail-latency, compressed-LLC, composed-design, link-codec,
+/// multi-tenant, reliability and layout-family extensions, not paper
+/// exhibits).
+pub const ALL_IDS: [&str; 22] = [
     "fig3", "fig4", "fig7", "fig8", "fig12", "fig14", "fig15", "fig16", "fig18",
     "fig19", "fig20", "figt1", "figq1", "figc1", "figx1", "figl1", "figm1",
-    "figr1", "table2", "table3", "table4",
+    "figr1", "figp1", "table2", "table3", "table4",
 ];
 
 /// Produce one report by id (None for an unknown id).
@@ -1356,6 +1513,7 @@ pub fn report_fmt(db: &ResultsDb, id: &str, format: OutputFormat) -> Option<Repo
         "figl1" => figure_l1(db, format),
         "figm1" => figure_m1(db, format),
         "figr1" => figure_r1(db, format),
+        "figp1" => figure_p1(db, format),
         "fig4" => figure4(),
         "fig7" => figure7(db),
         "fig8" => figure8(db),
@@ -1571,6 +1729,42 @@ mod tests {
         let j = report_fmt(&db, "figl1", OutputFormat::Json).unwrap();
         assert!(j.body.trim_start().starts_with('['), "{}", j.body);
         assert!(j.body.contains("\"demand_wire\":"), "{}", j.body);
+        assert!(j.body.trim_end().ends_with(']'), "{}", j.body);
+    }
+
+    #[test]
+    fn figure_p1_reports_both_layout_families() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 8_000,
+            seed: 23,
+            threads: 4,
+        });
+        db.run_p1(false);
+        let r = figure_p1(&db, OutputFormat::Table);
+        assert!(r.body.contains("cap_stream"), "{}", r.body);
+        for label in ["cram-dyn", "lcp", "t-lcp", "t-expl"] {
+            assert!(r.body.contains(label), "{label} missing: {}", r.body);
+        }
+        assert!(r.body.contains("GEOMEAN"), "{}", r.body);
+        assert!(r.body.contains("eff-cap"), "{}", r.body);
+        assert!(r.body.contains("recompacts"), "{}", r.body);
+        assert!(report(&db, "figp1").is_some());
+        let c = figure_p1(&db, OutputFormat::Csv);
+        assert!(
+            c.body.starts_with(
+                "workload,design,speedup,meta_frac,eff_capacity,exception_lines,recompactions\n"
+            ),
+            "{}",
+            c.body
+        );
+        assert!(c.body.contains("cap_stream,lcp,"), "{}", c.body);
+        assert!(c.body.contains(",tiered-lcp,"), "{}", c.body);
+        // the line family's capacity cells are n/a, never fabricated
+        assert!(c.body.contains(",cram-static,"), "{}", c.body);
+        assert!(c.body.contains("n/a"), "{}", c.body);
+        let j = report_fmt(&db, "figp1", OutputFormat::Json).unwrap();
+        assert!(j.body.trim_start().starts_with('['), "{}", j.body);
+        assert!(j.body.contains("\"eff_capacity\":"), "{}", j.body);
         assert!(j.body.trim_end().ends_with(']'), "{}", j.body);
     }
 

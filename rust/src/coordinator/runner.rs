@@ -150,6 +150,25 @@ pub const L1_DESIGNS: [Design; 6] = [
         .with_link_codec(LinkCodec::Compressed),
 ];
 
+/// The Figure P1 layout-family matrix: the line-granular CRAM layouts
+/// (implicit metadata, gated, explicit) next to the LCP page-granular
+/// layout, each flat and on the far expander.  The uncompressed flat and
+/// tiered baselines anchor the speedups; every other column answers the
+/// same question from a different layout family: what does the layout
+/// authority cost in metadata traffic, and what does it buy in effective
+/// capacity?  Tiered columns run at the T1 capacity split.
+pub const P1_DESIGNS: [Design; 9] = [
+    Design::Uncompressed,
+    Design::Implicit,
+    Design::Dynamic,
+    Design::explicit(false),
+    Design::new(Policy::Lcp, Placement::Flat),
+    Design::tiered(false),
+    Design::tiered(true), // Implicit × Tiered
+    Design::new(Policy::Explicit { row_opt: false }, Placement::Tiered),
+    Design::new(Policy::Lcp, Placement::Tiered),
+];
+
 /// The designs the Figure M1 multi-tenant exhibit compares: uncompressed
 /// sharing, flat Dynamic-CRAM, and tiered Dynamic-CRAM at the T1 split.
 pub const M1_DESIGNS: [Design; 3] = [
@@ -395,7 +414,26 @@ impl ResultsDb {
         jobs.extend(Self::c1_jobs());
         jobs.extend(Self::x1_jobs());
         jobs.extend(Self::l1_jobs());
+        jobs.extend(Self::p1_jobs());
         self.run_jobs(jobs, progress);
+    }
+
+    /// The Figure P1 matrix: the 27-workload suite plus the far-pressure
+    /// set, each under the [`P1_DESIGNS`] layout families (the flat and
+    /// tiered uncompressed baselines ride inside the design list).
+    fn p1_jobs() -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for w in all27().into_iter().chain(far_pressure()) {
+            for d in P1_DESIGNS {
+                jobs.push(Job::new(w.clone(), d, 2));
+            }
+        }
+        jobs
+    }
+
+    /// Run the Figure P1 matrix only.
+    pub fn run_p1(&mut self, progress: bool) {
+        self.run_jobs(Self::p1_jobs(), progress);
     }
 
     /// The Figure L1 matrix: far-memory-pressure workloads × the
@@ -855,6 +893,41 @@ mod tests {
             }
         }
         assert!(saved > 0, "link compression must save bytes somewhere in the matrix");
+    }
+
+    #[test]
+    fn p1_matrix_covers_both_layout_families() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 8_000,
+            seed: 8,
+            threads: 4,
+        });
+        db.run_p1(false);
+        assert_eq!(db.len(), (27 + far_pressure().len()) * P1_DESIGNS.len());
+        let lcp_flat = Design::new(Policy::Lcp, Placement::Flat);
+        let lcp_far = Design::new(Policy::Lcp, Placement::Tiered);
+        for w in far_pressure() {
+            for d in [lcp_flat, lcp_far] {
+                let r = db.get(w.name, d).expect("p1 lcp run cached");
+                assert_eq!(r.design, d.name());
+                assert!(
+                    r.capacity.is_some(),
+                    "{} {}: the page family reports a capacity ledger",
+                    w.name,
+                    d.name()
+                );
+                assert!(
+                    r.llp_accuracy.is_none(),
+                    "{} {}: no line-location predictor to report",
+                    w.name,
+                    d.name()
+                );
+                assert!(db.speedup(w.name, d).is_some());
+            }
+            // the line family owns no page ledger — its capacity column
+            // is honestly n/a, not zero
+            assert!(db.get(w.name, Design::Implicit).unwrap().capacity.is_none());
+        }
     }
 
     #[test]

@@ -33,6 +33,9 @@ pub struct DynamicCram {
     bits: u32,
     /// Gate state per core (hysteresis: see [`DynamicCram::enabled`]).
     state: Vec<std::cell::Cell<bool>>,
+    /// Per-core tenant bias ([`DynamicCram::set_bias`]): shifts the
+    /// hysteresis band, leaving the counters untouched.
+    bias: Vec<i32>,
     /// Cost/benefit event counts (diagnostics & Fig. 15/16 analysis).
     pub cost_events: Vec<u64>,
     pub benefit_events: Vec<u64>,
@@ -64,9 +67,20 @@ impl DynamicCram {
             counters: vec![1 << (bits - 1); cores],
             bits,
             state: (0..cores).map(|_| std::cell::Cell::new(true)).collect(),
+            bias: vec![0; cores],
             cost_events: vec![0; cores],
             benefit_events: vec![0; cores],
         }
+    }
+
+    /// Tenant QoS bias for `core` (the `:bias=N` knob of a tenant
+    /// spec): a positive bias lowers both hysteresis thresholds, so the
+    /// core's gate tolerates `N` more net cost events before closing
+    /// (compression-friendly); a negative bias raises them, closing the
+    /// gate sooner (latency-friendly).  `0` (the default) is
+    /// bit-identical to an unbiased gate.
+    pub fn set_bias(&mut self, core: usize, bias: i32) {
+        self.bias[core] = bias;
     }
 
     #[inline]
@@ -114,8 +128,12 @@ impl DynamicCram {
     /// since the paper's 12-bit counter makes flips ~1000x rarer.
     #[inline]
     pub fn enabled(&self, core: usize) -> bool {
-        let hi = 3 * (1 << (self.bits - 2));
-        let lo = 1 << (self.bits - 2);
+        // the tenant bias slides the whole band (clamped inside the
+        // counter range so both thresholds stay reachable); bias == 0
+        // reproduces the unbiased thresholds exactly
+        let b = self.bias[core];
+        let hi = (3 * (1 << (self.bits - 2)) - b).clamp(1, self.max());
+        let lo = ((1 << (self.bits - 2)) - b).clamp(0, self.max() - 1);
         let c = self.counters[core];
         if c >= hi {
             self.state[core].set(true);
@@ -188,6 +206,52 @@ mod tests {
         }
         // back to mid-band: stays enabled
         assert!(d.enabled(0), "mid-band keeps prior state (enabled)");
+    }
+
+    #[test]
+    fn zero_bias_is_bit_identical() {
+        // a set_bias(0) gate must reproduce the stock gate exactly
+        // through an adversarial mid-band walk, not just statistically
+        let mut plain = DynamicCram::with_bits(1, 6);
+        let mut biased = DynamicCram::with_bits(1, 6);
+        biased.set_bias(0, 0);
+        for i in 0..500u64 {
+            if i % 3 == 0 {
+                plain.on_benefit(0);
+                biased.on_benefit(0);
+            } else {
+                plain.on_cost(0);
+                biased.on_cost(0);
+            }
+            assert_eq!(plain.enabled(0), biased.enabled(0), "step {i}");
+            assert_eq!(plain.counter(0), biased.counter(0), "step {i}");
+        }
+    }
+
+    #[test]
+    fn bias_shifts_the_hysteresis_band() {
+        // bits=6: range 0..63, start 32, stock band lo=16 / hi=48
+        let mut stock = DynamicCram::with_bits(1, 6);
+        let mut tolerant = DynamicCram::with_bits(1, 6);
+        tolerant.set_bias(0, 8); // lo=8: compression-friendly tenant
+        let mut strict = DynamicCram::with_bits(1, 6);
+        strict.set_bias(0, -8); // lo=24: latency-friendly tenant
+        for _ in 0..9 {
+            stock.on_cost(0);
+            tolerant.on_cost(0);
+            strict.on_cost(0);
+        }
+        // counter 23: only the negative bias has closed its gate
+        assert!(stock.enabled(0));
+        assert!(tolerant.enabled(0));
+        assert!(!strict.enabled(0), "negative bias closes sooner");
+        for _ in 0..8 {
+            stock.on_cost(0);
+            tolerant.on_cost(0);
+        }
+        // counter 15: the stock gate closes, the positive bias holds
+        assert!(!stock.enabled(0));
+        assert!(tolerant.enabled(0), "positive bias absorbs more cost");
     }
 
     #[test]

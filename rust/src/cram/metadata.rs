@@ -132,6 +132,26 @@ impl MetadataStore {
         MetaAccess::Miss
     }
 
+    /// Pure-cache access for a caller that does its own metadata-line
+    /// addressing — the LCP page-descriptor cache
+    /// ([`crate::controller::lcp`]) reuses this store's set-assoc LRU +
+    /// dirty-writeback machinery with `meta_line = page /`
+    /// [`DESCS_PER_LINE`](crate::controller::lcp::DESCS_PER_LINE)
+    /// instead of the CSI group geometry; the ground-truth CSI map is
+    /// not consulted (descriptors live in [`LcpLayout`]).  Misses and
+    /// dirty-victim `writebacks` count exactly as for [`lookup`] /
+    /// [`update`].
+    ///
+    /// [`LcpLayout`]: crate::controller::lcp::LcpLayout
+    /// [`lookup`]: MetadataStore::lookup
+    /// [`update`]: MetadataStore::update
+    pub fn access(&mut self, meta_line: u64, mark_dirty: bool) -> MetaAccess {
+        if mark_dirty {
+            self.updates += 1;
+        }
+        self.touch(meta_line, mark_dirty)
+    }
+
     /// Read path: obtain the CSI for `line_addr`'s group.
     /// Returns (csi, how it was served).
     pub fn lookup(&mut self, line_addr: u64) -> (Csi, MetaAccess) {
@@ -212,6 +232,21 @@ mod tests {
             m2.lookup(x % (1 << 28));
         }
         assert!(m2.hit_rate() < 0.2, "random hit rate {}", m2.hit_rate());
+    }
+
+    #[test]
+    fn pure_cache_access_behaves_like_lookup() {
+        let mut m = MetadataStore::paper_default(0);
+        assert_eq!(m.access(3, false), MetaAccess::Miss);
+        assert_eq!(m.access(3, false), MetaAccess::Hit);
+        assert_eq!(m.access(3, true), MetaAccess::Hit, "dirty-allocate on a hit");
+        assert_eq!((m.hits, m.misses, m.updates), (2, 1, 1));
+        // a dirty line evicted by caller-addressed traffic still counts
+        let mut tiny = MetadataStore::new(64 * 2, 2, 0); // 1 set, 2 ways
+        tiny.access(0, true);
+        tiny.access(1, false);
+        tiny.access(2, false); // evicts dirty line 0
+        assert_eq!(tiny.writebacks, 1);
     }
 
     #[test]

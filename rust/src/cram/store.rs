@@ -24,7 +24,8 @@
 //! recompressing the unmodified lines of a group on every dirty eviction.
 
 use crate::compress::{hybrid, PACK_BUDGET};
-use crate::controller::{CramEngine, LinkCodec};
+use crate::controller::lcp::{EXC_CAP, PAGE_LINES, TARGETS};
+use crate::controller::{CramEngine, LayoutEngine, LcpLayout, LinkCodec, PageDesc};
 use crate::cram::group::Csi;
 use crate::cram::lit::{LineInversionTable, LitInsert};
 use crate::cram::marker::{LineKind, MarkerEngine};
@@ -53,11 +54,13 @@ pub struct CompressedStore {
     phys: PagedArena<CacheLine>,
     pub markers: MarkerEngine,
     pub lit: LineInversionTable,
-    /// Ground-truth layout per group (what a perfect metadata store
-    /// would hold) — the shared [`CramEngine`] is the store's layout
-    /// authority, the same engine the host controller and the far-tier
-    /// expander run; this store adds the byte-accurate substrate on top.
-    layout: CramEngine,
+    /// Ground-truth layout (what a perfect metadata store would hold) —
+    /// the shared [`LayoutEngine`] is the store's layout authority, the
+    /// same seam the host controller and the far-tier expander run;
+    /// this store adds the byte-accurate substrate on top.  Group
+    /// writes drive the CRAM family; [`Self::lcp_write_page`] drives
+    /// the page family.
+    layout: LayoutEngine,
     /// Compressibility memo: line address → (content fingerprint, hybrid
     /// size).  A hit whose fingerprint matches the incoming data skips the
     /// compressor stack entirely.
@@ -79,11 +82,22 @@ impl CompressedStore {
     /// same plumbing the host controller and far-tier expander use, so a
     /// byte-accurate run can answer wire-size questions consistently.
     pub fn with_link_codec(seed: u64, link_codec: LinkCodec) -> Self {
+        Self::with_layout(seed, LayoutEngine::Cram(CramEngine::with_link_codec(link_codec)))
+    }
+
+    /// Store running the page family: group writes are replaced by
+    /// [`Self::lcp_write_page`] / [`Self::lcp_read_line`], and reads
+    /// never interpret markers (LCP's metadata is explicit).
+    pub fn lcp(seed: u64, link_codec: LinkCodec) -> Self {
+        Self::with_layout(seed, LayoutEngine::Lcp(LcpLayout::with_link_codec(link_codec)))
+    }
+
+    fn with_layout(seed: u64, layout: LayoutEngine) -> Self {
         Self {
             phys: PagedArena::new(CacheLine::zero()),
             markers: MarkerEngine::new(seed),
             lit: LineInversionTable::default(),
-            layout: CramEngine::with_link_codec(link_codec),
+            layout,
             memo: PagedArena::new((0, 0)),
             memo_hits: 0,
             memo_misses: 0,
@@ -406,6 +420,97 @@ impl CompressedStore {
         (CacheLine::zero(), accesses, RecoveredLines::new())
     }
 
+    /// Byte-accurate LCP page write (the page family's analog of
+    /// [`Self::write_group`]).  Targets are chosen from the *actual*
+    /// hybrid compressed sizes (through the per-line memo): the
+    /// smallest `T` whose overflow set fits the exception region, else
+    /// raw.  Fitting slots are encoded into `T`-byte sub-slots at byte
+    /// offset `(slot × T) mod 64` of physical line
+    /// `page_base + (slot × T) / 64`; exceptions land raw after the
+    /// data region in rank order.  The resulting descriptor is
+    /// registered with the layout authority and returned.
+    pub fn lcp_write_page(
+        &mut self,
+        page: u64,
+        lines: &[CacheLine; PAGE_LINES as usize],
+    ) -> PageDesc {
+        let base = page * PAGE_LINES;
+        let sizes: [u32; PAGE_LINES as usize] =
+            core::array::from_fn(|s| self.memo_size(base + s as u64, &lines[s]));
+        let mut desc = PageDesc { target: 64, exceptions: 0 };
+        for &t in TARGETS.iter() {
+            if u64::from(t) >= 64 {
+                break; // raw: every line fits trivially
+            }
+            let mut exc = 0u64;
+            for (s, &size) in sizes.iter().enumerate() {
+                if size > u32::from(t) {
+                    exc |= 1u64 << s;
+                }
+            }
+            if exc.count_ones() <= EXC_CAP {
+                desc = PageDesc { target: t, exceptions: exc };
+                break;
+            }
+        }
+        if u64::from(desc.target) >= 64 {
+            for s in 0..PAGE_LINES as usize {
+                self.phys.insert(base + s as u64, lines[s]);
+            }
+        } else {
+            let t = desc.target as usize;
+            let per_line = 64 / t;
+            for i in 0..desc.data_lines() {
+                let mut bytes = [0u8; 64];
+                for k in 0..per_line {
+                    let s = i as usize * per_line + k;
+                    if desc.is_exception(s as u8) {
+                        continue; // sub-slot stays zero; data lives in the region
+                    }
+                    let c = hybrid::encode(&lines[s])
+                        .expect("fitting slot compresses within its target");
+                    debug_assert!(c.bytes.len() <= t);
+                    bytes[k * t..k * t + c.bytes.len()].copy_from_slice(&c.bytes);
+                }
+                self.phys.insert(base + i, CacheLine::from_bytes(&bytes));
+            }
+            for s in 0..PAGE_LINES as u8 {
+                if desc.is_exception(s) {
+                    self.phys.insert(desc.physical_line(base, s), lines[s as usize]);
+                }
+            }
+        }
+        self.layout
+            .as_lcp_mut()
+            .expect("lcp_write_page runs on a page-family store")
+            .install_desc(page, desc);
+        desc
+    }
+
+    /// Byte-accurate LCP read: one shift from the descriptor to the
+    /// physical line, then either the raw exception line or a prefix
+    /// decode at the slot's fixed sub-slot offset.  Never probes,
+    /// never interprets markers — exactly the read path predictable
+    /// offsets buy.
+    pub fn lcp_read_line(&mut self, page: u64, slot: u8) -> CacheLine {
+        let base = page * PAGE_LINES;
+        let d = self
+            .layout
+            .as_lcp()
+            .expect("lcp_read_line runs on a page-family store")
+            .desc_of(page)
+            .unwrap_or(PageDesc { target: 64, exceptions: 0 });
+        let phys = self.read_phys(d.physical_line(base, slot));
+        if d.is_exception(slot) || u64::from(d.target) >= 64 {
+            return phys;
+        }
+        let t = d.target as usize;
+        let off = (slot as usize * t) % 64;
+        let (line, used) = hybrid::decode_prefix(&phys.to_bytes()[off..]);
+        debug_assert!(used <= t, "sub-slot decode stays within its target");
+        line
+    }
+
     /// Iterate over the ground-truth group CSIs as (base line, csi).
     pub fn groups(&self) -> impl Iterator<Item = (u64, Csi)> + '_ {
         self.layout.groups().map(|(g, c)| (g * GROUP_LINES, c))
@@ -560,6 +665,46 @@ mod tests {
         let mut lc2 = CompressedStore::with_link_codec(61, LinkCodec::Compressed);
         lc2.write_group(8, &raw_group, Csi::Uncompressed);
         assert!(lc2.wire_bytes_of(10) < 64, "compressible line shrinks on the wire");
+    }
+
+    #[test]
+    fn lcp_page_roundtrip_with_exceptions() {
+        let mut store = CompressedStore::lcp(70, LinkCodec::Raw);
+        let mut rng = Rng::new(13);
+        // mostly compressible page with 3 incompressible exception lines
+        let mut lines: [CacheLine; 64] = core::array::from_fn(|i| compressible_line(i as u32));
+        for &s in &[5usize, 17, 40] {
+            lines[s] = incompressible_line(&mut rng);
+        }
+        let d = store.lcp_write_page(0, &lines);
+        assert!(u64::from(d.target) < 64, "page compresses");
+        assert_eq!(d.exceptions.count_ones(), 3);
+        assert!(d.physical_lines() < 64, "the capacity win is real");
+        for s in 0..64u8 {
+            assert_eq!(store.lcp_read_line(0, s), lines[s as usize], "slot {s}");
+        }
+        // offset predictability: a fitting slot's location is a pure shift
+        let t = u64::from(d.target);
+        for s in 0..64u8 {
+            if !d.is_exception(s) {
+                assert_eq!(d.physical_line(0, s), (u64::from(s) * t) >> 6);
+            }
+        }
+        // dirty a fitting line incompressible and re-encode: one more
+        // exception, everything still round-trips
+        lines[9] = incompressible_line(&mut rng);
+        let d2 = store.lcp_write_page(0, &lines);
+        assert_eq!(d2.exceptions.count_ones(), 4);
+        for s in 0..64u8 {
+            assert_eq!(store.lcp_read_line(0, s), lines[s as usize]);
+        }
+        // an incompressible page stores raw with no exceptions
+        let raw: [CacheLine; 64] = core::array::from_fn(|_| incompressible_line(&mut rng));
+        let d3 = store.lcp_write_page(1, &raw);
+        assert_eq!((d3.target, d3.exceptions), (64, 0));
+        for s in 0..64u8 {
+            assert_eq!(store.lcp_read_line(1, s), raw[s as usize]);
+        }
     }
 
     #[test]

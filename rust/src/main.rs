@@ -2,14 +2,14 @@
 //!
 //! ```text
 //! repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]
-//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1|r1> [--insts N]
-//! repro figure <q1|c1|l1|m1|r1> --format table|csv|json
+//! repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1|r1|p1> [--insts N]
+//! repro figure <q1|c1|l1|m1|r1|p1> --format table|csv|json
 //! repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]
 //! repro table <2|3|4|5> [--insts N]
 //! repro sim --workload W --design D [--insts N] [--channels C]
 //!           [--far-ratio R] [--link-codec raw|compressed] [--trace FILE]
 //!           [--llc-compressed] [--fault-ber B] [--fault-watchdog on|off]
-//! repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N]
+//! repro sim --tenants W1[:CORES][:qos][:bias=N],W2,... [--design D] [--qos-slots N]
 //! repro analyze [--artifact PATH] [--workload W] [--groups N]
 //! repro list
 //! ```
@@ -52,7 +52,9 @@
 //! tenant's p99 read latency, slowdown vs running alone, compression-
 //! interference beats and a Jain fairness index, plus a QoS contrast
 //! with read slots reserved for the `:qos`-marked tenant.  `repro sim
-//! --tenants` runs one such co-location directly.
+//! --tenants` runs one such co-location directly; a `:bias=N` field
+//! shifts that tenant's Dynamic-CRAM gate thresholds (positive =
+//! compression-friendly, negative = latency-friendly).
 //!
 //! `figure r1` is the reliability exhibit: the CRAM far tier under a
 //! uniform bit-error-rate sweep across every injection site (link
@@ -61,6 +63,13 @@
 //! same faults into any single run (`--fault-watchdog off` disarms the
 //! degradation ladder); injection is off by default and the disabled
 //! path is bit-identical to a fault-free build.
+//!
+//! `figure p1` is the layout-family exhibit the LayoutEngine seam
+//! opened: the line-granular CRAM layouts next to the LCP
+//! page-granular layout (`lcp` / `tiered-lcp` designs), flat and on
+//! the far expander, reporting per-family speedup, metadata-traffic
+//! share, and the effective-capacity ledger (expansion, exception
+//! lines, recompactions) that only the page family can honestly fill.
 //!
 //! (clap is unavailable in this offline environment; argument parsing is
 //! hand-rolled — see DESIGN.md §Substitutions.)
@@ -174,6 +183,7 @@ fn main() {
                 "figq1" => db.run_q1(human),
                 "figc1" => db.run_c1(human),
                 "figl1" => db.run_l1(human),
+                "figp1" => db.run_p1(human),
                 "fig18" => db.run_designs(&[Design::Uncompressed, Design::Dynamic], true, true),
                 "table4" => db.run_channel_sweep(true),
                 "fig3" => db.run_designs(
@@ -315,6 +325,16 @@ fn main() {
             println!("  traffic (64B)      {:?}", r.bw);
             println!("  prefetch used/inst {} / {}", r.prefetch_used, r.prefetch_installed);
             println!("  groups compressed  {:.1}%", 100.0 * r.compression_enabled_frac);
+            if let Some(c) = &r.capacity {
+                println!(
+                    "  page capacity      {:.2}x expansion ({} pages, {} exception \
+                     lines, {} recompactions)",
+                    c.expansion(),
+                    c.pages,
+                    c.exception_lines,
+                    c.recompactions
+                );
+            }
             println!("  dyn cost/benefit   {} / {}", r.dyn_costs, r.dyn_benefits);
             if cfg.fault.enabled() {
                 let rel = &r.rel;
@@ -564,9 +584,9 @@ fn main() {
     }
 }
 
-/// `repro sim --tenants W1[:CORES][:qos],W2,...` — one co-located run
-/// with per-tenant accounting (plus the per-tenant solo reruns behind
-/// the slowdown column).
+/// `repro sim --tenants W1[:CORES][:qos][:bias=N],W2,...` — one
+/// co-located run with per-tenant accounting (plus the per-tenant solo
+/// reruns behind the slowdown column).
 fn sim_tenants(spec: &str, flags: &HashMap<String, String>) {
     let d = flags.get("design").map(String::as_str).unwrap_or("cram-dynamic");
     let design = match Design::parse(d) {
@@ -658,7 +678,7 @@ fn usage(msg: &str) -> ! {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1|r1> [--insts N]\n  repro figure <q1|c1|l1|m1|r1> --format table|csv|json\n  repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--link-codec raw|compressed] [--trace FILE] [--llc-compressed] [--fault-ber B] [--fault-watchdog on|off]\n  repro sim --tenants W1[:CORES][:qos],W2,... [--design D] [--qos-slots N] [--insts N]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement x link-codec compositions (repro list\nprints all 28): tiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/\ntiered-explicit (figure x1) — near DDR + far CXL expander; --far-ratio R\nputs fraction R of capacity behind the link; a +lc suffix (or --link-codec\ncompressed on repro sim) compresses flits over that link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product; with --far-ratio R1,R2,... it\nsweeps the capacity split to each tiered composition's break-even\nfigure l1: raw vs compressed link x {static, dynamic, explicit} tiered\ndesigns over the far-pressure suite — speedup vs the raw-link twin plus\nthe wire-vs-storage byte breakdown per traffic class\nfigure m1: multi-tenant co-location mixes x {uncompressed, cram-dynamic,\ntiered-cram-dyn} — per-tenant p99, slowdown-vs-alone, interference beats,\nJain fairness, and a QoS read-slot-reservation contrast\nfigure r1: reliability — tiered-cram under a uniform BER sweep (link CRC\nretries, far-media errors, marker corruption) with the error-storm\nwatchdog disarmed vs armed; --fault-ber B on repro sim injects the same\nfaults into any run (--fault-watchdog off disarms the degradation ladder;\ninjection defaults off and is then bit-identical to a fault-free build)\n--format csv|json on figures q1/c1/l1/m1/r1 and the x1 sweep emits the bare\nmachine-readable rows for plotting scripts\nsim --tenants: one co-location (workload[:cores][:qos], comma-separated;\n:qos marks the protected tenant, --qos-slots N reserves N of 32 read slots)\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1|r1|p1> [--insts N]\n  repro figure <q1|c1|l1|m1|r1|p1> --format table|csv|json\n  repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--link-codec raw|compressed] [--trace FILE] [--llc-compressed] [--fault-ber B] [--fault-watchdog on|off]\n  repro sim --tenants W1[:CORES][:qos][:bias=N],W2,... [--design D] [--qos-slots N] [--insts N]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement x link-codec compositions (repro list\nprints all 32): tiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/\ntiered-explicit (figure x1), lcp/tiered-lcp (figure p1) — near DDR + far\nCXL expander; --far-ratio R puts fraction R of capacity behind the link;\na +lc suffix (or --link-codec compressed on repro sim) compresses flits\nover that link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product; with --far-ratio R1,R2,... it\nsweeps the capacity split to each tiered composition's break-even\nfigure l1: raw vs compressed link x {static, dynamic, explicit} tiered\ndesigns over the far-pressure suite — speedup vs the raw-link twin plus\nthe wire-vs-storage byte breakdown per traffic class\nfigure m1: multi-tenant co-location mixes x {uncompressed, cram-dynamic,\ntiered-cram-dyn} — per-tenant p99, slowdown-vs-alone, interference beats,\nJain fairness, and a QoS read-slot-reservation contrast\nfigure r1: reliability — tiered-cram under a uniform BER sweep (link CRC\nretries, far-media errors, marker corruption) with the error-storm\nwatchdog disarmed vs armed; --fault-ber B on repro sim injects the same\nfaults into any run (--fault-watchdog off disarms the degradation ladder;\ninjection defaults off and is then bit-identical to a fault-free build)\nfigure p1: layout families — line-granular CRAM vs page-granular LCP\n(lcp/tiered-lcp), flat and tiered, over the 27 suite + far-pressure set:\nspeedup, metadata-traffic share, and the LCP effective-capacity ledger\n--format csv|json on figures q1/c1/l1/m1/r1/p1 and the x1 sweep emits the\nbare machine-readable rows for plotting scripts\nsim --tenants: one co-location (workload[:cores][:qos][:bias=N], comma-\nseparated; :qos marks the protected tenant, --qos-slots N reserves N of 32\nread slots; :bias=N shifts that tenant's Dynamic-CRAM gate thresholds)\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
     );
     std::process::exit(2);
 }

@@ -414,6 +414,9 @@ pub(crate) struct TenantSetup {
     pub names: Vec<String>,
     pub core_counts: Vec<usize>,
     pub protected: Option<usize>,
+    /// Per-tenant Dynamic-gate bias (`:bias=N`), applied to each of the
+    /// tenant's cores; meaningful only under the Dynamic policies.
+    pub biases: Vec<i32>,
 }
 
 /// Run one workload under one design.  Rate mode when `profile.mix_of` is
@@ -485,6 +488,17 @@ pub(crate) fn simulate_multi(
             &ts.core_counts,
             ts.protected,
         ));
+        // thread each tenant's `:bias=N` into its cores' Dynamic gates
+        // (a no-op bias of 0 keeps the stock thresholds bit-identical)
+        if let Some(dy) = mc.dynamic.as_mut() {
+            let mut core = 0usize;
+            for (t, &n) in ts.core_counts.iter().enumerate() {
+                for c in core..core + n {
+                    dy.set_bias(c, ts.biases[t]);
+                }
+                core += n;
+            }
+        }
     }
     // per-core private caches (optional Table I hierarchy)
     let mut l1s: Vec<SetAssocCache> = (0..cfg.cores)
@@ -758,6 +772,9 @@ pub(crate) fn simulate_multi(
         tier: mc.tier.as_ref().map(|t| t.snapshot().since(&warm_tier)),
         rel: mc.rel_snapshot().since(&warm_rel),
         tenants: tenant_stats,
+        // end-of-run layout ledger (page family only): a capacity ratio
+        // is a state, not a flow — no warmup subtraction
+        capacity: mc.capacity_snapshot(),
     }
 }
 
@@ -1117,9 +1134,9 @@ mod tests {
 
     #[test]
     fn composed_tiered_designs_run_end_to_end() {
-        // the cross-product the layered controller opened: dynamic gating
-        // and explicit metadata on the far expander
-        for name in ["tiered-cram-dyn", "tiered-explicit"] {
+        // the cross-product the layered controller opened: dynamic gating,
+        // explicit metadata, and the LCP page family on the far expander
+        for name in ["tiered-cram-dyn", "tiered-explicit", "tiered-lcp"] {
             let design = Design::parse(name).expect("composition parses");
             let cfg = SimConfig::default()
                 .with_design(design)
@@ -1144,7 +1161,34 @@ mod tests {
                 assert!(t.far.meta_accesses > 0, "metadata lands on the far tier");
                 assert!(r.meta_hit_rate.is_some(), "tier metadata hit rate surfaced");
             }
+            if name == "tiered-lcp" {
+                assert!(r.bw.meta_reads > 0, "LCP descriptors cost metadata reads");
+                let cap = r.capacity.expect("page family reports a capacity ledger");
+                assert!(cap.pages > 0, "far reads materialize page descriptors");
+                assert!(
+                    cap.physical_lines <= cap.logical_lines,
+                    "compressed pages never expand past raw"
+                );
+                assert!(r.llp_accuracy.is_none(), "LCP has no line-location predictor");
+            }
         }
+    }
+
+    #[test]
+    fn flat_lcp_runs_end_to_end_and_reports_capacity() {
+        // the page family on a flat machine: fixed offsets mean no LLP,
+        // but the descriptor cache and capacity ledger must both surface
+        let r = quick(Design::flat(crate::controller::Policy::Lcp), "cap_stream");
+        assert_eq!(r.design, "lcp");
+        assert!(r.bw.meta_reads > 0, "descriptor misses cost metadata reads");
+        assert!(r.meta_hit_rate.is_some(), "descriptor cache hit rate surfaced");
+        assert!(r.llp_accuracy.is_none(), "no predictor telemetry to fake");
+        let cap = r.capacity.expect("capacity ledger");
+        assert!(cap.pages > 0 && cap.logical_lines > 0);
+        // expansion = logical / physical: never below 1 (a raw page
+        // occupies exactly its footprint), above 1 when pages compress
+        assert!(cap.expansion() > 1.0, "cap_stream's pages must compress");
+        assert_eq!(r.read_lat.count(), r.bw.demand_reads, "one sample per read");
     }
 
     #[test]

@@ -70,6 +70,7 @@ pub fn simulate_tenants_shared(specs: &[TenantSpec], cfg: &SimConfig) -> SimResu
         names: specs.iter().map(|s| s.name.clone()).collect(),
         core_counts: specs.iter().map(|s| s.cores).collect(),
         protected: specs.iter().position(|s| s.protected),
+        biases: specs.iter().map(|s| s.bias).collect(),
     };
     let workload = specs
         .iter()
@@ -192,6 +193,31 @@ mod tests {
         assert_eq!(r.tenants.len(), 2);
         assert!(r.tenants.iter().all(|t| t.bw.demand_reads > 0));
         assert_conserved(&r);
+    }
+
+    #[test]
+    fn tenant_bias_threads_into_the_dynamic_gate() {
+        // an explicit bias=0 must be bit-identical to the stock spec
+        let a = run("cram-dynamic", None, "lat_chase:4,cap_stream:4", 100_000);
+        let b = run("cram-dynamic", None, "lat_chase:4:bias=0,cap_stream:4:bias=0", 100_000);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.bw, b.bw);
+        assert_eq!(a.compression_enabled_frac, b.compression_enabled_frac);
+        // a strongly negative bias pins both tenants' gates shut: only
+        // sampled groups keep packing, so the compressed fraction drops
+        let c = run(
+            "cram-dynamic",
+            None,
+            "lat_chase:4:bias=-100000,cap_stream:4:bias=-100000",
+            100_000,
+        );
+        assert!(
+            c.compression_enabled_frac < a.compression_enabled_frac,
+            "closed gates must pack less: {} vs {}",
+            c.compression_enabled_frac,
+            a.compression_enabled_frac
+        );
+        assert_conserved(&c);
     }
 
     #[test]

@@ -548,6 +548,41 @@ impl TierStats {
     }
 }
 
+/// Effective-capacity ledger of a page-granular (LCP) layout: how many
+/// physical lines the touched pages actually occupy vs their logical
+/// footprint.  CRAM-family designs trade capacity for bandwidth (a
+/// packed group still owns its four physical slots), so only LCP runs
+/// carry this — the first design in the repo where main memory *grows*.
+///
+/// The line counts are an end-of-run state snapshot (capacity is a
+/// state, not a flow — nothing to warmup-subtract); `recompactions` is
+/// a run-total event counter.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CapacityStats {
+    /// Pages with a materialized descriptor.
+    pub pages: u64,
+    /// Logical lines those pages present to the system (pages × 64).
+    pub logical_lines: u64,
+    /// Physical lines they occupy (data regions + exception regions).
+    pub physical_lines: u64,
+    /// Lines living in exception regions (stored raw, rank-indexed).
+    pub exception_lines: u64,
+    /// Pages re-encoded at a larger target after exception overflow.
+    pub recompactions: u64,
+}
+
+impl CapacityStats {
+    /// Capacity expansion factor: logical / physical (1.0 = no gain,
+    /// also reported for an empty ledger).
+    pub fn expansion(&self) -> f64 {
+        if self.physical_lines == 0 {
+            1.0
+        } else {
+            self.logical_lines as f64 / self.physical_lines as f64
+        }
+    }
+}
+
 /// Result of simulating one workload under one memory-system design.
 #[derive(Clone, Debug)]
 pub struct SimResult {
@@ -594,6 +629,9 @@ pub struct SimResult {
     pub tenants: Vec<TenantStats>,
     /// Reliability telemetry; all-zero whenever fault injection is off.
     pub rel: ReliabilityStats,
+    /// Effective-capacity ledger (None for every non-LCP design — the
+    /// group family never grows capacity, and absent ≠ 1.0×).
+    pub capacity: Option<CapacityStats>,
 }
 
 impl SimResult {
@@ -656,7 +694,21 @@ mod tests {
             tier: None,
             tenants: vec![],
             rel: ReliabilityStats::default(),
+            capacity: None,
         }
+    }
+
+    #[test]
+    fn capacity_expansion_factor() {
+        let c = CapacityStats {
+            pages: 2,
+            logical_lines: 128,
+            physical_lines: 64,
+            exception_lines: 3,
+            recompactions: 1,
+        };
+        assert!((c.expansion() - 2.0).abs() < 1e-12);
+        assert_eq!(CapacityStats::default().expansion(), 1.0, "empty ledger = no gain");
     }
 
     #[test]

@@ -17,9 +17,10 @@
 //! every `epoch_accesses` accesses.
 //!
 //! **Far-tier policies.**  All layout decisions come from the shared
-//! [`CramEngine`] — the same planner the flat host controller uses; this
-//! module owns only the expander-side issue path (link flits + device
-//! DRAM accesses + per-tier accounting):
+//! [`LayoutEngine`] — the same authority the flat host controller uses
+//! (the [`CramEngine`] group family or the [`LcpLayout`] page family);
+//! this module owns only the expander-side issue path (link flits +
+//! device DRAM accesses + per-tier accounting):
 //!
 //! * `Implicit` (`tiered-cram`) — device-held metadata (IBEX-style):
 //!   layouts live next to the data, so there is no host-side predictor
@@ -35,6 +36,13 @@
 //!   a meta-cache miss crosses the link **twice** (metadata fetch, then
 //!   the data access) before the demand data moves, which is the cost
 //!   story this composition exists to expose.
+//! * `Lcp` (`tiered-lcp`) — the page layout family on the expander:
+//!   page-table-resident descriptors cached host-side (a miss crosses
+//!   the link like `tiered-explicit` metadata), demand data read at the
+//!   descriptor's *fixed* offset — no predictor, no probes — and
+//!   exception-overflow recompaction executed device-internally (far
+//!   DRAM traffic, **no** link flits: the expander re-encodes its own
+//!   page).
 //! * `Ideal` — far co-fetch benefits with no write-side overheads.
 //! * `Uncompressed` / `NextLinePrefetch` — raw far lines (the prefetch
 //!   baseline issues its extra next-line access through the same
@@ -50,11 +58,16 @@
 //! `TierStats::total_accesses() == Bandwidth::total()` for a tiered run —
 //! the subsystem's accounting invariant (checked in tests).  This module
 //! deliberately owns **no packing logic**: `decide_packed_layout`, slot
-//! plans, install recovery and gang masks are all [`CramEngine`] calls.
+//! plans, install recovery and gang masks are [`CramEngine`] calls, and
+//! descriptor choice / exception ranks / recompaction are [`LcpLayout`]
+//! calls — the tier-owns-no-packing invariant holds for both families.
 
 use std::collections::{HashMap, HashSet};
 
-use crate::controller::{CramEngine, Install, Installs, LinkCodec, Policy, ReadOutcome, SlotOp};
+use crate::controller::{
+    CramEngine, Install, Installs, LayoutEngine, LcpLayout, LcpWriteOutcome, LinkCodec, Policy,
+    ReadOutcome, SlotOp,
+};
 use crate::cram::dynamic::DynamicCram;
 use crate::cram::group::Csi;
 use crate::cram::metadata::{MetaAccess, MetadataStore};
@@ -62,7 +75,7 @@ use crate::dram::{DramConfig, DramSim, ReqKind};
 use crate::cram::store::CompressedStore;
 use crate::mem::{group_base, group_of, page_of_line};
 use crate::sim::fault::{FaultConfig, FaultInjector};
-use crate::stats::{Bandwidth, ReliabilityStats, TierStats};
+use crate::stats::{Bandwidth, CapacityStats, ReliabilityStats, TierStats};
 use crate::tier::link::{CxlLink, CxlLinkConfig, LinkClass, CMD_BYTES, DATA_BYTES};
 use crate::util::rng::splitmix64;
 use crate::workloads::SizeOracle;
@@ -131,11 +144,12 @@ pub struct TieredMemory {
     far_cut: u64,
     pub link: CxlLink,
     pub far_dram: DramSim,
-    /// The expander's CRAM engine: far-tier group layouts (device-held
-    /// metadata) plus the shared packing machinery.
-    engine: CramEngine,
+    /// The expander's layout authority: far-tier group layouts
+    /// (device-held metadata) plus the shared packing machinery, or the
+    /// page family's descriptor ledger under the `Lcp` policy.
+    engine: LayoutEngine,
     /// Host-side metadata cache over the device metadata region
-    /// (`Explicit` far policy only).
+    /// (`Explicit` far policy) or the device descriptor region (`Lcp`).
     pub meta: Option<MetadataStore>,
     /// Per-page placement overrides from migration (true = far).
     placement: HashMap<u64, bool>,
@@ -191,13 +205,16 @@ impl TieredMemory {
                 m.row_optimized = row_opt;
                 Some(m)
             }
+            // Lcp caches page descriptors host-side over the device
+            // descriptor region (pure-cache mode: no CSI geometry)
+            Policy::Lcp => Some(MetadataStore::new(meta_cache_bytes, 8, FAR_META_BASE)),
             _ => None,
         };
         Self {
             far_cut: (cfg.far_ratio.clamp(0.0, 1.0) * 4096.0) as u64,
             link: CxlLink::new(cfg.link),
             far_dram: DramSim::new(cfg.far_dram),
-            engine: CramEngine::with_link_codec(link_codec),
+            engine: LayoutEngine::for_policy(policy, link_codec),
             meta,
             placement: HashMap::new(),
             heat: HashMap::new(),
@@ -322,9 +339,15 @@ impl TieredMemory {
         let mut s = self.stats;
         s.link = self.link.stats;
         s.link_traffic = self.link.traffic;
-        s.far_groups_written = self.engine.groups_written;
-        s.far_groups_packed = self.engine.groups_compressed;
+        s.far_groups_written = self.engine.groups_written();
+        s.far_groups_packed = self.engine.groups_compressed();
         s
+    }
+
+    /// The expander's effective-capacity ledger (`Lcp` far policy only;
+    /// the group family trades capacity for bandwidth and reports none).
+    pub fn capacity_snapshot(&self) -> Option<CapacityStats> {
+        self.engine.capacity_snapshot()
     }
 
     /// Demand read of `line` at bus-cycle `now`.  `near` is the host DDR.
@@ -381,7 +404,8 @@ impl TieredMemory {
                 // the uncompressed-far line is exactly where in-flight
                 // compression still pays once storage compression cannot
                 let wire = self.engine.line_wire_bytes(oracle, line);
-                let at_device = self.link.send(now, CMD_BYTES, LinkClass::Demand);
+                let cw = self.engine.cmd_wire_bytes();
+                let at_device = self.link.send_cmd(now, CMD_BYTES, cw, LinkClass::Demand);
                 let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
                 let far_done = self.media_site(line, far_done, bw);
                 let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
@@ -401,7 +425,8 @@ impl TieredMemory {
                 let csi = Csi::from_sizes(oracle.group_sizes(line));
                 let loc = csi.location(slot);
                 let wire = self.engine.block_wire_bytes(oracle, base, csi, loc);
-                let at_device = self.link.send(now, CMD_BYTES, LinkClass::Demand);
+                let cw = self.engine.cmd_wire_bytes();
+                let at_device = self.link.send_cmd(now, CMD_BYTES, cw, LinkClass::Demand);
                 let far_done = self.far_dram.access(line, ReqKind::Read, at_device, false);
                 let far_done = self.media_site(line, far_done, bw);
                 let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
@@ -414,7 +439,8 @@ impl TieredMemory {
                 let csi = self.engine.csi_of_group(group_of(base));
                 let loc = csi.location(slot);
                 let wire = self.engine.block_wire_bytes(oracle, base, csi, loc);
-                let at_device = self.link.send(now, CMD_BYTES, LinkClass::Demand);
+                let cw = self.engine.cmd_wire_bytes();
+                let at_device = self.link.send_cmd(now, CMD_BYTES, cw, LinkClass::Demand);
                 let far_done =
                     self.far_dram.access(base + loc as u64, ReqKind::Read, at_device, false);
                 let far_done = self.media_site(base + loc as u64, far_done, bw);
@@ -440,7 +466,8 @@ impl TieredMemory {
                     bw.meta_reads += 1;
                     self.stats.far.meta_accesses += 1;
                     let meta_wire = self.engine.meta_wire_bytes();
-                    let at = self.link.send(t, CMD_BYTES, LinkClass::Metadata);
+                    let cw = self.engine.cmd_wire_bytes();
+                    let at = self.link.send_cmd(t, CMD_BYTES, cw, LinkClass::Metadata);
                     let meta_done =
                         self.far_dram.access(meta_addr, ReqKind::MetaRead, at, row_opt);
                     t = self
@@ -449,13 +476,72 @@ impl TieredMemory {
                 }
                 let loc = actual.location(slot);
                 let wire = self.engine.block_wire_bytes(oracle, base, actual, loc);
-                let at = self.link.send(t, CMD_BYTES, LinkClass::Demand);
+                let cw = self.engine.cmd_wire_bytes();
+                let at = self.link.send_cmd(t, CMD_BYTES, cw, LinkClass::Demand);
                 let far_done =
                     self.far_dram.access(base + loc as u64, ReqKind::Read, at, false);
                 // explicit metadata carries no markers: media site only
                 let far_done = self.media_site(base + loc as u64, far_done, bw);
                 let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
                 self.far_installs(base, actual, loc, line, done)
+            }
+            Policy::Lcp => {
+                // page-table descriptor through the host-side cache: a
+                // miss crosses the link for the device-resident copy
+                // before the demand data moves (the tiered-explicit cost
+                // story, at 8 descriptors per metadata line)
+                let page = page_of_line(line);
+                let pslot = (line % PAGE_LINES) as u8;
+                let d = self
+                    .engine
+                    .as_lcp_mut()
+                    .expect("lcp far tier runs the page family")
+                    .ensure_desc(page, oracle);
+                let desc_line = LcpLayout::desc_line_of_page(page);
+                let how = self
+                    .meta
+                    .as_mut()
+                    .expect("lcp far tier has a descriptor cache")
+                    .access(desc_line, false);
+                let mut t = now;
+                if how == MetaAccess::Miss {
+                    bw.meta_reads += 1;
+                    self.stats.far.meta_accesses += 1;
+                    let meta_wire = self.engine.meta_wire_bytes();
+                    let cw = self.engine.cmd_wire_bytes();
+                    let at = self.link.send_cmd(t, CMD_BYTES, cw, LinkClass::Metadata);
+                    let meta_done = self
+                        .far_dram
+                        .access(FAR_META_BASE + desc_line, ReqKind::MetaRead, at, false);
+                    t = self
+                        .link
+                        .recv_payload(meta_done, DATA_BYTES, meta_wire, LinkClass::Metadata);
+                }
+                // the data access at the descriptor's fixed offset: one
+                // shift, never a probe; the flit carries every logical
+                // co-resident of the physical line
+                let page_base = page * PAGE_LINES;
+                let phys = d.physical_line(page_base, pslot);
+                let wire =
+                    self.engine.as_lcp().unwrap().block_wire_bytes(oracle, page, pslot);
+                let cw = self.engine.cmd_wire_bytes();
+                let at = self.link.send_cmd(t, CMD_BYTES, cw, LinkClass::Demand);
+                let far_done = self.far_dram.access(phys, ReqKind::Read, at, false);
+                // fixed offsets interpret no markers: media site only
+                let far_done = self.media_site(phys, far_done, bw);
+                let done = self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Demand);
+                let mut installs = Installs::new();
+                for &s in d.coresidents(pslot).iter() {
+                    installs.push(Install {
+                        line_addr: page_base + s as u64,
+                        level: 0,
+                        prefetch: s != pslot,
+                        size: 0,
+                    });
+                }
+                self.stats.far_prefetch_installs +=
+                    installs.iter().filter(|i| i.prefetch).count() as u64;
+                ReadOutcome { done, installs }
             }
         }
     }
@@ -484,7 +570,8 @@ impl TieredMemory {
         if self.is_far_line(pf) {
             self.stats.far.prefetch_reads += 1;
             let wire = self.engine.line_wire_bytes(oracle, pf);
-            let at = self.link.send(now, CMD_BYTES, LinkClass::Prefetch);
+            let cw = self.engine.cmd_wire_bytes();
+            let at = self.link.send_cmd(now, CMD_BYTES, cw, LinkClass::Prefetch);
             let far_done = self.far_dram.access(pf, ReqKind::Read, at, false);
             self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Prefetch);
         } else {
@@ -529,6 +616,13 @@ impl TieredMemory {
                     near.access(base + s as u64, ReqKind::Write, now, false);
                 }
             }
+            return;
+        }
+
+        if self.policy == Policy::Lcp {
+            // the page family has its own write discipline: fixed
+            // offsets, exception region, device-internal recompaction
+            self.writeback_far_lcp(base, present, dirty, now, bw, oracle);
             return;
         }
 
@@ -581,7 +675,8 @@ impl TieredMemory {
                             d.on_cost(CramEngine::charged_core(gang, base, loc, owner_core));
                         }
                     }
-                    let at = self.link.send(now, CMD_BYTES, LinkClass::Writeback);
+                    let cw = self.engine.cmd_wire_bytes();
+                    let at = self.link.send_cmd(now, CMD_BYTES, cw, LinkClass::Writeback);
                     self.far_dram.access(addr, ReqKind::Invalidate, at, false);
                 }
                 SlotOp::WritePacked { dirty } | SlotOp::WriteSingle { dirty } => {
@@ -621,7 +716,8 @@ impl TieredMemory {
                     bw.meta_reads += 1;
                     self.stats.far.meta_accesses += 1;
                     let meta_wire = self.engine.meta_wire_bytes();
-                    let at = self.link.send(now, CMD_BYTES, LinkClass::Metadata);
+                    let cw = self.engine.cmd_wire_bytes();
+                    let at = self.link.send_cmd(now, CMD_BYTES, cw, LinkClass::Metadata);
                     let meta_done =
                         self.far_dram.access(meta_addr, ReqKind::MetaRead, at, row_opt);
                     self.link
@@ -634,6 +730,91 @@ impl TieredMemory {
                     let at =
                         self.link.send_payload(now, DATA_BYTES, meta_wire, LinkClass::Metadata);
                     self.far_dram.access(meta_addr, ReqKind::MetaWrite, at, row_opt);
+                }
+            }
+        }
+    }
+
+    /// Far writeback under the `Lcp` policy.  Every dirty line crosses
+    /// the link once and lands at its page's fixed (or exception-region)
+    /// offset.  Exception overflow recompacts the page *inside the
+    /// expander* — far-DRAM migration-class traffic, no link flits,
+    /// which is exactly the asymmetry against flat LCP (where the host
+    /// performs the same move over its own channels) the tiered exhibit
+    /// exists to show.  Descriptor changes persist to the device
+    /// descriptor region through the host-side cache, like `Explicit`
+    /// metadata.
+    fn writeback_far_lcp(
+        &mut self,
+        base: u64,
+        present: [bool; 4],
+        dirty: [bool; 4],
+        now: u64,
+        bw: &mut Bandwidth,
+        oracle: &mut SizeOracle,
+    ) {
+        let page = page_of_line(base);
+        let page_base = page * PAGE_LINES;
+        for s in 0..4 {
+            if !(present[s] && dirty[s]) {
+                continue;
+            }
+            let line = base + s as u64;
+            let pslot = (line % PAGE_LINES) as u8;
+            let lcp = self.engine.as_lcp_mut().expect("lcp far tier runs the page family");
+            let before = lcp.desc_of(page);
+            let outcome = lcp.note_dirty_write(page, pslot, oracle);
+            let d = lcp.desc_of(page).expect("descriptor materialized by the write");
+            // the dirty data itself: one flit, one device write at the
+            // post-layout offset
+            bw.demand_writes += 1;
+            self.stats.far.demand_writes += 1;
+            let wire = self.engine.line_wire_bytes(oracle, line);
+            let at = self.link.send_payload(now, DATA_BYTES, wire, LinkClass::Writeback);
+            self.far_dram.access(d.physical_line(page_base, pslot), ReqKind::Write, at, false);
+            if let LcpWriteOutcome::Recompacted { old_lines, new_lines } = outcome {
+                // device-internal re-encode: read the old footprint,
+                // write the new one, all on far DRAM — no link traffic
+                for i in 0..old_lines {
+                    bw.migration += 1;
+                    self.stats.far.migr_accesses += 1;
+                    self.far_dram.access(page_base + i, ReqKind::Read, now, false);
+                }
+                for i in 0..new_lines {
+                    bw.migration += 1;
+                    self.stats.far.migr_accesses += 1;
+                    self.far_dram.access(page_base + i, ReqKind::Write, now, false);
+                }
+            }
+            if before != Some(d) {
+                // persist the changed descriptor through the host-side
+                // cache: a miss fills from the device region first, a
+                // dirty victim writes back — each a Metadata-class
+                // link crossing
+                let desc_line = LcpLayout::desc_line_of_page(page);
+                let meta_addr = FAR_META_BASE + desc_line;
+                let meta = self.meta.as_mut().expect("lcp far tier has a descriptor cache");
+                let before_wb = meta.writebacks;
+                let how = meta.access(desc_line, true);
+                let victim_wb = meta.writebacks > before_wb;
+                if how == MetaAccess::Miss {
+                    bw.meta_reads += 1;
+                    self.stats.far.meta_accesses += 1;
+                    let meta_wire = self.engine.meta_wire_bytes();
+                    let cw = self.engine.cmd_wire_bytes();
+                    let at = self.link.send_cmd(now, CMD_BYTES, cw, LinkClass::Metadata);
+                    let meta_done =
+                        self.far_dram.access(meta_addr, ReqKind::MetaRead, at, false);
+                    self.link
+                        .recv_payload(meta_done, DATA_BYTES, meta_wire, LinkClass::Metadata);
+                }
+                if victim_wb {
+                    bw.meta_writes += 1;
+                    self.stats.far.meta_accesses += 1;
+                    let meta_wire = self.engine.meta_wire_bytes();
+                    let at =
+                        self.link.send_payload(now, DATA_BYTES, meta_wire, LinkClass::Metadata);
+                    self.far_dram.access(meta_addr, ReqKind::MetaWrite, at, false);
                 }
             }
         }
@@ -716,32 +897,37 @@ impl TieredMemory {
     ) {
         self.stats.promotions += 1;
         let first = page * PAGE_LINES;
-        for g in 0..PAGE_GROUPS {
-            let gbase = first + g * 4;
-            // a packed group travels in fewer device reads + link flits;
-            // live data sits at the non-stale physical slots (e.g. PairAb
-            // lives at locs {0, 2, 3}, not 0..3).  Each block crosses the
-            // link only after its device read completes, same sequencing
-            // as the demand path.
-            let csi = self.engine.remove(group_of(gbase)).unwrap_or_default();
-            let mut arrived = now;
-            for loc in 0..4u8 {
-                if csi.is_stale(loc) {
-                    continue;
+        if self.engine.as_lcp().is_some() {
+            self.promote_lcp_page(page, now, near, bw, oracle);
+        } else {
+            for g in 0..PAGE_GROUPS {
+                let gbase = first + g * 4;
+                // a packed group travels in fewer device reads + link flits;
+                // live data sits at the non-stale physical slots (e.g. PairAb
+                // lives at locs {0, 2, 3}, not 0..3).  Each block crosses the
+                // link only after its device read completes, same sequencing
+                // as the demand path.
+                let csi = self.engine.remove(group_of(gbase)).unwrap_or_default();
+                let mut arrived = now;
+                for loc in 0..4u8 {
+                    if csi.is_stale(loc) {
+                        continue;
+                    }
+                    bw.migration += 1;
+                    self.stats.far.migr_accesses += 1;
+                    let wire = self.engine.block_wire_bytes(oracle, gbase, csi, loc);
+                    let far_done =
+                        self.far_dram.access(gbase + loc as u64, ReqKind::Read, now, false);
+                    arrived = arrived.max(
+                        self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Migration),
+                    );
                 }
-                bw.migration += 1;
-                self.stats.far.migr_accesses += 1;
-                let wire = self.engine.block_wire_bytes(oracle, gbase, csi, loc);
-                let far_done =
-                    self.far_dram.access(gbase + loc as u64, ReqKind::Read, now, false);
-                arrived = arrived
-                    .max(self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Migration));
-            }
-            // lands near unpacked: four raw line fills once the data is here
-            for s in 0..4 {
-                bw.migration += 1;
-                self.stats.near.migr_accesses += 1;
-                near.access(gbase + s, ReqKind::Write, arrived, false);
+                // lands near unpacked: four raw line fills once the data is here
+                for s in 0..4 {
+                    bw.migration += 1;
+                    self.stats.near.migr_accesses += 1;
+                    near.access(gbase + s, ReqKind::Write, arrived, false);
+                }
             }
         }
         self.stats.migrated_lines += PAGE_LINES;
@@ -752,6 +938,58 @@ impl TieredMemory {
         if let Some(victim) = self.pick_victim(page) {
             self.demote(victim, now, near, bw, oracle);
         }
+    }
+
+    /// LCP promotion: the expander ships the page's *physical* footprint
+    /// — the packed data region plus any exception lines — so a well
+    /// compressed page crosses the link in far fewer device reads and
+    /// flits than 64 raw lines.  The page lands near unpacked (near
+    /// pages carry no layout state) and its descriptor is dropped; if
+    /// the page is later demoted it re-materializes on the next far
+    /// touch, same free-first-touch model as CRAM groups landing raw.
+    fn promote_lcp_page(
+        &mut self,
+        page: u64,
+        now: u64,
+        near: &mut DramSim,
+        bw: &mut Bandwidth,
+        oracle: &mut SizeOracle,
+    ) {
+        let first = page * PAGE_LINES;
+        let d = self.engine.as_lcp_mut().expect("lcp promote").ensure_desc(page, oracle);
+        let per_line = (DATA_BYTES / u64::from(d.target)).max(1);
+        let mut arrived = now;
+        // data region: one device read + one flit per physical line,
+        // carrying all of that line's co-resident slots
+        for i in 0..d.data_lines() {
+            bw.migration += 1;
+            self.stats.far.migr_accesses += 1;
+            let lead = (i * per_line).min(PAGE_LINES - 1) as u8;
+            let wire = self.engine.as_lcp().unwrap().block_wire_bytes(oracle, page, lead);
+            let far_done = self.far_dram.access(first + i, ReqKind::Read, now, false);
+            arrived = arrived
+                .max(self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Migration));
+        }
+        // exception region: raw single-line crossings
+        for s in 0..PAGE_LINES as u8 {
+            if !d.is_exception(s) {
+                continue;
+            }
+            bw.migration += 1;
+            self.stats.far.migr_accesses += 1;
+            let phys = d.physical_line(first, s);
+            let wire = self.engine.line_wire_bytes(oracle, first + u64::from(s));
+            let far_done = self.far_dram.access(phys, ReqKind::Read, now, false);
+            arrived = arrived
+                .max(self.link.recv_payload(far_done, DATA_BYTES, wire, LinkClass::Migration));
+        }
+        // lands near unpacked: 64 raw line fills once the data is here
+        for l in 0..PAGE_LINES {
+            bw.migration += 1;
+            self.stats.near.migr_accesses += 1;
+            near.access(first + l, ReqKind::Write, arrived, false);
+        }
+        self.engine.as_lcp_mut().unwrap().remove_page(page);
     }
 
     /// Coldest of a small sample of near pages (deterministic ring scan).
@@ -811,6 +1049,11 @@ impl TieredMemory {
         }
         for g in 0..PAGE_GROUPS {
             self.engine.remove(group_of(first + g * 4));
+        }
+        if let Some(l) = self.engine.as_lcp_mut() {
+            // demoted pages land raw on the expander; the descriptor
+            // re-materializes free on the next far touch
+            l.remove_page(page);
         }
         self.stats.migrated_lines += PAGE_LINES;
         self.placement.insert(page, true);
@@ -925,6 +1168,7 @@ mod tests {
             Policy::Dynamic,
             Policy::Explicit { row_opt: false },
             Policy::NextLinePrefetch,
+            Policy::Lcp,
         ] {
             let (mut t, mut near, mut o, mut bw) = setup(policy);
             let mut gate = matches!(policy, Policy::Dynamic)
@@ -1127,7 +1371,12 @@ mod tests {
         // all-SmallInt oracle: every demand / writeback / prefetch payload
         // compresses, so the wire total drops strictly below the raw total
         // while the storage-side accounting is untouched.
-        for policy in [Policy::Implicit, Policy::Uncompressed, Policy::Explicit { row_opt: false }] {
+        for policy in [
+            Policy::Implicit,
+            Policy::Uncompressed,
+            Policy::Explicit { row_opt: false },
+            Policy::Lcp,
+        ] {
             let raw = drive(TieredMemory::new(TierConfig::default(), policy));
             let lc = drive(TieredMemory::with_codec(
                 TierConfig::default(),
@@ -1177,6 +1426,93 @@ mod tests {
             r_raw.done
         );
         assert_eq!(r_lc.installs.len(), 4, "codec never changes what a flit carries");
+    }
+
+    #[test]
+    fn lcp_far_reads_use_fixed_offsets_and_descriptor_cache() {
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Lcp);
+        let fl = page_in(&t, true);
+        // all-SmallInt page -> T=16: the physical line carries 4
+        // co-resident logical slots, all installed off one flit
+        let r = t.read(fl + 2, 0, &mut near, &mut bw, &mut o);
+        assert_eq!(r.installs.len(), 4);
+        assert_eq!(r.installs.iter().filter(|i| i.prefetch).count(), 3);
+        assert_eq!(t.snapshot().far_prefetch_installs, 3);
+        // cold descriptor: one Metadata crossing, then the data flit
+        assert_eq!(bw.meta_reads, 1);
+        assert_eq!(t.snapshot().link.rx_flits, 2);
+        // same page, different physical line: the host-side descriptor
+        // cache absorbs the lookup — only the data flit returns
+        let r2 = t.read(fl + 5, 1_000, &mut near, &mut bw, &mut o);
+        assert_eq!(r2.installs.len(), 4);
+        assert_eq!(bw.meta_reads, 1, "descriptor cached host-side");
+        assert_eq!(t.snapshot().link.rx_flits, 3);
+        // fixed offsets: no probes, no marker mispredicts, ever
+        assert_eq!(bw.second_reads, 0);
+        assert!(t.capacity_snapshot().is_some(), "the page family reports capacity");
+        assert_eq!(t.snapshot().total_accesses(), bw.total());
+    }
+
+    #[test]
+    fn lcp_far_writeback_persists_the_descriptor() {
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Lcp);
+        let fl = page_in(&t, true);
+        t.writeback(&gang(fl, [true, false, false, false]), 0, &mut near, &mut o, &mut bw, false, &mut None);
+        // one dirty line: one Writeback flit + device write at the fixed
+        // offset; the freshly materialized descriptor fills the host
+        // cache from the device region (Metadata crossing) and dirties it
+        assert_eq!(bw.demand_writes, 1);
+        assert_eq!(t.snapshot().far.demand_writes, 1);
+        assert_eq!(bw.meta_reads, 1);
+        assert_eq!(t.snapshot().far.meta_accesses, 1);
+        assert_eq!(t.snapshot().link.tx_flits, 2, "data flit + descriptor-fill cmd");
+        assert_eq!(t.snapshot().link.rx_flits, 1, "descriptor line comes back once");
+        // same line again: layout unchanged, so no new descriptor traffic
+        t.writeback(&gang(fl, [true, false, false, false]), 100, &mut near, &mut o, &mut bw, false, &mut None);
+        assert_eq!(bw.demand_writes, 2);
+        assert_eq!(bw.meta_reads, 1, "unchanged descriptor persists nothing");
+        // clean re-eviction is free, exactly like the group family
+        let total = bw.total();
+        t.writeback(&gang(fl, [false; 4]), 200, &mut near, &mut o, &mut bw, false, &mut None);
+        assert_eq!(bw.total(), total);
+        assert_eq!(t.snapshot().total_accesses(), bw.total());
+    }
+
+    #[test]
+    fn lcp_far_exception_overflow_recompacts_inside_the_expander() {
+        let (mut t, mut near, mut o, mut bw) = setup(Policy::Lcp);
+        let fl = page_in(&t, true);
+        // materialize the page at T=16 from the all-SmallInt oracle
+        t.read(fl, 0, &mut near, &mut bw, &mut o);
+        assert_eq!(t.capacity_snapshot().unwrap().recompactions, 0);
+        let (tx0, rx0) = (t.snapshot().link.tx_flits, t.snapshot().link.rx_flits);
+        // the page turns incompressible one dirty line at a time: the
+        // first 8 land in the exception region, the 9th overflows it
+        let mut inc = SizeOracle::new(ValueModel::new([0.0, 0.0, 0.0, 0.0, 1.0], 11));
+        for k in 0..9u64 {
+            t.writeback(
+                &gang(fl + 4 * k, [true, false, false, false]),
+                1_000 + k * 100,
+                &mut near,
+                &mut inc,
+                &mut bw,
+                false,
+                &mut None,
+            );
+        }
+        let cap = t.capacity_snapshot().unwrap();
+        assert_eq!(cap.recompactions, 1);
+        assert_eq!(cap.exception_lines, 0, "recompacted page is raw: no exceptions");
+        // the re-encode read the old footprint (16 data + 8 exception
+        // lines) and wrote 64 raw lines, all inside the expander
+        assert_eq!(bw.migration, 24 + 64);
+        assert_eq!(t.snapshot().far.migr_accesses, 24 + 64);
+        // ...and crossed the link zero times: the TX side carried exactly
+        // the 9 dirty-data flits, the RX side nothing new (the descriptor
+        // stayed hot in the host cache from the read)
+        assert_eq!(t.snapshot().link.tx_flits, tx0 + 9);
+        assert_eq!(t.snapshot().link.rx_flits, rx0);
+        assert_eq!(t.snapshot().total_accesses(), bw.total());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! Grammar (comma-separated tenants):
 //!
 //! ```text
-//! WORKLOAD[:CORES][:qos][,WORKLOAD[:CORES][:qos],...]
+//! WORKLOAD[:CORES][:qos][:bias=N][,WORKLOAD[:CORES][:qos][:bias=N],...]
 //! ```
 //!
 //! * `WORKLOAD` — any base profile name known to
@@ -21,6 +21,13 @@
 //! * `qos` — marks the tenant whose reads get the scheduler's reserved
 //!   slots ([`crate::dram::SchedConfig::reserved_slots`]).  At most one
 //!   tenant may be marked.
+//! * `bias=N` — per-tenant Dynamic-CRAM gate bias
+//!   ([`DynamicCram::set_bias`](crate::cram::dynamic::DynamicCram::set_bias)),
+//!   applied to each of the tenant's cores under the `dynamic` /
+//!   `tiered-dynamic` policies (and ignored by the others).  Positive
+//!   `N` keeps the tenant's gate open through `N` more net cost events
+//!   (compression-friendly); negative `N` closes it sooner
+//!   (latency-friendly).
 
 use crate::workloads::profiles::{by_name, WorkloadProfile};
 
@@ -37,6 +44,9 @@ pub struct TenantSpec {
     /// Reads from this tenant's cores see the full read-slot pool even
     /// when `reserved_slots` caps everyone else.
     pub protected: bool,
+    /// Dynamic-gate bias for the tenant's cores (`:bias=N`; 0 = stock
+    /// thresholds, bit-identical to an unbiased gate).
+    pub bias: i32,
 }
 
 /// Parse a `--tenants` spec against a machine of `total_cores` cores.
@@ -65,12 +75,20 @@ pub fn parse_tenants(spec: &str, total_cores: usize) -> Result<Vec<TenantSpec>, 
         let name = fields.next().unwrap_or("");
         let mut cores = 0usize; // 0 = split the leftover evenly
         let mut protected = false;
+        let mut bias = 0i32;
         for f in fields {
             if f.eq_ignore_ascii_case("qos") {
                 protected = true;
+            } else if let Some(b) = f.strip_prefix("bias=") {
+                bias = b.parse().map_err(|_| {
+                    format!("tenant {name:?}: bias {b:?} is not a (signed) integer")
+                })?;
             } else {
                 cores = f.parse().map_err(|_| {
-                    format!("tenant {name:?}: field {f:?} is neither a core count nor `qos`")
+                    format!(
+                        "tenant {name:?}: field {f:?} is neither a core count, `qos`, \
+                         nor `bias=N`"
+                    )
                 })?;
                 if cores == 0 {
                     return Err(format!("tenant {name:?}: core count must be > 0"));
@@ -90,6 +108,7 @@ pub fn parse_tenants(spec: &str, total_cores: usize) -> Result<Vec<TenantSpec>, 
             cores,
             seed_salt: idx as u64 + 1,
             protected,
+            bias,
         });
     }
     if specs.iter().filter(|t| t.protected).count() > 1 {
@@ -151,6 +170,14 @@ mod tests {
         assert_eq!((t[0].name.as_str(), t[0].cores, t[0].protected), ("lat_chase", 4, true));
         assert_eq!((t[1].name.as_str(), t[1].cores, t[1].protected), ("cap_stream", 4, false));
         assert_ne!(t[0].seed_salt, t[1].seed_salt);
+        assert_eq!((t[0].bias, t[1].bias), (0, 0), "bias defaults to the stock gate");
+    }
+
+    #[test]
+    fn bias_field_parses_in_any_position() {
+        let t = parse_tenants("lat_chase:4:qos:bias=-16,cap_stream:bias=32:4", 8).unwrap();
+        assert_eq!((t[0].cores, t[0].protected, t[0].bias), (4, true, -16));
+        assert_eq!((t[1].cores, t[1].protected, t[1].bias), (4, false, 32));
     }
 
     #[test]
@@ -177,6 +204,8 @@ mod tests {
         assert!(parse_tenants(":4", 8).is_err(), "empty workload name");
         assert!(parse_tenants("libq:0", 8).is_err(), "zero-core tenant");
         assert!(parse_tenants("libq:-2", 8).is_err(), "negative core count");
+        assert!(parse_tenants("libq:4:bias=,mcf17:4", 8).is_err(), "empty bias");
+        assert!(parse_tenants("libq:4:bias=big,mcf17:4", 8).is_err(), "non-numeric bias");
         assert!(
             parse_tenants("libq:99999999999999999999", 8).is_err(),
             "overflowing core count"
