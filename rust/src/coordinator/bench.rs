@@ -10,6 +10,7 @@
 //! performance).
 
 use crate::controller::Design;
+use crate::coordinator::runner::{BatchStats, ResultsDb, RunPlan};
 use crate::sim::{simulate, SimConfig};
 use crate::util::bench::{black_box, BenchResult, Bencher};
 use crate::workloads::profiles::by_name;
@@ -28,6 +29,11 @@ pub const BENCH_DESIGNS: [Design; 6] = [
     Design::NextLinePrefetch,
 ];
 
+/// Instruction budget per core for the campaign-throughput row — small
+/// enough that one 12-job batch fits a bench iteration, large enough to
+/// exercise the warmup/measure phases of every job.
+const CAMPAIGN_INSTS: u64 = 4_000;
+
 /// Run the full (workload × design) simulator bench matrix at
 /// `insts` instructions per core.
 pub fn run_sim_matrix(insts: u64, b: &Bencher) -> Vec<BenchResult> {
@@ -45,5 +51,37 @@ pub fn run_sim_matrix(insts: u64, b: &Bencher) -> Vec<BenchResult> {
         }
         println!();
     }
+    println!("# campaign — 12-job batch through the experiment engine (pool + striped merge)");
+    results.push(campaign_row(b));
+    println!();
     results
+}
+
+/// Campaign throughput: the bench matrix's 12 (workload × design) jobs
+/// driven through the full experiment engine — job dedup, cost-ordered
+/// pool drain, striped merge — with a fresh [`ResultsDb`] per iteration
+/// so every job simulates.  Catches engine-level regressions (queue
+/// contention, merge cost) that the single-simulation rows can't see.
+fn campaign_row(b: &Bencher) -> BenchResult {
+    let plan = RunPlan { insts_per_core: CAMPAIGN_INSTS, seed: 0xBE7C, threads: 4 };
+    let workloads: Vec<_> = BENCH_WORKLOADS
+        .iter()
+        .map(|w| by_name(w).expect("bench workload exists"))
+        .collect();
+    // nominal element count: the engine APKI-scales each job's budget,
+    // but deterministically, so the row stays self-consistent across
+    // runs — which is all the regression gate compares
+    let elems = CAMPAIGN_INSTS * 3 * 8 * 12; // (warmup 2x + measure) x cores x jobs
+    let mut last = BatchStats::default();
+    let result = b.run("campaign/12-job batch", Some(elems), || {
+        let mut db = ResultsDb::new(plan.clone());
+        last = db.run_matrix(&workloads, &BENCH_DESIGNS, false);
+        black_box(db.len());
+    });
+    println!(
+        "# campaign batch: {} jobs executed/iter, {:.1} jobs/s",
+        last.executed,
+        last.jobs_per_sec()
+    );
+    result
 }

@@ -1299,39 +1299,39 @@ pub enum OutputFormat {
 /// One cell of a machine-readable record.  Strings are quoted in JSON;
 /// numbers (pre-formatted by the figure, so CSV and JSON agree to the
 /// digit) pass through verbatim.
-enum Cell {
+pub(crate) enum Cell {
     Str(String),
     Num(String),
 }
 
 impl Cell {
-    fn s(v: impl Into<String>) -> Cell {
+    pub(crate) fn s(v: impl Into<String>) -> Cell {
         Cell::Str(v.into())
     }
-    fn n(v: impl std::fmt::Display) -> Cell {
+    pub(crate) fn n(v: impl std::fmt::Display) -> Cell {
         Cell::Num(v.to_string())
     }
 }
 
-/// The shared sink behind every `--format`-aware figure: named columns
-/// plus rows of cells, rendered as a CSV header + lines or a JSON array
-/// of flat objects.
-struct Sink {
+/// The shared sink behind every `--format`-aware figure (and the sweep
+/// campaign report): named columns plus rows of cells, rendered as a
+/// CSV header + lines or a JSON array of flat objects.
+pub(crate) struct Sink {
     columns: &'static [&'static str],
     rows: Vec<Vec<Cell>>,
 }
 
 impl Sink {
-    fn new(columns: &'static [&'static str]) -> Self {
+    pub(crate) fn new(columns: &'static [&'static str]) -> Self {
         Sink { columns, rows: Vec::new() }
     }
 
-    fn push(&mut self, row: Vec<Cell>) {
+    pub(crate) fn push(&mut self, row: Vec<Cell>) {
         debug_assert_eq!(row.len(), self.columns.len());
         self.rows.push(row);
     }
 
-    fn render(&self, format: OutputFormat) -> String {
+    pub(crate) fn render(&self, format: OutputFormat) -> String {
         match format {
             OutputFormat::Csv => {
                 let mut s = self.columns.join(",");

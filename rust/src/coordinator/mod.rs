@@ -1,14 +1,21 @@
 //! Experiment orchestration: the figure/table harnesses.
 //!
 //! [`ResultsDb`] runs the (workload × design × channels) simulation matrix
-//! once — in parallel over std threads — and every figure/table harness
-//! formats its paper counterpart from the cached results.  `repro
+//! once — drained through the shared work [`pool`] and striped across
+//! shards — and every figure/table harness formats its paper counterpart
+//! from the cached results.  Completed runs can [`persist`] to a
+//! versioned on-disk cache that later invocations reload, and [`sweep`]
+//! drives the full design-space campaign in one command.  `repro
 //! reproduce-all` regenerates the complete evaluation section.
 
 pub mod ablation;
 pub mod bench;
 pub mod figures;
+pub mod persist;
+pub mod pool;
 pub mod runner;
+pub mod sweep;
 
 pub use figures::{all_reports, report, report_fmt, OutputFormat, Report};
-pub use runner::{ResultsDb, RunPlan};
+pub use runner::{BatchStats, CacheLoad, ResultsDb, RunPlan};
+pub use sweep::{run_sweep, SweepConfig, SweepOutcome};

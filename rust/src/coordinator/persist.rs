@@ -1,0 +1,738 @@
+//! Persistent on-disk results cache (`CRAM_RESULTS.json`).
+//!
+//! Serializes `(RunKey, SimResult)` pairs through the zero-dependency
+//! [`crate::util::json`] codec so figure re-renders and `repro sweep`
+//! re-runs reuse completed simulations across invocations (and across
+//! interrupts — the runner re-saves after every executed batch).
+//!
+//! **Self-invalidation.**  A cache file is trusted only when its
+//! fingerprint matches the current build *exactly*; otherwise it is
+//! ignored wholesale and overwritten on the next save.  The fingerprint
+//! concatenates
+//! * the cache [`SCHEMA`] version (bumped on any codec/layout change,
+//!   including the latency-histogram bucket layout),
+//! * the crate version,
+//! * a **probe hash**: one tiny fixed-seed simulation run at load time,
+//!   serialized through this codec and FNV-hashed — any change to
+//!   simulator semantics, stats layout, or the codec itself changes
+//!   these bytes, so stale caches self-invalidate without anyone
+//!   remembering to bump a version, and
+//! * the plan's `insts_per_core` and `seed` (different budgets are
+//!   different experiments).
+//!
+//! `threads` is deliberately **excluded**: results are scheduling-
+//! independent (pinned by the sharded-vs-serial determinism tests), so
+//! a cache written at `--threads 1` serves a 32-thread run bit-for-bit.
+//!
+//! Numbers round-trip exactly: u64 counters print in full decimal and
+//! re-parse without an f64 intermediate ([`crate::util::json`] keeps
+//! raw number tokens), and floats use Rust's shortest round-trip
+//! `Display` form — so a figure rendered from a reloaded cache is
+//! byte-identical to one rendered from fresh runs.
+
+use std::sync::OnceLock;
+
+use crate::cache::CacheStats;
+use crate::controller::Design;
+use crate::coordinator::runner::{RunKey, RunPlan};
+use crate::sim::{simulate, SimConfig};
+use crate::stats::{
+    Bandwidth, CapacityStats, LatencyHist, LinkTraffic, ReliabilityStats, SimResult, TenantStats,
+    TierStats, TierTraffic,
+};
+use crate::tier::link::LinkStats;
+use crate::util::json::{escape, Json};
+use crate::util::fnv1a64;
+use crate::workloads::profiles::by_name;
+
+/// Cache schema version.  Bump on any change to the entry layout or to
+/// a serialized struct that the probe hash cannot see (there are none
+/// today — the probe serializes a full `SimResult` — but the explicit
+/// version documents intent and guards refactors of the probe itself).
+pub const SCHEMA: u32 = 1;
+
+/// The build+plan fingerprint a cache file must match to be loaded.
+pub fn fingerprint(plan: &RunPlan) -> String {
+    format!(
+        "v{SCHEMA}:{}:{:016x}:i{}:s{}",
+        env!("CARGO_PKG_VERSION"),
+        probe_hash(),
+        plan.insts_per_core,
+        plan.seed
+    )
+}
+
+/// Hash of one tiny canonical probe simulation serialized through this
+/// codec (see the module docs).  Computed once per process — the probe
+/// costs a few milliseconds.
+fn probe_hash() -> u64 {
+    static PROBE: OnceLock<u64> = OnceLock::new();
+    *PROBE.get_or_init(|| {
+        let profile = by_name("libq").expect("probe workload exists");
+        let cfg = SimConfig::builder()
+            .design(Design::Dynamic)
+            .seed(0xF17E)
+            .insts(2_000)
+            .warmup(4_000)
+            .build();
+        let r = simulate(&profile, &cfg);
+        let key = RunKey {
+            workload: "__probe".to_string(),
+            design: Design::Dynamic.name(),
+            channels: 2,
+            far_mill: 0,
+            llc_comp: false,
+        };
+        fnv1a64(enc_entry(&key, &r).as_bytes())
+    })
+}
+
+/// Serialize a whole cache file.  Entries must already be in canonical
+/// [`RunKey`] order (the runner sorts) so the file bytes — and the
+/// determinism tests that compare them — never depend on hash-map
+/// iteration order.
+pub fn encode(fingerprint: &str, plan: &RunPlan, pairs: &[(&RunKey, &SimResult)]) -> String {
+    let mut s = String::with_capacity(256 + pairs.len() * 2048);
+    s.push_str("{\n");
+    s.push_str(&format!("\"schema\":{SCHEMA},\n"));
+    s.push_str(&format!("\"fingerprint\":\"{}\",\n", escape(fingerprint)));
+    s.push_str(&format!(
+        "\"plan\":{{\"insts_per_core\":{},\"seed\":{}}},\n",
+        plan.insts_per_core, plan.seed
+    ));
+    s.push_str("\"results\":[\n");
+    for (i, (k, r)) in pairs.iter().enumerate() {
+        if i > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&enc_entry(k, r));
+    }
+    s.push_str("\n]}\n");
+    s
+}
+
+/// Parse a cache file, validating schema and fingerprint.  Any mismatch
+/// or malformed entry rejects the whole file — a cache is either fully
+/// trusted or not at all.
+pub fn decode(text: &str, expected_fingerprint: &str) -> Result<Vec<(RunKey, SimResult)>, String> {
+    let root = Json::parse(text).map_err(|e| format!("cache parse error: {e}"))?;
+    let schema = root
+        .get("schema")
+        .and_then(Json::as_u64)
+        .ok_or("cache missing schema")?;
+    if schema != u64::from(SCHEMA) {
+        return Err(format!("stale cache: schema {schema} != {SCHEMA}"));
+    }
+    let fp = root
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .ok_or("cache missing fingerprint")?;
+    if fp != expected_fingerprint {
+        return Err(format!(
+            "stale cache: fingerprint {fp:?} != current {expected_fingerprint:?}"
+        ));
+    }
+    let results = root
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or("cache missing results")?;
+    results.iter().map(dec_entry).collect()
+}
+
+// ---------------------------------------------------------------------
+// encoding
+
+fn num(v: f64) -> String {
+    // shortest round-trip Display; a non-finite value (none occur in
+    // practice) prints as NaN/inf, which the parser rejects — the cache
+    // is then regenerated rather than silently mangled
+    format!("{v}")
+}
+
+fn f64s(xs: &[f64]) -> String {
+    let inner: Vec<String> = xs.iter().map(|v| num(*v)).collect();
+    format!("[{}]", inner.join(","))
+}
+
+fn u64s(xs: &[u64]) -> String {
+    let inner: Vec<String> = xs.iter().map(u64::to_string).collect();
+    format!("[{}]", inner.join(","))
+}
+
+fn opt_f64(v: Option<f64>) -> String {
+    v.map_or_else(|| "null".to_string(), num)
+}
+
+pub(crate) fn enc_entry(key: &RunKey, r: &SimResult) -> String {
+    format!("{{\"key\":{},\"result\":{}}}", enc_key(key), enc_result(r))
+}
+
+fn enc_key(k: &RunKey) -> String {
+    format!(
+        "{{\"workload\":\"{}\",\"design\":\"{}\",\"channels\":{},\"far_mill\":{},\"llc_comp\":{}}}",
+        escape(&k.workload),
+        escape(k.design),
+        k.channels,
+        k.far_mill,
+        k.llc_comp
+    )
+}
+
+fn enc_result(r: &SimResult) -> String {
+    let mut s = String::with_capacity(2048);
+    s.push('{');
+    s.push_str(&format!("\"workload\":\"{}\",", escape(&r.workload)));
+    s.push_str(&format!("\"design\":\"{}\",", escape(&r.design)));
+    s.push_str(&format!("\"cycles\":{},", r.cycles));
+    s.push_str(&format!("\"insts_per_core\":{},", r.insts_per_core));
+    s.push_str(&format!("\"cores\":{},", r.cores));
+    s.push_str(&format!("\"ipc\":{},", f64s(&r.ipc)));
+    s.push_str(&format!("\"llc_hits\":{},", r.llc_hits));
+    s.push_str(&format!("\"llc_misses\":{},", r.llc_misses));
+    s.push_str(&format!("\"bw\":{},", enc_bw(&r.bw)));
+    s.push_str(&format!(
+        "\"llc_stats\":{},",
+        r.llc_stats.as_ref().map_or_else(|| "null".to_string(), enc_cache)
+    ));
+    s.push_str(&format!("\"llp_accuracy\":{},", opt_f64(r.llp_accuracy)));
+    s.push_str(&format!("\"meta_hit_rate\":{},", opt_f64(r.meta_hit_rate)));
+    s.push_str(&format!("\"prefetch_installed\":{},", r.prefetch_installed));
+    s.push_str(&format!("\"prefetch_used\":{},", r.prefetch_used));
+    s.push_str(&format!("\"row_hit_rate\":{},", num(r.row_hit_rate)));
+    s.push_str(&format!("\"read_lat\":{},", enc_hist(&r.read_lat)));
+    s.push_str(&format!(
+        "\"compression_enabled_frac\":{},",
+        num(r.compression_enabled_frac)
+    ));
+    s.push_str(&format!("\"dyn_costs\":{},", r.dyn_costs));
+    s.push_str(&format!("\"dyn_benefits\":{},", r.dyn_benefits));
+    let counters: Vec<String> = r.dyn_counters.iter().map(i32::to_string).collect();
+    s.push_str(&format!("\"dyn_counters\":[{}],", counters.join(",")));
+    s.push_str(&format!(
+        "\"tier\":{},",
+        r.tier.as_ref().map_or_else(|| "null".to_string(), enc_tier)
+    ));
+    let tenants: Vec<String> = r.tenants.iter().map(enc_tenant).collect();
+    s.push_str(&format!("\"tenants\":[{}],", tenants.join(",")));
+    s.push_str(&format!("\"rel\":{},", enc_rel(&r.rel)));
+    s.push_str(&format!(
+        "\"capacity\":{}",
+        r.capacity.as_ref().map_or_else(|| "null".to_string(), enc_cap)
+    ));
+    s.push('}');
+    s
+}
+
+fn enc_bw(b: &Bandwidth) -> String {
+    format!(
+        "{{\"demand_reads\":{},\"demand_writes\":{},\"clean_writes\":{},\"invalidates\":{},\
+         \"second_reads\":{},\"meta_reads\":{},\"meta_writes\":{},\"prefetch_reads\":{},\
+         \"migration\":{}}}",
+        b.demand_reads,
+        b.demand_writes,
+        b.clean_writes,
+        b.invalidates,
+        b.second_reads,
+        b.meta_reads,
+        b.meta_writes,
+        b.prefetch_reads,
+        b.migration
+    )
+}
+
+fn enc_hist(h: &LatencyHist) -> String {
+    format!(
+        "{{\"buckets\":{},\"count\":{},\"sum\":{}}}",
+        u64s(h.bucket_counts()),
+        h.count(),
+        h.sum()
+    )
+}
+
+fn enc_cache(c: &CacheStats) -> String {
+    format!(
+        "{{\"samples\":{},\"lines_sum\":{},\"bytes_sum\":{},\"tag_evictions\":{},\
+         \"data_evictions\":{},\"baseline_lines\":{},\"tag_capacity\":{}}}",
+        c.samples,
+        c.lines_sum,
+        c.bytes_sum,
+        c.tag_evictions,
+        c.data_evictions,
+        c.baseline_lines,
+        c.tag_capacity
+    )
+}
+
+fn enc_tt(t: &TierTraffic) -> String {
+    format!(
+        "{{\"demand_reads\":{},\"demand_writes\":{},\"clean_writes\":{},\"invalidates\":{},\
+         \"meta_accesses\":{},\"prefetch_reads\":{},\"migr_accesses\":{},\"second_reads\":{}}}",
+        t.demand_reads,
+        t.demand_writes,
+        t.clean_writes,
+        t.invalidates,
+        t.meta_accesses,
+        t.prefetch_reads,
+        t.migr_accesses,
+        t.second_reads
+    )
+}
+
+fn enc_link(l: &LinkStats) -> String {
+    format!(
+        "{{\"tx_flits\":{},\"rx_flits\":{},\"tx_busy_cycles\":{},\"rx_busy_cycles\":{},\
+         \"tx_wait_cycles\":{},\"rx_wait_cycles\":{}}}",
+        l.tx_flits, l.rx_flits, l.tx_busy_cycles, l.rx_busy_cycles, l.tx_wait_cycles,
+        l.rx_wait_cycles
+    )
+}
+
+fn enc_lt(l: &LinkTraffic) -> String {
+    format!(
+        "{{\"demand_raw_bytes\":{},\"demand_wire_bytes\":{},\"meta_raw_bytes\":{},\
+         \"meta_wire_bytes\":{},\"writeback_raw_bytes\":{},\"writeback_wire_bytes\":{},\
+         \"prefetch_raw_bytes\":{},\"prefetch_wire_bytes\":{},\"migration_raw_bytes\":{},\
+         \"migration_wire_bytes\":{},\"flits_saved\":{},\"retried_flits\":{},\"retry_beats\":{}}}",
+        l.demand_raw_bytes,
+        l.demand_wire_bytes,
+        l.meta_raw_bytes,
+        l.meta_wire_bytes,
+        l.writeback_raw_bytes,
+        l.writeback_wire_bytes,
+        l.prefetch_raw_bytes,
+        l.prefetch_wire_bytes,
+        l.migration_raw_bytes,
+        l.migration_wire_bytes,
+        l.flits_saved,
+        l.retried_flits,
+        l.retry_beats
+    )
+}
+
+fn enc_tier(t: &TierStats) -> String {
+    format!(
+        "{{\"near\":{},\"far\":{},\"promotions\":{},\"demotions\":{},\"migrated_lines\":{},\
+         \"link\":{},\"link_traffic\":{},\"far_prefetch_installs\":{},\"far_groups_written\":{},\
+         \"far_groups_packed\":{}}}",
+        enc_tt(&t.near),
+        enc_tt(&t.far),
+        t.promotions,
+        t.demotions,
+        t.migrated_lines,
+        enc_link(&t.link),
+        enc_lt(&t.link_traffic),
+        t.far_prefetch_installs,
+        t.far_groups_written,
+        t.far_groups_packed
+    )
+}
+
+fn enc_rel(r: &ReliabilityStats) -> String {
+    format!(
+        "{{\"flits_retried\":{},\"retry_beats\":{},\"media_errors\":{},\"marker_errors\":{},\
+         \"marker_detected\":{},\"silent_misreads\":{},\"rekeys\":{},\"watchdog_degrades\":{},\
+         \"watchdog_rearms\":{},\"degraded_epochs\":{}}}",
+        r.flits_retried,
+        r.retry_beats,
+        r.media_errors,
+        r.marker_errors,
+        r.marker_detected,
+        r.silent_misreads,
+        r.rekeys,
+        r.watchdog_degrades,
+        r.watchdog_rearms,
+        r.degraded_epochs
+    )
+}
+
+fn enc_cap(c: &CapacityStats) -> String {
+    format!(
+        "{{\"pages\":{},\"logical_lines\":{},\"physical_lines\":{},\"exception_lines\":{},\
+         \"recompactions\":{}}}",
+        c.pages, c.logical_lines, c.physical_lines, c.exception_lines, c.recompactions
+    )
+}
+
+fn enc_tenant(t: &TenantStats) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"first_core\":{},\"cores\":{},\"ipc\":{},\"bw\":{},\"read_lat\":{},\
+         \"slowdown\":{},\"interference_beats\":{},\"protected\":{}}}",
+        escape(&t.name),
+        t.first_core,
+        t.cores,
+        f64s(&t.ipc),
+        enc_bw(&t.bw),
+        enc_hist(&t.read_lat),
+        opt_f64(t.slowdown),
+        num(t.interference_beats),
+        t.protected
+    )
+}
+
+// ---------------------------------------------------------------------
+// decoding
+
+fn field<'a>(o: &'a Json, k: &str) -> Result<&'a Json, String> {
+    o.get(k).ok_or_else(|| format!("cache entry missing field {k:?}"))
+}
+
+fn f_u64(o: &Json, k: &str) -> Result<u64, String> {
+    field(o, k)?
+        .as_u64()
+        .ok_or_else(|| format!("bad u64 field {k:?}"))
+}
+
+fn f_usize(o: &Json, k: &str) -> Result<usize, String> {
+    Ok(f_u64(o, k)? as usize)
+}
+
+fn f_f64(o: &Json, k: &str) -> Result<f64, String> {
+    field(o, k)?
+        .as_f64()
+        .ok_or_else(|| format!("bad f64 field {k:?}"))
+}
+
+fn f_bool(o: &Json, k: &str) -> Result<bool, String> {
+    field(o, k)?
+        .as_bool()
+        .ok_or_else(|| format!("bad bool field {k:?}"))
+}
+
+fn f_str(o: &Json, k: &str) -> Result<String, String> {
+    Ok(field(o, k)?
+        .as_str()
+        .ok_or_else(|| format!("bad string field {k:?}"))?
+        .to_string())
+}
+
+fn f_opt_f64(o: &Json, k: &str) -> Result<Option<f64>, String> {
+    let v = field(o, k)?;
+    if v.is_null() {
+        return Ok(None);
+    }
+    v.as_f64().map(Some).ok_or_else(|| format!("bad f64 field {k:?}"))
+}
+
+fn f_f64_arr(o: &Json, k: &str) -> Result<Vec<f64>, String> {
+    field(o, k)?
+        .as_arr()
+        .ok_or_else(|| format!("bad array field {k:?}"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| format!("bad f64 in {k:?}")))
+        .collect()
+}
+
+fn f_u64_arr(o: &Json, k: &str) -> Result<Vec<u64>, String> {
+    field(o, k)?
+        .as_arr()
+        .ok_or_else(|| format!("bad array field {k:?}"))?
+        .iter()
+        .map(|v| v.as_u64().ok_or_else(|| format!("bad u64 in {k:?}")))
+        .collect()
+}
+
+fn dec_entry(e: &Json) -> Result<(RunKey, SimResult), String> {
+    let key = dec_key(field(e, "key")?)?;
+    let result = dec_result(field(e, "result")?)?;
+    Ok((key, result))
+}
+
+fn dec_key(o: &Json) -> Result<RunKey, String> {
+    let name = f_str(o, "design")?;
+    // map back onto the interned &'static name — a design the current
+    // build no longer knows invalidates the entry (and thus the cache)
+    let design = Design::parse(&name)
+        .ok_or_else(|| format!("cache names unknown design {name:?}"))?
+        .name();
+    Ok(RunKey {
+        workload: f_str(o, "workload")?,
+        design,
+        channels: f_usize(o, "channels")?,
+        far_mill: f_u64(o, "far_mill")? as u16,
+        llc_comp: f_bool(o, "llc_comp")?,
+    })
+}
+
+fn dec_result(o: &Json) -> Result<SimResult, String> {
+    let llc_stats = match field(o, "llc_stats")? {
+        Json::Null => None,
+        v => Some(dec_cache(v)?),
+    };
+    let tier = match field(o, "tier")? {
+        Json::Null => None,
+        v => Some(dec_tier(v)?),
+    };
+    let capacity = match field(o, "capacity")? {
+        Json::Null => None,
+        v => Some(dec_cap(v)?),
+    };
+    let tenants = field(o, "tenants")?
+        .as_arr()
+        .ok_or("bad tenants array")?
+        .iter()
+        .map(dec_tenant)
+        .collect::<Result<Vec<_>, _>>()?;
+    let dyn_counters = field(o, "dyn_counters")?
+        .as_arr()
+        .ok_or("bad dyn_counters array")?
+        .iter()
+        .map(|v| {
+            v.as_i64()
+                .and_then(|x| i32::try_from(x).ok())
+                .ok_or_else(|| "bad i32 in dyn_counters".to_string())
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(SimResult {
+        workload: f_str(o, "workload")?,
+        design: f_str(o, "design")?,
+        cycles: f_u64(o, "cycles")?,
+        insts_per_core: f_u64(o, "insts_per_core")?,
+        cores: f_usize(o, "cores")?,
+        ipc: f_f64_arr(o, "ipc")?,
+        llc_hits: f_u64(o, "llc_hits")?,
+        llc_misses: f_u64(o, "llc_misses")?,
+        bw: dec_bw(field(o, "bw")?)?,
+        llc_stats,
+        llp_accuracy: f_opt_f64(o, "llp_accuracy")?,
+        meta_hit_rate: f_opt_f64(o, "meta_hit_rate")?,
+        prefetch_installed: f_u64(o, "prefetch_installed")?,
+        prefetch_used: f_u64(o, "prefetch_used")?,
+        row_hit_rate: f_f64(o, "row_hit_rate")?,
+        read_lat: dec_hist(field(o, "read_lat")?)?,
+        compression_enabled_frac: f_f64(o, "compression_enabled_frac")?,
+        dyn_costs: f_u64(o, "dyn_costs")?,
+        dyn_benefits: f_u64(o, "dyn_benefits")?,
+        dyn_counters,
+        tier,
+        tenants,
+        rel: dec_rel(field(o, "rel")?)?,
+        capacity,
+    })
+}
+
+fn dec_bw(o: &Json) -> Result<Bandwidth, String> {
+    Ok(Bandwidth {
+        demand_reads: f_u64(o, "demand_reads")?,
+        demand_writes: f_u64(o, "demand_writes")?,
+        clean_writes: f_u64(o, "clean_writes")?,
+        invalidates: f_u64(o, "invalidates")?,
+        second_reads: f_u64(o, "second_reads")?,
+        meta_reads: f_u64(o, "meta_reads")?,
+        meta_writes: f_u64(o, "meta_writes")?,
+        prefetch_reads: f_u64(o, "prefetch_reads")?,
+        migration: f_u64(o, "migration")?,
+    })
+}
+
+fn dec_hist(o: &Json) -> Result<LatencyHist, String> {
+    let buckets = f_u64_arr(o, "buckets")?;
+    LatencyHist::from_parts(&buckets, f_u64(o, "count")?, f_u64(o, "sum")?)
+        .ok_or_else(|| "histogram bucket layout mismatch".to_string())
+}
+
+fn dec_cache(o: &Json) -> Result<CacheStats, String> {
+    Ok(CacheStats {
+        samples: f_u64(o, "samples")?,
+        lines_sum: f_u64(o, "lines_sum")?,
+        bytes_sum: f_u64(o, "bytes_sum")?,
+        tag_evictions: f_u64(o, "tag_evictions")?,
+        data_evictions: f_u64(o, "data_evictions")?,
+        baseline_lines: f_u64(o, "baseline_lines")?,
+        tag_capacity: f_u64(o, "tag_capacity")?,
+    })
+}
+
+fn dec_tt(o: &Json) -> Result<TierTraffic, String> {
+    Ok(TierTraffic {
+        demand_reads: f_u64(o, "demand_reads")?,
+        demand_writes: f_u64(o, "demand_writes")?,
+        clean_writes: f_u64(o, "clean_writes")?,
+        invalidates: f_u64(o, "invalidates")?,
+        meta_accesses: f_u64(o, "meta_accesses")?,
+        prefetch_reads: f_u64(o, "prefetch_reads")?,
+        migr_accesses: f_u64(o, "migr_accesses")?,
+        second_reads: f_u64(o, "second_reads")?,
+    })
+}
+
+fn dec_link(o: &Json) -> Result<LinkStats, String> {
+    Ok(LinkStats {
+        tx_flits: f_u64(o, "tx_flits")?,
+        rx_flits: f_u64(o, "rx_flits")?,
+        tx_busy_cycles: f_u64(o, "tx_busy_cycles")?,
+        rx_busy_cycles: f_u64(o, "rx_busy_cycles")?,
+        tx_wait_cycles: f_u64(o, "tx_wait_cycles")?,
+        rx_wait_cycles: f_u64(o, "rx_wait_cycles")?,
+    })
+}
+
+fn dec_lt(o: &Json) -> Result<LinkTraffic, String> {
+    Ok(LinkTraffic {
+        demand_raw_bytes: f_u64(o, "demand_raw_bytes")?,
+        demand_wire_bytes: f_u64(o, "demand_wire_bytes")?,
+        meta_raw_bytes: f_u64(o, "meta_raw_bytes")?,
+        meta_wire_bytes: f_u64(o, "meta_wire_bytes")?,
+        writeback_raw_bytes: f_u64(o, "writeback_raw_bytes")?,
+        writeback_wire_bytes: f_u64(o, "writeback_wire_bytes")?,
+        prefetch_raw_bytes: f_u64(o, "prefetch_raw_bytes")?,
+        prefetch_wire_bytes: f_u64(o, "prefetch_wire_bytes")?,
+        migration_raw_bytes: f_u64(o, "migration_raw_bytes")?,
+        migration_wire_bytes: f_u64(o, "migration_wire_bytes")?,
+        flits_saved: f_u64(o, "flits_saved")?,
+        retried_flits: f_u64(o, "retried_flits")?,
+        retry_beats: f_u64(o, "retry_beats")?,
+    })
+}
+
+fn dec_tier(o: &Json) -> Result<TierStats, String> {
+    Ok(TierStats {
+        near: dec_tt(field(o, "near")?)?,
+        far: dec_tt(field(o, "far")?)?,
+        promotions: f_u64(o, "promotions")?,
+        demotions: f_u64(o, "demotions")?,
+        migrated_lines: f_u64(o, "migrated_lines")?,
+        link: dec_link(field(o, "link")?)?,
+        link_traffic: dec_lt(field(o, "link_traffic")?)?,
+        far_prefetch_installs: f_u64(o, "far_prefetch_installs")?,
+        far_groups_written: f_u64(o, "far_groups_written")?,
+        far_groups_packed: f_u64(o, "far_groups_packed")?,
+    })
+}
+
+fn dec_rel(o: &Json) -> Result<ReliabilityStats, String> {
+    Ok(ReliabilityStats {
+        flits_retried: f_u64(o, "flits_retried")?,
+        retry_beats: f_u64(o, "retry_beats")?,
+        media_errors: f_u64(o, "media_errors")?,
+        marker_errors: f_u64(o, "marker_errors")?,
+        marker_detected: f_u64(o, "marker_detected")?,
+        silent_misreads: f_u64(o, "silent_misreads")?,
+        rekeys: f_u64(o, "rekeys")?,
+        watchdog_degrades: f_u64(o, "watchdog_degrades")?,
+        watchdog_rearms: f_u64(o, "watchdog_rearms")?,
+        degraded_epochs: f_u64(o, "degraded_epochs")?,
+    })
+}
+
+fn dec_cap(o: &Json) -> Result<CapacityStats, String> {
+    Ok(CapacityStats {
+        pages: f_u64(o, "pages")?,
+        logical_lines: f_u64(o, "logical_lines")?,
+        physical_lines: f_u64(o, "physical_lines")?,
+        exception_lines: f_u64(o, "exception_lines")?,
+        recompactions: f_u64(o, "recompactions")?,
+    })
+}
+
+fn dec_tenant(o: &Json) -> Result<TenantStats, String> {
+    Ok(TenantStats {
+        name: f_str(o, "name")?,
+        first_core: f_usize(o, "first_core")?,
+        cores: f_usize(o, "cores")?,
+        ipc: f_f64_arr(o, "ipc")?,
+        bw: dec_bw(field(o, "bw")?)?,
+        read_lat: dec_hist(field(o, "read_lat")?)?,
+        slowdown: f_opt_f64(o, "slowdown")?,
+        interference_beats: f_f64(o, "interference_beats")?,
+        protected: f_bool(o, "protected")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{Placement, Policy};
+    use crate::sim::simulate_tenants;
+    use crate::workloads::parse_tenants;
+
+    fn probe_key(design: Design, llc: bool) -> RunKey {
+        RunKey {
+            workload: "t".to_string(),
+            design: design.name(),
+            channels: 2,
+            far_mill: 0,
+            llc_comp: llc,
+        }
+    }
+
+    /// Encode → decode → re-encode is a fixpoint: the second encoding
+    /// must be byte-identical, which proves every field round-trips
+    /// exactly (counters, histogram buckets, floats, options).
+    fn assert_fixpoint(key: &RunKey, r: &SimResult) {
+        let one = enc_entry(key, r);
+        let doc = format!(
+            "{{\"schema\":{SCHEMA},\"fingerprint\":\"f\",\"plan\":{{\"insts_per_core\":1,\
+             \"seed\":1}},\"results\":[{one}]}}"
+        );
+        let pairs = decode(&doc, "f").expect("decodes");
+        assert_eq!(pairs.len(), 1);
+        let (k2, r2) = &pairs[0];
+        assert_eq!(enc_entry(k2, r2), one, "codec fixpoint for {}", key.design);
+    }
+
+    #[test]
+    fn flat_tiered_llc_and_lcp_results_round_trip() {
+        let profile = by_name("cap_stream").unwrap();
+        for (design, llc) in [
+            (Design::Dynamic, false),
+            (Design::Dynamic, true),
+            (Design::tiered(true), false),
+            (Design::new(Policy::Lcp, Placement::Flat), false),
+        ] {
+            let mut b = SimConfig::builder()
+                .design(design)
+                .seed(9)
+                .insts(3_000)
+                .warmup(6_000);
+            if design.is_tiered() {
+                b = b.far_ratio(0.75);
+            }
+            if llc {
+                b = b.compressed_llc();
+            }
+            let r = simulate(&profile, &b.build());
+            // cover the Option branches we expect per design
+            assert_eq!(r.tier.is_some(), design.is_tiered());
+            assert_eq!(r.llc_stats.is_some(), llc);
+            assert_fixpoint(&probe_key(design, llc), &r);
+        }
+    }
+
+    #[test]
+    fn tenant_results_round_trip() {
+        let cfg = SimConfig::builder()
+            .design(Design::Dynamic)
+            .seed(5)
+            .insts(3_000)
+            .warmup(6_000)
+            .build();
+        let specs = parse_tenants("cap_stream:4,cap_ptr:4", cfg.cores).unwrap();
+        let r = simulate_tenants(&specs, &cfg);
+        assert!(!r.tenants.is_empty());
+        assert_fixpoint(&probe_key(Design::Dynamic, false), &r);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_plan_sensitive() {
+        let plan = RunPlan { insts_per_core: 10_000, seed: 7, threads: 4 };
+        let a = fingerprint(&plan);
+        assert_eq!(a, fingerprint(&plan), "deterministic within a build");
+        let other = RunPlan { seed: 8, ..plan.clone() };
+        assert_ne!(a, fingerprint(&other), "seed is part of the experiment");
+        // threads are excluded: a cache from a serial run serves any
+        // thread count (results are scheduling-independent)
+        let threads = RunPlan { threads: 1, ..plan };
+        assert_eq!(a, fingerprint(&threads));
+    }
+
+    #[test]
+    fn decode_rejects_mismatches_wholesale() {
+        let plan = RunPlan { insts_per_core: 1, seed: 1, threads: 1 };
+        let doc = encode("right", &plan, &[]);
+        assert!(decode(&doc, "right").unwrap().is_empty());
+        assert!(decode(&doc, "wrong").unwrap_err().contains("fingerprint"));
+        assert!(decode("not json", "right").is_err());
+        let stale = doc.replace(&format!("\"schema\":{SCHEMA}"), "\"schema\":99999");
+        assert!(decode(&stale, "right").unwrap_err().contains("schema"));
+    }
+}

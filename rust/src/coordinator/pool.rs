@@ -1,0 +1,153 @@
+//! Generic scoped-thread work pool for simulation batches.
+//!
+//! One drain loop replaces the three copies that used to live in
+//! `runner.rs` (`run_jobs`, `run_m1`, `run_r1`): jobs go into a shared
+//! FIFO, scoped worker threads pop until it runs dry, and every worker
+//! accumulates its `(submission index, result)` pairs in a **private
+//! buffer** that is handed over once at thread exit — so the hot loop
+//! never contends on a shared output sink.  The caller gets results in
+//! submission order regardless of scheduling.
+//!
+//! Scheduling is **cost-aware**: jobs are queued longest-estimated
+//! first (stable on ties, so equal-cost jobs keep submission order).
+//! With per-job costs spanning ~25× (the APKI-scaled instruction
+//! budgets of the figure matrices), FIFO order can park the most
+//! expensive job last and leave every other worker idle while one
+//! straggler finishes; longest-first bounds that makespan tail.
+//! Simulations are seed-deterministic and independent, so execution
+//! order never changes any result — only the wall clock.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Progress reporting for a drain: prints `  [done/total] {label}` to
+/// stderr every `every` completions (and always at the last one).
+pub struct Progress {
+    pub label: &'static str,
+    pub every: usize,
+}
+
+/// Drain `jobs` across `threads` scoped workers and return the results
+/// in **submission order**.
+///
+/// * `cost` estimates relative job duration (any unit); jobs run
+///   longest-estimated first.
+/// * `run` executes one job.  It must be deterministic per job for the
+///   output to be scheduling-independent — every caller in this crate
+///   passes seed-deterministic simulations.
+pub fn drain_jobs<J, R, C, F>(
+    jobs: Vec<J>,
+    threads: usize,
+    cost: C,
+    progress: Option<Progress>,
+    run: F,
+) -> Vec<R>
+where
+    J: Send,
+    R: Send,
+    C: Fn(&J) -> f64,
+    F: Fn(J) -> R + Sync,
+{
+    let total = jobs.len();
+    if total == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<(f64, usize, J)> = jobs
+        .into_iter()
+        .enumerate()
+        .map(|(idx, j)| (cost(&j), idx, j))
+        .collect();
+    // longest first; ties (incl. all-equal costs) stay in submission
+    // order, so uniform-cost batches drain exactly like the old FIFO
+    order.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+    });
+    let queue: Mutex<VecDeque<(usize, J)>> =
+        Mutex::new(order.into_iter().map(|(_, idx, j)| (idx, j)).collect());
+    let done = AtomicUsize::new(0);
+    // one entry per worker, pushed once at thread exit — not a per-job
+    // contention point like the old `Mutex<Vec>` sink
+    let collected: Mutex<Vec<Vec<(usize, R)>>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads.clamp(1, total) {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let job = { queue.lock().unwrap().pop_front() };
+                    let Some((idx, job)) = job else { break };
+                    local.push((idx, run(job)));
+                    let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                    if let Some(p) = &progress {
+                        if d % p.every == 0 || d == total {
+                            eprintln!("  [{d}/{total}] {}", p.label);
+                        }
+                    }
+                }
+                if !local.is_empty() {
+                    collected.lock().unwrap().push(local);
+                }
+            });
+        }
+    });
+
+    let mut out: Vec<(usize, R)> = collected
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .flatten()
+        .collect();
+    out.sort_by_key(|(idx, _)| *idx);
+    debug_assert_eq!(out.len(), total);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        for threads in [1, 4, 16] {
+            let jobs: Vec<usize> = (0..100).collect();
+            // adversarial cost: later submissions run first
+            let out = drain_jobs(jobs, threads, |&j| j as f64, None, |j| j * 10);
+            assert_eq!(out, (0..100).map(|j| j * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn single_thread_executes_longest_first() {
+        let exec: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        let jobs: Vec<usize> = (0..10).collect();
+        let out = drain_jobs(jobs, 1, |&j| j as f64, None, |j| {
+            exec.lock().unwrap().push(j);
+            j
+        });
+        // output is still submission order...
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+        // ...but execution ran in descending cost order
+        assert_eq!(exec.into_inner().unwrap(), (0..10).rev().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uniform_costs_preserve_fifo_execution() {
+        let exec: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        let jobs: Vec<usize> = (0..10).collect();
+        drain_jobs(jobs, 1, |_| 1.0, None, |j| {
+            exec.lock().unwrap().push(j);
+        });
+        assert_eq!(exec.into_inner().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_batch_and_more_threads_than_jobs() {
+        let none: Vec<u32> = Vec::new();
+        assert!(drain_jobs(none, 8, |_| 0.0, None, |j| j).is_empty());
+        let out = drain_jobs(vec![7u32, 8], 64, |_| 0.0, None, |j| j + 1);
+        assert_eq!(out, vec![8, 9]);
+    }
+}

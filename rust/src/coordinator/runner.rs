@@ -1,9 +1,21 @@
-//! Parallel simulation runner + results cache.
+//! Parallel simulation runner + striped results cache.
+//!
+//! The experiment engine behind every exhibit: batches of seed-
+//! deterministic simulation jobs drain through the shared work pool
+//! ([`crate::coordinator::pool`]), land in a **lock-striped**
+//! [`ResultsDb`] (results sharded by [`RunKey`] hash, merged
+//! shard-parallel at batch end), and optionally persist to a versioned
+//! on-disk cache ([`crate::coordinator::persist`]) so re-rendering a
+//! figure or resuming an interrupted `repro sweep` reuses completed
+//! runs across invocations.  DESIGN.md §Experiment engine documents the
+//! contracts.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::Mutex;
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
 
 use crate::controller::{Design, LinkCodec, Placement, Policy};
+use crate::coordinator::persist;
+use crate::coordinator::pool::{self, Progress};
 use crate::dram::SchedConfig;
 use crate::sim::{simulate, simulate_tenants, FaultConfig, SimConfig};
 use crate::stats::SimResult;
@@ -13,8 +25,10 @@ use crate::workloads::profiles::{
 use crate::workloads::tenant::m1_mixes;
 use crate::workloads::parse_tenants;
 
-/// Key identifying one simulation run.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+/// Key identifying one simulation run.  The `Ord` derive gives the
+/// persistent cache its canonical on-disk entry order (and the
+/// determinism tests their canonical serialization).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct RunKey {
     pub workload: String,
     pub design: &'static str,
@@ -85,6 +99,65 @@ impl Job {
             far_mill: far_mill_of(self.far_ratio),
             llc_comp: self.llc_comp,
         }
+    }
+
+    /// Equalize LLC-access counts across workloads: scale the
+    /// instruction budget so every run issues a similar number of
+    /// accesses (anchored at apki=30) — low-APKI workloads need
+    /// proportionally more instructions to traverse their arrays the
+    /// same number of times.  Each workload's speedup compares runs of
+    /// equal length, so this only equalizes simulation cost.
+    fn scaled_insts(&self, plan: &RunPlan) -> u64 {
+        let apki = if self.profile.apki > 0.0 {
+            self.profile.apki
+        } else {
+            // MIX: scale by the mean APKI of the components
+            let comps: Vec<f64> = self
+                .profile
+                .mix_of
+                .iter()
+                .filter_map(|n| crate::workloads::profiles::by_name(n))
+                .map(|p| p.apki)
+                .collect();
+            comps.iter().sum::<f64>() / comps.len().max(1) as f64
+        };
+        ((plan.insts_per_core as f64 * 30.0 / apki) as u64)
+            .clamp(plan.insts_per_core / 4, plan.insts_per_core * 6)
+    }
+
+    /// Relative duration estimate for the pool's longest-first
+    /// scheduling: the scaled instruction budget, marked up for the
+    /// paths that cost more per instruction (link serialization on the
+    /// tiered executor, superblock bookkeeping in the compressed LLC).
+    fn cost(&self, plan: &RunPlan) -> f64 {
+        let mut c = self.scaled_insts(plan) as f64;
+        if self.design.is_tiered() {
+            c *= 1.5;
+        }
+        if self.llc_comp {
+            c *= 1.2;
+        }
+        c
+    }
+
+    /// Execute the job.  2x warmup: the LLC, memory layout AND the
+    /// Dynamic gate must all reach steady state before measurement (the
+    /// paper's 1B-inst slices warm up for free).
+    fn run(&self, plan: &RunPlan) -> SimResult {
+        let insts = self.scaled_insts(plan);
+        let mut b = SimConfig::builder()
+            .design(self.design)
+            .seed(plan.seed)
+            .insts(insts)
+            .warmup(insts * 2)
+            .channels(self.channels);
+        if let Some(r) = self.far_ratio {
+            b = b.far_ratio(r);
+        }
+        if self.llc_comp {
+            b = b.compressed_llc();
+        }
+        simulate(&self.profile, &b.build())
     }
 }
 
@@ -227,47 +300,36 @@ pub fn run_m1(plan: &RunPlan, progress: bool) -> (Vec<M1Run>, Option<M1Qos>) {
     }
 
     let descs = jobs.clone();
-    let total = jobs.len();
-    let queue = Mutex::new(jobs.into_iter().enumerate().collect::<VecDeque<_>>());
-    let out: Mutex<Vec<(usize, SimResult)>> = Mutex::new(Vec::with_capacity(total));
-    let done = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..plan.threads.min(total) {
-            scope.spawn(|| loop {
-                let job = { queue.lock().unwrap().pop_front() };
-                let Some((idx, job)) = job else { break };
-                let mut b = SimConfig::builder()
-                    .design(job.design)
-                    .seed(plan.seed)
-                    .insts(plan.insts_per_core)
-                    .warmup(plan.insts_per_core * 2);
-                if job.design.is_tiered() {
-                    b = b.far_ratio(T1_FAR_RATIO);
-                }
-                if job.reserved > 0 {
-                    b = b.sched(SchedConfig {
-                        reserved_slots: job.reserved,
-                        ..Default::default()
-                    });
-                }
-                let cfg = b.build();
-                let specs = parse_tenants(job.spec, cfg.cores).expect("m1 mixes parse");
-                let r = simulate_tenants(&specs, &cfg);
-                out.lock().unwrap().push((idx, r));
-                let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
-                if progress {
-                    eprintln!("  [{d}/{total}] tenant mixes done");
-                }
-            });
-        }
-    });
+    let results = pool::drain_jobs(
+        jobs,
+        plan.threads,
+        // shared run + one solo rerun per tenant → cost ∝ tenant count
+        |j| 1.0 + j.spec.split(',').count() as f64,
+        progress.then_some(Progress { label: "tenant mixes done", every: 1 }),
+        |job| {
+            let mut b = SimConfig::builder()
+                .design(job.design)
+                .seed(plan.seed)
+                .insts(plan.insts_per_core)
+                .warmup(plan.insts_per_core * 2);
+            if job.design.is_tiered() {
+                b = b.far_ratio(T1_FAR_RATIO);
+            }
+            if job.reserved > 0 {
+                b = b.sched(SchedConfig {
+                    reserved_slots: job.reserved,
+                    ..Default::default()
+                });
+            }
+            let cfg = b.build();
+            let specs = parse_tenants(job.spec, cfg.cores).expect("m1 mixes parse");
+            simulate_tenants(&specs, &cfg)
+        },
+    );
 
-    let mut results = out.into_inner().unwrap();
-    results.sort_by_key(|(idx, _)| *idx);
     let mut runs = Vec::new();
     let mut qos_run: Option<SimResult> = None;
-    for (idx, r) in results {
-        let j = descs[idx];
+    for (j, r) in descs.iter().zip(results) {
         if j.reserved > 0 {
             qos_run = Some(r);
         } else {
@@ -331,62 +393,237 @@ pub fn run_r1(plan: &RunPlan, progress: bool) -> Vec<R1Run> {
         crate::workloads::profiles::by_name(R1_WORKLOAD).expect("r1 workload exists");
 
     let descs = jobs.clone();
-    let total = jobs.len();
-    let queue = Mutex::new(jobs.into_iter().enumerate().collect::<VecDeque<_>>());
-    let out: Mutex<Vec<(usize, SimResult)>> = Mutex::new(Vec::with_capacity(total));
-    let done = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..plan.threads.min(total) {
-            scope.spawn(|| loop {
-                let job = { queue.lock().unwrap().pop_front() };
-                let Some((idx, job)) = job else { break };
-                let mut fault = FaultConfig::uniform(job.ber);
-                fault.watchdog = job.watchdog;
-                let cfg = SimConfig::builder()
-                    .design(R1_DESIGN)
-                    .far_ratio(T1_FAR_RATIO)
-                    .seed(plan.seed)
-                    .insts(plan.insts_per_core)
-                    .warmup(plan.insts_per_core * 2)
-                    .fault(fault)
-                    .build();
-                let r = simulate(&profile, &cfg);
-                out.lock().unwrap().push((idx, r));
-                let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
-                if progress {
-                    eprintln!("  [{d}/{total}] BER points done");
-                }
-            });
-        }
-    });
+    let results = pool::drain_jobs(
+        jobs,
+        plan.threads,
+        // every point runs the same workload/design/budget — uniform
+        // cost keeps the drain order FIFO
+        |_| 1.0,
+        progress.then_some(Progress { label: "BER points done", every: 1 }),
+        |job| {
+            let mut fault = FaultConfig::uniform(job.ber);
+            fault.watchdog = job.watchdog;
+            let cfg = SimConfig::builder()
+                .design(R1_DESIGN)
+                .far_ratio(T1_FAR_RATIO)
+                .seed(plan.seed)
+                .insts(plan.insts_per_core)
+                .warmup(plan.insts_per_core * 2)
+                .fault(fault)
+                .build();
+            simulate(&profile, &cfg)
+        },
+    );
 
-    let mut results = out.into_inner().unwrap();
-    results.sort_by_key(|(idx, _)| *idx);
-    results
-        .into_iter()
-        .map(|(idx, r)| {
-            let j = descs[idx];
-            R1Run { ber: j.ber, watchdog: j.watchdog, result: r }
-        })
+    descs
+        .iter()
+        .zip(results)
+        .map(|(j, r)| R1Run { ber: j.ber, watchdog: j.watchdog, result: r })
         .collect()
 }
 
-/// Results cache for the full evaluation.
+/// Number of result stripes (power of two, see [`ResultsDb::stripe`]).
+/// Sized for the thread counts the pool actually runs (≤ a few dozen):
+/// with FNV-mixed keys, 16 stripes keep merge collisions rare without
+/// fragmenting lookups.
+const RESULT_SHARDS: usize = 16;
+
+/// What one [`ResultsDb`] batch did — the figure callers can ignore it;
+/// `repro sweep` aggregates these into its telemetry, the campaign
+/// bench turns `executed / wall` into jobs/s, and the cache tests pin
+/// `from_cache` / `duplicates` accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Jobs submitted to the batch before any filtering.
+    pub requested: usize,
+    /// In-batch duplicate keys dropped (overlapping sub-matrices).
+    pub duplicates: usize,
+    /// Jobs satisfied by an already-present result (in-memory or loaded
+    /// from the persistent cache).
+    pub from_cache: usize,
+    /// Simulations actually executed.
+    pub executed: usize,
+    pub wall: Duration,
+}
+
+impl BatchStats {
+    /// Executed-simulation throughput over the batch wall time.
+    pub fn jobs_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.executed as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of submitted jobs served without simulating.
+    pub fn cached_frac(&self) -> f64 {
+        self.from_cache as f64 / self.requested.max(1) as f64
+    }
+
+    /// Fold another batch into this aggregate.
+    pub fn absorb(&mut self, o: &BatchStats) {
+        self.requested += o.requested;
+        self.duplicates += o.duplicates;
+        self.from_cache += o.from_cache;
+        self.executed += o.executed;
+        self.wall += o.wall;
+    }
+}
+
+/// What [`ResultsDb::attach_cache`] found on disk.
+pub struct CacheLoad {
+    /// Runs loaded into the stripes.
+    pub loaded: usize,
+    /// Why a present cache file was ignored (stale fingerprint, parse
+    /// error) — `None` on a clean load or a cold start.
+    pub note: Option<String>,
+}
+
+struct PersistTarget {
+    path: std::path::PathBuf,
+    fingerprint: String,
+}
+
+/// Results cache for the full evaluation, lock-striped by [`RunKey`]
+/// hash.  Workers never touch the stripes: the pool hands each batch
+/// back as per-thread buffers, and [`ResultsDb::merge`] distributes
+/// them shard-parallel under `&mut self` — disjoint `&mut` per stripe,
+/// no locks anywhere on the result path, and the borrow-returning
+/// getters (`get*` → `Option<&SimResult>`) stay exactly as cheap as a
+/// plain `HashMap`.
 pub struct ResultsDb {
     pub plan: RunPlan,
-    results: HashMap<RunKey, SimResult>,
+    shards: Vec<HashMap<RunKey, SimResult>>,
+    persist_to: Option<PersistTarget>,
 }
 
 impl ResultsDb {
     pub fn new(plan: RunPlan) -> Self {
-        Self { plan, results: HashMap::new() }
+        Self {
+            plan,
+            shards: (0..RESULT_SHARDS).map(|_| HashMap::new()).collect(),
+            persist_to: None,
+        }
+    }
+
+    /// Stripe index for a key — FNV-1a over the canonical key bytes, so
+    /// the layout is deterministic across runs and Rust versions
+    /// (`DefaultHasher` promises neither).
+    fn stripe(key: &RunKey) -> usize {
+        let mut bytes = Vec::with_capacity(key.workload.len() + key.design.len() + 13);
+        bytes.extend_from_slice(key.workload.as_bytes());
+        bytes.push(0); // field separator: names never contain NUL
+        bytes.extend_from_slice(key.design.as_bytes());
+        bytes.push(0);
+        bytes.extend_from_slice(&(key.channels as u64).to_le_bytes());
+        bytes.extend_from_slice(&key.far_mill.to_le_bytes());
+        bytes.push(key.llc_comp as u8);
+        (crate::util::fnv1a64(&bytes) as usize) & (RESULT_SHARDS - 1)
+    }
+
+    fn lookup(&self, key: &RunKey) -> Option<&SimResult> {
+        self.shards[Self::stripe(key)].get(key)
+    }
+
+    fn insert(&mut self, key: RunKey, r: SimResult) {
+        let s = Self::stripe(&key);
+        self.shards[s].insert(key, r);
+    }
+
+    /// Merge a finished batch into the stripes.  Large batches
+    /// partition by stripe and insert shard-parallel (disjoint `&mut`
+    /// per stripe via scoped threads); small batches are not worth the
+    /// thread spawns.
+    fn merge(&mut self, pairs: Vec<(RunKey, SimResult)>) {
+        const PARALLEL_MERGE_MIN: usize = 64;
+        if pairs.len() < PARALLEL_MERGE_MIN {
+            for (k, v) in pairs {
+                self.insert(k, v);
+            }
+            return;
+        }
+        let mut striped: Vec<Vec<(RunKey, SimResult)>> =
+            (0..RESULT_SHARDS).map(|_| Vec::new()).collect();
+        for (k, v) in pairs {
+            striped[Self::stripe(&k)].push((k, v));
+        }
+        std::thread::scope(|scope| {
+            for (shard, batch) in self.shards.iter_mut().zip(striped) {
+                if batch.is_empty() {
+                    continue;
+                }
+                scope.spawn(move || {
+                    for (k, v) in batch {
+                        shard.insert(k, v);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Every cached run, sorted by the canonical [`RunKey`] order.
+    fn sorted_pairs(&self) -> Vec<(&RunKey, &SimResult)> {
+        let mut pairs: Vec<(&RunKey, &SimResult)> =
+            self.shards.iter().flat_map(|s| s.iter()).collect();
+        pairs.sort_by_key(|(k, _)| *k);
+        pairs
+    }
+
+    /// Canonical serialization of the whole db — the persistent-cache
+    /// file format, and the byte string the sharding determinism tests
+    /// compare (`threads=1` vs `threads=N` must be identical).
+    pub fn serialize(&self) -> String {
+        persist::encode(&persist::fingerprint(&self.plan), &self.plan, &self.sorted_pairs())
+    }
+
+    /// Attach a persistent cache file: load compatible results from
+    /// `path` (unless `refresh`), then arm write-back so every executed
+    /// batch re-saves the db.  A cache written under a different
+    /// fingerprint — other schema, crate version, probe semantics, or
+    /// plan — is ignored wholesale, never partially trusted.
+    pub fn attach_cache(&mut self, path: &str, refresh: bool) -> CacheLoad {
+        let fingerprint = persist::fingerprint(&self.plan);
+        let mut load = CacheLoad { loaded: 0, note: None };
+        if !refresh {
+            // a missing file is the normal cold start, not an error
+            if let Ok(text) = std::fs::read_to_string(path) {
+                match persist::decode(&text, &fingerprint) {
+                    Ok(pairs) => {
+                        load.loaded = pairs.len();
+                        for (k, v) in pairs {
+                            self.insert(k, v);
+                        }
+                    }
+                    Err(e) => load.note = Some(e),
+                }
+            }
+        }
+        self.persist_to = Some(PersistTarget { path: path.into(), fingerprint });
+        load
+    }
+
+    /// Write every cached run to the attached cache file (no-op when
+    /// none is attached).  Runs at the end of each executed batch, so
+    /// an interrupted campaign resumes from its last completed batch;
+    /// write-then-rename keeps a torn write from clobbering the
+    /// previous cache.
+    fn save_cache(&self) {
+        let Some(p) = &self.persist_to else { return };
+        let text = persist::encode(&p.fingerprint, &self.plan, &self.sorted_pairs());
+        let tmp = p.path.with_extension("tmp");
+        let wrote = std::fs::write(&tmp, text).and_then(|()| std::fs::rename(&tmp, &p.path));
+        if let Err(e) = wrote {
+            eprintln!("warning: could not persist results cache to {}: {e}", p.path.display());
+        }
     }
 
     /// Run the complete matrix needed by every figure and table:
     /// * all 27 memory-intensive workloads × 7 designs @ 2 channels,
     /// * the 37 extra low-MPKI workloads × {baseline, dynamic} (Fig. 18),
     /// * all 27 × {baseline, dynamic} @ 1 and 4 channels (Table IV).
-    pub fn run_full_matrix(&mut self, progress: bool) {
+    pub fn run_full_matrix(&mut self, progress: bool) -> BatchStats {
         let mut jobs: Vec<Job> = Vec::new();
         for w in all27() {
             for d in CORE_DESIGNS {
@@ -415,7 +652,7 @@ impl ResultsDb {
         jobs.extend(Self::x1_jobs());
         jobs.extend(Self::l1_jobs());
         jobs.extend(Self::p1_jobs());
-        self.run_jobs(jobs, progress);
+        self.run_jobs(jobs, progress)
     }
 
     /// The Figure P1 matrix: the 27-workload suite plus the far-pressure
@@ -432,8 +669,8 @@ impl ResultsDb {
     }
 
     /// Run the Figure P1 matrix only.
-    pub fn run_p1(&mut self, progress: bool) {
-        self.run_jobs(Self::p1_jobs(), progress);
+    pub fn run_p1(&mut self, progress: bool) -> BatchStats {
+        self.run_jobs(Self::p1_jobs(), progress)
     }
 
     /// The Figure L1 matrix: far-memory-pressure workloads × the
@@ -451,8 +688,8 @@ impl ResultsDb {
     }
 
     /// Run the Figure L1 matrix only.
-    pub fn run_l1(&mut self, progress: bool) {
-        self.run_jobs(Self::l1_jobs(), progress);
+    pub fn run_l1(&mut self, progress: bool) -> BatchStats {
+        self.run_jobs(Self::l1_jobs(), progress)
     }
 
     /// The Figure C1 matrix: the 27 suite plus the cache-pressure set,
@@ -471,8 +708,8 @@ impl ResultsDb {
     }
 
     /// Run the Figure C1 matrix only.
-    pub fn run_c1(&mut self, progress: bool) {
-        self.run_jobs(Self::c1_jobs(), progress);
+    pub fn run_c1(&mut self, progress: bool) -> BatchStats {
+        self.run_jobs(Self::c1_jobs(), progress)
     }
 
     /// The Figure Q1 jobs not already covered by the core matrix: the
@@ -490,7 +727,7 @@ impl ResultsDb {
 
     /// Run the Figure Q1 matrix: the 27-workload suite plus the
     /// latency-sensitive set, each under the Q1 design triple.
-    pub fn run_q1(&mut self, progress: bool) {
+    pub fn run_q1(&mut self, progress: bool) -> BatchStats {
         let mut jobs = Vec::new();
         for w in all27() {
             for d in Q1_DESIGNS {
@@ -498,7 +735,7 @@ impl ResultsDb {
             }
         }
         jobs.extend(Self::q1_extra_jobs());
-        self.run_jobs(jobs, progress);
+        self.run_jobs(jobs, progress)
     }
 
     /// The Figure T1 matrix: far-memory-pressure workloads × {flat DDR,
@@ -515,8 +752,8 @@ impl ResultsDb {
     }
 
     /// Run the Figure T1 matrix only.
-    pub fn run_tiered_t1(&mut self, progress: bool) {
-        self.run_jobs(Self::t1_jobs(), progress);
+    pub fn run_tiered_t1(&mut self, progress: bool) -> BatchStats {
+        self.run_jobs(Self::t1_jobs(), progress)
     }
 
     /// The Figure X1 matrix: far-memory-pressure workloads × the
@@ -534,8 +771,8 @@ impl ResultsDb {
     }
 
     /// Run the Figure X1 matrix only.
-    pub fn run_x1(&mut self, progress: bool) {
-        self.run_jobs(Self::x1_jobs(), progress);
+    pub fn run_x1(&mut self, progress: bool) -> BatchStats {
+        self.run_jobs(Self::x1_jobs(), progress)
     }
 
     /// The Figure X1 far-ratio sweep: every tiered composition from the
@@ -543,7 +780,7 @@ impl ResultsDb {
     /// the flat uncompressed baseline the speedups divide by (which does
     /// not depend on the split).  Results land in the cache keyed by
     /// `far_mill`, so sweep ratios never collide with the T1-split runs.
-    pub fn run_x1_sweep(&mut self, ratios: &[f64], progress: bool) {
+    pub fn run_x1_sweep(&mut self, ratios: &[f64], progress: bool) -> BatchStats {
         let mut jobs = Vec::new();
         for w in far_pressure() {
             jobs.push(Job::new(w.clone(), Design::Uncompressed, 2));
@@ -559,13 +796,13 @@ impl ResultsDb {
                 }
             }
         }
-        self.run_jobs(jobs, progress);
+        self.run_jobs(jobs, progress)
     }
 
     /// Fetch a tiered run simulated at an explicit far-capacity split
     /// (2 channels, plain LLC) — the sweep counterpart of [`Self::get`].
     pub fn get_far(&self, workload: &str, design: Design, far_ratio: f64) -> Option<&SimResult> {
-        self.results.get(&RunKey {
+        self.lookup(&RunKey {
             workload: workload.to_string(),
             design: design.name(),
             channels: 2,
@@ -583,18 +820,65 @@ impl ResultsDb {
 
     /// Smaller matrix: the 27 workloads × the designs needed by a single
     /// figure (used by per-figure CLI invocations).
-    pub fn run_designs(&mut self, designs: &[Design], extended: bool, progress: bool) {
+    pub fn run_designs(&mut self, designs: &[Design], extended: bool, progress: bool) -> BatchStats {
         let set = if extended { all64() } else { all27() };
+        self.run_matrix(&set, designs, progress)
+    }
+
+    /// Arbitrary small matrix: `workloads` × `designs` at 2 channels
+    /// (the campaign bench and the engine tests drive this directly).
+    pub fn run_matrix(
+        &mut self,
+        workloads: &[WorkloadProfile],
+        designs: &[Design],
+        progress: bool,
+    ) -> BatchStats {
         let mut jobs = Vec::new();
-        for w in set {
+        for w in workloads {
             for &d in designs {
                 jobs.push(Job::new(w.clone(), d, 2));
             }
         }
-        self.run_jobs(jobs, progress);
+        self.run_jobs(jobs, progress)
     }
 
-    pub fn run_channel_sweep(&mut self, progress: bool) {
+    /// One `repro sweep` phase: every one of the 32 design compositions
+    /// over `profiles`, plus the optional grid axes — the compressed-LLC
+    /// twin of every composition (`llc_grid`), and every tiered
+    /// composition re-run at each extra far-capacity split in
+    /// `far_ratios` (the T1 split always runs; a ratio equal to it
+    /// dedups against the base job inside the batch).
+    pub fn run_sweep_matrix(
+        &mut self,
+        profiles: &[WorkloadProfile],
+        far_ratios: &[f64],
+        llc_grid: bool,
+        progress: bool,
+    ) -> BatchStats {
+        let mut jobs = Vec::new();
+        for w in profiles {
+            for d in Design::all() {
+                jobs.push(Job::new(w.clone(), d, 2));
+                if llc_grid {
+                    jobs.push(Job::new_comp(w.clone(), d, 2));
+                }
+                if d.is_tiered() {
+                    for &r in far_ratios {
+                        jobs.push(Job {
+                            profile: w.clone(),
+                            design: d,
+                            channels: 2,
+                            far_ratio: Some(r),
+                            llc_comp: false,
+                        });
+                    }
+                }
+            }
+        }
+        self.run_jobs(jobs, progress)
+    }
+
+    pub fn run_channel_sweep(&mut self, progress: bool) -> BatchStats {
         let mut jobs = Vec::new();
         for w in all27() {
             for ch in [1usize, 2, 4] {
@@ -603,87 +887,46 @@ impl ResultsDb {
                 }
             }
         }
-        self.run_jobs(jobs, progress);
+        self.run_jobs(jobs, progress)
     }
 
-    fn run_jobs(&mut self, jobs: Vec<Job>, progress: bool) {
+    fn run_jobs(&mut self, jobs: Vec<Job>, progress: bool) -> BatchStats {
+        let t0 = Instant::now();
+        let requested = jobs.len();
+        let mut duplicates = 0usize;
+        let mut from_cache = 0usize;
         // skip already-cached runs and in-batch duplicates (sub-matrices
         // like C1 overlap the core matrix on their plain-LLC runs)
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = HashSet::new();
         let jobs: Vec<Job> = jobs
             .into_iter()
             .filter(|j| {
                 let key = j.key();
-                !self.results.contains_key(&key) && seen.insert(key)
+                if self.lookup(&key).is_some() {
+                    from_cache += 1;
+                    return false;
+                }
+                if !seen.insert(key) {
+                    duplicates += 1;
+                    return false;
+                }
+                true
             })
             .collect();
-        if jobs.is_empty() {
-            return;
+        let executed = jobs.len();
+        if executed > 0 {
+            let plan = self.plan.clone();
+            let pairs = pool::drain_jobs(
+                jobs,
+                plan.threads,
+                |j| j.cost(&plan),
+                progress.then_some(Progress { label: "simulations done", every: 10 }),
+                |j| (j.key(), j.run(&plan)),
+            );
+            self.merge(pairs);
+            self.save_cache();
         }
-        let total = jobs.len();
-        let plan = self.plan.clone();
-        // FIFO drain: workers take jobs in submission order, so figure
-        // sub-matrices start producing their own results first and the
-        // progress counter tracks the order jobs were enqueued in.
-        let queue = Mutex::new(jobs.into_iter().collect::<VecDeque<_>>());
-        let out: Mutex<Vec<(RunKey, SimResult)>> = Mutex::new(Vec::with_capacity(total));
-        let done = std::sync::atomic::AtomicUsize::new(0);
-
-        std::thread::scope(|scope| {
-            for _ in 0..plan.threads.min(total) {
-                scope.spawn(|| loop {
-                    let job = { queue.lock().unwrap().pop_front() };
-                    let Some(job) = job else { break };
-                    // Equalize LLC-access counts across workloads: scale
-                    // the instruction budget so every run issues a similar
-                    // number of accesses (anchored at apki=30) — low-APKI
-                    // workloads need proportionally more instructions to
-                    // traverse their arrays the same number of times.
-                    // Each workload's speedup compares runs of equal
-                    // length, so this only equalizes simulation cost.
-                    let apki = if job.profile.apki > 0.0 {
-                        job.profile.apki
-                    } else {
-                        // MIX: scale by the mean APKI of the components
-                        let comps: Vec<f64> = job
-                            .profile
-                            .mix_of
-                            .iter()
-                            .filter_map(|n| crate::workloads::profiles::by_name(n))
-                            .map(|p| p.apki)
-                            .collect();
-                        comps.iter().sum::<f64>() / comps.len().max(1) as f64
-                    };
-                    let insts = ((plan.insts_per_core as f64 * 30.0 / apki) as u64)
-                        .clamp(plan.insts_per_core / 4, plan.insts_per_core * 6);
-                    // 2x warmup: the LLC, memory layout AND the Dynamic
-                    // gate must all reach steady state before measurement
-                    // (the paper's 1B-inst slices warm up for free).
-                    let mut b = SimConfig::builder()
-                        .design(job.design)
-                        .seed(plan.seed)
-                        .insts(insts)
-                        .warmup(insts * 2)
-                        .channels(job.channels);
-                    if let Some(r) = job.far_ratio {
-                        b = b.far_ratio(r);
-                    }
-                    if job.llc_comp {
-                        b = b.compressed_llc();
-                    }
-                    let cfg = b.build();
-                    let r = simulate(&job.profile, &cfg);
-                    out.lock().unwrap().push((job.key(), r));
-                    let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
-                    if progress && (d % 10 == 0 || d == total) {
-                        eprintln!("  [{d}/{total}] simulations done");
-                    }
-                });
-            }
-        });
-        for (k, v) in out.into_inner().unwrap() {
-            self.results.insert(k, v);
-        }
+        BatchStats { requested, duplicates, from_cache, executed, wall: t0.elapsed() }
     }
 
     /// Fetch a cached result (2 channels unless stated).
@@ -694,7 +937,7 @@ impl ResultsDb {
     pub fn get_ch(&self, workload: &str, design: Design, channels: usize) -> Option<&SimResult> {
         // tiered runs are produced at the Figure T1 split; flat runs at 0
         let far_mill = far_mill_of(design.is_tiered().then_some(T1_FAR_RATIO));
-        self.results.get(&RunKey {
+        self.lookup(&RunKey {
             workload: workload.to_string(),
             design: design.name(),
             channels,
@@ -706,7 +949,7 @@ impl ResultsDb {
     /// Fetch a cached result by LLC organization (2 channels; Figure C1).
     pub fn get_llc(&self, workload: &str, design: Design, llc_comp: bool) -> Option<&SimResult> {
         let far_mill = far_mill_of(design.is_tiered().then_some(T1_FAR_RATIO));
-        self.results.get(&RunKey {
+        self.lookup(&RunKey {
             workload: workload.to_string(),
             design: design.name(),
             channels: 2,
@@ -729,11 +972,11 @@ impl ResultsDb {
     }
 
     pub fn len(&self) -> usize {
-        self.results.len()
+        self.shards.iter().map(HashMap::len).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.results.is_empty()
+        self.shards.iter().all(HashMap::is_empty)
     }
 }
 
@@ -756,6 +999,51 @@ mod tests {
         let before = db.len();
         db.run_designs(&[Design::Uncompressed], false, false);
         assert_eq!(db.len(), before);
+    }
+
+    #[test]
+    fn overlapping_batches_dedup_and_count_cache_hits() {
+        let mut db = ResultsDb::new(RunPlan {
+            insts_per_core: 8_000,
+            seed: 11,
+            threads: 4,
+        });
+        let libq = crate::workloads::profiles::by_name("libq").unwrap();
+        // the same workload submitted twice in one batch: in-batch dedup
+        let s1 = db.run_matrix(
+            &[libq.clone(), libq.clone()],
+            &[Design::Uncompressed, Design::Dynamic],
+            false,
+        );
+        assert_eq!(s1.requested, 4);
+        assert_eq!(s1.duplicates, 2);
+        assert_eq!(s1.executed, 2);
+        assert_eq!(s1.from_cache, 0);
+        assert_eq!(db.len(), 2);
+        // an overlapping re-submission is served entirely from the stripes
+        let s2 = db.run_matrix(&[libq], &[Design::Uncompressed, Design::Dynamic], false);
+        assert_eq!(s2.requested, 2);
+        assert_eq!(s2.from_cache, 2);
+        assert_eq!(s2.executed, 0);
+        assert_eq!(s2.cached_frac(), 1.0);
+        assert_eq!(db.len(), 2);
+    }
+
+    #[test]
+    fn sharded_db_matches_single_thread_bit_for_bit() {
+        // 90 jobs → exercises the parallel stripe merge path (≥ 64) on
+        // both sides; the canonical serialization compares every
+        // counter, histogram bucket and float of every run
+        let mk = |threads| {
+            let mut db = ResultsDb::new(RunPlan {
+                insts_per_core: 8_000,
+                seed: 42,
+                threads,
+            });
+            db.run_q1(false);
+            db
+        };
+        assert_eq!(mk(1).serialize(), mk(8).serialize());
     }
 
     #[test]

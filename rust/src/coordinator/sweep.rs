@@ -1,0 +1,297 @@
+//! `repro sweep` — the full design-space campaign in one command.
+//!
+//! Drives every one of the 32 design compositions ([`Design::all`])
+//! across every workload profile set (the core 27-workload suite plus
+//! the far-pressure, latency-sensitive and cache-pressure sets — 38
+//! profiles, 1216 runs), with optional grid axes: extra far-capacity
+//! splits for the tiered compositions (`--far-ratio`) and the
+//! compressed-LLC twin of every composition (`--llc-compressed`).
+//!
+//! The campaign leans on the whole experiment engine: batches drain
+//! through the cost-aware pool, land in the striped [`ResultsDb`], and
+//! — when a cache is attached — persist so an interrupted or repeated
+//! sweep only simulates what is missing.  Per-phase wall time and
+//! throughput land on stderr via [`print_telemetry`]; the CI smoke run
+//! greps the `cache-hit-rate` line to pin cache reuse ≥ 90%.
+
+use crate::controller::Design;
+use crate::coordinator::figures::{Cell, Report, Sink};
+use crate::coordinator::runner::{BatchStats, ResultsDb};
+use crate::coordinator::OutputFormat;
+use crate::util::geomean;
+use crate::workloads::profiles::{
+    all27, cache_pressure, far_pressure, latency_sensitive, low_mpki, WorkloadProfile,
+};
+
+/// What to sweep beyond the core 38-profile × 32-composition matrix.
+pub struct SweepConfig {
+    /// Extra far-capacity splits for every tiered composition (the
+    /// Figure T1 split always runs).
+    pub far_ratios: Vec<f64>,
+    /// Also run the compressed-LLC twin of every composition.
+    pub llc_grid: bool,
+    /// Add the low-MPKI extension set (the Fig. 18 long tail).
+    pub extended: bool,
+    pub format: OutputFormat,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            far_ratios: Vec::new(),
+            llc_grid: false,
+            extended: false,
+            format: OutputFormat::Table,
+        }
+    }
+}
+
+/// One profile set's worth of campaign work.
+pub struct SweepPhase {
+    pub name: &'static str,
+    pub workloads: usize,
+    pub stats: BatchStats,
+}
+
+/// What [`run_sweep`] produced: the formatted report plus per-phase and
+/// aggregate batch telemetry.
+pub struct SweepOutcome {
+    pub report: Report,
+    pub phases: Vec<SweepPhase>,
+    pub total: BatchStats,
+}
+
+/// The campaign's profile sets, in paper order.  Each becomes one
+/// telemetry phase so a long sweep shows forward progress and the
+/// per-set cost is visible.
+fn phase_sets(extended: bool) -> Vec<(&'static str, Vec<WorkloadProfile>)> {
+    let mut sets = vec![
+        ("suite27", all27()),
+        ("far-pressure", far_pressure()),
+        ("latency", latency_sensitive()),
+        ("cache-pressure", cache_pressure()),
+    ];
+    if extended {
+        sets.push(("low-mpki", low_mpki()));
+    }
+    sets
+}
+
+/// Run the full campaign against `db` and format the report.
+pub fn run_sweep(db: &mut ResultsDb, cfg: &SweepConfig, progress: bool) -> SweepOutcome {
+    let sets = phase_sets(cfg.extended);
+    let compositions = Design::all().len();
+    let mut phases = Vec::new();
+    let mut total = BatchStats::default();
+    for (name, profiles) in &sets {
+        if progress {
+            eprintln!("phase {name}: {} workloads x {compositions} compositions", profiles.len());
+        }
+        let stats = db.run_sweep_matrix(profiles, &cfg.far_ratios, cfg.llc_grid, progress);
+        total.absorb(&stats);
+        phases.push(SweepPhase { name, workloads: profiles.len(), stats });
+    }
+    let report = build_report(db, cfg, &sets);
+    SweepOutcome { report, phases, total }
+}
+
+/// Per-phase and aggregate telemetry on stderr.  The final line's
+/// `cache-hit-rate` token is a stable interface: CI's second sweep
+/// invocation greps it to assert ≥ 90% reuse from the persistent cache.
+pub fn print_telemetry(o: &SweepOutcome) {
+    for p in &o.phases {
+        eprintln!(
+            "  phase {:<14} {:>3} workloads: {:>5} jobs ({} run, {} cached, {} dup) in {:.1}s ({:.1} jobs/s)",
+            p.name,
+            p.workloads,
+            p.stats.requested,
+            p.stats.executed,
+            p.stats.from_cache,
+            p.stats.duplicates,
+            p.stats.wall.as_secs_f64(),
+            p.stats.jobs_per_sec(),
+        );
+    }
+    let t = &o.total;
+    eprintln!(
+        "sweep total: {} jobs, {} executed, cache-hit-rate {:.1}%, {:.1}s wall, {:.1} jobs/s",
+        t.requested,
+        t.executed,
+        t.cached_frac() * 100.0,
+        t.wall.as_secs_f64(),
+        t.jobs_per_sec(),
+    );
+}
+
+const SWEEP_COLUMNS: &[&str] = &["phase", "workload", "design", "axis", "speedup", "cycles"];
+
+fn build_report(
+    db: &ResultsDb,
+    cfg: &SweepConfig,
+    sets: &[(&'static str, Vec<WorkloadProfile>)],
+) -> Report {
+    let designs = Design::all();
+    let workloads: usize = sets.iter().map(|(_, p)| p.len()).sum();
+    let title = format!(
+        "design-space sweep — {} compositions x {} workloads",
+        designs.len(),
+        workloads
+    );
+
+    let body = match cfg.format {
+        OutputFormat::Table => {
+            // summary view: per-composition geomean of weighted speedup
+            // over every swept workload (full per-run rows live in the
+            // csv/json renderings)
+            let mut s = format!("{:<26} {:>10} {:>4}\n", "design", "geomean", "n");
+            for d in designs {
+                let speedups: Vec<f64> = sets
+                    .iter()
+                    .flat_map(|(_, profiles)| profiles.iter())
+                    .filter_map(|w| db.speedup(w.name, d))
+                    .collect();
+                s.push_str(&format!(
+                    "{:<26} {:>9.1}% {:>4}\n",
+                    d.name(),
+                    geomean(&speedups) * 100.0,
+                    speedups.len()
+                ));
+            }
+            s
+        }
+        format => {
+            let mut sink = Sink::new(SWEEP_COLUMNS);
+            for (phase, profiles) in sets {
+                for w in profiles {
+                    for d in designs {
+                        push_rows(&mut sink, db, cfg, phase, w.name, d);
+                    }
+                }
+                // one aggregate row per composition closes each phase
+                for d in designs {
+                    let speedups: Vec<f64> = profiles
+                        .iter()
+                        .filter_map(|w| db.speedup(w.name, d))
+                        .collect();
+                    sink.push(vec![
+                        Cell::s(*phase),
+                        Cell::s("GEOMEAN"),
+                        Cell::s(d.name()),
+                        Cell::s("base"),
+                        Cell::n(format!("{:.4}", geomean(&speedups))),
+                        Cell::n(0),
+                    ]);
+                }
+            }
+            sink.render(format)
+        }
+    };
+    Report { id: "SWEEP".to_string(), title, body }
+}
+
+/// All rows one (workload, composition) cell contributes: the base run,
+/// plus the grid-axis runs the config requested.
+fn push_rows(
+    sink: &mut Sink,
+    db: &ResultsDb,
+    cfg: &SweepConfig,
+    phase: &str,
+    workload: &str,
+    d: Design,
+) {
+    let base = db.get(workload, Design::Uncompressed);
+    if let (Some(r), Some(sp)) = (db.get(workload, d), db.speedup(workload, d)) {
+        sink.push(vec![
+            Cell::s(phase),
+            Cell::s(workload),
+            Cell::s(d.name()),
+            Cell::s("base"),
+            Cell::n(format!("{sp:.4}")),
+            Cell::n(r.cycles),
+        ]);
+    }
+    if cfg.llc_grid {
+        if let (Some(b), Some(r)) = (base, db.get_llc(workload, d, true)) {
+            sink.push(vec![
+                Cell::s(phase),
+                Cell::s(workload),
+                Cell::s(d.name()),
+                Cell::s("llc"),
+                Cell::n(format!("{:.4}", r.weighted_speedup(b))),
+                Cell::n(r.cycles),
+            ]);
+        }
+    }
+    if d.is_tiered() {
+        for &ratio in &cfg.far_ratios {
+            if let (Some(r), Some(sp)) =
+                (db.get_far(workload, d, ratio), db.speedup_far(workload, d, ratio))
+            {
+                sink.push(vec![
+                    Cell::s(phase),
+                    Cell::s(workload),
+                    Cell::s(d.name()),
+                    Cell::s(format!("far={ratio}")),
+                    Cell::n(format!("{sp:.4}")),
+                    Cell::n(r.cycles),
+                ]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runner::RunPlan;
+    use crate::workloads::profiles::by_name;
+
+    fn tiny_plan() -> RunPlan {
+        RunPlan { insts_per_core: 500, seed: 3, threads: 8 }
+    }
+
+    #[test]
+    fn sweep_covers_every_composition_across_all_profile_sets() {
+        let mut db = ResultsDb::new(tiny_plan());
+        let cfg = SweepConfig { format: OutputFormat::Json, ..SweepConfig::default() };
+        let out = run_sweep(&mut db, &cfg, false);
+
+        // 4 phases, 38 profiles x 32 compositions
+        assert_eq!(out.phases.len(), 4);
+        assert_eq!(out.total.requested, 38 * 32);
+        assert_eq!(
+            out.total.executed + out.total.from_cache + out.total.duplicates,
+            out.total.requested
+        );
+        assert_eq!(db.len(), out.total.executed);
+        // every composition landed for a representative profile of each set
+        for w in ["libq", "cap_stream", "lat_chase", "llcfit_stream"] {
+            for d in Design::all() {
+                assert!(db.get(w, d).is_some(), "{w}/{}", d.name());
+            }
+        }
+        // machine-readable report carries per-run and aggregate rows
+        assert!(out.report.body.contains("\"phase\""));
+        assert!(out.report.body.contains("GEOMEAN"));
+
+        // a second sweep against the same db is served entirely from memory
+        let again = run_sweep(&mut db, &cfg, false);
+        assert_eq!(again.total.executed, 0);
+        assert_eq!(again.total.from_cache, again.total.requested);
+        assert!(again.total.cached_frac() > 0.99);
+    }
+
+    #[test]
+    fn grid_axes_add_llc_and_far_runs() {
+        let mut db = ResultsDb::new(tiny_plan());
+        let profile = by_name("libq").unwrap();
+        let stats = db.run_sweep_matrix(&[profile], &[0.25], true, false);
+        // 32 base + 32 llc twins + 16 tiered compositions at far=0.25
+        assert_eq!(stats.requested, 80);
+        assert_eq!(stats.executed, 80);
+        let tiered = Design::tiered(true);
+        assert!(db.get_llc("libq", tiered, true).is_some());
+        assert!(db.get_far("libq", tiered, 0.25).is_some());
+        assert!(db.speedup_far("libq", tiered, 0.25).is_some());
+    }
+}

@@ -10,9 +10,20 @@
 //!           [--far-ratio R] [--link-codec raw|compressed] [--trace FILE]
 //!           [--llc-compressed] [--fault-ber B] [--fault-watchdog on|off]
 //! repro sim --tenants W1[:CORES][:qos][:bias=N],W2,... [--design D] [--qos-slots N]
+//! repro sweep [--far-ratio R1,R2,...] [--llc-compressed] [--extended]
+//!             [--format table|csv|json] [--cache PATH] [--no-cache] [--refresh]
 //! repro analyze [--artifact PATH] [--workload W] [--groups N]
 //! repro list
 //! ```
+//!
+//! `sweep` drives the whole design space — all 32 compositions x every
+//! workload profile set — through the sharded experiment engine in one
+//! command, with per-phase wall-time/jobs-per-second telemetry on
+//! stderr.  `reproduce-all`, `figure`, `table` and `sweep` all reuse
+//! completed runs from the persistent `CRAM_RESULTS.json` cache (keyed
+//! by a build+plan fingerprint, so a stale cache self-invalidates);
+//! `--no-cache` skips it, `--refresh` ignores what is on disk but
+//! re-records, and `--cache PATH` relocates it.
 //!
 //! `figure t1` is the tiered-memory exhibit: uncompressed vs
 //! CRAM-compressed CXL far tier over the far-memory-pressure workloads.
@@ -117,6 +128,35 @@ fn plan_from(flags: &HashMap<String, String>) -> RunPlan {
     plan
 }
 
+fn parse_format(flags: &HashMap<String, String>) -> figures::OutputFormat {
+    match flags.get("format").map(String::as_str) {
+        None | Some("table") => figures::OutputFormat::Table,
+        Some("csv") => figures::OutputFormat::Csv,
+        Some("json") => figures::OutputFormat::Json,
+        Some(f) => usage(&format!("unknown --format {f}")),
+    }
+}
+
+/// Attach the persistent results cache unless `--no-cache`: load
+/// fingerprint-compatible runs from `--cache PATH` (default
+/// `CRAM_RESULTS.json`) and arm write-back so every executed batch
+/// re-saves.  `--refresh` skips the load but still re-records.
+fn attach_cache_flags(db: &mut ResultsDb, flags: &HashMap<String, String>) {
+    if flags.contains_key("no-cache") {
+        return;
+    }
+    let path = flags
+        .get("cache")
+        .cloned()
+        .unwrap_or_else(|| "CRAM_RESULTS.json".into());
+    let load = db.attach_cache(&path, flags.contains_key("refresh"));
+    if let Some(note) = load.note {
+        eprintln!("cache: {note}");
+    } else if load.loaded > 0 {
+        eprintln!("cache: loaded {} runs from {path}", load.loaded);
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, flags) = parse_flags(&args);
@@ -126,6 +166,7 @@ fn main() {
         "reproduce-all" => {
             let out_dir = flags.get("out").cloned().unwrap_or_else(|| "results".into());
             let mut db = ResultsDb::new(plan_from(&flags));
+            attach_cache_flags(&mut db, &flags);
             eprintln!(
                 "running full matrix (insts/core={}, threads={}) ...",
                 db.plan.insts_per_core, db.plan.threads
@@ -147,12 +188,8 @@ fn main() {
             };
             let id = if cmd == "figure" { format!("fig{n}") } else { format!("table{n}") };
             let mut db = ResultsDb::new(plan_from(&flags));
-            let format = match flags.get("format").map(String::as_str) {
-                None | Some("table") => figures::OutputFormat::Table,
-                Some("csv") => figures::OutputFormat::Csv,
-                Some("json") => figures::OutputFormat::Json,
-                Some(f) => usage(&format!("unknown --format {f}")),
-            };
+            attach_cache_flags(&mut db, &flags);
+            let format = parse_format(&flags);
             // machine formats get the bare body (no banner) and silent
             // progress so stdout pipes clean
             let human = format == figures::OutputFormat::Table;
@@ -175,9 +212,10 @@ fn main() {
                 }
                 return;
             }
-            // run only the designs the exhibit needs
-            match id.as_str() {
-                "fig4" | "table3" | "figm1" | "figr1" => {}
+            // run only the designs the exhibit needs (batch telemetry
+            // is sweep's business — figures discard it)
+            let _ = match id.as_str() {
+                "fig4" | "table3" | "figm1" | "figr1" => cram::coordinator::BatchStats::default(),
                 "figt1" => db.run_tiered_t1(true),
                 "figx1" => db.run_x1(true),
                 "figq1" => db.run_q1(human),
@@ -224,7 +262,7 @@ fn main() {
                     true,
                 ),
                 _ => usage(&format!("unknown exhibit {id}")),
-            }
+            };
             match figures::report_fmt(&db, &id, format) {
                 Some(r) if human => print!("{}", r.render()),
                 Some(r) => print!("{}", r.body),
@@ -559,6 +597,40 @@ fn main() {
                 }
             }
         }
+        "sweep" => {
+            // `repro sweep` — the full design-space campaign: every one
+            // of the 32 compositions x every workload profile set, with
+            // optional grid axes, through the sharded experiment engine:
+            //   repro sweep [--insts N] [--threads N] [--seed S]
+            //               [--far-ratio R1,R2,...] [--llc-compressed]
+            //               [--extended] [--format table|csv|json]
+            //               [--cache PATH] [--no-cache] [--refresh]
+            let mut db = ResultsDb::new(plan_from(&flags));
+            attach_cache_flags(&mut db, &flags);
+            let format = parse_format(&flags);
+            let far_ratios: Vec<f64> = flags
+                .get("far-ratio")
+                .map(|s| {
+                    s.split(',')
+                        .map(|x| x.trim().parse().expect("--far-ratio takes a comma list"))
+                        .collect()
+                })
+                .unwrap_or_default();
+            let cfg = cram::coordinator::SweepConfig {
+                far_ratios,
+                llc_grid: flags.contains_key("llc-compressed"),
+                extended: flags.contains_key("extended"),
+                format,
+            };
+            let human = format == figures::OutputFormat::Table;
+            let out = cram::coordinator::run_sweep(&mut db, &cfg, human);
+            if human {
+                print!("{}", out.report.render());
+            } else {
+                print!("{}", out.report.body);
+            }
+            cram::coordinator::sweep::print_telemetry(&out);
+        }
         "list" => {
             println!("designs (policy x placement x link-codec compositions):");
             for d in Design::all() {
@@ -678,7 +750,7 @@ fn usage(msg: &str) -> ! {
         eprintln!("error: {msg}\n");
     }
     eprintln!(
-        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1|r1|p1> [--insts N]\n  repro figure <q1|c1|l1|m1|r1|p1> --format table|csv|json\n  repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--link-codec raw|compressed] [--trace FILE] [--llc-compressed] [--fault-ber B] [--fault-watchdog on|off]\n  repro sim --tenants W1[:CORES][:qos][:bias=N],W2,... [--design D] [--qos-slots N] [--insts N]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement x link-codec compositions (repro list\nprints all 32): tiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/\ntiered-explicit (figure x1), lcp/tiered-lcp (figure p1) — near DDR + far\nCXL expander; --far-ratio R puts fraction R of capacity behind the link;\na +lc suffix (or --link-codec compressed on repro sim) compresses flits\nover that link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product; with --far-ratio R1,R2,... it\nsweeps the capacity split to each tiered composition's break-even\nfigure l1: raw vs compressed link x {static, dynamic, explicit} tiered\ndesigns over the far-pressure suite — speedup vs the raw-link twin plus\nthe wire-vs-storage byte breakdown per traffic class\nfigure m1: multi-tenant co-location mixes x {uncompressed, cram-dynamic,\ntiered-cram-dyn} — per-tenant p99, slowdown-vs-alone, interference beats,\nJain fairness, and a QoS read-slot-reservation contrast\nfigure r1: reliability — tiered-cram under a uniform BER sweep (link CRC\nretries, far-media errors, marker corruption) with the error-storm\nwatchdog disarmed vs armed; --fault-ber B on repro sim injects the same\nfaults into any run (--fault-watchdog off disarms the degradation ladder;\ninjection defaults off and is then bit-identical to a fault-free build)\nfigure p1: layout families — line-granular CRAM vs page-granular LCP\n(lcp/tiered-lcp), flat and tiered, over the 27 suite + far-pressure set:\nspeedup, metadata-traffic share, and the LCP effective-capacity ledger\n--format csv|json on figures q1/c1/l1/m1/r1/p1 and the x1 sweep emits the\nbare machine-readable rows for plotting scripts\nsim --tenants: one co-location (workload[:cores][:qos][:bias=N], comma-\nseparated; :qos marks the protected tenant, --qos-slots N reserves N of 32\nread slots; :bias=N shifts that tenant's Dynamic-CRAM gate thresholds)\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
+        "usage:\n  repro reproduce-all [--out DIR] [--insts N] [--threads N] [--seed S]\n  repro figure <3|4|7|8|12|14|15|16|18|19|20|t1|q1|c1|x1|l1|m1|r1|p1> [--insts N]\n  repro figure <q1|c1|l1|m1|r1|p1> --format table|csv|json\n  repro figure x1 --far-ratio R1,R2,... [--format table|csv|json]\n  repro table <2|3|4|5> [--insts N]\n  repro sim --workload W --design D [--insts N] [--channels C] [--far-ratio R] [--link-codec raw|compressed] [--trace FILE] [--llc-compressed] [--fault-ber B] [--fault-watchdog on|off]\n  repro sim --tenants W1[:CORES][:qos][:bias=N],W2,... [--design D] [--qos-slots N] [--insts N]\n  repro sweep [--insts N] [--threads N] [--seed S] [--far-ratio R1,R2,...] [--llc-compressed] [--extended] [--format table|csv|json] [--cache PATH] [--no-cache] [--refresh]\n  repro analyze [--artifact PATH] [--workload W] [--groups N]\n  repro ablate <llp|metacache|compressor|marker|sched|llc|all> [--insts N]\n  repro bench [--insts N] [--json OUT] [--save] [--check [BASELINE]] [--current FILE] [--tolerance PCT]\n  repro list\n\ndesigns are policy x placement x link-codec compositions (repro list\nprints all 32): tiered-uncomp/tiered-cram (figure t1), tiered-cram-dyn/\ntiered-explicit (figure x1), lcp/tiered-lcp (figure p1) — near DDR + far\nCXL expander; --far-ratio R puts fraction R of capacity behind the link;\na +lc suffix (or --link-codec compressed on repro sim) compresses flits\nover that link\nfigure q1: p50/p95/p99 read latency per design through the FR-FCFS scheduler\nfigure c1: static/dynamic CRAM under the plain vs compressed (Touché-style)\nLLC over the 27 suite + cache-pressure llcfit_* workloads; --llc-compressed\nflips the same knob on repro sim; ablate llc sweeps tag ratio / data budget\nfigure x1: {static, dynamic, explicit} x {flat, tiered} over the far-pressure\nsuite — the composed-design cross-product; with --far-ratio R1,R2,... it\nsweeps the capacity split to each tiered composition's break-even\nfigure l1: raw vs compressed link x {static, dynamic, explicit} tiered\ndesigns over the far-pressure suite — speedup vs the raw-link twin plus\nthe wire-vs-storage byte breakdown per traffic class\nfigure m1: multi-tenant co-location mixes x {uncompressed, cram-dynamic,\ntiered-cram-dyn} — per-tenant p99, slowdown-vs-alone, interference beats,\nJain fairness, and a QoS read-slot-reservation contrast\nfigure r1: reliability — tiered-cram under a uniform BER sweep (link CRC\nretries, far-media errors, marker corruption) with the error-storm\nwatchdog disarmed vs armed; --fault-ber B on repro sim injects the same\nfaults into any run (--fault-watchdog off disarms the degradation ladder;\ninjection defaults off and is then bit-identical to a fault-free build)\nfigure p1: layout families — line-granular CRAM vs page-granular LCP\n(lcp/tiered-lcp), flat and tiered, over the 27 suite + far-pressure set:\nspeedup, metadata-traffic share, and the LCP effective-capacity ledger\n--format csv|json on figures q1/c1/l1/m1/r1/p1 and the x1 sweep emits the\nbare machine-readable rows for plotting scripts\nsim --tenants: one co-location (workload[:cores][:qos][:bias=N], comma-\nseparated; :qos marks the protected tenant, --qos-slots N reserves N of 32\nread slots; :bias=N shifts that tenant's Dynamic-CRAM gate thresholds)\nsweep: the full campaign — all 32 compositions x every profile set (plus\n--far-ratio splits and --llc-compressed twins as grid axes; --extended adds\nthe low-MPKI set); per-phase wall time and jobs/s land on stderr\nreproduce-all/figure/table/sweep reuse completed runs from the persistent\nCRAM_RESULTS.json cache (fingerprint-keyed, self-invalidating); --no-cache\nskips it, --refresh re-records, --cache PATH relocates it\nbench: simulator throughput matrix; --check gates a >PCT% (default 15) median\nMelem/s regression vs the committed BENCH_sim.json baseline; --save records\nBENCH_sim.json locally (commit it to arm the gate)"
     );
     std::process::exit(2);
 }

@@ -64,6 +64,33 @@ impl LatencyHist {
         self.count
     }
 
+    /// Raw bucket counts, exposed for the persistent results codec
+    /// (`coordinator::persist`).  The log-bucket layout is part of the
+    /// cache schema: a layout change must bump the cache schema version.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Total of all recorded values — the codec counterpart of
+    /// [`LatencyHist::mean`].
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Rebuild a histogram from its serialized parts.  `None` when the
+    /// bucket count does not match this build's layout (a stale cache
+    /// written by a different schema).
+    pub fn from_parts(buckets: &[u64], count: u64, sum: u64) -> Option<Self> {
+        if buckets.len() != LAT_BUCKETS {
+            return None;
+        }
+        let mut h = Self::default();
+        h.buckets.copy_from_slice(buckets);
+        h.count = count;
+        h.sum = sum;
+        Some(h)
+    }
+
     /// Exact arithmetic mean (the sum is tracked outside the buckets).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {

@@ -3,9 +3,23 @@
 //! available in this offline environment — see DESIGN.md §Substitutions).
 
 pub mod bench;
+pub mod json;
 pub mod rng;
 pub mod small;
 pub mod testkit;
+
+/// FNV-1a 64-bit hash — the deterministic hash behind the results-db
+/// stripe index and the persistent-cache fingerprint.  `DefaultHasher`
+/// makes no cross-version stability promise, so anything that reaches
+/// disk (or picks a shard that tests pin) hashes through this instead.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 /// Geometric mean of a slice of positive values.
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -44,6 +58,14 @@ mod tests {
     fn mean_basics() {
         assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
         assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // published FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
     }
 
     #[test]

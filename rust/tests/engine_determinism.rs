@@ -1,0 +1,135 @@
+//! Integration pins for the sharded experiment engine.
+//!
+//! Two contracts keep the engine honest end-to-end:
+//!
+//! * **Scheduling independence** — a figure rendered from a db filled at
+//!   `threads = N` is byte-identical to one filled at `threads = 1`.
+//!   Everything between job submission and figure text (cost-ordered
+//!   pool drain, striped merge, persistent-cache serialization) may
+//!   only reorder work, never change it.
+//! * **Cache round-trip** — a db reloaded from the on-disk
+//!   `CRAM_RESULTS.json` renders the same bytes as the db that wrote
+//!   it, executes nothing, and a cache written under a different plan
+//!   (or plain garbage) is ignored wholesale.
+
+use std::fs;
+use std::path::PathBuf;
+
+use cram::controller::Design;
+use cram::coordinator::figures;
+use cram::coordinator::runner::{ResultsDb, RunPlan};
+
+fn plan(threads: usize) -> RunPlan {
+    RunPlan { insts_per_core: 8_000, seed: 0x5EED, threads }
+}
+
+/// The exhibits the pins render: figure 3 (flat engine consumers) and
+/// figure T1 (the tiered executor).
+fn fill(db: &mut ResultsDb) {
+    db.run_designs(
+        &[Design::Uncompressed, Design::Ideal, Design::explicit(false)],
+        false,
+        false,
+    );
+    db.run_tiered_t1(false);
+}
+
+fn render(db: &ResultsDb) -> String {
+    format!(
+        "{}{}",
+        figures::figure3(db).render(),
+        figures::figure_t1(db).render()
+    )
+}
+
+/// A per-test scratch path inside the target dir (the suite has no
+/// tempfile dependency); removed on drop so reruns start cold.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(name: &str) -> Self {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("target")
+            .join(format!("engine_determinism_{name}.json"));
+        let _ = fs::remove_file(&p);
+        fs::create_dir_all(p.parent().unwrap()).expect("target dir");
+        Scratch(p)
+    }
+
+    fn path(&self) -> &str {
+        self.0.to_str().expect("utf-8 path")
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.0);
+    }
+}
+
+#[test]
+fn sharded_fill_renders_bit_identically_to_serial() {
+    let run = |threads: usize| {
+        let mut db = ResultsDb::new(plan(threads));
+        fill(&mut db);
+        (render(&db), db.serialize())
+    };
+    let (fig_serial, cache_serial) = run(1);
+    let (fig_sharded, cache_sharded) = run(8);
+    assert_eq!(fig_serial, fig_sharded, "figure bytes depend on thread count");
+    assert_eq!(cache_serial, cache_sharded, "cache bytes depend on thread count");
+}
+
+#[test]
+fn cache_round_trip_preserves_figure_bytes_and_skips_execution() {
+    let scratch = Scratch::new("roundtrip");
+
+    // first invocation: cold cache, everything simulates, db persists
+    let mut writer = ResultsDb::new(plan(4));
+    let load = writer.attach_cache(scratch.path(), false);
+    assert_eq!(load.loaded, 0, "cold start");
+    assert!(load.note.is_none(), "a missing file is not an error");
+    fill(&mut writer);
+    let written = render(&writer);
+    assert!(!writer.is_empty());
+
+    // second invocation: same plan — full reload, zero simulations,
+    // identical bytes
+    let mut reader = ResultsDb::new(plan(4));
+    let load = reader.attach_cache(scratch.path(), false);
+    assert_eq!(load.loaded, writer.len(), "{:?}", load.note);
+    let stats = reader.run_designs(
+        &[Design::Uncompressed, Design::Ideal, Design::explicit(false)],
+        false,
+        false,
+    );
+    assert_eq!(stats.executed, 0);
+    assert_eq!(stats.from_cache, stats.requested);
+    let stats = reader.run_tiered_t1(false);
+    assert_eq!(stats.executed, 0);
+    assert_eq!(render(&reader), written);
+
+    // a different plan is a different fingerprint: the file is ignored
+    // wholesale, with a note saying why
+    let mut other = ResultsDb::new(RunPlan { seed: 0xD1FF, ..plan(4) });
+    let load = other.attach_cache(scratch.path(), false);
+    assert_eq!(load.loaded, 0);
+    assert!(load.note.is_some(), "stale cache must be reported");
+
+    // --refresh ignores even a compatible cache (but still re-arms
+    // write-back — running a batch overwrites the file)
+    let mut refresher = ResultsDb::new(plan(4));
+    let load = refresher.attach_cache(scratch.path(), true);
+    assert_eq!(load.loaded, 0);
+}
+
+#[test]
+fn corrupt_cache_is_ignored_not_trusted() {
+    let scratch = Scratch::new("corrupt");
+    fs::write(scratch.path(), "{not json at all").expect("write garbage");
+    let mut db = ResultsDb::new(plan(2));
+    let load = db.attach_cache(scratch.path(), false);
+    assert_eq!(load.loaded, 0);
+    assert!(load.note.is_some(), "garbage must be reported, not crash");
+    assert!(db.is_empty());
+}
